@@ -1,0 +1,68 @@
+//! The paper's §IV-B mixed-device experiment: a Tesla P100 GPU and a
+//! 48-core Xeon training one model together, plus the cloud 2×T4 + 2×P4
+//! cluster — uniform vs static-variable vs dynamic batching.
+//!
+//! ```bash
+//! cargo run --release --example mixed_gpu_cpu
+//! ```
+
+use hetero_batch::cluster::{cloud_gpu_cluster, mixed_gpu_cpu_cluster};
+use hetero_batch::config::{ExperimentCfg, Policy};
+use hetero_batch::simulator::Simulator;
+
+fn run(
+    workload: &str,
+    workers: Vec<hetero_batch::cluster::WorkerSpec>,
+    policy: Policy,
+) -> hetero_batch::metrics::RunReport {
+    let mut cfg = ExperimentCfg::default();
+    cfg.workload = workload.into();
+    cfg.workers = workers;
+    cfg.policy = policy;
+    cfg.max_iters = 0; // run to the workload's accuracy target
+    cfg.adjust_cost_s = 20.0;
+    Simulator::new(cfg).run()
+}
+
+fn main() {
+    println!("== P100 + 48-core Xeon (paper Fig. 7a) ==");
+    for workload in ["resnet", "mnist"] {
+        let mut base = 0.0;
+        for policy in [Policy::Uniform, Policy::Static, Policy::Dynamic] {
+            let r = run(workload, mixed_gpu_cpu_cluster(), policy);
+            if policy == Policy::Uniform {
+                base = r.total_time;
+            }
+            let batches = r
+                .final_batches()
+                .map(|b| format!("{b:?}"))
+                .unwrap_or_else(|| "open-loop".into());
+            println!(
+                "  {workload:<8} {:<8} {:>9.0} s  {:>5.2}x   final batches: {batches}",
+                policy.label(),
+                r.total_time,
+                base / r.total_time
+            );
+        }
+    }
+
+    println!();
+    println!("== cloud cluster: 2x T4 + 2x P4, ResNet (paper: 90 min -> 20 min) ==");
+    let mut base = 0.0;
+    for policy in [Policy::Uniform, Policy::Static, Policy::Dynamic] {
+        let r = run("resnet", cloud_gpu_cluster(), policy);
+        if policy == Policy::Uniform {
+            base = r.total_time;
+        }
+        println!(
+            "  {:<8} {:>7.1} min  {:>5.2}x",
+            policy.label(),
+            r.total_time / 60.0,
+            base / r.total_time
+        );
+    }
+    println!();
+    println!("the T4:P4 half-precision FLOPs ratio is ~12x, so uniform batching");
+    println!("stalls both T4s behind the P4 stragglers; variable batching");
+    println!("restores throughput-proportional work.");
+}

@@ -1,0 +1,69 @@
+//! Transient-cloud scenario (paper §I–II motivation): a cluster of spot /
+//! preemptible workers with interference and preemptions, compared under
+//! uniform / static / dynamic batching in the virtual-time simulator.
+//!
+//! ```bash
+//! cargo run --release --example spot_cluster
+//! ```
+//!
+//! Demonstrates the *dynamic* heterogeneity case that motivates the
+//! closed-loop controller: open-loop static batching fixes its split at
+//! t=0 and cannot follow capacity changes; the proportional controller
+//! re-balances after every interference burst / preemption recovery.
+
+use hetero_batch::cluster::cpu_cluster;
+use hetero_batch::config::{ExperimentCfg, Policy};
+use hetero_batch::simulator::Simulator;
+use hetero_batch::trace::{AvailTrace, ClusterTraces};
+use hetero_batch::util::rng::Rng;
+
+fn scenario(policy: Policy, seed: u64) -> hetero_batch::metrics::RunReport {
+    // 3 equal spot VMs — heterogeneity here is purely *dynamic*.
+    let mut cfg = ExperimentCfg::default();
+    cfg.workload = "resnet".into();
+    cfg.workers = cpu_cluster(&[13, 13, 13]);
+    cfg.policy = policy;
+    cfg.max_iters = 4_000;
+    cfg.adjust_cost_s = 10.0;
+    cfg.seed = seed;
+
+    // Worker 0: heavy colocation interference (drops to 35% capacity).
+    // Worker 1: overcommitment epochs (60–80%).
+    // Worker 2: one spot preemption at ~20 min, back 2 min later.
+    let mut rng = Rng::new(seed ^ 0x5107);
+    let traces = ClusterTraces {
+        traces: vec![
+            AvailTrace::interference(40_000.0, 900.0, 400.0, 0.35, &mut rng),
+            AvailTrace::overcommit(40_000.0, 1_500.0, &[0.6, 0.8], &mut rng),
+            AvailTrace::spot(40_000.0, 1_200.0, 120.0, &mut rng),
+        ],
+    };
+    Simulator::new(cfg).with_traces(traces).run()
+}
+
+fn main() {
+    println!("== spot cluster: dynamic heterogeneity (interference + overcommit + preemption) ==");
+    println!(
+        "{:<10} {:>12} {:>14} {:>12} {:>12}",
+        "policy", "time_to_4k", "vs uniform", "adjusts", "wait_frac"
+    );
+    let mut base = 0.0;
+    for policy in [Policy::Uniform, Policy::Static, Policy::Dynamic] {
+        let r = scenario(policy, 7);
+        if policy == Policy::Uniform {
+            base = r.total_time;
+        }
+        println!(
+            "{:<10} {:>10.0} s {:>13.2}x {:>12} {:>12.3}",
+            policy.label(),
+            r.total_time,
+            base / r.total_time,
+            r.adjustments.len(),
+            r.wait_fraction()
+        );
+    }
+    println!();
+    println!("static batching cannot react to capacity changes (its split is");
+    println!("fixed at t=0 and the workers start equal, so it IS uniform here);");
+    println!("the dynamic controller re-balances after each capacity shift.");
+}

@@ -1,0 +1,197 @@
+"""AOT pipeline: lower every (model, batch-bucket) train/eval step to HLO
+text and emit the artifact manifest the Rust runtime loads.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Per-worker batch sizes are *dynamic* at the coordination layer but XLA
+shapes are static, so each model is lowered once per batch-size bucket;
+the Rust controller quantizes controller proposals to the bucket grid and
+swaps executables (DESIGN.md §6 — this plays the role of the paper's TF
+kill-restart cost).
+
+Outputs (under --out-dir, default ../artifacts):
+  <model>_train_b<B>.hlo.txt     train_step(params..., x, y) -> (loss, *grads)
+  <model>_eval_b<B>.hlo.txt      eval_step(params..., x, y)  -> (loss, metric)
+  <model>_init.bin               f32-LE concatenation of initial params
+  grad_agg_k<K>.hlo.txt          PS-side fused weighted aggregation kernel
+  manifest.json                  index of everything above
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.kernels.grad_agg import weighted_agg
+from compile.models import REGISTRY, get_model
+from compile.models import transformer as tr
+from compile.models.common import ModelDef
+
+# Fixed chunk width for the PS-side aggregation artifact; Rust walks the
+# flattened parameter vector in chunks of this size (zero-padding the tail).
+AGG_CHUNK = 1 << 20
+AGG_KS = (2, 3, 4)
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_args(model: ModelDef, batch: int):
+    params = [
+        jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in model.param_specs
+    ]
+    x = jax.ShapeDtypeStruct((batch, *model.x_shape), DTYPES[model.x_dtype])
+    y = jax.ShapeDtypeStruct((batch, *model.y_shape), DTYPES[model.y_dtype])
+    return params, x, y
+
+
+def lower_model_step(model: ModelDef, batch: int, kind: str) -> str:
+    params, x, y = example_args(model, batch)
+    fn = model.train_step if kind == "train" else model.eval_step
+
+    def flat(*args):
+        return fn(list(args[: len(params)]), args[-2], args[-1])
+
+    lowered = jax.jit(flat).lower(*params, x, y)
+    return to_hlo_text(lowered)
+
+
+def lower_grad_agg(k: int, d: int = AGG_CHUNK) -> str:
+    lam = jax.ShapeDtypeStruct((k,), jnp.float32)
+    grads = jax.ShapeDtypeStruct((k, d), jnp.float32)
+    lowered = jax.jit(lambda l, g: (weighted_agg(l, g),)).lower(lam, grads)
+    return to_hlo_text(lowered)
+
+
+def init_param_bytes(model: ModelDef, seed: int) -> bytes:
+    if model.task == "lm":
+        params = tr.init_params(model, seed)
+    else:
+        params = model.init_params(seed)
+    return b"".join(
+        np.asarray(p, dtype="<f4").tobytes(order="C") for p in params
+    )
+
+
+def write_if_changed(path: str, data) -> bool:
+    """Write text/bytes only when content differs (keeps `make` idempotent)."""
+    mode = "wb" if isinstance(data, bytes) else "w"
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            old = f.read()
+        new = data if isinstance(data, bytes) else data.encode()
+        if old == new:
+            return False
+    with open(path, mode) as f:
+        f.write(data)
+    return True
+
+
+def build(out_dir: str, model_names: list[str], seed: int, quiet: bool) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"version": 1, "models": {}, "agg": {}}
+
+    for name in model_names:
+        model = get_model(name)
+        entry = {
+            "params": [
+                {"name": s.name, "shape": list(s.shape)}
+                for s in model.param_specs
+            ],
+            "param_total": sum(s.size for s in model.param_specs),
+            "x_shape": list(model.x_shape),
+            "x_dtype": model.x_dtype,
+            "y_shape": list(model.y_shape),
+            "y_dtype": model.y_dtype,
+            "task": model.task,
+            "buckets": sorted(model.default_buckets),
+            "train": {},
+            "eval": {},
+            "init": f"{name}_init.bin",
+        }
+        for b in entry["buckets"]:
+            for kind in ("train", "eval"):
+                fname = f"{name}_{kind}_b{b}.hlo.txt"
+                text = lower_model_step(model, b, kind)
+                changed = write_if_changed(os.path.join(out_dir, fname), text)
+                entry[kind][str(b)] = fname
+                if not quiet:
+                    state = "wrote" if changed else "up-to-date"
+                    print(f"  {state} {fname} ({len(text) // 1024} KiB)")
+        write_if_changed(
+            os.path.join(out_dir, entry["init"]), init_param_bytes(model, seed)
+        )
+        manifest["models"][name] = entry
+
+    for k in AGG_KS:
+        fname = f"grad_agg_k{k}.hlo.txt"
+        write_if_changed(os.path.join(out_dir, fname), lower_grad_agg(k))
+        manifest["agg"][str(k)] = fname
+        if not quiet:
+            print(f"  wrote {fname}")
+    manifest["agg_chunk"] = AGG_CHUNK
+
+    write_if_changed(
+        os.path.join(out_dir, "manifest.json"),
+        json.dumps(manifest, indent=2, sort_keys=True),
+    )
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="linreg,mlp,cnn,transformer",
+        help="comma-separated registry names (see compile.models.REGISTRY)",
+    )
+    ap.add_argument(
+        "--e2e",
+        action="store_true",
+        help="also lower the ~12M-param e2e transformer preset",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quiet", action="store_true")
+    # Back-compat with the Makefile's original `--out artifacts/model.hlo.txt`.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+
+    names = [n for n in args.models.split(",") if n]
+    if args.e2e:
+        REGISTRY["transformer_e2e"] = tr.transformer_def("e2e")
+        names.append("transformer_e2e")
+
+    manifest = build(out_dir, names, args.seed, args.quiet)
+    n_art = sum(
+        len(m["train"]) + len(m["eval"]) for m in manifest["models"].values()
+    ) + len(manifest["agg"])
+    print(f"aot: {n_art} artifacts in {out_dir}")
+    # Marker file the Makefile can depend on.
+    write_if_changed(os.path.join(out_dir, "model.hlo.txt"), "# see manifest.json\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Block-tiled Pallas matmul — the L1 compute hot-spot.
+
+The paper's training hot-spot (dense/conv FLOPs) maps on TPU-shaped
+hardware to an MXU-tiled matmul: the grid walks (M/bm, N/bn, K/bk) blocks,
+each step bringing one (bm, bk) x-tile and one (bk, bn) w-tile from HBM
+into VMEM (expressed via BlockSpec index maps) and accumulating into the
+(bm, bn) output tile, which is revisited across the K dimension.
+
+Lowered with ``interpret=True`` so the resulting HLO runs on any PJRT
+backend (CPU here); on a real TPU the same kernel compiles to Mosaic.
+
+Block shapes default to multiples of the (8, 128) TPU register tile; the
+128x128 MXU is fully occupied when bm, bn >= 128.  VMEM footprint per grid
+step = (bm*bk + bk*bn + bm*bn) * 4 bytes — see DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: a grid step's working set (3 tiles, f32) is
+# 3*256*256*4 = 768 KiB << 16 MiB VMEM, each tile a whole multiple of the
+# 128x128 MXU shape. 256 over 128 measured -35% wall on the CPU-interpret
+# path (fewer grid steps => less interpreter loop overhead) with identical
+# numerics — see EXPERIMENTS.md §Perf L1.
+BM, BK, BN = 256, 256, 256
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One grid step: accumulate x_tile @ w_tile into the output tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_unchecked(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+) -> jax.Array:
+    """Pallas matmul for shapes already padded to tile multiples."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (x.shape, w.shape)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Shrink the preferred tile for small dims (still a multiple of 8)."""
+    if dim >= pref:
+        return pref
+    return max(8, _ceil_to(dim, 8))
+
+
+def _matmul_impl(x: jax.Array, w: jax.Array) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    bm = _pick_block(m, BM)
+    bk = _pick_block(k, BK)
+    bn = _pick_block(n, BN)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = x if (mp == m and kp == k) else jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = w if (kp == k and np_ == n) else jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    out = matmul_unchecked(xp, wp, bm=bm, bk=bk, bn=bn)
+    if mp != m or np_ != n:
+        out = out[:m, :n]
+    return out
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``x @ w`` with the Pallas kernel on both forward and backward paths.
+
+    ``pallas_call`` has no transpose rule, so the VJP is defined explicitly:
+    dx = g @ w^T and dw = x^T @ g, each itself a Pallas matmul — the whole
+    fwd+bwd graph lowers to the tiled kernel.
+    """
+    return _matmul_impl(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_impl(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = _matmul_impl(g, w.T)
+    dw = _matmul_impl(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

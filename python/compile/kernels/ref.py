@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest (``python/tests``) asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-driven shape and
+dtype sweeps before any artifact is trusted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain f32 matmul."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def weighted_agg_ref(lam: jax.Array, grads: jax.Array) -> jax.Array:
+    """out[j] = Σ_k lam[k]·grads[k, j]."""
+    return jnp.einsum(
+        "k,kd->d", lam.astype(jnp.float32), grads.astype(jnp.float32)
+    )

@@ -1,0 +1,3 @@
+"""Back-compat shim: the model zoo lives in :mod:`compile.models`."""
+
+from compile.models import REGISTRY, get_model  # noqa: F401

@@ -1,0 +1,37 @@
+"""L2 model zoo: the paper's three workloads plus an e2e transformer.
+
+Each model is a :class:`compile.models.common.ModelDef` exposing
+``init_params`` / ``loss_fn`` over a flat, ordered parameter list so that
+``aot.py`` can lower ``train_step(params..., x, y) -> (loss, *grads)`` and
+the Rust runtime can address parameters positionally.
+
+Registry keys mirror the paper's workloads:
+
+- ``linreg``      — Linear Regression (bar-crawl stand-in; paper §IV).
+- ``mlp``         — MNIST CNN stand-in: dense ReLU net on 784-dim inputs.
+- ``cnn``         — ResNet-50/CIFAR-10 stand-in: residual conv net, 32x32x3.
+- ``transformer`` — decoder-only LM for the end-to-end example.
+"""
+
+from __future__ import annotations
+
+from compile.models.common import ModelDef
+from compile.models.linreg import LINREG
+from compile.models.mlp import MLP
+from compile.models.cnn import CNN
+from compile.models.transformer import TRANSFORMER, transformer_def
+
+REGISTRY: dict[str, ModelDef] = {
+    "linreg": LINREG,
+    "mlp": MLP,
+    "cnn": CNN,
+    "transformer": TRANSFORMER,
+}
+
+
+def get_model(name: str) -> ModelDef:
+    """Look up a model by registry name (raises KeyError with choices)."""
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown model {name!r}; choices: {sorted(REGISTRY)}")

@@ -1,0 +1,99 @@
+"""Shared model plumbing: flat named parameters, layers, losses.
+
+Parameters are kept as a *flat ordered list* of named arrays rather than a
+pytree: the AOT boundary (HLO text) has positional arguments only, and the
+Rust parameter server addresses tensors by index.  ``ParamSpec`` carries the
+name/shape so the manifest can describe the layout to the Rust side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """A model as the AOT pipeline sees it.
+
+    loss_fn(params, x, y) -> scalar mean loss over the mini-batch.
+    metric_fn(params, x, y) -> auxiliary eval scalar (accuracy / mse).
+    """
+
+    name: str
+    param_specs: tuple[ParamSpec, ...]
+    loss_fn: Callable[[Sequence[jax.Array], jax.Array, jax.Array], jax.Array]
+    metric_fn: Callable[[Sequence[jax.Array], jax.Array, jax.Array], jax.Array]
+    x_shape: tuple[int, ...]  # per-example input shape
+    x_dtype: str  # "f32" | "i32"
+    y_shape: tuple[int, ...]  # per-example label shape
+    y_dtype: str
+    task: str  # "classification" | "regression" | "lm"
+    default_buckets: tuple[int, ...]
+
+    def init_params(self, seed: int = 0) -> list[jax.Array]:
+        """He-style init, deterministic from seed, matching param_specs."""
+        key = jax.random.PRNGKey(seed)
+        params = []
+        for spec in self.param_specs:
+            key, sub = jax.random.split(key)
+            if len(spec.shape) >= 2:
+                fan_in = 1
+                for s in spec.shape[:-1]:
+                    fan_in *= s
+                scale = jnp.sqrt(2.0 / fan_in)
+                params.append(
+                    scale * jax.random.normal(sub, spec.shape, jnp.float32)
+                )
+            else:
+                params.append(jnp.zeros(spec.shape, jnp.float32))
+        return params
+
+    def train_step(self, params: Sequence[jax.Array], x: jax.Array, y: jax.Array):
+        """(loss, *grads) — the function AOT lowers per batch bucket."""
+        loss, grads = jax.value_and_grad(
+            lambda p: self.loss_fn(p, x, y)
+        )(list(params))
+        return (loss, *grads)
+
+    def eval_step(self, params: Sequence[jax.Array], x: jax.Array, y: jax.Array):
+        """(loss, metric) for held-out evaluation."""
+        return (self.loss_fn(list(params), x, y), self.metric_fn(list(params), x, y))
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Dense layer on the Pallas matmul kernel."""
+    return matmul(x, w) + b
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; labels are int class ids."""
+    logits = logits - jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+    nll = -jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def mse(pred: jax.Array, target: jax.Array) -> jax.Array:
+    return jnp.mean((pred - target) ** 2)

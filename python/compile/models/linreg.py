@@ -1,0 +1,48 @@
+"""Linear Regression — the paper's lightest workload (bar-crawl stand-in).
+
+The paper runs LR on Harvard's bar-crawl accelerometer dataset (3 features
+-> 1 TAC target).  We keep the 3-feature shape; data is synthetic with a
+fixed ground-truth weight vector (see rust ``data::synth_regression``) so
+the loss floor is known.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.models.common import ModelDef, ParamSpec, dense, mse
+
+IN_DIM = 3
+
+_SPECS = (
+    ParamSpec("linear/w", (IN_DIM, 1)),
+    ParamSpec("linear/b", (1,)),
+)
+
+
+def _predict(params, x):
+    w, b = params
+    return dense(x, w, b)
+
+
+def _loss(params, x, y):
+    return mse(_predict(params, x), y)
+
+
+def _metric(params, x, y):
+    # For regression the eval metric is the MSE itself.
+    return mse(_predict(params, x), y)
+
+
+LINREG = ModelDef(
+    name="linreg",
+    param_specs=_SPECS,
+    loss_fn=_loss,
+    metric_fn=_metric,
+    x_shape=(IN_DIM,),
+    x_dtype="f32",
+    y_shape=(1,),
+    y_dtype="f32",
+    task="regression",
+    default_buckets=(8, 16, 32, 64, 128, 256, 512),
+)

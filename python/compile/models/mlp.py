@@ -1,0 +1,64 @@
+"""MNIST-CNN stand-in: dense ReLU classifier on 784-dim inputs.
+
+The paper's second workload is the TF official MNIST CNN trained with
+Adam(1e-4).  The conv stem of that net is a fixed feature extractor at this
+scale; what the batching controller sees is a medium-FLOPs classification
+step.  We reproduce it as a 784-256-128-10 MLP whose dense layers run on
+the Pallas matmul kernel — same loss (softmax CE), same optimizer, matched
+compute class (lighter than the CNN, far heavier than LR).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.common import (
+    ModelDef,
+    ParamSpec,
+    accuracy,
+    dense,
+    softmax_xent,
+)
+
+IN_DIM = 784
+HIDDEN = (256, 128)
+CLASSES = 10
+
+_SPECS = (
+    ParamSpec("fc1/w", (IN_DIM, HIDDEN[0])),
+    ParamSpec("fc1/b", (HIDDEN[0],)),
+    ParamSpec("fc2/w", (HIDDEN[0], HIDDEN[1])),
+    ParamSpec("fc2/b", (HIDDEN[1],)),
+    ParamSpec("head/w", (HIDDEN[1], CLASSES)),
+    ParamSpec("head/b", (CLASSES,)),
+)
+
+
+def _logits(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h = jax.nn.relu(dense(x, w1, b1))
+    h = jax.nn.relu(dense(h, w2, b2))
+    return dense(h, w3, b3)
+
+
+def _loss(params, x, y):
+    return softmax_xent(_logits(params, x), y)
+
+
+def _metric(params, x, y):
+    return accuracy(_logits(params, x), y)
+
+
+MLP = ModelDef(
+    name="mlp",
+    param_specs=_SPECS,
+    loss_fn=_loss,
+    metric_fn=_metric,
+    x_shape=(IN_DIM,),
+    x_dtype="f32",
+    y_shape=(),
+    y_dtype="i32",
+    task="classification",
+    default_buckets=(8, 16, 32, 64, 128, 256),
+)

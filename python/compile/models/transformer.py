@@ -1,0 +1,161 @@
+"""Decoder-only transformer LM — the end-to-end example workload.
+
+Not one of the paper's three workloads, but required to prove the full
+stack composes: the e2e example (``examples/e2e_train.rs``) trains this
+model through the real HLO path on a heterogeneous simulated cluster and
+logs the loss curve (EXPERIMENTS.md §E2E).
+
+All dense projections (QKV, attention out, MLP, LM head) run on the Pallas
+matmul kernel via 2-D reshapes; the attention score/score-apply einsums are
+plain XLA (at T ≤ 256 they are a small fraction of FLOPs).  Presets:
+
+- ``small`` (~0.8M params) — unit tests / quickstart.
+- ``e2e``   (~12M params)  — the recorded end-to-end run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+from compile.models.common import ModelDef, ParamSpec, softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerCfg:
+    vocab: int = 512
+    seq: int = 64
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    "small": TransformerCfg(),
+    "e2e": TransformerCfg(
+        vocab=2048, seq=128, d_model=384, n_layers=6, n_heads=6
+    ),
+}
+
+
+def _specs(cfg: TransformerCfg) -> tuple[ParamSpec, ...]:
+    d = cfg.d_model
+    specs = [
+        ParamSpec("embed/tok", (cfg.vocab, d)),
+        ParamSpec("embed/pos", (cfg.seq, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}"
+        specs += [
+            ParamSpec(f"{p}/ln1/g", (d,)),
+            ParamSpec(f"{p}/attn/wqkv", (d, 3 * d)),
+            ParamSpec(f"{p}/attn/wo", (d, d)),
+            ParamSpec(f"{p}/ln2/g", (d,)),
+            ParamSpec(f"{p}/mlp/w1", (d, 4 * d)),
+            ParamSpec(f"{p}/mlp/b1", (4 * d,)),
+            ParamSpec(f"{p}/mlp/w2", (4 * d, d)),
+            ParamSpec(f"{p}/mlp/b2", (d,)),
+        ]
+    specs += [
+        ParamSpec("lnf/g", (d,)),
+        ParamSpec("head/w", (d, cfg.vocab)),
+    ]
+    return tuple(specs)
+
+
+def _rmsnorm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _mm(x2d_shape, x, w):
+    """Pallas matmul over the trailing dim with a (B*T, D) reshape."""
+    b, t, d = x2d_shape
+    return matmul(x.reshape(b * t, d), w).reshape(b, t, w.shape[1])
+
+
+def _forward(cfg: TransformerCfg, params, tokens):
+    it = iter(params)
+    b, t = tokens.shape
+    tok, pos = next(it), next(it)
+    h = tok[tokens] + pos[None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    for _ in range(cfg.n_layers):
+        g1, wqkv, wo, g2, w1, b1, w2, b2 = (next(it) for _ in range(8))
+        # --- attention ---
+        x = _rmsnorm(h, g1)
+        qkv = _mm((b, t, cfg.d_model), x, wqkv)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(z):
+            return z.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(cfg.head_dim))
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        h = h + _mm((b, t, cfg.d_model), ctx, wo)
+        # --- mlp ---
+        x = _rmsnorm(h, g2)
+        x = jax.nn.gelu(_mm((b, t, cfg.d_model), x, w1) + b1)
+        h = h + _mm((b, t, 4 * cfg.d_model), x, w2) + b2
+    h = _rmsnorm(h, next(it))
+    return _mm((b, t, cfg.d_model), h, next(it))  # (b, t, vocab)
+
+
+def transformer_def(preset: str = "small") -> ModelDef:
+    cfg = PRESETS[preset]
+
+    def loss_fn(params, x, y):
+        logits = _forward(cfg, params, x)
+        return softmax_xent(logits, y)
+
+    def metric_fn(params, x, y):
+        logits = _forward(cfg, params, x)
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+    # init for g (norm gains) should be ones, not zeros — override init via
+    # spec naming convention handled in init_params_transformer below.
+    return ModelDef(
+        name="transformer" if preset == "small" else f"transformer_{preset}",
+        param_specs=_specs(cfg),
+        loss_fn=loss_fn,
+        metric_fn=metric_fn,
+        x_shape=(cfg.seq,),
+        x_dtype="i32",
+        y_shape=(cfg.seq,),
+        y_dtype="i32",
+        task="lm",
+        default_buckets=(2, 4, 8, 16),
+    )
+
+
+def init_params(model: ModelDef, seed: int = 0) -> list[jax.Array]:
+    """Transformer-aware init: norm gains start at 1, embeds at N(0, 0.02)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for spec in model.param_specs:
+        key, sub = jax.random.split(key)
+        if spec.name.endswith("/g"):
+            params.append(jnp.ones(spec.shape, jnp.float32))
+        elif spec.name.startswith("embed/"):
+            params.append(0.02 * jax.random.normal(sub, spec.shape, jnp.float32))
+        elif len(spec.shape) >= 2:
+            scale = jnp.sqrt(2.0 / spec.shape[0])
+            params.append(scale * jax.random.normal(sub, spec.shape, jnp.float32))
+        else:
+            params.append(jnp.zeros(spec.shape, jnp.float32))
+    return params
+
+
+TRANSFORMER = transformer_def("small")

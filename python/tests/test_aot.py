@@ -1,0 +1,92 @@
+"""AOT pipeline checks: HLO text validity, manifest schema, init blobs."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.models import get_model
+
+
+def test_hlo_text_smells_like_hlo():
+    text = aot.lower_model_step(get_model("linreg"), 8, "train")
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: root must be a tuple of (loss, grad_w, grad_b).
+    assert "(f32[], f32[3,1]" in text.replace(" ", "")[:10_000] or "tuple(" in text
+
+
+def _entry_param_count(text: str) -> int:
+    entry = text[text.index("ENTRY") :]
+    return sum(
+        1 for line in entry.splitlines() if " parameter(" in line
+    )
+
+
+def test_train_hlo_has_param_count_outputs():
+    model = get_model("mlp")
+    text = aot.lower_model_step(model, 8, "train")
+    # 6 params + x + y = 8 inputs
+    assert _entry_param_count(text) == 8
+
+
+def test_eval_hlo_two_outputs():
+    text = aot.lower_model_step(get_model("mlp"), 8, "eval")
+    assert text.startswith("HloModule")
+
+
+def test_grad_agg_hlo():
+    text = aot.lower_grad_agg(3)
+    assert text.startswith("HloModule")
+    assert _entry_param_count(text) == 2
+
+
+def test_init_param_bytes_length():
+    model = get_model("mlp")
+    blob = aot.init_param_bytes(model, 0)
+    total = sum(s.size for s in model.param_specs)
+    assert len(blob) == 4 * total
+
+
+def test_init_param_bytes_deterministic_and_seeded():
+    model = get_model("linreg")
+    assert aot.init_param_bytes(model, 0) == aot.init_param_bytes(model, 0)
+    assert aot.init_param_bytes(model, 0) != aot.init_param_bytes(model, 1)
+
+
+def test_transformer_init_norm_gains_are_one():
+    model = get_model("transformer")
+    blob = aot.init_param_bytes(model, 0)
+    arr = np.frombuffer(blob, dtype="<f4")
+    off = 0
+    for spec in model.param_specs:
+        if spec.name.endswith("/g"):
+            chunk = arr[off : off + spec.size]
+            assert np.all(chunk == 1.0), spec.name
+        off += spec.size
+    assert off == len(arr)
+
+
+def test_write_if_changed(tmp_path):
+    p = str(tmp_path / "f.txt")
+    assert aot.write_if_changed(p, "hello")
+    assert not aot.write_if_changed(p, "hello")
+    assert aot.write_if_changed(p, "world")
+
+
+def test_build_manifest_schema(tmp_path):
+    manifest = aot.build(str(tmp_path), ["linreg"], seed=0, quiet=True)
+    m = manifest["models"]["linreg"]
+    assert m["param_total"] == 4
+    assert m["task"] == "regression"
+    for b in m["buckets"]:
+        assert os.path.exists(tmp_path / m["train"][str(b)])
+        assert os.path.exists(tmp_path / m["eval"][str(b)])
+    assert os.path.exists(tmp_path / m["init"])
+    for k, fname in manifest["agg"].items():
+        assert os.path.exists(tmp_path / fname)
+    # manifest.json parses back
+    with open(tmp_path / "manifest.json") as f:
+        assert json.load(f)["version"] == 1

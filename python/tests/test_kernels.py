@@ -1,0 +1,163 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes (including non-tile-multiple and degenerate ones)
+and asserts the Pallas kernels match the pure-jnp oracles in ``ref.py``.
+Every artifact the Rust runtime executes embeds these kernels, so this
+suite gates `make artifacts`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.grad_agg import weighted_agg, weighted_agg_unchecked
+from compile.kernels.matmul import matmul, matmul_unchecked
+from compile.kernels.ref import matmul_ref, weighted_agg_ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (128, 128, 128),  # exactly one tile
+        (256, 384, 128),  # multi-tile all dims
+        (8, 8, 8),  # minimum tile
+        (1, 1, 1),  # degenerate, fully padded
+        (3, 1000, 5),  # long-K reduction
+        (137, 61, 251),  # coprime everything
+    ],
+)
+def test_matmul_shape_grid(m, k, n):
+    x = _rand(7, (m, k))
+    w = _rand(8, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_matmul_unchecked_requires_tile_multiples():
+    x = _rand(0, (100, 128))
+    w = _rand(1, (128, 128))
+    with pytest.raises(AssertionError):
+        matmul_unchecked(x, w)
+
+
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_custom_vjp_matches_ref_grads(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+
+    def f(mm):
+        return lambda a, b: jnp.sum(jnp.tanh(mm(a, b)))
+
+    gx, gw = jax.grad(f(matmul), argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f(matmul_ref), argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_zero_input_gives_zero():
+    out = matmul(jnp.zeros((16, 32)), _rand(0, (32, 16)))
+    assert not np.any(np.asarray(out))
+
+
+def test_matmul_identity():
+    x = _rand(3, (64, 64))
+    np.testing.assert_allclose(
+        matmul(x, jnp.eye(64)), x, rtol=1e-6, atol=1e-6
+    )
+
+
+def test_matmul_jittable():
+    x, w = _rand(0, (40, 24)), _rand(1, (24, 56))
+    np.testing.assert_allclose(
+        jax.jit(matmul)(x, w), matmul_ref(x, w), rtol=2e-5, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------- grad_agg
+
+
+@given(
+    k=st.integers(1, 8),
+    d=st.integers(1, 5000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_weighted_agg_matches_ref(k, d, seed):
+    g = _rand(seed, (k, d))
+    lam = jax.nn.softmax(_rand(seed + 1, (k,)))
+    np.testing.assert_allclose(
+        weighted_agg(lam, g), weighted_agg_ref(lam, g), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_weighted_agg_uniform_lambda_is_mean():
+    """With λ_k = 1/K the paper's Eq. 2–3 reduce to plain averaging."""
+    k, d = 4, 1024
+    g = _rand(0, (k, d))
+    lam = jnp.full((k,), 1.0 / k)
+    np.testing.assert_allclose(
+        weighted_agg(lam, g), jnp.mean(g, axis=0), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_weighted_agg_single_worker_identity():
+    g = _rand(0, (1, 777))
+    np.testing.assert_allclose(
+        weighted_agg(jnp.ones(1), g), g[0], rtol=1e-6, atol=1e-7
+    )
+
+
+def test_weighted_agg_linear_in_lambda():
+    """agg(αλ1 + βλ2) == α·agg(λ1) + β·agg(λ2) — required for the PS to
+    renormalize λ without re-reading gradients."""
+    k, d = 3, 512
+    g = _rand(0, (k, d))
+    l1 = jax.nn.softmax(_rand(1, (k,)))
+    l2 = jax.nn.softmax(_rand(2, (k,)))
+    lhs = weighted_agg(0.3 * l1 + 0.7 * l2, g)
+    rhs = 0.3 * weighted_agg(l1, g) + 0.7 * weighted_agg(l2, g)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-6)
+
+
+def test_weighted_agg_unchecked_requires_chunk_multiple():
+    g = _rand(0, (2, 100))
+    with pytest.raises(AssertionError):
+        weighted_agg_unchecked(jnp.ones((2, 1)), g, bd=64)
+
+
+def test_weighted_agg_exact_chunk_multiple_unpadded():
+    g = _rand(0, (2, 256))
+    lam = jnp.asarray([0.25, 0.75])
+    out = weighted_agg(lam, g, bd=128)
+    np.testing.assert_allclose(out, weighted_agg_ref(lam, g), rtol=1e-5, atol=1e-6)

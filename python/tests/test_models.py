@@ -1,0 +1,141 @@
+"""L2 model checks: shapes, gradient correctness, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import REGISTRY, get_model
+from compile.models import transformer as tr
+from compile.models.common import ModelDef
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def _batch(model: ModelDef, b: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    if model.x_dtype == "f32":
+        x = jax.random.normal(kx, (b, *model.x_shape), jnp.float32)
+    else:
+        x = jax.random.randint(kx, (b, *model.x_shape), 0, 64)
+    if model.task == "regression":
+        y = jax.random.normal(ky, (b, *model.y_shape), jnp.float32)
+    elif model.task == "lm":
+        y = jax.random.randint(ky, (b, *model.y_shape), 0, 64)
+    else:
+        y = jax.random.randint(ky, (b, *model.y_shape), 0, 10)
+    return x, y
+
+
+def _params(model: ModelDef, seed: int = 0):
+    if model.task == "lm":
+        return tr.init_params(model, seed)
+    return model.init_params(seed)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_init_matches_specs(name):
+    model = get_model(name)
+    params = _params(model)
+    assert len(params) == len(model.param_specs)
+    for p, spec in zip(params, model.param_specs):
+        assert p.shape == spec.shape, spec.name
+        assert p.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_train_step_shapes_and_finiteness(name):
+    model = get_model(name)
+    params = _params(model)
+    x, y = _batch(model, 4)
+    out = model.train_step(params, x, y)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert len(grads) == len(params)
+    for g, spec in zip(grads, model.param_specs):
+        assert g.shape == spec.shape, spec.name
+        assert np.all(np.isfinite(np.asarray(g))), spec.name
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_eval_step(name):
+    model = get_model(name)
+    loss, metric = model.eval_step(_params(model), *_batch(model, 4))
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(metric))
+
+
+def test_linreg_grads_match_numeric():
+    """Analytic check on the simplest model: dL/dw = 2/b · X^T (Xw+b − y)."""
+    model = get_model("linreg")
+    params = _params(model)
+    x, y = _batch(model, 16)
+    _, gw, gb = model.train_step(params, x, y)
+    w, b = params
+    resid = x @ w + b - y
+    np.testing.assert_allclose(
+        gw, 2.0 / 16 * x.T @ resid, rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        gb, 2.0 * jnp.mean(resid, axis=0), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("name", ["linreg", "mlp", "transformer"])
+def test_sgd_reduces_loss(name):
+    model = get_model(name)
+    params = _params(model)
+    x, y = _batch(model, 16)
+    lr = 0.05 if name == "linreg" else 0.1
+    first = None
+    for _ in range(10):
+        out = model.train_step(params, x, y)
+        loss, grads = float(out[0]), out[1:]
+        if first is None:
+            first = loss
+        params = [p - lr * g for p, g in zip(params, grads)]
+    last = float(model.loss_fn(params, x, y))
+    assert last < first, (first, last)
+
+
+def test_classification_loss_at_init_is_log_classes():
+    model = get_model("mlp")
+    # He-init logits have O(1) spread, so CE sits near (not at) ln(10).
+    loss = float(model.loss_fn(_params(model), *_batch(model, 32)))
+    assert abs(loss - np.log(10)) < 1.5
+
+
+def test_transformer_causality():
+    """Changing token t must not change logits at positions < t."""
+    model = get_model("transformer")
+    params = tr.init_params(model, 0)
+    cfg = tr.PRESETS["small"]
+    x = jax.random.randint(jax.random.PRNGKey(0), (1, cfg.seq), 0, cfg.vocab)
+    logits_a = tr._forward(cfg, params, x)
+    x2 = x.at[0, cfg.seq - 1].set((x[0, cfg.seq - 1] + 1) % cfg.vocab)
+    logits_b = tr._forward(cfg, params, x2)
+    np.testing.assert_allclose(
+        logits_a[0, : cfg.seq - 1], logits_b[0, : cfg.seq - 1], atol=1e-5
+    )
+    assert not np.allclose(logits_a[0, -1], logits_b[0, -1])
+
+
+def test_e2e_preset_param_count():
+    model = tr.transformer_def("e2e")
+    total = sum(s.size for s in model.param_specs)
+    assert 10_000_000 < total < 20_000_000, total
+
+
+def test_gradient_scale_invariance_under_batch_growth():
+    """Mean-loss gradients must be O(1) in batch size — the PS relies on
+    per-example-mean semantics when λ-weighting different b_k (Eq. 2)."""
+    model = get_model("mlp")
+    params = _params(model)
+    x, y = _batch(model, 64)
+    g8 = model.train_step(params, x[:8], y[:8])[1]
+    g64 = model.train_step(params, x, y)[1]
+    n8 = float(jnp.linalg.norm(g8))
+    n64 = float(jnp.linalg.norm(g64))
+    assert 0.2 < n8 / n64 < 5.0

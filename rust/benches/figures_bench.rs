@@ -1,0 +1,33 @@
+//! End-to-end benches: one per paper evaluation artifact (DESIGN.md §4).
+//!
+//! Each bench regenerates a figure's full experiment through the
+//! simulator and prints the same rows the paper plots, plus how long the
+//! regeneration took. Run via `cargo bench` or `make bench`.
+
+use std::time::Instant;
+
+use hetero_batch::figures;
+
+fn timed(name: &str, f: impl FnOnce() -> hetero_batch::util::csv::Table) {
+    let t0 = Instant::now();
+    let table = f();
+    let dt = t0.elapsed();
+    println!("\n=== {name} (regenerated in {dt:?}) ===");
+    print!("{}", table.to_string());
+}
+
+fn main() {
+    let seed = 0;
+    timed("fig1_hetero_penalty", || figures::fig1(seed));
+    timed("fig2_timeline", || figures::fig2(seed));
+    timed("fig3_iter_time_hist", || figures::fig3(seed).0);
+    timed("fig4a_convergence", || figures::fig4(true, seed));
+    timed("fig4b_oscillation", || figures::fig4(false, seed));
+    timed("fig5_throughput_vs_batch", figures::fig5);
+    timed("fig6_bsp_hlevel", || figures::fig6(seed));
+    timed("fig7a_gpu_cpu", || figures::fig7a(seed));
+    timed("fig7cloud_t4_p4", || figures::fig7_cloud(seed));
+    timed("fig_asp", || figures::fig_asp(seed));
+    timed("fig_buckets_ablation", || figures::fig_buckets(seed));
+    println!("\nall figure benches complete");
+}

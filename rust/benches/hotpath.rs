@@ -1,0 +1,201 @@
+//! Hot-path micro benches (util::bench): the L3 operations on the
+//! per-iteration critical path, plus the PJRT step itself.
+//!
+//! Used by the §Perf pass in EXPERIMENTS.md: aggregation (single- vs
+//! multi-threaded vs the AOT Pallas kernel), optimizer updates, the
+//! controller step, data generation, and real train-step execution per
+//! model/bucket.
+
+use hetero_batch::controller::{ControllerCfg, DynamicBatcher};
+use hetero_batch::data::{self};
+use hetero_batch::ps::{
+    self, aggregate_into, aggregate_into_mt, lambdas_from_batches, Optimizer,
+};
+use hetero_batch::runtime::Runtime;
+use hetero_batch::util::bench::Bench;
+use hetero_batch::util::rng::Rng;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn bench_aggregation() {
+    let mut b = Bench::new("agg");
+    let mut rng = Rng::new(0);
+    // e2e-transformer-sized gradient set: K=3 × 12.6M params.
+    for &(k, d, tag) in &[
+        (3usize, 400_000usize, "3x400k"),
+        (3, 12_600_000, "3x12.6M"),
+        (8, 1_000_000, "8x1M"),
+    ] {
+        let grads: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec_f32(d)).collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let lambdas = lambdas_from_batches(&vec![32.0; k]);
+        let mut out = vec![0.0f32; d];
+        b.run(&format!("st/{tag}"), || {
+            aggregate_into(&mut out, &refs, &lambdas);
+            out[0]
+        });
+        for threads in [2, 4, 8] {
+            b.run(&format!("mt{threads}/{tag}"), || {
+                aggregate_into_mt(&mut out, &refs, &lambdas, threads);
+                out[0]
+            });
+        }
+    }
+    b.report();
+}
+
+fn bench_agg_xla_vs_rust() {
+    let mut rt = match Runtime::open(artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping XLA agg bench: {e}");
+            return;
+        }
+    };
+    let mut b = Bench::new("agg_xla");
+    let mut rng = Rng::new(1);
+    let d = 2_000_000usize;
+    let grads: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec_f32(d)).collect();
+    let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    let lambdas = lambdas_from_batches(&[32.0, 64.0, 96.0]);
+    // Warm the executable cache.
+    let _ = rt.agg_step(&lambdas, &refs).unwrap();
+    b.run("pallas_hlo/3x2M", || rt.agg_step(&lambdas, &refs).unwrap()[0]);
+    let mut out = vec![0.0f32; d];
+    b.run("rust_native/3x2M", || {
+        ps::aggregate_into(&mut out, &refs, &lambdas);
+        out[0]
+    });
+    b.report();
+}
+
+fn bench_optimizers() {
+    let mut b = Bench::new("optimizer");
+    let d = 12_600_000usize;
+    let mut rng = Rng::new(2);
+    let grad = rng.normal_vec_f32(d);
+    let mut params = rng.normal_vec_f32(d);
+    let mut sgd = ps::Sgd::new(ps::LrSchedule::Constant(0.01));
+    b.run("sgd/12.6M", || {
+        sgd.step(&mut params, &grad);
+        params[0]
+    });
+    let mut mom = ps::Momentum::new(ps::LrSchedule::Constant(0.01), 0.9, d);
+    b.run("momentum/12.6M", || {
+        mom.step(&mut params, &grad);
+        params[0]
+    });
+    let mut adam = ps::Adam::new(ps::LrSchedule::Constant(0.001), d);
+    b.run("adam/12.6M", || {
+        adam.step(&mut params, &grad);
+        params[0]
+    });
+    // §Perf iteration 1: fused aggregation+optimizer (one memory pass)
+    // vs the separate agg-then-step pipeline above.
+    let grads: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec_f32(d)).collect();
+    let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    let lambdas = lambdas_from_batches(&[32.0, 64.0, 96.0]);
+    let mut agg = vec![0.0f32; d];
+    let mut adam2 = ps::Adam::new(ps::LrSchedule::Constant(0.001), d);
+    b.run("unfused_agg+adam/3x12.6M", || {
+        aggregate_into(&mut agg, &refs, &lambdas);
+        adam2.step(&mut params, &agg);
+        params[0]
+    });
+    let mut fused = ps::FusedOptimizer::Adam(ps::Adam::new(
+        ps::LrSchedule::Constant(0.001),
+        d,
+    ));
+    b.run("fused_agg+adam/3x12.6M", || {
+        fused.step(&mut params, &refs, &lambdas);
+        params[0]
+    });
+    let mut sgd2 = ps::Sgd::new(ps::LrSchedule::Constant(0.01));
+    b.run("unfused_agg+sgd/3x12.6M", || {
+        aggregate_into(&mut agg, &refs, &lambdas);
+        sgd2.step(&mut params, &agg);
+        params[0]
+    });
+    let mut fused_sgd =
+        ps::FusedOptimizer::Sgd(ps::Sgd::new(ps::LrSchedule::Constant(0.01)));
+    b.run("fused_agg+sgd/3x12.6M", || {
+        fused_sgd.step(&mut params, &refs, &lambdas);
+        params[0]
+    });
+    b.report();
+}
+
+fn bench_controller() {
+    let mut b = Bench::new("controller");
+    for k in [3usize, 16, 64] {
+        let init = vec![64.0; k];
+        let mut ctl = DynamicBatcher::new(
+            ControllerCfg {
+                min_obs: 1,
+                deadband: 0.0,
+                backoff: false,
+                ..ControllerCfg::default()
+            },
+            &init,
+        );
+        let mut i = 0u64;
+        b.run(&format!("observe+adjust/k{k}"), || {
+            i += 1;
+            for w in 0..k {
+                ctl.observe(w, 1.0 + (w as f64) * 0.01 + (i % 7) as f64 * 0.001);
+            }
+            ctl.maybe_adjust()
+        });
+    }
+    b.report();
+}
+
+fn bench_datagen() {
+    let mut b = Bench::new("datagen");
+    let mut mnist = data::for_model("mlp", 1, 0);
+    b.run("mlp/b64", || mnist.next_batch(0, 64).x_f32.len());
+    let mut lm = data::for_model("transformer", 1, 0);
+    b.run("transformer/b8", || lm.next_batch(0, 8).x_i32.len());
+    b.report();
+}
+
+fn bench_train_steps() {
+    let mut rt = match Runtime::open(artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping train-step bench: {e}");
+            return;
+        }
+    };
+    let mut b = Bench::new("train_step");
+    for (model, buckets) in [
+        ("linreg", vec![32usize, 256]),
+        ("mlp", vec![16, 64, 256]),
+        ("cnn", vec![4, 32]),
+        ("transformer", vec![2, 8]),
+    ] {
+        let params = rt.init_params(model).unwrap();
+        let mut ds = data::for_model(model, 1, 0);
+        for bu in buckets {
+            let batch = ds.next_batch(0, bu);
+            // Warm compile outside the timed region.
+            let _ = rt.train_step(model, bu, &params, &batch).unwrap();
+            b.run(&format!("{model}/b{bu}"), || {
+                rt.train_step(model, bu, &params, &batch).unwrap().loss
+            });
+        }
+    }
+    b.report();
+}
+
+fn main() {
+    bench_aggregation();
+    bench_agg_xla_vs_rust();
+    bench_optimizers();
+    bench_controller();
+    bench_datagen();
+    bench_train_steps();
+    println!("\nall hotpath benches complete");
+}

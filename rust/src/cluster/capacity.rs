@@ -1,0 +1,387 @@
+//! The worker capacity model: iteration time as a function of device,
+//! batch size, workload, and current availability.
+//!
+//! This is the simulation substrate standing in for the paper's physical
+//! testbed (DESIGN.md §1).  It reproduces the three behaviours the
+//! paper's evaluation depends on:
+//!
+//! 1. **Amdahl intra-worker scaling** (§III-C): observed throughput on
+//!    large workers is *below* core-count-proportional — exactly the
+//!    open-loop estimation error the dynamic controller corrects.
+//! 2. **Throughput-vs-batch curves** (Fig. 5): throughput ramps up with
+//!    batch size (fixed per-iteration overhead amortizes), then declines —
+//!    a sharp cliff on GPUs when device memory is exhausted, a gradual
+//!    roll-off on CPUs.
+//! 3. **Stochastic iteration noise**: lognormal multiplicative jitter, the
+//!    shape reported for shared-cloud iteration times.
+
+use crate::cluster::{DeviceKind, WorkerSpec};
+use crate::util::rng::Rng;
+
+/// Per-workload calibration. FLOP counts are per training sample
+/// (fwd+bwd); rates were chosen so relative magnitudes across workloads
+/// match the paper's description (ResNet compute-bound … LR comm-bound).
+#[derive(Debug, Clone)]
+pub struct WorkloadProfile {
+    pub name: &'static str,
+    /// fwd+bwd FLOPs per sample.
+    pub flops_per_sample: f64,
+    /// Fraction of per-sample work that parallelizes across cores (Amdahl).
+    pub parallel_frac: f64,
+    /// Model-update communication+sync time per iteration, seconds.
+    /// Independent of batch size — this is why LR sees little benefit.
+    pub comm_time_s: f64,
+    /// Device memory consumed per sample in the batch, GiB (activations).
+    pub mem_per_sample_gib: f64,
+    /// Fixed per-iteration host-side overhead, seconds.
+    pub overhead_s: f64,
+    /// Iterations to reach the paper's target accuracy at reference global
+    /// batch; the convergence model in `simulator` uses this.
+    pub iters_to_target: u64,
+    /// Reference per-worker batch size b0 (paper's uniform default).
+    pub b0: usize,
+}
+
+impl WorkloadProfile {
+    /// ResNet-50/CIFAR-10 class: heavily compute-bound.
+    pub fn resnet() -> Self {
+        WorkloadProfile {
+            name: "resnet",
+            flops_per_sample: 8.2e9, // ~2.7 GFLOPs fwd ⇒ ~8 GFLOPs fwd+bwd
+            parallel_frac: 0.99,
+            comm_time_s: 0.03, // 25M params, push/pull overlapped with bwd
+            mem_per_sample_gib: 0.045,
+            overhead_s: 0.02,
+            iters_to_target: 30_000,
+            b0: 128,
+        }
+    }
+
+    /// MNIST CNN class: moderate compute.
+    pub fn mnist() -> Self {
+        WorkloadProfile {
+            name: "mnist",
+            // TF official MNIST CNN: two 5x5 conv layers dominate;
+            // ~25 MFLOPs fwd => ~75 MFLOPs fwd+bwd per sample.
+            flops_per_sample: 7.5e7,
+            parallel_frac: 0.95,
+            comm_time_s: 0.012,
+            mem_per_sample_gib: 0.002,
+            overhead_s: 0.008,
+            iters_to_target: 20_000,
+            b0: 100,
+        }
+    }
+
+    /// Linear regression class: communication/synchronization-bound.
+    pub fn linreg() -> Self {
+        WorkloadProfile {
+            name: "linreg",
+            // The regression math is ~kFLOPs, but per-sample cost is
+            // dominated by the input pipeline / op dispatch (~3 MFLOP
+            // equivalent) — matching the paper's "least benefit, ~15%"
+            // shape for LR).
+            flops_per_sample: 3.0e6,
+            parallel_frac: 0.85,
+            comm_time_s: 0.035,
+            mem_per_sample_gib: 1e-6,
+            overhead_s: 0.008,
+            iters_to_target: 8_000,
+            b0: 256,
+        }
+    }
+
+    /// Transformer-LM class (e2e example).
+    pub fn transformer() -> Self {
+        WorkloadProfile {
+            name: "transformer",
+            flops_per_sample: 9.0e9, // ~12M params × 128 tokens × 6
+            parallel_frac: 0.98,
+            comm_time_s: 0.15,
+            mem_per_sample_gib: 0.02,
+            overhead_s: 0.04,
+            iters_to_target: 12_000,
+            b0: 16,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "resnet" | "cnn" => Some(Self::resnet()),
+            "mnist" | "mlp" => Some(Self::mnist()),
+            "linreg" => Some(Self::linreg()),
+            "transformer" => Some(Self::transformer()),
+            _ => None,
+        }
+    }
+}
+
+/// Capacity model instance: (worker, workload) → iteration-time samples.
+#[derive(Debug, Clone)]
+pub struct CapacityModel {
+    pub workload: WorkloadProfile,
+    /// Lognormal sigma of iteration-time noise (0 disables).
+    pub noise_sigma: f64,
+    /// Effective FLOPs a single Xeon core sustains on training math.
+    /// Achievable, not peak: ~23% of the AVX-512 roofline — TF CPU training
+    /// efficiency is far below GPU efficiency, which is why the *true*
+    /// GPU:CPU throughput ratio (~8x) exceeds the FLOPs-estimate ratio
+    /// (4.3x) the static allocator uses. That gap is the controller's job.
+    pub cpu_flops_per_core: f64,
+    /// Fraction of GPU peak half-precision FLOPs actually achieved.
+    pub gpu_efficiency: f64,
+}
+
+impl CapacityModel {
+    pub fn new(workload: WorkloadProfile) -> Self {
+        CapacityModel {
+            workload,
+            noise_sigma: 0.06,
+            cpu_flops_per_core: 3.1e10,
+            gpu_efficiency: 0.45,
+        }
+    }
+
+    pub fn with_noise(mut self, sigma: f64) -> Self {
+        self.noise_sigma = sigma;
+        self
+    }
+
+    /// Amdahl speedup of `cores` over 1 core for this workload.
+    fn amdahl(&self, cores: f64) -> f64 {
+        let p = self.workload.parallel_frac;
+        1.0 / ((1.0 - p) + p / cores)
+    }
+
+    /// Peak sustainable throughput (samples/s) of a device at large batch,
+    /// before the batch-efficiency curve is applied.
+    pub fn peak_throughput(&self, device: &DeviceKind) -> f64 {
+        match device {
+            DeviceKind::Cpu { cores } => {
+                // One core's sample rate, scaled by Amdahl (NOT linear in
+                // cores — this is the open-loop estimation error).
+                let one_core = self.cpu_flops_per_core / self.workload.flops_per_sample;
+                one_core * self.amdahl(*cores as f64)
+            }
+            DeviceKind::Gpu { model } => {
+                model.half_precision_tflops() * 1e12 * self.gpu_efficiency
+                    / self.workload.flops_per_sample
+            }
+        }
+    }
+
+    /// Batch at which device memory is exhausted (Fig. 5's knee).
+    pub fn mem_knee(&self, device: &DeviceKind) -> f64 {
+        let mem_gib = match device {
+            // Host RAM is large (256 GB on the paper's servers) but CPU
+            // caches thrash earlier; model an effective working-set knee.
+            DeviceKind::Cpu { cores } => 8.0 + *cores as f64 * 1.2,
+            DeviceKind::Gpu { model } => model.mem_gib(),
+        };
+        // ~70% of memory goes to activations at the knee.
+        0.7 * mem_gib / self.workload.mem_per_sample_gib.max(1e-12)
+    }
+
+    /// Batch-size efficiency in (0, 1]: ramp-up then decline (Fig. 5).
+    pub fn batch_efficiency(&self, device: &DeviceKind, batch: f64) -> f64 {
+        assert!(batch > 0.0);
+        // Ramp: fixed per-iteration launch/dispatch amortizes; half
+        // efficiency at b_half.
+        let b_half = match device {
+            // Intra-sample parallelism (convs etc.) keeps small batches
+            // efficient on CPUs; ramp saturates well below core count.
+            DeviceKind::Cpu { cores } => (*cores as f64 / 8.0).max(1.0),
+            DeviceKind::Gpu { .. } => 12.0,
+        };
+        let ramp = batch / (batch + b_half);
+        let knee = self.mem_knee(device);
+        let decline = if batch <= knee {
+            1.0
+        } else {
+            match device {
+                // GPU: sharp cliff — throughput collapses past memory.
+                DeviceKind::Gpu { .. } => (knee / batch).powf(3.0),
+                // CPU: gradual decline from cache/RAM pressure.
+                DeviceKind::Cpu { .. } => (knee / batch).powf(0.8),
+            }
+        };
+        ramp * decline
+    }
+
+    /// Deterministic throughput (samples/s) at a batch size (Fig. 5 y-axis).
+    pub fn throughput(&self, device: &DeviceKind, batch: f64) -> f64 {
+        // Solve samples/time where time = overhead + batch/(peak·eff).
+        let eff = self.batch_efficiency(device, batch);
+        let compute = batch / (self.peak_throughput(device) * eff);
+        batch / (self.workload.overhead_s + compute)
+    }
+
+    /// Deterministic iteration time (compute + comm + overhead), seconds.
+    /// `avail` is the current capacity multiplier in (0, 1] from traces.
+    pub fn iter_time_det(&self, device: &DeviceKind, batch: f64, avail: f64) -> f64 {
+        assert!(avail > 0.0 && avail <= 1.0, "avail={avail}");
+        let eff = self.batch_efficiency(device, batch);
+        let compute = batch / (self.peak_throughput(device) * eff * avail);
+        self.workload.overhead_s + compute + self.workload.comm_time_s
+    }
+
+    /// Full-capacity compute *work* (seconds) for one iteration of size
+    /// `batch`, with optional lognormal noise. Feed this into
+    /// [`crate::trace::AvailTrace::time_to_complete`] for trace-integrated
+    /// timing; comm+overhead are added on top (they don't scale with the
+    /// worker's compute capacity).
+    pub fn compute_work(&self, device: &DeviceKind, batch: f64, rng: &mut Rng) -> f64 {
+        let eff = self.batch_efficiency(device, batch);
+        let det = batch / (self.peak_throughput(device) * eff);
+        if self.noise_sigma == 0.0 {
+            det
+        } else {
+            det * rng.lognormal(1.0, self.noise_sigma)
+        }
+    }
+
+    /// Fixed per-iteration time that does not scale with capacity.
+    pub fn fixed_time(&self) -> f64 {
+        self.workload.overhead_s + self.workload.comm_time_s
+    }
+
+    /// Sampled iteration time with lognormal noise.
+    pub fn iter_time(
+        &self,
+        device: &DeviceKind,
+        batch: f64,
+        avail: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        let det = self.iter_time_det(device, batch, avail);
+        if self.noise_sigma == 0.0 {
+            det
+        } else {
+            det * rng.lognormal(1.0, self.noise_sigma)
+        }
+    }
+}
+
+/// Convenience: specs → per-worker deterministic throughputs at batch b.
+pub fn throughputs(model: &CapacityModel, specs: &[WorkerSpec], batch: f64) -> Vec<f64> {
+    specs
+        .iter()
+        .map(|s| model.throughput(&s.device, batch))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuModel;
+
+    fn cpu(cores: usize) -> DeviceKind {
+        DeviceKind::Cpu { cores }
+    }
+
+    #[test]
+    fn amdahl_sublinear() {
+        let m = CapacityModel::new(WorkloadProfile::resnet());
+        let x12 = m.peak_throughput(&cpu(12));
+        let x3 = m.peak_throughput(&cpu(3));
+        let ratio = x12 / x3;
+        // 4x cores must give >1x but <4x throughput.
+        assert!(ratio > 2.0 && ratio < 4.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn linreg_scales_worse_than_resnet() {
+        let r = CapacityModel::new(WorkloadProfile::resnet());
+        let l = CapacityModel::new(WorkloadProfile::linreg());
+        let rr = r.peak_throughput(&cpu(16)) / r.peak_throughput(&cpu(2));
+        let lr = l.peak_throughput(&cpu(16)) / l.peak_throughput(&cpu(2));
+        assert!(rr > lr, "resnet {rr} vs linreg {lr}");
+    }
+
+    #[test]
+    fn throughput_curve_rises_then_falls_gpu() {
+        // Fig. 5a: GPU throughput rises with batch then collapses.
+        let m = CapacityModel::new(WorkloadProfile::resnet());
+        let g = DeviceKind::Gpu {
+            model: GpuModel::P100,
+        };
+        let knee = m.mem_knee(&g);
+        let low = m.throughput(&g, 2.0);
+        let mid = m.throughput(&g, knee * 0.8);
+        let high = m.throughput(&g, knee * 3.0);
+        assert!(mid > low, "ramp: {low} -> {mid}");
+        assert!(high < mid * 0.3, "cliff: {mid} -> {high}");
+    }
+
+    #[test]
+    fn throughput_curve_gradual_on_cpu() {
+        // Fig. 5b: CPU decline past the knee is gradual, not a cliff.
+        let m = CapacityModel::new(WorkloadProfile::mnist());
+        let c = cpu(16);
+        let knee = m.mem_knee(&c);
+        let mid = m.throughput(&c, knee * 0.9);
+        let past = m.throughput(&c, knee * 3.0);
+        assert!(past < mid, "must decline");
+        assert!(past > mid * 0.2, "but gradually: {mid} -> {past}");
+    }
+
+    #[test]
+    fn iter_time_monotone_in_batch() {
+        let m = CapacityModel::new(WorkloadProfile::resnet());
+        let c = cpu(8);
+        let mut prev = 0.0;
+        for b in [1.0, 4.0, 16.0, 64.0, 256.0] {
+            let t = m.iter_time_det(&c, b, 1.0);
+            assert!(t > prev, "t({b})={t} <= t(prev)={prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn reduced_availability_slows_compute_only() {
+        let m = CapacityModel::new(WorkloadProfile::resnet());
+        let c = cpu(8);
+        let full = m.iter_time_det(&c, 64.0, 1.0);
+        let half = m.iter_time_det(&c, 64.0, 0.5);
+        assert!(half > full);
+        // Comm+overhead don't scale, so it's less than 2x overall.
+        assert!(half < 2.0 * full);
+        let compute_full = full - m.workload.comm_time_s - m.workload.overhead_s;
+        let compute_half = half - m.workload.comm_time_s - m.workload.overhead_s;
+        assert!((compute_half / compute_full - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_is_multiplicative_and_median_preserving() {
+        let m = CapacityModel::new(WorkloadProfile::mnist()).with_noise(0.1);
+        let c = cpu(4);
+        let det = m.iter_time_det(&c, 32.0, 1.0);
+        let mut rng = Rng::new(0);
+        let mut v: Vec<f64> = (0..20_001)
+            .map(|_| m.iter_time(&c, 32.0, 1.0, &mut rng))
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = v[v.len() / 2];
+        assert!((med / det - 1.0).abs() < 0.02, "median drift {med} vs {det}");
+    }
+
+    #[test]
+    fn gpu_much_faster_than_small_cpu_on_resnet() {
+        let m = CapacityModel::new(WorkloadProfile::resnet());
+        let g = DeviceKind::Gpu {
+            model: GpuModel::P100,
+        };
+        let ratio = m.peak_throughput(&g) / m.peak_throughput(&cpu(48));
+        // The paper's 4.3x is the FLOPs-*estimate* ratio; achieved
+        // training throughput favors the GPU more (CPU efficiency is
+        // poor), which the paper's own >4x speedup result requires.
+        assert!(ratio > 4.0 && ratio < 12.0, "ratio={ratio}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_avail_rejected() {
+        let m = CapacityModel::new(WorkloadProfile::mnist());
+        m.iter_time_det(&cpu(4), 8.0, 0.0);
+    }
+}

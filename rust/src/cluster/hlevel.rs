@@ -1,0 +1,156 @@
+//! H-level cluster generation (paper §IV-A).
+//!
+//! `H-level = max cores / min cores` with the *total* core count held
+//! constant, so experiments isolate heterogeneity from capacity.  The
+//! paper's examples on a 39-core/3-worker cluster: H=2 → (9, 12, 18),
+//! H=10 → (2, 17, 20), H=6 → e.g. (3, 13, 18)... this module searches the
+//! integer splits and returns the one whose middle workers are closest to
+//! the geometric mean of min and max (matching the paper's shapes).
+
+/// Split `total` cores across `k` workers with max/min == `h` (as close as
+/// integers allow), total preserved exactly. Returns ascending core counts.
+pub fn hlevel_split(total: usize, k: usize, h: f64) -> Option<Vec<usize>> {
+    assert!(k >= 2, "need at least two workers");
+    assert!(h >= 1.0, "H-level must be >= 1");
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    // Try every min core count; derive max = round(h*min); fill middles.
+    for min_c in 1..=(total / k) {
+        let max_c = (h * min_c as f64).round() as usize;
+        if max_c < min_c || min_c + max_c > total {
+            continue;
+        }
+        let actual_h = max_c as f64 / min_c as f64;
+        // Keep only splits with the right ratio (within rounding).
+        if (actual_h - h).abs() > 0.5 && (actual_h / h - 1.0).abs() > 0.1 {
+            continue;
+        }
+        let remaining = total - min_c - max_c;
+        let mids = k - 2;
+        if mids == 0 {
+            if remaining != 0 {
+                continue;
+            }
+            let split = vec![min_c, max_c];
+            score_candidate(&mut best, h, split);
+            continue;
+        }
+        // Distribute `remaining` across middles, each in [min_c, max_c].
+        if remaining < mids * min_c || remaining > mids * max_c {
+            continue;
+        }
+        let base = remaining / mids;
+        let mut extra = remaining - base * mids;
+        let mut mid_vals = vec![base; mids];
+        for v in mid_vals.iter_mut() {
+            if extra == 0 {
+                break;
+            }
+            let bump = (max_c - *v).min(extra);
+            *v += bump;
+            extra -= bump;
+        }
+        if extra > 0 || mid_vals.iter().any(|&v| v < min_c || v > max_c) {
+            continue;
+        }
+        let mut split = vec![min_c];
+        split.extend(mid_vals);
+        split.push(max_c);
+        split.sort_unstable();
+        score_candidate(&mut best, h, split);
+    }
+    best.map(|(_, v)| v)
+}
+
+fn score_candidate(best: &mut Option<(f64, Vec<usize>)>, h: f64, split: Vec<usize>) {
+    let min_c = *split.first().unwrap() as f64;
+    let max_c = *split.last().unwrap() as f64;
+    let actual_h = max_c / min_c;
+    // Primary: match H exactly. Secondary: middles near the arithmetic
+    // mean of min and max — this reproduces both paper examples,
+    // (9, 12, 18) at H=2 and (2, 17, 20) at H=10.
+    let am = (min_c + max_c) / 2.0;
+    let mid_err: f64 = split[1..split.len() - 1]
+        .iter()
+        .map(|&v| ((v as f64 - am) / am).powi(2))
+        .sum();
+    let score = (actual_h - h).abs() * 100.0 + mid_err;
+    if best.as_ref().map_or(true, |(s, _)| score < *s) {
+        *best = Some((score, split));
+    }
+}
+
+/// The paper's H-level sweep values (Fig. 6 x-axis).
+pub const PAPER_HLEVELS: [f64; 6] = [1.0, 2.0, 4.0, 6.0, 8.0, 10.0];
+
+/// The paper's local-cluster total: 39 cores across 3 workers.
+pub const PAPER_TOTAL_CORES: usize = 39;
+pub const PAPER_WORKERS: usize = 3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(total: usize, k: usize, h: f64) -> Vec<usize> {
+        let split = hlevel_split(total, k, h)
+            .unwrap_or_else(|| panic!("no split for total={total} k={k} h={h}"));
+        assert_eq!(split.iter().sum::<usize>(), total, "{split:?}");
+        assert_eq!(split.len(), k);
+        let actual = *split.last().unwrap() as f64 / split[0] as f64;
+        assert!(
+            (actual - h).abs() / h < 0.35,
+            "h={h} actual={actual} split={split:?}"
+        );
+        split
+    }
+
+    #[test]
+    fn paper_h2_is_9_12_18() {
+        // §IV-A: "a H-level of 2 would yield a (9, 12, 18)".
+        let split = check(39, 3, 2.0);
+        assert_eq!(split, vec![9, 12, 18]);
+    }
+
+    #[test]
+    fn paper_h10_has_tiny_worker() {
+        // §IV-A: "H-level 10 is a (2,17,20) configuration" — exact middle
+        // placement may differ, but min=2, max=20 are forced.
+        let split = check(39, 3, 10.0);
+        assert_eq!(split[0], 2);
+        assert_eq!(*split.last().unwrap(), 20);
+    }
+
+    #[test]
+    fn homogeneous_h1() {
+        let split = check(39, 3, 1.0);
+        assert_eq!(split, vec![13, 13, 13]);
+    }
+
+    #[test]
+    fn all_paper_hlevels_have_splits() {
+        for &h in &PAPER_HLEVELS {
+            check(PAPER_TOTAL_CORES, PAPER_WORKERS, h);
+        }
+    }
+
+    #[test]
+    fn two_worker_splits() {
+        let split = check(20, 2, 4.0);
+        assert_eq!(split, vec![4, 16]);
+    }
+
+    #[test]
+    fn impossible_split_returns_none() {
+        // total too small for k workers at h.
+        assert!(hlevel_split(3, 3, 10.0).is_none());
+    }
+
+    #[test]
+    fn splits_are_ascending() {
+        for &h in &[2.0, 4.0, 6.0] {
+            let s = check(64, 4, h);
+            for w in s.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+}

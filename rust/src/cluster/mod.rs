@@ -1,0 +1,180 @@
+//! Heterogeneous cluster modeling: worker specs, device capacity, and the
+//! H-level cluster generators used throughout the paper's evaluation.
+//!
+//! The paper defines heterogeneity level for CPU clusters as
+//! `H-level = max cores / min cores` at *fixed total capacity* (§IV-A),
+//! e.g. 39 total cores split (9, 12, 18) at H=2 or (2, 17, 20) at H=10.
+
+pub mod capacity;
+pub mod hlevel;
+
+pub use capacity::{CapacityModel, WorkloadProfile};
+pub use hlevel::hlevel_split;
+
+/// What computes on a worker.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeviceKind {
+    /// CPU worker with a core count (containers/VMs of different sizes).
+    Cpu { cores: usize },
+    /// GPU worker identified by its model profile.
+    Gpu { model: GpuModel },
+}
+
+/// GPU models used in the paper's evaluation, with half-precision TFLOPs.
+/// The paper's static allocator assigns batch proportional to these (§III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuModel {
+    /// Nvidia Tesla P100-PCIe-16GB (local cluster GPU).
+    P100,
+    /// Nvidia Tesla T4 (cloud cluster).
+    T4,
+    /// Nvidia Tesla P4 (cloud cluster).
+    P4,
+}
+
+impl GpuModel {
+    /// Half-precision peak TFLOPs (marketing numbers — the paper's
+    /// open-loop allocator uses exactly these, and its §III-C point is
+    /// that they are *imperfect* predictors the controller must correct).
+    pub fn half_precision_tflops(self) -> f64 {
+        match self {
+            GpuModel::P100 => 18.7,
+            GpuModel::T4 => 65.0,
+            GpuModel::P4 => 5.5,
+        }
+    }
+
+    /// Device memory in GiB (bounds the batch size — Fig. 5's GPU cliff).
+    pub fn mem_gib(self) -> f64 {
+        match self {
+            GpuModel::P100 => 16.0,
+            GpuModel::T4 => 16.0,
+            GpuModel::P4 => 8.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuModel::P100 => "P100",
+            GpuModel::T4 => "T4",
+            GpuModel::P4 => "P4",
+        }
+    }
+}
+
+impl DeviceKind {
+    /// Half-precision FLOPs estimate used by the *static* (open-loop)
+    /// variable-batching policy.  CPU: the paper's 48-core Xeon Platinum
+    /// 2.10GHz ≈ 4.3 half-precision TFLOPs (it reports the P100:Xeon split
+    /// as 0.813:0.187 ⇒ Xeon ≈ 18.7·0.187/0.813 ≈ 4.3).
+    pub fn flops_estimate(&self) -> f64 {
+        const XEON_TFLOPS_PER_CORE: f64 = 4.3 / 48.0;
+        match self {
+            DeviceKind::Cpu { cores } => *cores as f64 * XEON_TFLOPS_PER_CORE,
+            DeviceKind::Gpu { model } => model.half_precision_tflops(),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            DeviceKind::Cpu { cores } => format!("cpu{cores}"),
+            DeviceKind::Gpu { model } => model.name().to_string(),
+        }
+    }
+}
+
+/// One worker of the training cluster.
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    pub id: usize,
+    pub device: DeviceKind,
+}
+
+impl WorkerSpec {
+    pub fn cpu(id: usize, cores: usize) -> Self {
+        WorkerSpec {
+            id,
+            device: DeviceKind::Cpu { cores },
+        }
+    }
+
+    pub fn gpu(id: usize, model: GpuModel) -> Self {
+        WorkerSpec {
+            id,
+            device: DeviceKind::Gpu { model },
+        }
+    }
+}
+
+/// Build a CPU cluster from a core-count list.
+pub fn cpu_cluster(cores: &[usize]) -> Vec<WorkerSpec> {
+    cores
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| WorkerSpec::cpu(i, c))
+        .collect()
+}
+
+/// The paper's mixed local cluster: one P100 + one 48-core Xeon (§IV-B).
+pub fn mixed_gpu_cpu_cluster() -> Vec<WorkerSpec> {
+    vec![
+        WorkerSpec::gpu(0, GpuModel::P100),
+        WorkerSpec::cpu(1, 48),
+    ]
+}
+
+/// The paper's cloud GPU cluster: 2×T4 + 2×P4 (§IV-B).
+pub fn cloud_gpu_cluster() -> Vec<WorkerSpec> {
+    vec![
+        WorkerSpec::gpu(0, GpuModel::T4),
+        WorkerSpec::gpu(1, GpuModel::T4),
+        WorkerSpec::gpu(2, GpuModel::P4),
+        WorkerSpec::gpu(3, GpuModel::P4),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_scale_with_cores() {
+        let small = DeviceKind::Cpu { cores: 4 }.flops_estimate();
+        let big = DeviceKind::Cpu { cores: 16 }.flops_estimate();
+        assert!((big / small - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_gpu_cpu_flops_split_matches() {
+        // §IV-B: "the ratios of the FLOPs ... between the GPU and CPU was
+        // 0.813:0.187" for P100 vs 48-core Xeon.
+        let gpu = DeviceKind::Gpu {
+            model: GpuModel::P100,
+        }
+        .flops_estimate();
+        let cpu = DeviceKind::Cpu { cores: 48 }.flops_estimate();
+        let share = gpu / (gpu + cpu);
+        assert!((share - 0.813).abs() < 0.01, "share={share}");
+    }
+
+    #[test]
+    fn cluster_builders() {
+        let c = cpu_cluster(&[3, 5, 12]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[2].device, DeviceKind::Cpu { cores: 12 });
+        assert_eq!(cloud_gpu_cluster().len(), 4);
+        assert_eq!(mixed_gpu_cpu_cluster()[0].device.label(), "P100");
+    }
+
+    #[test]
+    fn gpu_ordering_t4_fastest() {
+        assert!(
+            GpuModel::T4.half_precision_tflops()
+                > GpuModel::P100.half_precision_tflops()
+        );
+        assert!(
+            GpuModel::P100.half_precision_tflops()
+                > GpuModel::P4.half_precision_tflops()
+        );
+    }
+}

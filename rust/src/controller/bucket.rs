@@ -1,0 +1,99 @@
+//! Batch-size bucket quantization (DESIGN.md §6).
+//!
+//! XLA artifacts have static shapes, so in real-execution mode a worker's
+//! batch size must come from the AOT-compiled bucket set.  The controller
+//! proposes continuous sizes; this module snaps them to buckets.  A bucket
+//! *swap* rebinds a different compiled executable — the analogue of the
+//! paper's TensorFlow kill-restart, and the reason the dead-band exists.
+
+/// Snap one proposed batch size to the nearest bucket (ties prefer the
+/// smaller bucket, keeping memory headroom).
+pub fn quantize(proposal: f64, buckets: &[usize]) -> usize {
+    assert!(!buckets.is_empty(), "no buckets");
+    debug_assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets must be sorted");
+    *buckets
+        .iter()
+        .min_by(|&&a, &&b| {
+            let da = (a as f64 - proposal).abs();
+            let db = (b as f64 - proposal).abs();
+            da.partial_cmp(&db)
+                .unwrap()
+                .then(a.cmp(&b)) // tie → smaller
+        })
+        .unwrap()
+}
+
+/// Quantize a whole allocation. Returns (bucketed sizes, swap mask
+/// relative to `current`).
+pub fn quantize_alloc(
+    proposals: &[f64],
+    buckets: &[usize],
+    current: &[usize],
+) -> (Vec<usize>, Vec<bool>) {
+    assert_eq!(proposals.len(), current.len());
+    let snapped: Vec<usize> = proposals.iter().map(|&p| quantize(p, buckets)).collect();
+    let swaps = snapped
+        .iter()
+        .zip(current)
+        .map(|(&n, &c)| n != c)
+        .collect();
+    (snapped, swaps)
+}
+
+/// Quantization error as a fraction of the proposal (monitoring metric:
+/// large persistent error means the bucket grid is too coarse).
+pub fn quantization_error(proposal: f64, buckets: &[usize]) -> f64 {
+    let q = quantize(proposal, buckets) as f64;
+    if proposal == 0.0 {
+        0.0
+    } else {
+        (q - proposal).abs() / proposal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BUCKETS: [usize; 6] = [8, 16, 32, 64, 128, 256];
+
+    #[test]
+    fn snaps_to_nearest() {
+        assert_eq!(quantize(10.0, &BUCKETS), 8);
+        assert_eq!(quantize(13.0, &BUCKETS), 16);
+        assert_eq!(quantize(100.0, &BUCKETS), 128);
+        assert_eq!(quantize(90.0, &BUCKETS), 64);
+    }
+
+    #[test]
+    fn clamps_to_ends() {
+        assert_eq!(quantize(1.0, &BUCKETS), 8);
+        assert_eq!(quantize(1e9, &BUCKETS), 256);
+    }
+
+    #[test]
+    fn tie_prefers_smaller() {
+        assert_eq!(quantize(12.0, &BUCKETS), 8); // equidistant 8/16
+        assert_eq!(quantize(24.0, &BUCKETS), 16);
+    }
+
+    #[test]
+    fn alloc_reports_swaps() {
+        let (snapped, swaps) =
+            quantize_alloc(&[14.0, 62.0, 250.0], &BUCKETS, &[16, 32, 256]);
+        assert_eq!(snapped, vec![16, 64, 256]);
+        assert_eq!(swaps, vec![false, true, false]);
+    }
+
+    #[test]
+    fn error_metric() {
+        assert_eq!(quantization_error(16.0, &BUCKETS), 0.0);
+        assert!((quantization_error(20.0, &BUCKETS) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_buckets_panic() {
+        quantize(1.0, &[]);
+    }
+}

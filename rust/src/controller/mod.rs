@@ -1,0 +1,767 @@
+//! The paper's contribution: mini-batch allocation policies (§III).
+//!
+//! - [`uniform_alloc`]: vanilla TF baseline — every worker gets b0.
+//! - [`static_alloc`]: open-loop variable batching, b_k ∝ FLOPs (§III-B).
+//! - [`DynamicBatcher`]: the closed-loop proportional controller (§III-C)
+//!   with EWMA error smoothing, dead-banding, batch-size bounds with
+//!   adaptive b_max shrink, and global-batch conservation.
+//!
+//! Control law (per worker k, smoothed iteration time μ_k, mean t̄):
+//!
+//! ```text
+//! τ_k  = μ_k − t̄                  error
+//! X_k  = b_k / μ_k                 empirical throughput
+//! Δb_k = −X_k · τ_k                Eq. 4   ⇒   b_k' = b_k · t̄ / μ_k
+//! ```
+//!
+//! followed by renormalization to conserve Σ b_k = K·b0, clamping to
+//! [b_min, b_max_k], and a dead-band: apply only if some worker moves by
+//! more than `deadband` relative (default 5%, matching the paper's
+//! TF kill-restart overhead calculus).
+
+pub mod bucket;
+
+use crate::util::stats::Ewma;
+
+/// Uniform batching baseline: every worker processes b0.
+pub fn uniform_alloc(b0: f64, k: usize) -> Vec<f64> {
+    vec![b0; k]
+}
+
+/// Open-loop variable batching (§III-B): b_k = K·b0·X_k / ΣX_i with X the
+/// *estimated* throughput (FLOPs or core counts). Conserves Σb = K·b0.
+pub fn static_alloc(b0: f64, estimates: &[f64]) -> Vec<f64> {
+    assert!(!estimates.is_empty());
+    assert!(estimates.iter().all(|&x| x > 0.0), "estimates must be > 0");
+    let total: f64 = estimates.iter().sum();
+    let k = estimates.len() as f64;
+    estimates.iter().map(|&x| k * b0 * x / total).collect()
+}
+
+/// Configuration for the dynamic controller.
+#[derive(Debug, Clone)]
+pub struct ControllerCfg {
+    /// Relative dead-band Δ_min(b): skip adjustment unless some worker's
+    /// batch would change by more than this fraction (paper: 0.05).
+    pub deadband: f64,
+    /// Iteration-time smoothing weight. The paper smooths over *all*
+    /// iterations since the previous readjustment; `0.0` selects that
+    /// cumulative mean (EWMA's α→0 limit, variance ∝ 1/n — the reason the
+    /// controller goes quiet in steady state instead of chasing noise).
+    /// A value in (0, 1] selects a fixed-α EWMA instead.
+    pub ewma_alpha: f64,
+    /// Minimum samples since last adjustment before acting again.
+    pub min_obs: usize,
+    /// Global lower bound on any worker's batch.
+    pub b_min: f64,
+    /// Global upper bound on any worker's batch.
+    pub b_max: f64,
+    /// Shrink a worker's personal b_max when raising its batch lowered
+    /// its throughput (Fig. 5 knee discovery).
+    pub adaptive_bmax: bool,
+    /// Renormalize so Σ b_k stays K·b0.
+    pub conserve_global: bool,
+    /// Adjustment backoff (engineering addition, DESIGN.md §5): after an
+    /// adjustment whose largest move was *small* (< 4× deadband — i.e.
+    /// chasing residual noise), double the observations required before
+    /// the next one, capped at `backoff_cap × min_obs`. A *large* move
+    /// (regime change: interference, preemption) resets the backoff so
+    /// the controller stays responsive. Bounds total readjustment cost
+    /// logarithmically on workloads whose iteration times respond weakly
+    /// to batch size (comm-bound, e.g. MNIST/LR).
+    pub backoff: bool,
+    /// Max backoff multiplier over min_obs.
+    pub backoff_cap: usize,
+    /// Regime-change detection: if a fast EWMA of recent iteration times
+    /// deviates from the cumulative interval mean by more than this
+    /// relative fraction, the smoothing window resets so the controller
+    /// reacts to interference/preemption in a few iterations instead of
+    /// averaging the new regime away (0 disables).
+    pub drift_reset: f64,
+}
+
+impl Default for ControllerCfg {
+    fn default() -> Self {
+        ControllerCfg {
+            deadband: 0.05,
+            ewma_alpha: 0.0,
+            min_obs: 5,
+            b_min: 1.0,
+            b_max: 4096.0,
+            adaptive_bmax: true,
+            conserve_global: true,
+            backoff: true,
+            backoff_cap: 64,
+            drift_reset: 0.15,
+        }
+    }
+}
+
+/// Interval smoother: cumulative mean (α = 0, the paper's
+/// since-last-readjustment average) or fixed-α EWMA, plus a fast EWMA
+/// used for regime-change (drift) detection.
+#[derive(Debug, Clone)]
+struct Smoother {
+    alpha: f64,
+    ewma: Ewma,
+    sum: f64,
+    n: usize,
+    /// Ring of the last 5 samples; drift detection uses their median so
+    /// a 1–2 sample impulse (one straggling iteration, a preemption
+    /// spike) cannot trigger a reset — only a *sustained* level shift.
+    recent: [f64; 5],
+    recent_n: usize,
+    drift_reset: f64,
+    drifted: bool,
+}
+
+impl Smoother {
+    fn new(alpha: f64, drift_reset: f64) -> Self {
+        Smoother {
+            alpha,
+            ewma: Ewma::new(alpha.clamp(0.0, 1.0).max(f64::MIN_POSITIVE)),
+            sum: 0.0,
+            n: 0,
+            recent: [0.0; 5],
+            recent_n: 0,
+            drift_reset,
+            drifted: false,
+        }
+    }
+
+    /// Median of the last 5 samples (None until 5 seen).
+    fn recent_median(&self) -> Option<f64> {
+        if self.recent_n < 5 {
+            return None;
+        }
+        let mut v = self.recent;
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(v[2])
+    }
+
+    fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.recent[(self.n - 1) % 5] = x;
+        self.recent_n = (self.recent_n + 1).min(5);
+        if self.alpha > 0.0 {
+            self.ewma.push(x);
+        } else {
+            self.sum += x;
+        }
+        // Regime change: the *median* recent level left the interval
+        // mean's band — restart the window seeded at the new level so μ
+        // tracks the new regime within a few samples. (Median-of-5 makes
+        // this robust to single-iteration impulses.)
+        if self.drift_reset > 0.0 && self.n >= 8 {
+            let long = self.get().unwrap();
+            if let Some(med) = self.recent_median() {
+                if (med / long - 1.0).abs() > self.drift_reset {
+                    self.reset();
+                    self.n = 3;
+                    self.recent_n = 0;
+                    self.sum = med * 3.0;
+                    self.ewma.push(med);
+                    self.drifted = true;
+                }
+            }
+        }
+    }
+
+    /// True once a drift reset happened since the last `take_drifted`.
+    fn take_drifted(&mut self) -> bool {
+        std::mem::take(&mut self.drifted)
+    }
+
+    fn get(&self) -> Option<f64> {
+        if self.n == 0 {
+            return None;
+        }
+        if self.alpha > 0.0 {
+            self.ewma.get()
+        } else {
+            Some(self.sum / self.n as f64)
+        }
+    }
+
+    fn count(&self) -> usize {
+        self.n
+    }
+
+    fn reset(&mut self) {
+        self.ewma.reset();
+        self.recent_n = 0;
+        self.sum = 0.0;
+        self.n = 0;
+    }
+}
+
+/// Per-worker controller state.
+#[derive(Debug, Clone)]
+struct WorkerState {
+    batch: f64,
+    ewma: Smoother,
+    /// Personal upper bound (starts at cfg.b_max, shrinks adaptively).
+    b_max: f64,
+    /// (batch, throughput) at the last adjustment, for knee detection.
+    last_point: Option<(f64, f64)>,
+    /// Adjustments since the knee cap was set (cap expires at KNEE_TTL —
+    /// periodic re-probing, so a stale cap from a transient capacity dip
+    /// cannot strangle the worker forever; a true memory knee is simply
+    /// re-detected one adjustment after each expiry).
+    cap_age: usize,
+}
+
+/// Outcome of an adjustment attempt.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Adjustment {
+    /// New batch sizes to apply (these incur the swap/restart cost).
+    Apply(Vec<f64>),
+    /// Inside the dead-band or not enough observations.
+    Hold,
+}
+
+/// The closed-loop dynamic batcher (paper §III-C).
+#[derive(Debug, Clone)]
+pub struct DynamicBatcher {
+    cfg: ControllerCfg,
+    workers: Vec<WorkerState>,
+    /// K·b0, fixed at construction (invariant under adjustments).
+    global_batch: f64,
+    adjustments: usize,
+    /// Current required-observation multiplier (see ControllerCfg::backoff).
+    backoff_mult: usize,
+}
+
+impl DynamicBatcher {
+    /// Start from any initial allocation (§III-C: "works with any initial
+    /// batch size"; farther from ideal ⇒ more adjustment steps).
+    pub fn new(cfg: ControllerCfg, initial: &[f64]) -> Self {
+        assert!(!initial.is_empty());
+        for &b in initial {
+            assert!(b >= cfg.b_min && b <= cfg.b_max, "initial batch {b} out of bounds");
+        }
+        let global_batch = initial.iter().sum();
+        DynamicBatcher {
+            workers: initial
+                .iter()
+                .map(|&b| WorkerState {
+                    batch: b,
+                    ewma: Smoother::new(cfg.ewma_alpha, cfg.drift_reset),
+                    b_max: cfg.b_max,
+                    last_point: None,
+                    cap_age: 0,
+                })
+                .collect(),
+            cfg,
+            global_batch,
+            adjustments: 0,
+            backoff_mult: 1,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn batches(&self) -> Vec<f64> {
+        self.workers.iter().map(|w| w.batch).collect()
+    }
+
+    /// λ_k = b_k / Σ b_i — the gradient weights (Eq. 2).
+    pub fn lambdas(&self) -> Vec<f64> {
+        let total: f64 = self.workers.iter().map(|w| w.batch).sum();
+        self.workers.iter().map(|w| w.batch / total).collect()
+    }
+
+    pub fn global_batch(&self) -> f64 {
+        self.global_batch
+    }
+
+    pub fn adjustments(&self) -> usize {
+        self.adjustments
+    }
+
+    /// Feed one iteration-time observation for worker `k`.
+    pub fn observe(&mut self, k: usize, iter_time: f64) {
+        assert!(iter_time > 0.0, "iteration time must be positive");
+        self.workers[k].ewma.push(iter_time);
+    }
+
+    /// Smoothed iteration time per worker (None until observed).
+    pub fn smoothed(&self) -> Vec<Option<f64>> {
+        self.workers.iter().map(|w| w.ewma.get()).collect()
+    }
+
+    /// Run the control step ("putting it all together", §III-C):
+    /// 1. μ_k from EWMA; 2. Eq. 4–5 proposal; 3. bounds; 4. dead-band.
+    pub fn maybe_adjust(&mut self) -> Adjustment {
+        // Need enough fresh observations on every worker (scaled by the
+        // current backoff multiplier) — unless a regime change (drift
+        // reset) was just detected, which overrides the backoff so the
+        // controller reacts to interference within a few iterations.
+        let drifted = self
+            .workers
+            .iter_mut()
+            .map(|w| w.ewma.take_drifted())
+            .fold(false, |a, b| a | b);
+        if drifted {
+            self.backoff_mult = 1;
+        }
+        let required = if drifted { 2 } else { self.cfg.min_obs * self.backoff_mult };
+        if self
+            .workers
+            .iter()
+            .any(|w| w.ewma.count() < required || w.ewma.get().is_none())
+        {
+            return Adjustment::Hold;
+        }
+        let mu: Vec<f64> = self.workers.iter().map(|w| w.ewma.get().unwrap()).collect();
+        let t_bar = mu.iter().sum::<f64>() / mu.len() as f64;
+
+        // Proportional proposal: b' = b · t̄/μ  (equivalent to Δb = −X·τ).
+        let mut proposal: Vec<f64> = self
+            .workers
+            .iter()
+            .zip(&mu)
+            .map(|(w, &m)| w.batch * t_bar / m)
+            .collect();
+
+        // Bounds + global-batch conservation. Clamping after a plain
+        // renormalization would break the paper's Σb = K·b0 invariant
+        // whenever a bound binds (e.g. an adaptively-shrunk b_max), so
+        // water-fill instead: scale the unclamped workers to absorb what
+        // the clamped ones gave up, iterating until no new bound binds
+        // (≤ K rounds).
+        if self.cfg.conserve_global {
+            let bmaxes: Vec<f64> = self.workers.iter().map(|w| w.b_max).collect();
+            water_fill(&mut proposal, self.global_batch, self.cfg.b_min, &bmaxes);
+        } else {
+            for (b, w) in proposal.iter_mut().zip(&self.workers) {
+                *b = b.clamp(self.cfg.b_min, w.b_max);
+            }
+        }
+
+        // Dead-band: act only if the largest relative change is material.
+        let max_rel = self
+            .workers
+            .iter()
+            .zip(&proposal)
+            .map(|(w, &p)| ((p - w.batch) / w.batch).abs())
+            .fold(0.0, f64::max);
+        if max_rel <= self.cfg.deadband {
+            return Adjustment::Hold;
+        }
+
+        // Backoff bookkeeping: small (noise-scale) moves raise the bar for
+        // the next adjustment; large (regime-change) moves reset it.
+        if self.cfg.backoff {
+            if max_rel < 4.0 * self.cfg.deadband.max(0.01) {
+                self.backoff_mult = (self.backoff_mult * 2).min(self.cfg.backoff_cap);
+            } else {
+                self.backoff_mult = 1;
+            }
+        }
+
+        // Apply: record throughput points for knee detection, then reset
+        // the EWMAs (the paper smooths within the interval since the last
+        // readjustment only).
+        for (w, (&p, &m)) in self.workers.iter_mut().zip(proposal.iter().zip(&mu)) {
+            let throughput = w.batch / m;
+            if self.cfg.adaptive_bmax {
+                // Expire stale knee caps (periodic re-probing).
+                if w.b_max < self.cfg.b_max {
+                    w.cap_age += 1;
+                    if w.cap_age >= KNEE_TTL {
+                        w.b_max = self.cfg.b_max;
+                        w.cap_age = 0;
+                    }
+                }
+                if let Some((prev_b, prev_x)) = w.last_point {
+                    // Raised the batch materially but throughput fell well
+                    // beyond noise ⇒ passed the knee (Fig. 5); cap this
+                    // worker at the previous batch size. Thresholds are
+                    // deliberately conservative (iteration noise is ~5%),
+                    // and detection is skipped entirely when this
+                    // adjustment was triggered by a capacity-regime drift:
+                    // a throughput drop caused by interference would
+                    // otherwise masquerade as a memory knee.
+                    if !drifted
+                        && w.batch > prev_b * 1.02
+                        && throughput < prev_x * 0.90
+                    {
+                        w.b_max = w.b_max.min(prev_b.max(self.cfg.b_min));
+                        w.cap_age = 0;
+                    }
+                }
+                w.last_point = Some((w.batch, throughput));
+            }
+            // `p` is already bounded by water_fill; a freshly shrunk
+            // b_max (knee detection above) applies from the *next*
+            // proposal so conservation of this one is preserved.
+            w.batch = p;
+            w.ewma.reset();
+        }
+        self.adjustments += 1;
+        Adjustment::Apply(self.batches())
+    }
+
+    /// Force-set batches (bucket quantization round-trips through this).
+    pub fn set_batches(&mut self, batches: &[f64]) {
+        assert_eq!(batches.len(), self.workers.len());
+        for (w, &b) in self.workers.iter_mut().zip(batches) {
+            w.batch = b.clamp(self.cfg.b_min, w.b_max);
+            w.ewma.reset();
+        }
+    }
+}
+
+/// Adjustments a knee cap survives before being re-probed.
+pub const KNEE_TTL: usize = 6;
+
+/// Scale `proposal` to sum to `target` subject to per-worker bounds
+/// [b_min, b_max[i]]: proportional water-filling. Workers pinned at a
+/// bound are frozen and the remainder is rescaled over the free set.
+///
+/// `b_min` is a *hard* bound (a batch below it is invalid). `b_max` is a
+/// *soft* bound (it protects throughput, e.g. adaptively-discovered
+/// memory knees): when honoring every b_max would make the target
+/// unreachable, conservation wins and the deficit is spread across all
+/// workers above their caps. If target < Σb_min, everything pins at
+/// b_min (the only valid point closest to the target).
+pub fn water_fill(proposal: &mut [f64], target: f64, b_min: f64, b_max: &[f64]) {
+    assert_eq!(proposal.len(), b_max.len());
+    let k = proposal.len();
+    let mut fixed = vec![false; k];
+    for _round in 0..=k {
+        let fixed_sum: f64 = (0..k).filter(|&i| fixed[i]).map(|i| proposal[i]).sum();
+        let free_sum: f64 = (0..k).filter(|&i| !fixed[i]).map(|i| proposal[i]).sum();
+        if free_sum <= 0.0 {
+            break;
+        }
+        let scale = (target - fixed_sum) / free_sum;
+        let mut newly_fixed = false;
+        for i in 0..k {
+            if fixed[i] {
+                continue;
+            }
+            let v = proposal[i] * scale;
+            if v < b_min {
+                proposal[i] = b_min;
+                fixed[i] = true;
+                newly_fixed = true;
+            } else if v > b_max[i] {
+                proposal[i] = b_max[i];
+                fixed[i] = true;
+                newly_fixed = true;
+            }
+        }
+        if !newly_fixed {
+            for i in 0..k {
+                if !fixed[i] {
+                    proposal[i] *= scale;
+                }
+            }
+            break;
+        }
+    }
+    // Conservation dominates soft b_max caps: if the caps made the target
+    // unreachable, spread the deficit proportionally (b_min stays hard).
+    let sum: f64 = proposal.iter().sum();
+    if sum > 0.0 && (sum - target).abs() / target.max(1.0) > 1e-12 && sum < target {
+        let scale = target / sum;
+        for p in proposal.iter_mut() {
+            *p = (*p * scale).max(b_min);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EPS: f64 = 1e-9;
+
+    fn feed(ctl: &mut DynamicBatcher, times: &[f64], n: usize) {
+        for _ in 0..n {
+            for (k, &t) in times.iter().enumerate() {
+                ctl.observe(k, t);
+            }
+        }
+    }
+
+    // -------------------------------------------------------- allocators
+
+    #[test]
+    fn uniform_is_uniform() {
+        assert_eq!(uniform_alloc(64.0, 3), vec![64.0; 3]);
+    }
+
+    #[test]
+    fn static_alloc_proportional_and_conserving() {
+        // Paper §III-B example shape: (3, 5, 12)-core cluster.
+        let b = static_alloc(60.0, &[3.0, 5.0, 12.0]);
+        assert!((b.iter().sum::<f64>() - 180.0).abs() < EPS);
+        assert!((b[2] / b[0] - 4.0).abs() < EPS);
+        assert!((b[1] / b[0] - 5.0 / 3.0).abs() < EPS);
+    }
+
+    #[test]
+    #[should_panic]
+    fn static_alloc_rejects_zero_estimate() {
+        static_alloc(64.0, &[1.0, 0.0]);
+    }
+
+    // -------------------------------------------------------- controller
+
+    #[test]
+    fn needs_min_obs_before_acting() {
+        let mut ctl = DynamicBatcher::new(ControllerCfg::default(), &[64.0, 64.0]);
+        ctl.observe(0, 1.0);
+        ctl.observe(1, 2.0);
+        assert_eq!(ctl.maybe_adjust(), Adjustment::Hold);
+    }
+
+    #[test]
+    fn equal_times_hold() {
+        let mut ctl = DynamicBatcher::new(ControllerCfg::default(), &[64.0, 64.0, 64.0]);
+        feed(&mut ctl, &[1.0, 1.0, 1.0], 5);
+        assert_eq!(ctl.maybe_adjust(), Adjustment::Hold);
+        assert_eq!(ctl.adjustments(), 0);
+    }
+
+    #[test]
+    fn slower_worker_shrinks_faster_grows() {
+        let mut ctl = DynamicBatcher::new(ControllerCfg::default(), &[64.0, 64.0]);
+        // Worker 0 takes 2s, worker 1 takes 1s at the same batch.
+        feed(&mut ctl, &[2.0, 1.0], 5);
+        match ctl.maybe_adjust() {
+            Adjustment::Apply(b) => {
+                assert!(b[0] < 64.0, "slow worker must shrink: {b:?}");
+                assert!(b[1] > 64.0, "fast worker must grow: {b:?}");
+            }
+            Adjustment::Hold => panic!("expected adjustment"),
+        }
+    }
+
+    #[test]
+    fn global_batch_conserved() {
+        let mut ctl = DynamicBatcher::new(ControllerCfg::default(), &[32.0, 64.0, 96.0]);
+        feed(&mut ctl, &[3.0, 1.0, 0.7], 5);
+        if let Adjustment::Apply(b) = ctl.maybe_adjust() {
+            assert!(
+                (b.iter().sum::<f64>() - 192.0).abs() < 1e-6,
+                "sum {} != 192",
+                b.iter().sum::<f64>()
+            );
+        } else {
+            panic!("expected adjustment");
+        }
+    }
+
+    #[test]
+    fn paper_closed_form_single_step() {
+        // §III-C: b¹ = b⁰ · t̄/t. With no bounds/deadband interference and
+        // equal initial batches, t=(2,1) ⇒ t̄=1.5 ⇒ proposals (48, 96)
+        // before conservation; conservation keeps sum at 128 ⇒ (48, 96)·
+        // (128/144) = (42.67, 85.33).
+        let cfg = ControllerCfg {
+            deadband: 0.0,
+            ..ControllerCfg::default()
+        };
+        let mut ctl = DynamicBatcher::new(cfg, &[64.0, 64.0]);
+        feed(&mut ctl, &[2.0, 1.0], 5);
+        if let Adjustment::Apply(b) = ctl.maybe_adjust() {
+            assert!((b[0] - 128.0 / 3.0).abs() < 1e-6, "{b:?}");
+            assert!((b[1] - 256.0 / 3.0).abs() < 1e-6, "{b:?}");
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn converges_to_throughput_proportional_in_two_steps() {
+        // Fig. 4a: equal initial batches on (1x, 2x, 4x) workers converge
+        // within ~2 adjustments. Simulate linear-time workers:
+        // t_k = b_k / X_k with X = (10, 20, 40) samples/s.
+        let xs = [10.0, 20.0, 40.0];
+        let cfg = ControllerCfg {
+            deadband: 0.05,
+            min_obs: 1,
+            ..ControllerCfg::default()
+        };
+        let mut ctl = DynamicBatcher::new(cfg, &[64.0, 64.0, 64.0]);
+        for _step in 0..4 {
+            let b = ctl.batches();
+            for k in 0..3 {
+                ctl.observe(k, b[k] / xs[k]);
+            }
+            ctl.maybe_adjust();
+        }
+        let b = ctl.batches();
+        let total: f64 = b.iter().sum();
+        // Ideal: proportional to X ⇒ (1/7, 2/7, 4/7) of 192.
+        assert!((total - 192.0).abs() < 1e-6);
+        assert!((b[0] / total - 1.0 / 7.0).abs() < 0.02, "{b:?}");
+        assert!((b[2] / total - 4.0 / 7.0).abs() < 0.02, "{b:?}");
+        // And it should now be in steady state (dead-band holds).
+        for k in 0..3 {
+            ctl.observe(k, b[k] / xs[k]);
+        }
+        assert_eq!(ctl.maybe_adjust(), Adjustment::Hold);
+        assert!(ctl.adjustments() <= 3, "took {} adjustments", ctl.adjustments());
+    }
+
+    #[test]
+    fn deadband_suppresses_oscillation_noise() {
+        // Fig. 4b: without a dead-band, stochastic time noise causes
+        // endless oscillation; with it, steady state is quiet.
+        use crate::util::rng::Rng;
+        let xs = [10.0, 40.0];
+        let run = |deadband: f64| {
+            let cfg = ControllerCfg {
+                deadband,
+                min_obs: 1,
+                backoff: false, // isolate the dead-band mechanism
+                ..ControllerCfg::default()
+            };
+            // Start at the ideal allocation.
+            let mut ctl = DynamicBatcher::new(cfg, &[25.6, 102.4]);
+            let mut rng = Rng::new(0);
+            for _ in 0..100 {
+                let b = ctl.batches();
+                for k in 0..2 {
+                    let noise = rng.lognormal(1.0, 0.04);
+                    ctl.observe(k, b[k] / xs[k] * noise);
+                }
+                ctl.maybe_adjust();
+            }
+            ctl.adjustments()
+        };
+        let with_db = run(0.05);
+        let without_db = run(0.0);
+        assert!(
+            without_db > 10 * with_db.max(1),
+            "deadband={with_db} nodeadband={without_db}"
+        );
+        assert!(with_db <= 2, "steady state should be quiet: {with_db}");
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let cfg = ControllerCfg {
+            b_min: 8.0,
+            b_max: 100.0,
+            conserve_global: false,
+            ..ControllerCfg::default()
+        };
+        let mut ctl = DynamicBatcher::new(cfg, &[64.0, 64.0]);
+        // Extreme imbalance wants b0 → ~0 and b1 → huge.
+        feed(&mut ctl, &[100.0, 0.01], 5);
+        if let Adjustment::Apply(b) = ctl.maybe_adjust() {
+            assert!(b[0] >= 8.0 - EPS, "{b:?}");
+            assert!(b[1] <= 100.0 + EPS, "{b:?}");
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn adaptive_bmax_caps_after_throughput_drop() {
+        let cfg = ControllerCfg {
+            min_obs: 1,
+            conserve_global: false,
+            ..ControllerCfg::default()
+        };
+        let mut ctl = DynamicBatcher::new(cfg, &[50.0, 50.0]);
+        // Step 1: worker 1 is fast at b=50 (X=50), worker 0 slower.
+        ctl.observe(0, 2.0); // X0 = 25
+        ctl.observe(1, 1.0); // X1 = 50
+        ctl.maybe_adjust();
+        let b_after_1 = ctl.batches()[1];
+        assert!(b_after_1 > 50.0);
+        // Step 2: worker 1's batch grew but its throughput *fell* (past
+        // the knee): report a time that implies X < 50·0.98.
+        ctl.observe(0, 1.0);
+        ctl.observe(1, b_after_1 / 30.0); // X1 = 30 < 49
+        ctl.maybe_adjust();
+        // Step 3: any further proposal for worker 1 is capped at 50.
+        ctl.observe(0, 5.0);
+        ctl.observe(1, 0.1);
+        ctl.maybe_adjust();
+        assert!(
+            ctl.batches()[1] <= 50.0 + EPS,
+            "b1={} should be capped at the knee",
+            ctl.batches()[1]
+        );
+    }
+
+    #[test]
+    fn lambdas_sum_to_one_and_track_batches() {
+        let ctl = DynamicBatcher::new(ControllerCfg::default(), &[30.0, 60.0, 90.0]);
+        let l = ctl.lambdas();
+        assert!((l.iter().sum::<f64>() - 1.0).abs() < EPS);
+        assert!((l[2] / l[0] - 3.0).abs() < EPS);
+    }
+
+    #[test]
+    fn set_batches_clamps() {
+        let cfg = ControllerCfg {
+            b_min: 4.0,
+            b_max: 128.0,
+            ..ControllerCfg::default()
+        };
+        let mut ctl = DynamicBatcher::new(cfg, &[64.0, 64.0]);
+        ctl.set_batches(&[1.0, 500.0]);
+        assert_eq!(ctl.batches(), vec![4.0, 128.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn observe_rejects_nonpositive_time() {
+        let mut ctl = DynamicBatcher::new(ControllerCfg::default(), &[64.0]);
+        ctl.observe(0, 0.0);
+    }
+
+    #[test]
+    fn water_fill_plain_renormalization() {
+        let mut p = vec![10.0, 30.0];
+        water_fill(&mut p, 80.0, 1.0, &[1000.0, 1000.0]);
+        assert!((p[0] - 20.0).abs() < EPS && (p[1] - 60.0).abs() < EPS);
+    }
+
+    #[test]
+    fn water_fill_redistributes_clamped_excess() {
+        // Worker 1 capped at 50; its excess goes to worker 0.
+        let mut p = vec![50.0, 150.0];
+        water_fill(&mut p, 200.0, 1.0, &[1000.0, 50.0]);
+        assert!((p[1] - 50.0).abs() < EPS, "{p:?}");
+        assert!((p[0] - 150.0).abs() < EPS, "{p:?}");
+        assert!((p.iter().sum::<f64>() - 200.0).abs() < EPS);
+    }
+
+    #[test]
+    fn water_fill_respects_b_min() {
+        let mut p = vec![1.0, 199.0];
+        water_fill(&mut p, 100.0, 8.0, &[1000.0, 1000.0]);
+        assert!(p[0] >= 8.0 - EPS);
+        assert!((p.iter().sum::<f64>() - 100.0).abs() < EPS, "{p:?}");
+    }
+
+    #[test]
+    fn water_fill_target_beats_soft_bmax() {
+        // Target above Σb_max: conservation wins, caps are exceeded
+        // proportionally (b_max is a soft throughput guard).
+        let mut p = vec![10.0, 10.0];
+        water_fill(&mut p, 500.0, 1.0, &[40.0, 60.0]);
+        assert!((p.iter().sum::<f64>() - 500.0).abs() < EPS, "{p:?}");
+        assert!(p[1] > p[0]);
+    }
+
+    #[test]
+    fn water_fill_bmin_is_hard() {
+        // Target below Σb_min: everything pins at b_min.
+        let mut p = vec![10.0, 10.0];
+        water_fill(&mut p, 4.0, 8.0, &[100.0, 100.0]);
+        assert_eq!(p, vec![8.0, 8.0]);
+    }
+}

@@ -1,0 +1,46 @@
+//! # hetero-batch
+//!
+//! Reproduction of *"Taming Resource Heterogeneity In Distributed ML
+//! Training With Dynamic Batching"* (Tyagi & Sharma, IEEE ACSOS 2020) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's contribution — a proportional controller that assigns each
+//! worker of a heterogeneous data-parallel cluster a mini-batch size
+//! proportional to its throughput, so that iteration times equalize and
+//! BSP stragglers disappear — lives in [`controller`].  Everything it
+//! needs to run as a real system is built here too:
+//!
+//! - [`runtime`]: PJRT client executing AOT-compiled JAX/Pallas train
+//!   steps (HLO text artifacts, one per batch-size bucket).
+//! - [`ps`]: the parameter server — λ-weighted gradient aggregation
+//!   (paper Eq. 2–3) and optimizers (SGD / momentum / Adam).
+//! - [`sync`]: BSP / ASP / SSP synchronization engines.
+//! - [`cluster`] + [`trace`]: heterogeneous worker capacity models
+//!   (Amdahl scaling, throughput-vs-batch curves — paper Fig. 5) and
+//!   time-varying availability traces (interference, spot preemptions).
+//! - [`simulator`]: virtual-time discrete-event training simulator used
+//!   to regenerate the paper's figures at testbed scale.
+//! - [`engine`]: the real-execution training loop (leader + worker
+//!   threads over the PJRT runtime).
+//! - [`data`], [`metrics`], [`config`], [`figures`], [`util`]:
+//!   synthetic datasets, measurement, typed configs, figure harnesses,
+//!   and std-only substrates (JSON, RNG, CLI, stats, bench, proptest —
+//!   this build is fully offline, so no external crates besides `xla`
+//!   and `anyhow`).
+//!
+//! See `DESIGN.md` for the paper→repo mapping and the experiment index,
+//! and `EXPERIMENTS.md` for the recorded reproductions.
+
+pub mod cluster;
+pub mod config;
+pub mod controller;
+pub mod data;
+pub mod engine;
+pub mod figures;
+pub mod metrics;
+pub mod ps;
+pub mod runtime;
+pub mod simulator;
+pub mod sync;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,259 @@
+//! `hbatch` — leader CLI for the hetero-batch training system.
+//!
+//! Subcommands:
+//!   simulate          virtual-time experiment (policy × cluster × workload)
+//!   train             real-execution training over the PJRT runtime
+//!   figure <id>       regenerate a paper figure (1|2|3|4a|4b|5|6|7a|7cloud|asp|buckets)
+//!   throughput-scan   print the Fig. 5 curve for a device
+//!   info              artifact/manifest inventory
+
+use hetero_batch::cluster::{cpu_cluster, hlevel_split};
+use hetero_batch::config::{ExperimentCfg, Policy};
+use hetero_batch::data;
+use hetero_batch::engine::{Engine, Slowdowns, TrainOpts};
+use hetero_batch::figures;
+use hetero_batch::runtime::Runtime;
+use hetero_batch::simulator::Simulator;
+use hetero_batch::sync::SyncMode;
+use hetero_batch::util::cli::Args;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match raw.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd {
+        "simulate" => cmd_simulate(&rest),
+        "train" => cmd_train(&rest),
+        "figure" => cmd_figure(&rest),
+        "throughput-scan" => cmd_scan(&rest),
+        "info" => cmd_info(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n{}", usage())),
+    };
+    if let Err(e) = result {
+        eprintln!("{e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "hbatch — dynamic batching for heterogeneous distributed training\n\
+     commands:\n\
+     \x20 simulate          virtual-time experiment (fast, reproduces paper figures)\n\
+     \x20 train             real training over AOT-compiled XLA artifacts\n\
+     \x20 figure <id>       regenerate a paper figure: 1 2 3 4a 4b 5 6 7a 7cloud asp buckets all\n\
+     \x20 throughput-scan   throughput-vs-batch curve for a device\n\
+     \x20 info              show artifact manifest\n\
+     run `hbatch <cmd> --help` for options"
+        .into()
+}
+
+fn cmd_simulate(rest: &[String]) -> Result<(), String> {
+    let a = Args::new("hbatch simulate", "virtual-time training experiment")
+        .opt("workload", "resnet", "resnet|mnist|linreg|transformer")
+        .opt("cores", "9,12,18", "per-worker CPU cores")
+        .opt("hlevel", "0", "generate cores from H-level (overrides --cores)")
+        .opt("policy", "dynamic", "uniform|static|dynamic")
+        .opt("sync", "bsp", "bsp|asp|ssp:<bound>")
+        .opt("iters", "600", "global iterations (0 = run to target)")
+        .opt("b0", "0", "reference per-worker batch (0 = workload default)")
+        .opt("adjust-cost", "30", "seconds charged per batch readjustment")
+        .opt("noise", "0.06", "lognormal iteration-time noise sigma")
+        .opt("seed", "0", "rng seed")
+        .opt("config", "", "JSON config file (CLI flags override)")
+        .parse(rest)?;
+
+    let mut cfg = if a.get("config").is_empty() {
+        ExperimentCfg::default()
+    } else {
+        ExperimentCfg::from_file(&a.get("config"))?
+    };
+    cfg.workload = a.get("workload");
+    let h = a.get_f64("hlevel");
+    let cores = if h >= 1.0 {
+        hlevel_split(39, 3, h).ok_or(format!("no H-level {h} split"))?
+    } else {
+        a.get_usize_list("cores")
+    };
+    cfg.workers = cpu_cluster(&cores);
+    cfg.policy = Policy::parse(&a.get("policy")).ok_or("bad --policy")?;
+    cfg.sync = SyncMode::parse(&a.get("sync")).ok_or("bad --sync")?;
+    cfg.max_iters = a.get_u64("iters");
+    cfg.b0 = a.get_usize("b0");
+    cfg.adjust_cost_s = a.get_f64("adjust-cost");
+    cfg.noise_sigma = a.get_f64("noise");
+    cfg.seed = a.get_u64("seed");
+    cfg.validate()?;
+
+    let k = cfg.workers.len();
+    let r = Simulator::new(cfg).run();
+    println!("{}", r.to_json(k).to_pretty());
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> Result<(), String> {
+    let a = Args::new("hbatch train", "real-execution training (PJRT runtime)")
+        .opt("model", "mlp", "manifest model: linreg|mlp|cnn|transformer")
+        .opt("policy", "dynamic", "uniform|static|dynamic")
+        .opt("steps", "50", "global training steps")
+        .opt("cores", "4,8,16", "simulated worker core counts (heterogeneity)")
+        .opt("seed", "0", "rng seed")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("loss-target", "0", "stop early at this train loss (0 = off)")
+        .opt("agg-threads", "4", "aggregation threads")
+        .opt("report", "", "write full JSON report to this path")
+        .parse(rest)?;
+
+    let cores = a.get_usize_list("cores");
+    let mut runtime = Runtime::open(a.get("artifacts")).map_err(|e| e.to_string())?;
+    let mut cfg = ExperimentCfg::default();
+    cfg.workers = cpu_cluster(&cores);
+    cfg.policy = Policy::parse(&a.get("policy")).ok_or("bad --policy")?;
+    cfg.seed = a.get_u64("seed");
+    let opts = TrainOpts {
+        model: a.get("model"),
+        policy: cfg.policy,
+        steps: a.get_u64("steps"),
+        eval_every: 0,
+        seed: cfg.seed,
+        agg_threads: a.get_usize("agg-threads"),
+        loss_target: a.get_f64("loss-target"),
+    };
+    let slow = Slowdowns::from_cores(&cores);
+    let k = cores.len();
+    let mut dataset = data::for_model(&opts.model, k, cfg.seed);
+    let mut engine =
+        Engine::new(&mut runtime, cfg, opts, slow).map_err(|e| e.to_string())?;
+    let report = engine.run(dataset.as_mut()).map_err(|e| e.to_string())?;
+    // Compact progress print.
+    println!("run: {}", report.label);
+    println!(
+        "steps: {}  wall: {:.1}s",
+        report.total_iters, report.total_time
+    );
+    if let Some((_, _, first)) = report.losses.first() {
+        let (_, _, last) = report.losses.last().unwrap();
+        println!("loss: {first:.4} -> {last:.4}");
+    }
+    println!("adjustments: {}", report.adjustments.len());
+    if let Some(b) = report.final_batches() {
+        println!("final batches: {b:?}");
+    }
+    if !a.get("report").is_empty() {
+        std::fs::write(a.get("report"), report.to_json(k).to_pretty())
+            .map_err(|e| e.to_string())?;
+        println!("report written to {}", a.get("report"));
+    }
+    Ok(())
+}
+
+fn cmd_figure(rest: &[String]) -> Result<(), String> {
+    let a = Args::new("hbatch figure", "regenerate a paper figure")
+        .opt("seed", "0", "rng seed")
+        .opt("out-dir", "figures_out", "CSV output directory")
+        .parse(rest)?;
+    let seed = a.get_u64("seed");
+    let which = a
+        .positionals()
+        .first()
+        .ok_or("which figure? 1 2 3 4a 4b 5 6 7a 7cloud asp buckets all")?
+        .clone();
+    let out_dir = a.get("out-dir");
+    let ids: Vec<&str> = if which == "all" {
+        vec![
+            "1", "2", "3", "4a", "4b", "5", "6", "7a", "7cloud", "asp", "buckets",
+        ]
+    } else {
+        vec![which.as_str()]
+    };
+    for id in ids {
+        let (name, table) = match id {
+            "1" => ("fig1_hetero_penalty", figures::fig1(seed)),
+            "2" => ("fig2_timeline", figures::fig2(seed)),
+            "3" => ("fig3_iter_time_hist", figures::fig3(seed).0),
+            "4a" => ("fig4a_convergence", figures::fig4(true, seed)),
+            "4b" => ("fig4b_oscillation", figures::fig4(false, seed)),
+            "5" => ("fig5_throughput_vs_batch", figures::fig5()),
+            "6" => ("fig6_bsp_hlevel", figures::fig6(seed)),
+            "7a" => ("fig7a_gpu_cpu", figures::fig7a(seed)),
+            "7cloud" => ("fig7_cloud_t4_p4", figures::fig7_cloud(seed)),
+            "asp" => ("fig_asp", figures::fig_asp(seed)),
+            "buckets" => ("fig_buckets_ablation", figures::fig_buckets(seed)),
+            other => return Err(format!("unknown figure {other:?}")),
+        };
+        println!("=== {name} ===");
+        print!("{}", table.to_string());
+        let path = format!("{out_dir}/{name}.csv");
+        table.save(&path).map_err(|e| e.to_string())?;
+        println!("-> {path}\n");
+    }
+    Ok(())
+}
+
+fn cmd_scan(rest: &[String]) -> Result<(), String> {
+    let a = Args::new("hbatch throughput-scan", "throughput vs batch curve")
+        .opt("workload", "resnet", "workload profile")
+        .opt("device", "cpu:16", "cpu:<cores> | gpu:P100|T4|P4")
+        .parse(rest)?;
+    use hetero_batch::cluster::{CapacityModel, DeviceKind, GpuModel, WorkloadProfile};
+    let profile = WorkloadProfile::by_name(&a.get("workload")).ok_or("bad workload")?;
+    let model = CapacityModel::new(profile).with_noise(0.0);
+    let dev = a.get("device");
+    let device = if let Some(c) = dev.strip_prefix("cpu:") {
+        DeviceKind::Cpu {
+            cores: c.parse().map_err(|_| "bad core count")?,
+        }
+    } else if let Some(g) = dev.strip_prefix("gpu:") {
+        DeviceKind::Gpu {
+            model: match g {
+                "P100" => GpuModel::P100,
+                "T4" => GpuModel::T4,
+                "P4" => GpuModel::P4,
+                _ => return Err("bad gpu model".into()),
+            },
+        }
+    } else {
+        return Err("device must be cpu:<n> or gpu:<model>".into());
+    };
+    println!("batch,throughput_sps,iter_time_s");
+    let mut b = 1.0;
+    while b <= 8192.0 {
+        println!(
+            "{b},{:.2},{:.4}",
+            model.throughput(&device, b),
+            model.iter_time_det(&device, b, 1.0)
+        );
+        b *= 2.0;
+    }
+    Ok(())
+}
+
+fn cmd_info(rest: &[String]) -> Result<(), String> {
+    let a = Args::new("hbatch info", "artifact inventory")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse(rest)?;
+    let rt = Runtime::open(a.get("artifacts")).map_err(|e| e.to_string())?;
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "{name}: {} params ({} tensors), task={}, buckets={:?}",
+            m.param_total,
+            m.params.len(),
+            m.task,
+            m.buckets
+        );
+    }
+    println!(
+        "grad_agg kernels for K = {:?}, chunk {}",
+        rt.manifest.agg.keys().collect::<Vec<_>>(),
+        rt.manifest.agg_chunk
+    );
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! Measurement: iteration records, per-worker timelines, batch-size
+//! traces, and the training report the figure harnesses consume.
+
+use crate::util::json::Json;
+use crate::util::stats::{percentile, Running};
+
+/// One completed worker iteration.
+#[derive(Debug, Clone)]
+pub struct IterRecord {
+    pub worker: usize,
+    pub iter: u64,
+    /// Virtual or wall time when the iteration started (seconds).
+    pub start: f64,
+    pub duration: f64,
+    pub batch: f64,
+    /// Seconds spent waiting at the barrier after computing (BSP).
+    pub wait: f64,
+}
+
+/// A batch readjustment event.
+#[derive(Debug, Clone)]
+pub struct AdjustEvent {
+    pub time: f64,
+    pub iter: u64,
+    pub batches: Vec<f64>,
+    /// Cost charged for applying it (restart / executable swap).
+    pub cost: f64,
+}
+
+/// Complete record of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub label: String,
+    pub iters: Vec<IterRecord>,
+    pub adjustments: Vec<AdjustEvent>,
+    /// (time, global_iter, loss) samples — real-execution runs only.
+    pub losses: Vec<(f64, u64, f64)>,
+    /// Total time to completion/target (seconds, virtual or wall).
+    pub total_time: f64,
+    /// Global iterations executed.
+    pub total_iters: u64,
+    /// True if the run reached its accuracy/loss target.
+    pub reached_target: bool,
+}
+
+impl RunReport {
+    pub fn new(label: &str) -> Self {
+        RunReport {
+            label: label.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Per-worker iteration-time statistics.
+    pub fn worker_time_stats(&self, k: usize) -> Vec<Running> {
+        let mut out = vec![Running::new(); k];
+        for r in &self.iters {
+            out[r.worker].push(r.duration);
+        }
+        out
+    }
+
+    /// Per-worker iteration durations (for histograms).
+    pub fn worker_durations(&self, worker: usize) -> Vec<f64> {
+        self.iters
+            .iter()
+            .filter(|r| r.worker == worker)
+            .map(|r| r.duration)
+            .collect()
+    }
+
+    /// Fraction of total worker-time spent waiting at barriers — the
+    /// parallel-efficiency loss stragglers cause under BSP.
+    pub fn wait_fraction(&self) -> f64 {
+        let busy: f64 = self.iters.iter().map(|r| r.duration).sum();
+        let wait: f64 = self.iters.iter().map(|r| r.wait).sum();
+        if busy + wait == 0.0 {
+            0.0
+        } else {
+            wait / (busy + wait)
+        }
+    }
+
+    /// p95 of the spread (max−min)/mean of concurrent iteration times —
+    /// the "iteration gap" dynamic batching tries to close.
+    pub fn iteration_gap(&self, k: usize) -> f64 {
+        // Group by iter index.
+        let max_iter = self.iters.iter().map(|r| r.iter).max().unwrap_or(0);
+        let mut gaps = Vec::new();
+        let mut per_iter: Vec<Vec<f64>> = vec![Vec::new(); (max_iter + 1) as usize];
+        for r in &self.iters {
+            per_iter[r.iter as usize].push(r.duration);
+        }
+        for times in per_iter.iter().filter(|t| t.len() == k) {
+            let mx = times.iter().cloned().fold(f64::MIN, f64::max);
+            let mn = times.iter().cloned().fold(f64::MAX, f64::min);
+            let mean = times.iter().sum::<f64>() / times.len() as f64;
+            gaps.push((mx - mn) / mean);
+        }
+        if gaps.is_empty() {
+            0.0
+        } else {
+            percentile(&mut gaps, 0.95)
+        }
+    }
+
+    /// Final batch allocation (from last adjustment, or None).
+    pub fn final_batches(&self) -> Option<&[f64]> {
+        self.adjustments.last().map(|a| a.batches.as_slice())
+    }
+
+    pub fn to_json(&self, k: usize) -> Json {
+        let mut o = Json::obj();
+        o.set("label", Json::Str(self.label.clone()));
+        o.set("total_time_s", Json::Num(self.total_time));
+        o.set("total_iters", Json::Num(self.total_iters as f64));
+        o.set("reached_target", Json::Bool(self.reached_target));
+        o.set("wait_fraction", Json::Num(self.wait_fraction()));
+        o.set("n_adjustments", Json::Num(self.adjustments.len() as f64));
+        let stats = self.worker_time_stats(k);
+        let mut workers = Vec::new();
+        for (w, s) in stats.iter().enumerate() {
+            let mut wo = Json::obj();
+            wo.set("worker", Json::Num(w as f64));
+            wo.set("mean_iter_s", Json::Num(s.mean()));
+            wo.set("std_iter_s", Json::Num(s.std()));
+            wo.set("n", Json::Num(s.n() as f64));
+            workers.push(wo);
+        }
+        o.set("workers", Json::Arr(workers));
+        if !self.losses.is_empty() {
+            let pts: Vec<Json> = self
+                .losses
+                .iter()
+                .map(|&(t, i, l)| {
+                    Json::Arr(vec![Json::Num(t), Json::Num(i as f64), Json::Num(l)])
+                })
+                .collect();
+            o.set("loss_curve", Json::Arr(pts));
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(worker: usize, iter: u64, dur: f64, wait: f64) -> IterRecord {
+        IterRecord {
+            worker,
+            iter,
+            start: 0.0,
+            duration: dur,
+            batch: 32.0,
+            wait,
+        }
+    }
+
+    #[test]
+    fn wait_fraction_zero_when_balanced() {
+        let mut r = RunReport::new("t");
+        r.iters.push(rec(0, 0, 1.0, 0.0));
+        r.iters.push(rec(1, 0, 1.0, 0.0));
+        assert_eq!(r.wait_fraction(), 0.0);
+    }
+
+    #[test]
+    fn wait_fraction_counts_straggler_cost() {
+        let mut r = RunReport::new("t");
+        r.iters.push(rec(0, 0, 1.0, 3.0)); // fast worker waits 3s
+        r.iters.push(rec(1, 0, 4.0, 0.0)); // straggler
+        assert!((r.wait_fraction() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iteration_gap_measures_spread() {
+        let mut r = RunReport::new("t");
+        for i in 0..10 {
+            r.iters.push(rec(0, i, 1.0, 0.0));
+            r.iters.push(rec(1, i, 3.0, 0.0));
+        }
+        // (3-1)/2 = 1.0 on every iteration.
+        assert!((r.iteration_gap(2) - 1.0).abs() < 1e-9);
+        let mut balanced = RunReport::new("b");
+        for i in 0..10 {
+            balanced.iters.push(rec(0, i, 2.0, 0.0));
+            balanced.iters.push(rec(1, i, 2.0, 0.0));
+        }
+        assert!(balanced.iteration_gap(2) < 1e-9);
+    }
+
+    #[test]
+    fn per_worker_stats() {
+        let mut r = RunReport::new("t");
+        r.iters.push(rec(0, 0, 1.0, 0.0));
+        r.iters.push(rec(0, 1, 2.0, 0.0));
+        r.iters.push(rec(1, 0, 5.0, 0.0));
+        let stats = r.worker_time_stats(2);
+        assert_eq!(stats[0].n(), 2);
+        assert!((stats[0].mean() - 1.5).abs() < 1e-12);
+        assert_eq!(stats[1].n(), 1);
+        assert_eq!(r.worker_durations(1), vec![5.0]);
+    }
+
+    #[test]
+    fn json_roundtrip_has_fields() {
+        let mut r = RunReport::new("run1");
+        r.total_time = 12.5;
+        r.total_iters = 10;
+        r.reached_target = true;
+        r.losses.push((1.0, 1, 0.5));
+        r.iters.push(rec(0, 0, 1.0, 0.0));
+        let j = r.to_json(1);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("label").as_str(), Some("run1"));
+        assert_eq!(parsed.get("total_time_s").as_f64(), Some(12.5));
+        assert_eq!(parsed.get("reached_target").as_bool(), Some(true));
+        assert_eq!(parsed.get("loss_curve").idx(0).idx(2).as_f64(), Some(0.5));
+    }
+}

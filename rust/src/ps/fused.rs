@@ -1,0 +1,245 @@
+//! Fused aggregation + optimizer kernels (§Perf iteration 1).
+//!
+//! The naive PS pipeline makes two full passes over parameter-sized
+//! memory per iteration: (1) λ-weighted aggregation writes the averaged
+//! gradient, (2) the optimizer reads it back and updates params/state.
+//! Both are memory-bandwidth-bound.  Fusion here is *tiled*: gradients
+//! are aggregated into an L1-resident tile with the vectorized
+//! `aggregate_into` kernel, and the optimizer update consumes the tile
+//! while it is still in cache — the aggregated gradient never makes a
+//! round trip through DRAM.  (A naive per-element fusion with indexed
+//! access defeats auto-vectorization and is *slower* than the unfused
+//! pipeline — measured in `benches/hotpath.rs`, kept in the §Perf log.)
+//!
+//! Numerics are identical to `aggregate_into` + `Optimizer::step` (same
+//! operation order per element), verified by unit tests.
+
+use crate::ps::aggregate_into;
+use crate::ps::optimizer::{Adam, LrSchedule, Momentum, Optimizer, Sgd};
+
+/// Tile length: 8 K f32 = 32 KiB — fits L1d alongside the param tile.
+const TILE: usize = 8192;
+
+/// Run `update(params_tile, agg_tile, tile_start)` over λ-aggregated
+/// gradient tiles.
+fn tiled<F: FnMut(&mut [f32], &[f32], usize)>(
+    params: &mut [f32],
+    grads: &[&[f32]],
+    lambdas: &[f64],
+    mut update: F,
+) {
+    let mut buf = [0.0f32; TILE];
+    let n = params.len();
+    let mut start = 0;
+    while start < n {
+        let len = TILE.min(n - start);
+        let slices: Vec<&[f32]> =
+            grads.iter().map(|g| &g[start..start + len]).collect();
+        aggregate_into(&mut buf[..len], &slices, lambdas);
+        update(&mut params[start..start + len], &buf[..len], start);
+        start += len;
+    }
+}
+
+/// Aggregate λ-weighted gradients and apply an SGD step in one pass.
+pub fn fused_agg_sgd(
+    params: &mut [f32],
+    grads: &[&[f32]],
+    lambdas: &[f64],
+    opt: &mut Sgd,
+) {
+    validate(params, grads, lambdas);
+    let lr = opt.schedule.at(opt.iterations()) as f32;
+    tiled(params, grads, lambdas, |p_tile, g_tile, _| {
+        for (p, &g) in p_tile.iter_mut().zip(g_tile) {
+            *p -= lr * g;
+        }
+    });
+    opt.bump();
+}
+
+/// Fused aggregation + momentum step.
+pub fn fused_agg_momentum(
+    params: &mut [f32],
+    grads: &[&[f32]],
+    lambdas: &[f64],
+    opt: &mut Momentum,
+) {
+    validate(params, grads, lambdas);
+    assert_eq!(params.len(), opt.velocity().len());
+    let lr = opt.schedule.at(opt.iterations()) as f32;
+    let mu = opt.mu as f32;
+    let v = opt.velocity_mut();
+    tiled(params, grads, lambdas, |p_tile, g_tile, start| {
+        let v_tile = &mut v[start..start + p_tile.len()];
+        for ((p, vel), &g) in p_tile.iter_mut().zip(v_tile.iter_mut()).zip(g_tile) {
+            *vel = mu * *vel + g;
+            *p -= lr * *vel;
+        }
+    });
+    opt.bump();
+}
+
+/// Fused aggregation + Adam step (bias-corrected).
+pub fn fused_agg_adam(
+    params: &mut [f32],
+    grads: &[&[f32]],
+    lambdas: &[f64],
+    opt: &mut Adam,
+) {
+    validate(params, grads, lambdas);
+    assert_eq!(params.len(), opt.m().len());
+    let t = opt.iterations() + 1;
+    let lr = opt.schedule.at(t - 1);
+    let (b1, b2, eps) = (opt.beta1, opt.beta2, opt.eps);
+    let bc1 = 1.0 - b1.powi(t as i32);
+    let bc2 = 1.0 - b2.powi(t as i32);
+    let step = (lr * bc2.sqrt() / bc1) as f32;
+    let (b1, b2, eps) = (b1 as f32, b2 as f32, eps as f32);
+    let (m, v) = opt.state_mut();
+    tiled(params, grads, lambdas, |p_tile, g_tile, start| {
+        let m_tile = &mut m[start..start + p_tile.len()];
+        let v_tile = &mut v[start..start + p_tile.len()];
+        for (((p, mi), vi), &g) in p_tile
+            .iter_mut()
+            .zip(m_tile.iter_mut())
+            .zip(v_tile.iter_mut())
+            .zip(g_tile)
+        {
+            *mi = b1 * *mi + (1.0 - b1) * g;
+            *vi = b2 * *vi + (1.0 - b2) * g * g;
+            *p -= step * *mi / (vi.sqrt() + eps);
+        }
+    });
+    opt.bump_to(t);
+}
+
+/// Dispatch over the optimizer kinds used by the engine.
+pub enum FusedOptimizer {
+    Sgd(Sgd),
+    Momentum(Momentum),
+    Adam(Adam),
+}
+
+impl FusedOptimizer {
+    pub fn for_workload(name: &str, dim: usize, total_iters: u64) -> Self {
+        match name {
+            "resnet" | "cnn" => FusedOptimizer::Momentum(Momentum::new(
+                LrSchedule::resnet_paper(total_iters),
+                0.9,
+                dim,
+            )),
+            "mnist" | "mlp" => FusedOptimizer::Adam(Adam::paper_mnist(dim)),
+            "transformer" | "transformer_e2e" => {
+                FusedOptimizer::Adam(Adam::new(LrSchedule::Constant(3e-4), dim))
+            }
+            _ => FusedOptimizer::Sgd(Sgd::new(LrSchedule::Constant(0.05))),
+        }
+    }
+
+    /// One fused aggregate+update pass.
+    pub fn step(&mut self, params: &mut [f32], grads: &[&[f32]], lambdas: &[f64]) {
+        match self {
+            FusedOptimizer::Sgd(o) => fused_agg_sgd(params, grads, lambdas, o),
+            FusedOptimizer::Momentum(o) => fused_agg_momentum(params, grads, lambdas, o),
+            FusedOptimizer::Adam(o) => fused_agg_adam(params, grads, lambdas, o),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FusedOptimizer::Sgd(_) => "sgd",
+            FusedOptimizer::Momentum(_) => "momentum",
+            FusedOptimizer::Adam(_) => "adam",
+        }
+    }
+}
+
+fn validate(params: &[f32], grads: &[&[f32]], lambdas: &[f64]) {
+    assert_eq!(grads.len(), lambdas.len());
+    assert!(!grads.is_empty());
+    for g in grads {
+        assert_eq!(g.len(), params.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::optimizer::Optimizer;
+    use crate::ps::{aggregate_into, lambdas_from_batches};
+    use crate::util::rng::Rng;
+
+    fn setup(d: usize) -> (Vec<f32>, Vec<Vec<f32>>, Vec<f64>) {
+        let mut rng = Rng::new(5);
+        let params = rng.normal_vec_f32(d);
+        let grads: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec_f32(d)).collect();
+        let lambdas = lambdas_from_batches(&[16.0, 32.0, 80.0]);
+        (params, grads, lambdas)
+    }
+
+    fn assert_close(a: &[f32], b: &[f32]) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < 1e-5, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn fused_sgd_matches_unfused() {
+        let (params, grads, lambdas) = setup(10_000);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+
+        let mut p1 = params.clone();
+        let mut agg = vec![0.0; p1.len()];
+        let mut o1 = Sgd::new(LrSchedule::Constant(0.1));
+        aggregate_into(&mut agg, &refs, &lambdas);
+        o1.step(&mut p1, &agg);
+
+        let mut p2 = params;
+        let mut o2 = Sgd::new(LrSchedule::Constant(0.1));
+        fused_agg_sgd(&mut p2, &refs, &lambdas, &mut o2);
+        assert_close(&p1, &p2);
+        assert_eq!(o1.iterations(), o2.iterations());
+    }
+
+    #[test]
+    fn fused_momentum_matches_unfused_over_steps() {
+        let (params, grads, lambdas) = setup(5_000);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mut p1 = params.clone();
+        let mut p2 = params;
+        let mut o1 = Momentum::new(LrSchedule::Constant(0.05), 0.9, p1.len());
+        let mut o2 = Momentum::new(LrSchedule::Constant(0.05), 0.9, p2.len());
+        let mut agg = vec![0.0; p1.len()];
+        for _ in 0..3 {
+            aggregate_into(&mut agg, &refs, &lambdas);
+            o1.step(&mut p1, &agg);
+            fused_agg_momentum(&mut p2, &refs, &lambdas, &mut o2);
+        }
+        assert_close(&p1, &p2);
+    }
+
+    #[test]
+    fn fused_adam_matches_unfused_over_steps() {
+        let (params, grads, lambdas) = setup(5_000);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mut p1 = params.clone();
+        let mut p2 = params;
+        let mut o1 = Adam::new(LrSchedule::Constant(0.001), p1.len());
+        let mut o2 = Adam::new(LrSchedule::Constant(0.001), p2.len());
+        let mut agg = vec![0.0; p1.len()];
+        for _ in 0..4 {
+            aggregate_into(&mut agg, &refs, &lambdas);
+            o1.step(&mut p1, &agg);
+            fused_agg_adam(&mut p2, &refs, &lambdas, &mut o2);
+        }
+        assert_close(&p1, &p2);
+    }
+
+    #[test]
+    fn dispatcher_selects_paper_optimizers() {
+        assert_eq!(FusedOptimizer::for_workload("cnn", 4, 100).name(), "momentum");
+        assert_eq!(FusedOptimizer::for_workload("mlp", 4, 100).name(), "adam");
+        assert_eq!(FusedOptimizer::for_workload("linreg", 4, 100).name(), "sgd");
+    }
+}

@@ -1,0 +1,163 @@
+//! Parameter server: λ-weighted gradient aggregation (paper Eq. 2–3) and
+//! optimizers.
+//!
+//! The PS applies the paper's update rule
+//!
+//! ```text
+//! g_t      = Σ_k λ_k ∇f(x_{b_k,t}),   λ_k = b_k / Σ_i b_i
+//! x_{t+1}  = x_t − η · g_t
+//! ```
+//!
+//! With uniform batches λ_k = 1/K and this reduces to the conventional
+//! averaged update; the λ weighting is what keeps variable batching
+//! statistically equivalent to uniform batching at the same global batch.
+//!
+//! Aggregation runs on the Rust hot path (memory-bound axpy over the
+//! flattened parameter vector, optionally multi-threaded); the same
+//! computation also exists as an AOT Pallas kernel (`grad_agg_k*.hlo.txt`)
+//! — `benches/agg.rs` compares the two.
+
+pub mod fused;
+pub mod optimizer;
+pub mod store;
+
+pub use fused::FusedOptimizer;
+pub use optimizer::{Adam, LrSchedule, Momentum, Optimizer, Sgd};
+pub use store::ParamStore;
+
+/// λ_k = b_k / Σ b_i (Eq. 2's weights).
+pub fn lambdas_from_batches(batches: &[f64]) -> Vec<f64> {
+    assert!(!batches.is_empty());
+    let total: f64 = batches.iter().sum();
+    assert!(total > 0.0, "batches sum to zero");
+    batches.iter().map(|&b| b / total).collect()
+}
+
+/// out[j] = Σ_k λ[k]·grads[k][j] — single-threaded reference.
+pub fn aggregate_into(out: &mut [f32], grads: &[&[f32]], lambdas: &[f64]) {
+    assert_eq!(grads.len(), lambdas.len());
+    assert!(!grads.is_empty(), "no gradients");
+    for g in grads {
+        assert_eq!(g.len(), out.len(), "gradient length mismatch");
+    }
+    // First worker writes, the rest accumulate — avoids a zero-fill pass.
+    let l0 = lambdas[0] as f32;
+    for (o, &g) in out.iter_mut().zip(grads[0]) {
+        *o = l0 * g;
+    }
+    for (g, &l) in grads[1..].iter().zip(&lambdas[1..]) {
+        let lf = l as f32;
+        for (o, &gv) in out.iter_mut().zip(*g) {
+            *o += lf * gv;
+        }
+    }
+}
+
+/// Multi-threaded aggregation: splits the parameter vector into chunks
+/// across `threads` OS threads. Used for large models (e2e transformer has
+/// ~12M params ⇒ ~48 MB of gradients per worker).
+pub fn aggregate_into_mt(
+    out: &mut [f32],
+    grads: &[&[f32]],
+    lambdas: &[f64],
+    threads: usize,
+) {
+    assert_eq!(grads.len(), lambdas.len());
+    for g in grads {
+        assert_eq!(g.len(), out.len());
+    }
+    let threads = threads.max(1).min(out.len().max(1));
+    if threads == 1 || out.len() < 1 << 16 {
+        return aggregate_into(out, grads, lambdas);
+    }
+    let chunk = (out.len() + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        for (t, out_chunk) in out.chunks_mut(chunk).enumerate() {
+            let start = t * chunk;
+            let end = start + out_chunk.len();
+            scope.spawn(move || {
+                let slices: Vec<&[f32]> =
+                    grads.iter().map(|g| &g[start..end]).collect();
+                aggregate_into(out_chunk, &slices, lambdas);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn lambdas_normalize() {
+        let l = lambdas_from_batches(&[32.0, 64.0, 96.0]);
+        assert!((l.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((l[0] - 32.0 / 192.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_lambda_is_plain_average() {
+        let g0 = vec![1.0f32, 2.0, 3.0];
+        let g1 = vec![3.0f32, 4.0, 5.0];
+        let mut out = vec![0.0; 3];
+        aggregate_into(&mut out, &[&g0, &g1], &[0.5, 0.5]);
+        assert_close(&out, &[2.0, 3.0, 4.0], 1e-7);
+    }
+
+    #[test]
+    fn weighting_matches_manual() {
+        let g0 = vec![1.0f32, -2.0];
+        let g1 = vec![10.0f32, 20.0];
+        let mut out = vec![0.0; 2];
+        aggregate_into(&mut out, &[&g0, &g1], &[0.25, 0.75]);
+        assert_close(&out, &[7.75, 14.5], 1e-6);
+    }
+
+    #[test]
+    fn single_worker_identity() {
+        let g = vec![5.0f32; 17];
+        let mut out = vec![0.0; 17];
+        aggregate_into(&mut out, &[&g], &[1.0]);
+        assert_close(&out, &g, 0.0);
+    }
+
+    #[test]
+    fn mt_matches_st_various_sizes_and_threads() {
+        let mut rng = Rng::new(0);
+        for &n in &[1usize, 100, 65_537, 1 << 18] {
+            let grads: Vec<Vec<f32>> =
+                (0..4).map(|_| rng.normal_vec_f32(n)).collect();
+            let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            let lam = lambdas_from_batches(&[1.0, 2.0, 3.0, 4.0]);
+            let mut st = vec![0.0; n];
+            aggregate_into(&mut st, &refs, &lam);
+            for threads in [1, 2, 3, 8] {
+                let mut mt = vec![0.0; n];
+                aggregate_into_mt(&mut mt, &refs, &lam, threads);
+                assert_close(&mt, &st, 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        let g = vec![1.0f32; 4];
+        let mut out = vec![0.0; 5];
+        aggregate_into(&mut out, &[&g], &[1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_batches_panic() {
+        lambdas_from_batches(&[0.0, 0.0]);
+    }
+}

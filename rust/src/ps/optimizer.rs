@@ -1,0 +1,329 @@
+//! Optimizers applied by the parameter server after aggregation.
+//!
+//! The paper's workloads use: ResNet — momentum with the step schedule
+//! [0.1, 0.01, 0.001, 0.0002]; MNIST CNN — Adam(1e-4); LR — plain SGD.
+
+/// Learning-rate schedule: piecewise-constant over *global iterations*
+/// (the paper's ResNet schedule), or constant.
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Constant(f64),
+    /// (boundary_iteration, lr) pairs: lr of the segment *starting* there.
+    /// First boundary must be 0.
+    Piecewise(Vec<(u64, f64)>),
+}
+
+impl LrSchedule {
+    /// The paper's ResNet schedule over a total iteration budget: four
+    /// equal segments at [0.1, 0.01, 0.001, 0.0002].
+    pub fn resnet_paper(total_iters: u64) -> Self {
+        let seg = (total_iters / 4).max(1);
+        LrSchedule::Piecewise(vec![
+            (0, 0.1),
+            (seg, 0.01),
+            (2 * seg, 0.001),
+            (3 * seg, 0.0002),
+        ])
+    }
+
+    pub fn at(&self, iter: u64) -> f64 {
+        match self {
+            LrSchedule::Constant(lr) => *lr,
+            LrSchedule::Piecewise(segs) => {
+                assert!(!segs.is_empty() && segs[0].0 == 0, "bad schedule");
+                let mut lr = segs[0].1;
+                for &(start, l) in segs {
+                    if iter >= start {
+                        lr = l;
+                    } else {
+                        break;
+                    }
+                }
+                lr
+            }
+        }
+    }
+}
+
+/// A stateful optimizer over the flattened parameter vector.
+pub trait Optimizer: Send {
+    /// In-place update of `params` given aggregated gradient `grad`.
+    fn step(&mut self, params: &mut [f32], grad: &[f32]);
+    /// Current iteration count (applied steps).
+    fn iterations(&self) -> u64;
+    fn name(&self) -> &'static str;
+}
+
+/// Plain SGD: x ← x − η·g.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub schedule: LrSchedule,
+    t: u64,
+}
+
+impl Sgd {
+    pub fn new(schedule: LrSchedule) -> Self {
+        Sgd { schedule, t: 0 }
+    }
+
+    /// Advance the iteration counter (used by the fused kernels, which
+    /// apply the update themselves).
+    pub(crate) fn bump(&mut self) {
+        self.t += 1;
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        let lr = self.schedule.at(self.t) as f32;
+        for (p, &g) in params.iter_mut().zip(grad) {
+            *p -= lr * g;
+        }
+        self.t += 1;
+    }
+
+    fn iterations(&self) -> u64 {
+        self.t
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Heavy-ball momentum (TF MomentumOptimizer semantics):
+/// v ← μ·v + g;  x ← x − η·v.
+#[derive(Debug, Clone)]
+pub struct Momentum {
+    pub schedule: LrSchedule,
+    pub mu: f64,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Momentum {
+    pub fn new(schedule: LrSchedule, mu: f64, dim: usize) -> Self {
+        Momentum {
+            schedule,
+            mu,
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+
+    pub fn velocity(&self) -> &[f32] {
+        &self.v
+    }
+
+    pub(crate) fn velocity_mut(&mut self) -> &mut [f32] {
+        &mut self.v
+    }
+
+    pub(crate) fn bump(&mut self) {
+        self.t += 1;
+    }
+}
+
+impl Optimizer for Momentum {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.v.len(), "dim mismatch with state");
+        let lr = self.schedule.at(self.t) as f32;
+        let mu = self.mu as f32;
+        for ((p, v), &g) in params.iter_mut().zip(self.v.iter_mut()).zip(grad) {
+            *v = mu * *v + g;
+            *p -= lr * *v;
+        }
+        self.t += 1;
+    }
+
+    fn iterations(&self) -> u64 {
+        self.t
+    }
+
+    fn name(&self) -> &'static str {
+        "momentum"
+    }
+}
+
+/// Adam (Kingma & Ba '15) with bias correction.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub schedule: LrSchedule,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(schedule: LrSchedule, dim: usize) -> Self {
+        Adam {
+            schedule,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+
+    /// Paper's MNIST setting: Adam with lr 1e-4.
+    pub fn paper_mnist(dim: usize) -> Self {
+        Adam::new(LrSchedule::Constant(1e-4), dim)
+    }
+
+    pub fn m(&self) -> &[f32] {
+        &self.m
+    }
+
+    pub(crate) fn state_mut(&mut self) -> (&mut [f32], &mut [f32]) {
+        (&mut self.m, &mut self.v)
+    }
+
+    pub(crate) fn bump_to(&mut self, t: u64) {
+        self.t = t;
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len(), "dim mismatch with state");
+        self.t += 1;
+        let lr = self.schedule.at(self.t - 1);
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let step = (lr * bc2.sqrt() / bc1) as f32;
+        let (b1, b2) = (b1 as f32, b2 as f32);
+        let eps = self.eps as f32;
+        for ((p, (m, v)), &g) in params
+            .iter_mut()
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+            .zip(grad)
+        {
+            *m = b1 * *m + (1.0 - b1) * g;
+            *v = b2 * *v + (1.0 - b2) * g * g;
+            *p -= step * *m / (v.sqrt() + eps);
+        }
+    }
+
+    fn iterations(&self) -> u64 {
+        self.t
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+/// Build the optimizer a workload uses in the paper.
+pub fn for_workload(name: &str, dim: usize, total_iters: u64) -> Box<dyn Optimizer> {
+    match name {
+        "resnet" | "cnn" => Box::new(Momentum::new(
+            LrSchedule::resnet_paper(total_iters),
+            0.9,
+            dim,
+        )),
+        "mnist" | "mlp" => Box::new(Adam::paper_mnist(dim)),
+        "transformer" | "transformer_e2e" => {
+            Box::new(Adam::new(LrSchedule::Constant(3e-4), dim))
+        }
+        _ => Box::new(Sgd::new(LrSchedule::Constant(0.05))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_constant() {
+        let s = LrSchedule::Constant(0.1);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn schedule_piecewise_resnet() {
+        let s = LrSchedule::resnet_paper(40_000);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(9_999), 0.1);
+        assert_eq!(s.at(10_000), 0.01);
+        assert_eq!(s.at(20_000), 0.001);
+        assert_eq!(s.at(39_999), 0.0002);
+    }
+
+    #[test]
+    fn sgd_exact_step() {
+        let mut opt = Sgd::new(LrSchedule::Constant(0.5));
+        let mut p = vec![1.0f32, -2.0];
+        opt.step(&mut p, &[2.0, 2.0]);
+        assert_eq!(p, vec![0.0, -3.0]);
+        assert_eq!(opt.iterations(), 1);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = Momentum::new(LrSchedule::Constant(1.0), 0.5, 1);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0]); // v=1,   p=-1
+        opt.step(&mut p, &[1.0]); // v=1.5, p=-2.5
+        opt.step(&mut p, &[1.0]); // v=1.75 p=-4.25
+        assert!((p[0] + 4.25).abs() < 1e-6, "p={p:?}");
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // With bias correction the first Adam step ≈ lr·sign(g).
+        let mut opt = Adam::new(LrSchedule::Constant(0.001), 2);
+        let mut p = vec![0.0f32, 0.0];
+        opt.step(&mut p, &[0.5, -3.0]);
+        assert!((p[0] + 0.001).abs() < 1e-5, "{p:?}");
+        assert!((p[1] - 0.001).abs() < 1e-5, "{p:?}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // min ½x² — gradient x; Adam should get close to 0 from 5.
+        let mut opt = Adam::new(LrSchedule::Constant(0.1), 1);
+        let mut p = vec![5.0f32];
+        for _ in 0..500 {
+            let g = p[0];
+            opt.step(&mut p, &[g]);
+        }
+        assert!(p[0].abs() < 0.05, "p={p:?}");
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut opt = Sgd::new(LrSchedule::Constant(0.1));
+        let mut p = vec![5.0f32];
+        for _ in 0..200 {
+            let g = p[0];
+            opt.step(&mut p, &[g]);
+        }
+        assert!(p[0].abs() < 1e-3);
+    }
+
+    #[test]
+    fn workload_mapping() {
+        assert_eq!(for_workload("resnet", 4, 100).name(), "momentum");
+        assert_eq!(for_workload("mnist", 4, 100).name(), "adam");
+        assert_eq!(for_workload("linreg", 4, 100).name(), "sgd");
+    }
+
+    #[test]
+    #[should_panic]
+    fn momentum_dim_mismatch_panics() {
+        let mut opt = Momentum::new(LrSchedule::Constant(0.1), 0.9, 3);
+        let mut p = vec![0.0f32; 2];
+        opt.step(&mut p, &[1.0, 1.0]);
+    }
+}

@@ -1,0 +1,146 @@
+//! Parameter storage: the flattened model state the PS owns.
+//!
+//! Parameters live as one contiguous `Vec<f32>` (the AOT manifest fixes
+//! the tensor order and shapes); per-tensor views are carved out of it by
+//! offset.  The store also owns reusable gradient/aggregation buffers so
+//! the training hot loop performs no allocation.
+
+/// Shape/offset of one tensor inside the flat vector.
+#[derive(Debug, Clone)]
+pub struct TensorLayout {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Flat parameter store with named tensor views.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    data: Vec<f32>,
+    layout: Vec<TensorLayout>,
+}
+
+impl ParamStore {
+    /// Build from (name, shape) pairs, zero-initialized.
+    pub fn new(tensors: &[(String, Vec<usize>)]) -> Self {
+        let mut layout = Vec::with_capacity(tensors.len());
+        let mut offset = 0;
+        for (name, shape) in tensors {
+            let len = shape.iter().product::<usize>().max(1);
+            layout.push(TensorLayout {
+                name: name.clone(),
+                shape: shape.clone(),
+                offset,
+                len,
+            });
+            offset += len;
+        }
+        ParamStore {
+            data: vec![0.0; offset],
+            layout,
+        }
+    }
+
+    /// Load values from a flat f32 blob (the `<model>_init.bin` artifact).
+    pub fn load_flat(&mut self, values: &[f32]) {
+        assert_eq!(
+            values.len(),
+            self.data.len(),
+            "init blob length {} != param total {}",
+            values.len(),
+            self.data.len()
+        );
+        self.data.copy_from_slice(values);
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.layout.len()
+    }
+
+    pub fn layout(&self) -> &[TensorLayout] {
+        &self.layout
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// View of tensor `i` in manifest order.
+    pub fn tensor(&self, i: usize) -> &[f32] {
+        let t = &self.layout[i];
+        &self.data[t.offset..t.offset + t.len]
+    }
+
+    pub fn tensor_by_name(&self, name: &str) -> Option<&[f32]> {
+        let t = self.layout.iter().find(|t| t.name == name)?;
+        Some(&self.data[t.offset..t.offset + t.len])
+    }
+
+    /// L2 norm of the whole parameter vector (divergence monitoring).
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// True if any parameter is NaN/Inf (blow-up detection).
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        ParamStore::new(&[
+            ("w".into(), vec![2, 3]),
+            ("b".into(), vec![3]),
+            ("scalar".into(), vec![]),
+        ])
+    }
+
+    #[test]
+    fn layout_offsets() {
+        let s = store();
+        assert_eq!(s.total_len(), 6 + 3 + 1);
+        assert_eq!(s.num_tensors(), 3);
+        assert_eq!(s.layout()[1].offset, 6);
+        assert_eq!(s.layout()[2].len, 1); // scalar occupies one slot
+    }
+
+    #[test]
+    fn load_and_view() {
+        let mut s = store();
+        let vals: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        s.load_flat(&vals);
+        assert_eq!(s.tensor(0), &vals[0..6]);
+        assert_eq!(s.tensor_by_name("b").unwrap(), &vals[6..9]);
+        assert_eq!(s.tensor_by_name("scalar").unwrap(), &[9.0]);
+        assert!(s.tensor_by_name("nope").is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn load_wrong_length_panics() {
+        store().load_flat(&[0.0; 3]);
+    }
+
+    #[test]
+    fn norm_and_finiteness() {
+        let mut s = ParamStore::new(&[("x".into(), vec![4])]);
+        s.load_flat(&[3.0, 4.0, 0.0, 0.0]);
+        assert!((s.l2_norm() - 5.0).abs() < 1e-9);
+        assert!(!s.has_non_finite());
+        s.flat_mut()[0] = f32::NAN;
+        assert!(s.has_non_finite());
+    }
+}

@@ -1,0 +1,238 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (parameter order/shapes, bucket sets, artifact filenames).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Name + shape of one parameter tensor (manifest order == ABI order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // a scalar still occupies one slot
+    }
+}
+
+/// Everything the runtime needs to know about one model.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub params: Vec<TensorSpec>,
+    pub param_total: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: String,
+    pub y_shape: Vec<usize>,
+    pub y_dtype: String,
+    pub task: String,
+    pub buckets: Vec<usize>,
+    pub train: BTreeMap<usize, String>,
+    pub eval: BTreeMap<usize, String>,
+    pub init: String,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelManifest>,
+    /// K → grad_agg artifact filename.
+    pub agg: BTreeMap<usize, String>,
+    pub agg_chunk: usize,
+}
+
+fn usize_arr(j: &Json, what: &str) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("{what}: expected array"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("{what}: bad int")))
+        .collect()
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("missing string field {key:?}"))
+}
+
+fn bucket_map(j: &Json, what: &str) -> Result<BTreeMap<usize, String>> {
+    let obj = j.as_obj().ok_or_else(|| anyhow!("{what}: expected object"))?;
+    let mut out = BTreeMap::new();
+    for (k, v) in obj {
+        let bucket: usize = k.parse().map_err(|_| anyhow!("{what}: bad bucket key {k:?}"))?;
+        let fname = v
+            .as_str()
+            .ok_or_else(|| anyhow!("{what}: filename must be a string"))?;
+        out.insert(bucket, fname.to_string());
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let version = j.get("version").as_i64().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut models = BTreeMap::new();
+        let models_obj = j
+            .get("models")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest has no models object"))?;
+        for (name, m) in models_obj {
+            let params: Vec<TensorSpec> = m
+                .get("params")
+                .as_arr()
+                .ok_or_else(|| anyhow!("{name}: params must be an array"))?
+                .iter()
+                .map(|p| {
+                    Ok(TensorSpec {
+                        name: str_field(p, "name")?,
+                        shape: usize_arr(p.get("shape"), "param shape")?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let param_total = m
+                .get("param_total")
+                .as_usize()
+                .ok_or_else(|| anyhow!("{name}: missing param_total"))?;
+            let computed: usize = params.iter().map(|p| p.len()).sum();
+            if computed != param_total {
+                bail!("{name}: param_total {param_total} != computed {computed}");
+            }
+            let buckets = usize_arr(m.get("buckets"), "buckets")?;
+            let train = bucket_map(m.get("train"), "train")?;
+            let eval = bucket_map(m.get("eval"), "eval")?;
+            for &b in &buckets {
+                if !train.contains_key(&b) {
+                    bail!("{name}: bucket {b} has no train artifact");
+                }
+            }
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    params,
+                    param_total,
+                    x_shape: usize_arr(m.get("x_shape"), "x_shape")?,
+                    x_dtype: str_field(m, "x_dtype")?,
+                    y_shape: usize_arr(m.get("y_shape"), "y_shape")?,
+                    y_dtype: str_field(m, "y_dtype")?,
+                    task: str_field(m, "task")?,
+                    buckets,
+                    train,
+                    eval,
+                    init: str_field(m, "init")?,
+                },
+            );
+        }
+        let agg = bucket_map(j.get("agg"), "agg").unwrap_or_default();
+        let agg_chunk = j.get("agg_chunk").as_usize().unwrap_or(1 << 20);
+        Ok(Manifest {
+            models,
+            agg,
+            agg_chunk,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "models": {
+            "mlp": {
+                "params": [
+                    {"name": "fc1/w", "shape": [4, 2]},
+                    {"name": "fc1/b", "shape": [2]}
+                ],
+                "param_total": 10,
+                "x_shape": [4], "x_dtype": "f32",
+                "y_shape": [], "y_dtype": "i32",
+                "task": "classification",
+                "buckets": [8, 16],
+                "train": {"8": "mlp_train_b8.hlo.txt", "16": "mlp_train_b16.hlo.txt"},
+                "eval": {"8": "mlp_eval_b8.hlo.txt", "16": "mlp_eval_b16.hlo.txt"},
+                "init": "mlp_init.bin"
+            }
+        },
+        "agg": {"2": "grad_agg_k2.hlo.txt"},
+        "agg_chunk": 1048576
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let mlp = &m.models["mlp"];
+        assert_eq!(mlp.params.len(), 2);
+        assert_eq!(mlp.params[0].len(), 8);
+        assert_eq!(mlp.param_total, 10);
+        assert_eq!(mlp.buckets, vec![8, 16]);
+        assert_eq!(mlp.train[&16], "mlp_train_b16.hlo.txt");
+        assert_eq!(mlp.x_dtype, "f32");
+        assert_eq!(m.agg[&2], "grad_agg_k2.hlo.txt");
+        assert_eq!(m.agg_chunk, 1 << 20);
+    }
+
+    #[test]
+    fn rejects_bad_param_total() {
+        let bad = SAMPLE.replace("\"param_total\": 10", "\"param_total\": 11");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_train_artifact() {
+        let bad = SAMPLE.replace(
+            r#""train": {"8": "mlp_train_b8.hlo.txt", "16": "mlp_train_b16.hlo.txt"}"#,
+            r#""train": {"8": "mlp_train_b8.hlo.txt"}"#,
+        );
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor_len_is_one() {
+        let t = TensorSpec {
+            name: "s".into(),
+            shape: vec![],
+        };
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // Best-effort check against the actual artifacts dir.
+        if let Ok(text) = std::fs::read_to_string(
+            concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"),
+        ) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.models.contains_key("mlp"));
+            assert!(m.models.contains_key("linreg"));
+            for model in m.models.values() {
+                assert!(!model.buckets.is_empty());
+                assert_eq!(
+                    model.param_total,
+                    model.params.iter().map(|p| p.len()).sum::<usize>()
+                );
+            }
+        }
+    }
+}

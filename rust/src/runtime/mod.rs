@@ -1,0 +1,420 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, built
+//! once by `python/compile/aot.py`) and executes them on the hot path.
+//!
+//! Python is never on the request path: the manifest fixes parameter
+//! layouts and bucket sets at build time, and this module compiles each
+//! (model, kind, bucket) HLO once on the PJRT CPU client, caching the
+//! loaded executables.  Batch-size changes rebind a different cached
+//! executable (DESIGN.md §6).
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ModelManifest, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::Batch;
+
+/// Step kind → artifact selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    Train,
+    Eval,
+}
+
+/// Output of a train step: scalar loss + flattened gradients.
+#[derive(Debug, Clone)]
+pub struct TrainOut {
+    pub loss: f32,
+    /// Concatenated gradients in manifest parameter order.
+    pub grads: Vec<f32>,
+}
+
+/// Output of an eval step.
+#[derive(Debug, Clone)]
+pub struct EvalOut {
+    pub loss: f32,
+    /// Accuracy (classification/lm) or MSE (regression).
+    pub metric: f32,
+}
+
+/// The PJRT-backed execution engine.
+pub struct Runtime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: HashMap<(String, StepKind, usize), xla::PjRtLoadedExecutable>,
+    agg_exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (compiles nothing yet).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            dir,
+            client,
+            manifest,
+            exes: HashMap::new(),
+            agg_exes: HashMap::new(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.manifest
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    /// Read a model's initial parameters (`<model>_init.bin`).
+    pub fn init_params(&self, name: &str) -> Result<Vec<f32>> {
+        let m = self.model(name)?;
+        let path = self.dir.join(&m.init);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != 4 * m.param_total {
+            bail!(
+                "init blob {} has {} bytes, expected {}",
+                m.init,
+                bytes.len(),
+                4 * m.param_total
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn compile_file(&self, fname: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(fname);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {fname}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {fname}: {e}"))
+    }
+
+    /// Ensure the executable for (model, kind, bucket) is compiled.
+    pub fn ensure_compiled(
+        &mut self,
+        model: &str,
+        kind: StepKind,
+        bucket: usize,
+    ) -> Result<()> {
+        let key = (model.to_string(), kind, bucket);
+        if self.exes.contains_key(&key) {
+            return Ok(());
+        }
+        let m = self.model(model)?;
+        let table = match kind {
+            StepKind::Train => &m.train,
+            StepKind::Eval => &m.eval,
+        };
+        let fname = table
+            .get(&bucket)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {kind:?} artifact for model {model} bucket {bucket} (buckets: {:?})",
+                    m.buckets
+                )
+            })?
+            .clone();
+        let exe = self.compile_file(&fname)?;
+        self.exes.insert(key, exe);
+        Ok(())
+    }
+
+    /// Pre-compile every bucket of a model (done at startup so bucket
+    /// swaps on the hot path only rebind, never compile).
+    pub fn warmup(&mut self, model: &str, kinds: &[StepKind]) -> Result<()> {
+        let buckets = self.model(model)?.buckets.clone();
+        for &b in &buckets {
+            for &k in kinds {
+                self.ensure_compiled(model, k, b)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables (cache introspection).
+    pub fn compiled_count(&self) -> usize {
+        self.exes.len() + self.agg_exes.len()
+    }
+
+    // ----------------------------------------------------------- marshal
+
+    fn f32_literal(data: &[f32], dims: &[usize]) -> xla::Literal {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        debug_assert_eq!(n, data.len());
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            dims,
+            bytes,
+        )
+        .expect("f32 literal")
+    }
+
+    fn i32_literal(data: &[i32], dims: &[usize]) -> xla::Literal {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            dims,
+            bytes,
+        )
+        .expect("i32 literal")
+    }
+
+    /// Marshal the parameter vector into per-tensor literals.
+    ///
+    /// §Perf iteration 3: the engine prepares these **once per BSP
+    /// round** and shares them across all K workers' train steps —
+    /// params are identical within a round, and re-marshaling them per
+    /// worker costs (K−1) full parameter copies per iteration.
+    pub fn prepare_params(&self, model: &str, params: &[f32]) -> Result<Vec<xla::Literal>> {
+        let m = self.model(model)?;
+        if params.len() != m.param_total {
+            bail!(
+                "param vector len {} != manifest total {}",
+                params.len(),
+                m.param_total
+            );
+        }
+        let mut lits = Vec::with_capacity(m.params.len());
+        let mut off = 0;
+        for spec in &m.params {
+            let len = spec.len();
+            lits.push(Self::f32_literal(&params[off..off + len], &spec.shape));
+            off += len;
+        }
+        Ok(lits)
+    }
+
+    /// Marshal the batch (x, y) literals.
+    fn batch_args(m: &ModelManifest, batch: &Batch) -> Result<Vec<xla::Literal>> {
+        let b = batch.batch_size;
+        let mut args = Vec::with_capacity(2);
+        // x
+        let mut x_dims = vec![b];
+        x_dims.extend(&m.x_shape);
+        match m.x_dtype.as_str() {
+            "f32" => {
+                let want = b * m.x_shape.iter().product::<usize>().max(1);
+                if batch.x_f32.len() != want {
+                    bail!("x_f32 len {} != {}", batch.x_f32.len(), want);
+                }
+                args.push(Self::f32_literal(&batch.x_f32, &x_dims));
+            }
+            "i32" => {
+                args.push(Self::i32_literal(&batch.x_i32, &x_dims));
+            }
+            other => bail!("unsupported x_dtype {other}"),
+        }
+        // y
+        let mut y_dims = vec![b];
+        y_dims.extend(&m.y_shape);
+        match m.y_dtype.as_str() {
+            "f32" => args.push(Self::f32_literal(&batch.y_f32, &y_dims)),
+            "i32" => args.push(Self::i32_literal(&batch.y_i32, &y_dims)),
+            other => bail!("unsupported y_dtype {other}"),
+        }
+        Ok(args)
+    }
+
+    fn execute_refs(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))
+    }
+
+    /// Train step with pre-marshaled parameter literals (shared across
+    /// the round — see [`Runtime::prepare_params`]); gradients are
+    /// written into `grads_out` (no per-call allocation).
+    pub fn train_step_prepared(
+        &mut self,
+        model: &str,
+        bucket: usize,
+        param_lits: &[xla::Literal],
+        batch: &Batch,
+        grads_out: &mut [f32],
+    ) -> Result<f32> {
+        if batch.batch_size != bucket {
+            bail!("batch size {} != bucket {}", batch.batch_size, bucket);
+        }
+        self.ensure_compiled(model, StepKind::Train, bucket)?;
+        let m = self.model(model)?;
+        if param_lits.len() != m.params.len() {
+            bail!("prepared params: {} literals != {} tensors", param_lits.len(), m.params.len());
+        }
+        if grads_out.len() != m.param_total {
+            bail!("grads_out len {} != param total {}", grads_out.len(), m.param_total);
+        }
+        let batch_lits = Self::batch_args(m, batch)?;
+        let lens: Vec<usize> = m.params.iter().map(|s| s.len()).collect();
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(param_lits.len() + 2);
+        refs.extend(param_lits.iter());
+        refs.extend(batch_lits.iter());
+        let exe = &self.exes[&(model.to_string(), StepKind::Train, bucket)];
+        let outs = Self::execute_refs(exe, &refs)?;
+        if outs.len() != lens.len() + 1 {
+            bail!("train step returned {} outputs, expected {}", outs.len(), lens.len() + 1);
+        }
+        let loss: f32 = outs[0]
+            .get_first_element()
+            .map_err(|e| anyhow!("loss readout: {e}"))?;
+        let mut off = 0;
+        for (i, len) in lens.iter().enumerate() {
+            outs[i + 1]
+                .copy_raw_to(&mut grads_out[off..off + len])
+                .map_err(|e| anyhow!("grad {i} readout: {e}"))?;
+            off += len;
+        }
+        Ok(loss)
+    }
+
+    fn execute(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e}"))
+    }
+
+    // -------------------------------------------------------------- steps
+
+    /// Run one training step: returns loss + flat gradients.
+    pub fn train_step(
+        &mut self,
+        model: &str,
+        bucket: usize,
+        params: &[f32],
+        batch: &Batch,
+    ) -> Result<TrainOut> {
+        if batch.batch_size != bucket {
+            bail!("batch size {} != bucket {}", batch.batch_size, bucket);
+        }
+        let param_lits = self.prepare_params(model, params)?;
+        let mut grads = vec![0.0f32; self.model(model)?.param_total];
+        let loss =
+            self.train_step_prepared(model, bucket, &param_lits, batch, &mut grads)?;
+        Ok(TrainOut { loss, grads })
+    }
+
+    /// Run one eval step: loss + task metric.
+    pub fn eval_step(
+        &mut self,
+        model: &str,
+        bucket: usize,
+        params: &[f32],
+        batch: &Batch,
+    ) -> Result<EvalOut> {
+        if batch.batch_size != bucket {
+            bail!("batch size {} != bucket {}", batch.batch_size, bucket);
+        }
+        self.ensure_compiled(model, StepKind::Eval, bucket)?;
+        let param_lits = self.prepare_params(model, params)?;
+        let m = self.model(model)?;
+        let batch_lits = Self::batch_args(m, batch)?;
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(param_lits.len() + 2);
+        refs.extend(param_lits.iter());
+        refs.extend(batch_lits.iter());
+        let exe = &self.exes[&(model.to_string(), StepKind::Eval, bucket)];
+        let outs = Self::execute_refs(exe, &refs)?;
+        if outs.len() != 2 {
+            bail!("eval step returned {} outputs, expected 2", outs.len());
+        }
+        Ok(EvalOut {
+            loss: outs[0].get_first_element().map_err(|e| anyhow!("{e}"))?,
+            metric: outs[1].get_first_element().map_err(|e| anyhow!("{e}"))?,
+        })
+    }
+
+    // ------------------------------------------------ XLA-side aggregation
+
+    /// λ-weighted aggregation through the AOT Pallas kernel
+    /// (`grad_agg_k<K>.hlo.txt`).  The Rust-native path in [`crate::ps`]
+    /// is the production one; this validates the kernel end to end and
+    /// feeds the bench comparison (`benches/agg.rs`).
+    pub fn agg_step(&mut self, lambdas: &[f64], grads: &[&[f32]]) -> Result<Vec<f32>> {
+        let k = lambdas.len();
+        if grads.len() != k {
+            bail!("grads/lambdas length mismatch");
+        }
+        if !self.manifest.agg.contains_key(&k) {
+            bail!(
+                "no grad_agg artifact for K={k} (have {:?})",
+                self.manifest.agg.keys().collect::<Vec<_>>()
+            );
+        }
+        if !self.agg_exes.contains_key(&k) {
+            let fname = self.manifest.agg[&k].clone();
+            let exe = self.compile_file(&fname)?;
+            self.agg_exes.insert(k, exe);
+        }
+        let d = grads[0].len();
+        for g in grads {
+            if g.len() != d {
+                bail!("ragged gradient lengths");
+            }
+        }
+        let chunk = self.manifest.agg_chunk;
+        let lam_f32: Vec<f32> = lambdas.iter().map(|&l| l as f32).collect();
+        let exe = &self.agg_exes[&k];
+        let mut out = vec![0.0f32; d];
+        let mut stacked = vec![0.0f32; k * chunk];
+        let mut off = 0;
+        while off < d {
+            let len = chunk.min(d - off);
+            // Stack the K chunk slices (zero-pad the tail).
+            for (w, g) in grads.iter().enumerate() {
+                stacked[w * chunk..w * chunk + len]
+                    .copy_from_slice(&g[off..off + len]);
+                stacked[w * chunk + len..(w + 1) * chunk].fill(0.0);
+            }
+            let lam_lit = Self::f32_literal(&lam_f32, &[k]);
+            let g_lit = Self::f32_literal(&stacked, &[k, chunk]);
+            let outs = Self::execute(exe, &[lam_lit, g_lit])?;
+            let mut chunk_out = vec![0.0f32; chunk];
+            outs[0]
+                .copy_raw_to(&mut chunk_out)
+                .map_err(|e| anyhow!("agg readout: {e}"))?;
+            out[off..off + len].copy_from_slice(&chunk_out[..len]);
+            off += len;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime correctness lives in rust/tests/runtime_integration.rs —
+    // it needs built artifacts, which unit tests must not assume.
+}

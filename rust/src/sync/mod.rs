@@ -1,0 +1,207 @@
+//! Synchronization semantics: BSP, ASP, and SSP (bounded staleness).
+//!
+//! The paper evaluates dynamic batching primarily under BSP (where
+//! stragglers directly inflate iteration time) and argues it also
+//! ameliorates ASP staleness (§III-B).  SSP is included as the natural
+//! extension discussed in related work (Ho et al. '13).
+//!
+//! These types provide the *accounting*: given per-worker progress, who
+//! may proceed, what the staleness of an update is, and how much
+//! statistical efficiency a stale update retains.  The simulator and the
+//! real-execution engine both drive them.
+
+/// Synchronization mode of a training run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Bulk Synchronous Parallel: a barrier every iteration.
+    Bsp,
+    /// Asynchronous Parallel: no barrier; updates applied as they arrive.
+    Asp,
+    /// Stale Synchronous Parallel: fastest may lead slowest by ≤ bound.
+    Ssp { bound: u64 },
+}
+
+impl SyncMode {
+    pub fn parse(s: &str) -> Option<SyncMode> {
+        match s {
+            "bsp" => Some(SyncMode::Bsp),
+            "asp" => Some(SyncMode::Asp),
+            _ => s
+                .strip_prefix("ssp:")
+                .and_then(|b| b.parse().ok())
+                .map(|bound| SyncMode::Ssp { bound }),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SyncMode::Bsp => "bsp".into(),
+            SyncMode::Asp => "asp".into(),
+            SyncMode::Ssp { bound } => format!("ssp:{bound}"),
+        }
+    }
+}
+
+/// Tracks per-worker clock (completed iterations) and enforces the gate.
+#[derive(Debug, Clone)]
+pub struct SyncState {
+    mode: SyncMode,
+    clocks: Vec<u64>,
+    /// Global model version (number of applied updates).
+    version: u64,
+    /// Model version each worker last pulled.
+    pulled: Vec<u64>,
+}
+
+impl SyncState {
+    pub fn new(mode: SyncMode, k: usize) -> Self {
+        SyncState {
+            mode,
+            clocks: vec![0; k],
+            version: 0,
+            pulled: vec![0; k],
+        }
+    }
+
+    pub fn mode(&self) -> SyncMode {
+        self.mode
+    }
+
+    pub fn clock(&self, worker: usize) -> u64 {
+        self.clocks[worker]
+    }
+
+    pub fn min_clock(&self) -> u64 {
+        *self.clocks.iter().min().unwrap()
+    }
+
+    pub fn max_clock(&self) -> u64 {
+        *self.clocks.iter().max().unwrap()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// May `worker` start its next iteration?
+    ///
+    /// BSP: only if nobody is behind it (it will then wait at the barrier
+    /// anyway — the engine models waiting; here we gate at one-iteration
+    /// lockstep).  ASP: always.  SSP: if it leads the slowest by < bound.
+    pub fn may_proceed(&self, worker: usize) -> bool {
+        match self.mode {
+            SyncMode::Bsp => self.clocks[worker] == self.min_clock(),
+            SyncMode::Asp => true,
+            SyncMode::Ssp { bound } => {
+                self.clocks[worker] < self.min_clock() + bound + 1
+            }
+        }
+    }
+
+    /// Record that `worker` pulled the current model (starts an iteration).
+    pub fn pull(&mut self, worker: usize) {
+        self.pulled[worker] = self.version;
+    }
+
+    /// Record a completed iteration; returns the *staleness* of the
+    /// worker's update: how many global updates landed since it pulled.
+    pub fn push_update(&mut self, worker: usize) -> u64 {
+        let staleness = self.version - self.pulled[worker];
+        self.clocks[worker] += 1;
+        self.version += 1;
+        staleness
+    }
+
+    /// BSP full-barrier check: all workers at the same clock.
+    pub fn at_barrier(&self) -> bool {
+        self.min_clock() == self.max_clock()
+    }
+}
+
+/// Statistical-efficiency discount of a stale gradient.
+///
+/// The paper (§III-B) notes the staleness→slowdown relation is "not as
+/// simple to model as the effect of stragglers on BSP, and is not
+/// necessarily linear"; following the bounded-delay analyses it cites
+/// ([18], [19]), we use a hyperbolic discount: a gradient with staleness
+/// s contributes ≈ 1/(1+γ·s) of a fresh gradient's progress.
+pub fn staleness_discount(staleness: u64, gamma: f64) -> f64 {
+    1.0 / (1.0 + gamma * staleness as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_modes() {
+        assert_eq!(SyncMode::parse("bsp"), Some(SyncMode::Bsp));
+        assert_eq!(SyncMode::parse("asp"), Some(SyncMode::Asp));
+        assert_eq!(SyncMode::parse("ssp:3"), Some(SyncMode::Ssp { bound: 3 }));
+        assert_eq!(SyncMode::parse("nope"), None);
+        assert_eq!(SyncMode::Ssp { bound: 2 }.label(), "ssp:2");
+    }
+
+    #[test]
+    fn bsp_lockstep() {
+        let mut s = SyncState::new(SyncMode::Bsp, 3);
+        assert!(s.may_proceed(0) && s.may_proceed(1) && s.may_proceed(2));
+        s.pull(0);
+        s.push_update(0);
+        // Worker 0 finished iter 0; it may not start iter 1 until others do.
+        assert!(!s.may_proceed(0));
+        assert!(s.may_proceed(1) && s.may_proceed(2));
+        s.pull(1);
+        s.push_update(1);
+        s.pull(2);
+        s.push_update(2);
+        assert!(s.at_barrier());
+        assert!(s.may_proceed(0));
+    }
+
+    #[test]
+    fn asp_never_blocks_and_counts_staleness() {
+        let mut s = SyncState::new(SyncMode::Asp, 2);
+        s.pull(0);
+        s.pull(1);
+        assert_eq!(s.push_update(0), 0); // fresh
+        assert!(s.may_proceed(1));
+        // Worker 1 pulled before worker 0's update landed ⇒ staleness 1.
+        assert_eq!(s.push_update(1), 1);
+        // Fast worker loops 3 more times while 1 idles.
+        for _ in 0..3 {
+            s.pull(0);
+            assert_eq!(s.push_update(0), 0);
+        }
+        s.pull(1);
+        // No updates landed since pull ⇒ staleness 0 again.
+        assert_eq!(s.push_update(1), 0);
+        assert!(s.may_proceed(0));
+    }
+
+    #[test]
+    fn ssp_bounds_lead() {
+        let mut s = SyncState::new(SyncMode::Ssp { bound: 2 }, 2);
+        // Worker 0 races ahead.
+        for i in 0..3 {
+            assert!(s.may_proceed(0), "iter {i}");
+            s.pull(0);
+            s.push_update(0);
+        }
+        // clock0=3, clock1=0, bound=2 ⇒ blocked now.
+        assert!(!s.may_proceed(0));
+        assert!(s.may_proceed(1));
+        s.pull(1);
+        s.push_update(1);
+        assert!(s.may_proceed(0));
+    }
+
+    #[test]
+    fn discount_shape() {
+        assert_eq!(staleness_discount(0, 0.5), 1.0);
+        assert!((staleness_discount(1, 0.5) - 1.0 / 1.5).abs() < 1e-12);
+        assert!(staleness_discount(10, 0.5) < staleness_discount(2, 0.5));
+        // γ=0 disables the penalty.
+        assert_eq!(staleness_discount(100, 0.0), 1.0);
+    }
+}

@@ -1,0 +1,295 @@
+//! Time-varying resource availability traces.
+//!
+//! The paper's *dynamic* heterogeneity scenarios — performance
+//! interference from colocated applications, provider over-commitment,
+//! and transient-VM preemptions (EC2 spot / GCP preemptible) — are
+//! modeled as a per-worker capacity multiplier over time.  The dynamic
+//! batching controller never sees these traces; it only observes their
+//! effect on iteration times, exactly as the paper's system does.
+
+use crate::util::rng::Rng;
+
+/// A step function: capacity multiplier in (0, 1] over time (seconds).
+/// Segments are half-open `[start, next_start)`; the last extends to ∞.
+#[derive(Debug, Clone)]
+pub struct AvailTrace {
+    /// (start_time, multiplier), sorted by start_time; first at t=0.
+    segments: Vec<(f64, f64)>,
+}
+
+impl AvailTrace {
+    /// Constant full availability.
+    pub fn constant() -> Self {
+        AvailTrace {
+            segments: vec![(0.0, 1.0)],
+        }
+    }
+
+    /// Build from explicit (start, multiplier) segments.
+    pub fn from_segments(segments: Vec<(f64, f64)>) -> Self {
+        assert!(!segments.is_empty(), "empty trace");
+        assert_eq!(segments[0].0, 0.0, "first segment must start at t=0");
+        for w in segments.windows(2) {
+            assert!(w[0].0 < w[1].0, "segments must be strictly ordered");
+        }
+        for &(_, m) in &segments {
+            assert!(m > 0.0 && m <= 1.0, "multiplier out of (0,1]: {m}");
+        }
+        AvailTrace { segments }
+    }
+
+    /// Capacity multiplier at time `t`.
+    pub fn at(&self, t: f64) -> f64 {
+        match self
+            .segments
+            .binary_search_by(|&(s, _)| s.partial_cmp(&t).unwrap())
+        {
+            Ok(i) => self.segments[i].1,
+            Err(0) => self.segments[0].1, // t before 0: clamp
+            Err(i) => self.segments[i - 1].1,
+        }
+    }
+
+    pub fn segments(&self) -> &[(f64, f64)] {
+        &self.segments
+    }
+
+    /// Interference trace: an on/off process. Bursts arrive Poisson with
+    /// `mean_gap_s` between them, last Exp(`mean_len_s`), and squeeze the
+    /// worker to `depth` (e.g. 0.5 = half capacity).
+    pub fn interference(
+        horizon_s: f64,
+        mean_gap_s: f64,
+        mean_len_s: f64,
+        depth: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(depth > 0.0 && depth <= 1.0);
+        let mut segments = vec![(0.0, 1.0)];
+        let mut t = rng.exp(1.0 / mean_gap_s);
+        while t < horizon_s {
+            let len = rng.exp(1.0 / mean_len_s).max(1.0);
+            segments.push((t, depth));
+            segments.push((t + len, 1.0));
+            t += len + rng.exp(1.0 / mean_gap_s).max(1.0);
+        }
+        AvailTrace::from_segments(segments)
+    }
+
+    /// Over-commitment trace: capacity steps between levels at Poisson
+    /// epochs — the provider packs more tenants on the host for a while.
+    pub fn overcommit(
+        horizon_s: f64,
+        mean_epoch_s: f64,
+        levels: &[f64],
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(!levels.is_empty());
+        let mut segments = vec![(0.0, 1.0)];
+        let mut t = rng.exp(1.0 / mean_epoch_s);
+        while t < horizon_s {
+            segments.push((t, *rng.choice(levels)));
+            t += rng.exp(1.0 / mean_epoch_s).max(1.0);
+        }
+        AvailTrace::from_segments(segments)
+    }
+
+    /// Spot/preemptible trace: the worker is fully available until a
+    /// preemption arrives (Exp with `mttf_s`), stays down for
+    /// `down_s` (re-provisioning), then returns. "Down" is modeled as
+    /// a very small multiplier so iteration times blow up rather than
+    /// divide by zero — the sync engine treats ≤`DOWN_EPS` as absent.
+    pub fn spot(horizon_s: f64, mttf_s: f64, down_s: f64, rng: &mut Rng) -> Self {
+        let mut segments = vec![(0.0, 1.0)];
+        let mut t = rng.exp(1.0 / mttf_s);
+        while t < horizon_s {
+            segments.push((t, DOWN_EPS));
+            segments.push((t + down_s, 1.0));
+            t += down_s + rng.exp(1.0 / mttf_s);
+        }
+        AvailTrace::from_segments(segments)
+    }
+
+    /// True if the worker is preempted (down) at `t`.
+    pub fn is_down(&self, t: f64) -> bool {
+        self.at(t) <= DOWN_EPS
+    }
+
+    /// Wall-clock time to complete `work` seconds of full-capacity compute
+    /// starting at `t0`, integrating capacity over the trace segments —
+    /// so a 2-minute preemption costs ~2 minutes, not
+    /// work/DOWN_EPS (availability changes mid-iteration are honored).
+    pub fn time_to_complete(&self, t0: f64, work: f64) -> f64 {
+        assert!(work >= 0.0 && t0 >= 0.0);
+        let mut remaining = work;
+        let mut t = t0;
+        // Find the segment containing t0.
+        let mut idx = match self
+            .segments
+            .binary_search_by(|&(s, _)| s.partial_cmp(&t0).unwrap())
+        {
+            Ok(i) => i,
+            Err(0) => 0,
+            Err(i) => i - 1,
+        };
+        loop {
+            let cap = self.segments[idx].1;
+            let seg_end = self
+                .segments
+                .get(idx + 1)
+                .map(|&(s, _)| s)
+                .unwrap_or(f64::INFINITY);
+            let width = seg_end - t;
+            let doable = cap * width;
+            if doable >= remaining {
+                return (t + remaining / cap) - t0;
+            }
+            remaining -= doable;
+            t = seg_end;
+            idx += 1;
+        }
+    }
+}
+
+/// Capacity multiplier that stands for "preempted".
+pub const DOWN_EPS: f64 = 1e-3;
+
+/// Per-worker trace set for a cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterTraces {
+    pub traces: Vec<AvailTrace>,
+}
+
+impl ClusterTraces {
+    pub fn constant(k: usize) -> Self {
+        ClusterTraces {
+            traces: vec![AvailTrace::constant(); k],
+        }
+    }
+
+    pub fn at(&self, worker: usize, t: f64) -> f64 {
+        self.traces[worker].at(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one_everywhere() {
+        let tr = AvailTrace::constant();
+        assert_eq!(tr.at(0.0), 1.0);
+        assert_eq!(tr.at(1e9), 1.0);
+    }
+
+    #[test]
+    fn step_lookup() {
+        let tr = AvailTrace::from_segments(vec![(0.0, 1.0), (10.0, 0.5), (20.0, 0.8)]);
+        assert_eq!(tr.at(0.0), 1.0);
+        assert_eq!(tr.at(9.999), 1.0);
+        assert_eq!(tr.at(10.0), 0.5);
+        assert_eq!(tr.at(15.0), 0.5);
+        assert_eq!(tr.at(20.0), 0.8);
+        assert_eq!(tr.at(1e6), 0.8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unsorted() {
+        AvailTrace::from_segments(vec![(0.0, 1.0), (5.0, 0.5), (3.0, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_multiplier() {
+        AvailTrace::from_segments(vec![(0.0, 0.0)]);
+    }
+
+    #[test]
+    fn interference_dips_and_recovers() {
+        let mut rng = Rng::new(42);
+        let tr = AvailTrace::interference(10_000.0, 300.0, 100.0, 0.4, &mut rng);
+        let mut saw_dip = false;
+        let mut saw_full = false;
+        for i in 0..10_000 {
+            let v = tr.at(i as f64);
+            if (v - 0.4).abs() < 1e-9 {
+                saw_dip = true;
+            }
+            if (v - 1.0).abs() < 1e-9 {
+                saw_full = true;
+            }
+            assert!(v == 0.4 || v == 1.0);
+        }
+        assert!(saw_dip && saw_full);
+    }
+
+    #[test]
+    fn interference_duty_cycle_roughly_matches() {
+        let mut rng = Rng::new(7);
+        let tr = AvailTrace::interference(200_000.0, 300.0, 100.0, 0.5, &mut rng);
+        let dipped = (0..200_000)
+            .filter(|&i| tr.at(i as f64) < 1.0)
+            .count() as f64
+            / 200_000.0;
+        // Expected duty ≈ 100/(300+100) = 0.25.
+        assert!((dipped - 0.25).abs() < 0.08, "duty={dipped}");
+    }
+
+    #[test]
+    fn spot_has_down_periods_of_right_length() {
+        let mut rng = Rng::new(3);
+        let tr = AvailTrace::spot(100_000.0, 5_000.0, 120.0, &mut rng);
+        let down: f64 = (0..100_000).filter(|&i| tr.is_down(i as f64)).count() as f64;
+        assert!(down > 0.0, "no preemptions in 100k s at mttf 5k");
+        // Each preemption is 120 s; with ~20 expected events, total down
+        // time should be in the low thousands of seconds.
+        assert!(down < 10_000.0, "down={down}");
+    }
+
+    #[test]
+    fn overcommit_uses_given_levels() {
+        let mut rng = Rng::new(11);
+        let tr = AvailTrace::overcommit(50_000.0, 1_000.0, &[0.6, 0.8], &mut rng);
+        for i in 0..50_000 {
+            let v = tr.at(i as f64);
+            assert!(v == 1.0 || v == 0.6 || v == 0.8, "v={v}");
+        }
+    }
+
+    #[test]
+    fn time_to_complete_full_capacity() {
+        let tr = AvailTrace::constant();
+        assert!((tr.time_to_complete(5.0, 3.0) - 3.0).abs() < 1e-12);
+        assert_eq!(tr.time_to_complete(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn time_to_complete_integrates_across_segments() {
+        // Half capacity in [10, 20): 4s of work starting at t=8 does
+        // 2 work-sec by t=10, then needs 2/0.5 = 4s more -> total 6s.
+        let tr = AvailTrace::from_segments(vec![(0.0, 1.0), (10.0, 0.5), (20.0, 1.0)]);
+        assert!((tr.time_to_complete(8.0, 4.0) - 6.0).abs() < 1e-12);
+        // Starting inside the slow segment.
+        assert!((tr.time_to_complete(10.0, 2.0) - 4.0).abs() < 1e-12);
+        // Work spanning recovery: start t=18, work 3: 1 work-sec by 20
+        // (2s), then 2s at full -> 4s.
+        assert!((tr.time_to_complete(18.0, 3.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_to_complete_preemption_costs_downtime_not_division() {
+        // 120s preemption at t=100; 3s of work starting at t=99 costs
+        // ~1s before + ~120s down (doing ~0.12 work-sec) + remainder.
+        let tr = AvailTrace::from_segments(vec![(0.0, 1.0), (100.0, DOWN_EPS), (220.0, 1.0)]);
+        let dt = tr.time_to_complete(99.0, 3.0);
+        assert!(dt > 120.0 && dt < 125.0, "dt={dt}");
+    }
+
+    #[test]
+    fn cluster_traces_indexing() {
+        let ct = ClusterTraces::constant(3);
+        assert_eq!(ct.at(2, 100.0), 1.0);
+    }
+}

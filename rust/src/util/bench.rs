@@ -1,0 +1,166 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! Usage inside a `[[bench]]` target with `harness = false`:
+//! ```ignore
+//! let mut b = Bench::new("agg_throughput");
+//! b.run("fused_4x1M", || ps::aggregate(...));
+//! b.report();
+//! ```
+//! Measures wall time with warmup, auto-scales iteration counts toward a
+//! target measurement window, and reports mean / p50 / p95 / throughput.
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+/// Bench group: run closures, collect measurements, print a table.
+pub struct Bench {
+    group: String,
+    target: Duration,
+    samples: usize,
+    results: Vec<Measurement>,
+    quick: bool,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // HBATCH_BENCH_QUICK=1 shrinks windows for CI-style smoke runs.
+        let quick = std::env::var("HBATCH_BENCH_QUICK").is_ok();
+        Bench {
+            group: group.to_string(),
+            target: if quick {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(400)
+            },
+            samples: if quick { 8 } else { 20 },
+            results: Vec::new(),
+            quick,
+        }
+    }
+
+    pub fn with_target(mut self, target: Duration) -> Self {
+        if !self.quick {
+            self.target = target;
+        }
+        self
+    }
+
+    /// Measure `f`, which should return something to defeat DCE.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup + calibration: find iters/sample so one sample ≈ target/samples.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let per_sample = (self.target / self.samples as u32).max(Duration::from_micros(20));
+        let iters = (per_sample.as_nanos() / once.as_nanos()).clamp(1, 1_000_000) as u64;
+
+        let mut sample_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            sample_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
+        let m = Measurement {
+            name: format!("{}/{}", self.group, name),
+            iters: iters * self.samples as u64,
+            mean_ns: mean,
+            p50_ns: sample_ns[sample_ns.len() / 2],
+            p95_ns: sample_ns
+                [((sample_ns.len() as f64 * 0.95) as usize).min(sample_ns.len() - 1)],
+            min_ns: sample_ns[0],
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Print the criterion-style report table.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>10}",
+            "name", "mean", "p50", "p95", "iters"
+        );
+        for m in &self.results {
+            println!(
+                "{:<44} {:>12} {:>12} {:>12} {:>10}",
+                m.name,
+                fmt_ns(m.mean_ns),
+                fmt_ns(m.p50_ns),
+                fmt_ns(m.p95_ns),
+                m.iters
+            );
+        }
+    }
+}
+
+/// Human-format nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        std::env::set_var("HBATCH_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        let m = b
+            .run("sum1k", || (0..1000u64).sum::<u64>())
+            .clone();
+        assert!(m.mean_ns > 0.0);
+        assert!(m.p50_ns <= m.p95_ns * 1.001);
+        assert!(m.min_ns <= m.mean_ns * 1.001);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn ordering_detects_obvious_costs() {
+        std::env::set_var("HBATCH_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        let small = b.run("small", || (0..100u64).sum::<u64>()).mean_ns;
+        let big = b.run("big", || (0..100_000u64).sum::<u64>()).mean_ns;
+        assert!(big > small * 5.0, "big={big} small={small}");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+}

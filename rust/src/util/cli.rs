@@ -1,0 +1,234 @@
+//! Tiny declarative CLI parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positionals,
+//! and generates a usage string.  Typed getters parse on access with
+//! defaults, so command code stays one-liner-per-option.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    cmd: String,
+    about: String,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(cmd: &str, about: &str) -> Self {
+        Args {
+            cmd: cmd.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare an option with a default (shown in --help).
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse raw args (no argv[0]). Unknown `--options` are errors.
+    pub fn parse(mut self, raw: &[String]) -> Result<Args, String> {
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", self.usage()))?
+                    .clone();
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} takes no value"));
+                    }
+                    self.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    self.values.insert(key, val);
+                }
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.cmd, self.about);
+        let _ = writeln!(s, "options:");
+        for spec in &self.specs {
+            let d = match (&spec.default, spec.is_flag) {
+                (_, true) => "(flag)".to_string(),
+                (Some(d), _) => format!("[default: {d}]"),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  --{:<18} {} {}", spec.name, spec.help, d);
+        }
+        s
+    }
+
+    fn lookup(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} was never declared"))
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        self.lookup(name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.lookup(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.lookup(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.lookup(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list of usize, e.g. `--cores 3,5,12`.
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        let raw = self.lookup(name);
+        if raw.is_empty() {
+            return vec![];
+        }
+        raw.split(',')
+            .map(|p| {
+                p.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{name}: bad int {p:?}"))
+            })
+            .collect()
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn base() -> Args {
+        Args::new("test", "test command")
+            .opt("steps", "100", "number of steps")
+            .opt("lr", "0.1", "learning rate")
+            .opt("cores", "3,5,12", "worker cores")
+            .flag("verbose", "log more")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = base().parse(&raw(&[])).unwrap();
+        assert_eq!(a.get_usize("steps"), 100);
+        assert_eq!(a.get_f64("lr"), 0.1);
+        assert!(!a.get_flag("verbose"));
+        assert_eq!(a.get_usize_list("cores"), vec![3, 5, 12]);
+    }
+
+    #[test]
+    fn overrides_and_forms() {
+        let a = base()
+            .parse(&raw(&["--steps", "7", "--lr=0.5", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps"), 7);
+        assert_eq!(a.get_f64("lr"), 0.5);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positionals(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(base().parse(&raw(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(base().parse(&raw(&["--steps"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = base().parse(&raw(&["--help"])).unwrap_err();
+        assert!(err.contains("--steps"));
+        assert!(err.contains("default: 100"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn undeclared_get_panics() {
+        base().parse(&raw(&[])).unwrap().get("never");
+    }
+}

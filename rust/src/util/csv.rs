@@ -1,0 +1,115 @@
+//! CSV writer for figure outputs (each figure harness dumps the series it
+//! prints, so plots can be regenerated outside this repo).
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// In-memory CSV table with RFC-4180 quoting.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: row of display-ables.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, &self.header);
+        for r in &self.rows {
+            write_record(&mut out, r);
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_string())
+    }
+}
+
+fn write_record(out: &mut String, cells: &[String]) {
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if c.contains(',') || c.contains('"') || c.contains('\n') {
+            let _ = write!(out, "\"{}\"", c.replace('"', "\"\""));
+        } else {
+            out.push_str(c);
+        }
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_table() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.rowf(&[&3.5, &"x"]);
+        assert_eq!(t.to_string(), "a,b\n1,2\n3.5,x\n");
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn quoting() {
+        let mut t = Table::new(&["v"]);
+        t.row(&["has,comma".into()]);
+        t.row(&["has\"quote".into()]);
+        assert_eq!(t.to_string(), "v\n\"has,comma\"\n\"has\"\"quote\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn save_creates_dirs() {
+        let dir = std::env::temp_dir().join("hbatch_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut t = Table::new(&["x"]);
+        t.row(&["1".into()]);
+        let path = dir.join("nested/out.csv");
+        t.save(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "x\n1\n");
+    }
+}

@@ -1,0 +1,15 @@
+//! Std-only substrates.
+//!
+//! This build runs fully offline with only `xla` + `anyhow` available, so
+//! the usual ecosystem crates are reimplemented here at the size this
+//! project needs: [`json`] (serde_json), [`rng`] (rand), [`cli`] (clap),
+//! [`stats`] (streaming statistics), [`bench`] (criterion),
+//! [`proptest`] (property testing), [`csv`] (csv writer).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,246 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over N randomized cases drawn from a
+//! generator; on failure it greedily shrinks the failing case via the
+//! strategy's `shrink` and reports the minimal reproduction with its seed.
+//!
+//! ```ignore
+//! proptest::check("conservation", 200, gen_cluster, |c| controller_conserves(c));
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A generation + shrinking strategy for `T`.
+pub trait Strategy<T> {
+    fn generate(&self, rng: &mut Rng) -> T;
+    /// Candidate simplifications of a failing value (may be empty).
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Functional strategy from a closure (no shrinking).
+pub struct FnStrategy<F>(pub F);
+
+impl<T, F: Fn(&mut Rng) -> T> Strategy<T> for FnStrategy<F> {
+    fn generate(&self, rng: &mut Rng) -> T {
+        (self.0)(rng)
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Ok { cases: usize },
+    Failed { seed: u64, case: T, shrinks: usize },
+}
+
+/// Run `prop` over `cases` random inputs; panics with the (shrunk) failing
+/// case. Seed comes from `HBATCH_PROPTEST_SEED` or a fixed default so CI
+/// is deterministic.
+pub fn check<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cases: usize,
+    strategy: impl Strategy<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let seed = std::env::var("HBATCH_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    match check_seeded(seed, cases, &strategy, &prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed {
+            seed,
+            case,
+            shrinks,
+        } => panic!(
+            "property '{name}' failed (seed={seed}, after {shrinks} shrinks):\n{case:#?}"
+        ),
+    }
+}
+
+/// Like [`check`] but returns the result instead of panicking.
+pub fn check_seeded<T: std::fmt::Debug + Clone>(
+    seed: u64,
+    cases: usize,
+    strategy: &impl Strategy<T>,
+    prop: &impl Fn(&T) -> bool,
+) -> PropResult<T> {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let case = strategy.generate(&mut rng);
+        if !prop(&case) {
+            let (min_case, shrinks) = shrink_loop(strategy, prop, case);
+            return PropResult::Failed {
+                seed: seed.wrapping_add(i as u64),
+                case: min_case,
+                shrinks,
+            };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+fn shrink_loop<T: Clone>(
+    strategy: &impl Strategy<T>,
+    prop: &impl Fn(&T) -> bool,
+    mut failing: T,
+) -> (T, usize) {
+    let mut shrinks = 0;
+    // Bounded greedy descent: take the first still-failing simplification.
+    'outer: for _ in 0..1000 {
+        for cand in strategy.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                shrinks += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (failing, shrinks)
+}
+
+// ---------------------------------------------------------------- common
+// strategies
+
+/// usize in [lo, hi], shrinking toward lo.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Strategy<usize> for UsizeRange {
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range_usize(self.0, self.1 + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f64 in [lo, hi], shrinking toward lo.
+pub struct F64Range(pub f64, pub f64);
+
+impl Strategy<f64> for F64Range {
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range_f64(self.0, self.1)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if *v > self.0 {
+            vec![self.0, self.0 + (*v - self.0) / 2.0]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vec<T> with length in [min_len, max_len]; shrinks by halving length
+/// then element-wise shrinking.
+pub struct VecOf<S> {
+    pub elem: S,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<T: Clone, S: Strategy<T>> Strategy<Vec<T>> for VecOf<S> {
+    fn generate(&self, rng: &mut Rng) -> Vec<T> {
+        let n = rng.range_usize(self.min_len, self.max_len + 1);
+        (0..n).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..self.min_len.max(v.len() / 2)].to_vec());
+            let mut minus_one = v.clone();
+            minus_one.pop();
+            out.push(minus_one);
+        }
+        // Shrink one element at a time (first shrinkable element only, to
+        // bound the candidate count).
+        for (i, e) in v.iter().enumerate() {
+            let cands = self.elem.shrink(e);
+            if !cands.is_empty() {
+                for c in cands {
+                    let mut copy = v.clone();
+                    copy[i] = c;
+                    out.push(copy);
+                }
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_ok() {
+        let r = check_seeded(1, 500, &UsizeRange(1, 100), &|&x| x >= 1 && x <= 100);
+        assert!(matches!(r, PropResult::Ok { cases: 500 }));
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        // Property "x < 17" fails for x >= 17; minimal failing case is 17.
+        let r = check_seeded(1, 500, &UsizeRange(0, 1000), &|&x| x < 17);
+        match r {
+            PropResult::Failed { case, .. } => assert_eq!(case, 17),
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn vec_strategy_respects_bounds_and_shrinks() {
+        let strat = VecOf {
+            elem: UsizeRange(0, 9),
+            min_len: 2,
+            max_len: 6,
+        };
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            let v = strat.generate(&mut rng);
+            assert!((2..=6).contains(&v.len()));
+            assert!(v.iter().all(|&x| x <= 9));
+        }
+        // Property: "sum < 20". Shrinker should find a small failing vec.
+        let r = check_seeded(3, 500, &strat, &|v: &Vec<usize>| {
+            v.iter().sum::<usize>() < 20
+        });
+        match r {
+            PropResult::Failed { case, .. } => {
+                assert!(case.iter().sum::<usize>() >= 20);
+                assert!(case.len() <= 4, "shrunk case still long: {case:?}");
+            }
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_panics_with_context() {
+        check("always-false", 10, UsizeRange(0, 10), |_| false);
+    }
+
+    #[test]
+    fn f64_range_generates_in_bounds() {
+        let mut rng = Rng::new(5);
+        let s = F64Range(0.5, 2.0);
+        for _ in 0..1000 {
+            let x = s.generate(&mut rng);
+            assert!((0.5..2.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Streaming statistics: EWMA (the controller's "integrator" component,
+//! paper §III-C), Welford mean/variance, histograms and percentiles.
+
+/// Exponentially weighted moving average.
+///
+/// The paper smooths per-worker iteration times with an EWMA computed over
+/// all iterations since the previous batch readjustment; `reset()` is
+/// called at each readjustment so outliers inside one control interval
+/// cannot trigger spurious updates.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+    count: usize,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "alpha must be in [0,1]");
+        Ewma {
+            alpha,
+            value: None,
+            count: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        self.count += 1;
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+        self.count = 0;
+    }
+}
+
+/// Welford online mean/variance.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Coefficient of variation (std/mean) — used to quantify how well
+    /// variable batching equalized iteration times (paper Fig. 3).
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std() / self.mean
+        }
+    }
+}
+
+/// Fixed-width histogram over [lo, hi); out-of-range values clamp into the
+/// edge bins. Used for the Fig. 3 iteration-time frequency distributions.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    n: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            n: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let idx = ((x - self.lo) / w).floor() as i64;
+        let idx = idx.clamp(0, self.bins.len() as i64 - 1) as usize;
+        self.bins[idx] += 1;
+        self.n += 1;
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// (bin_center, relative frequency) pairs.
+    pub fn freqs(&self) -> Vec<(f64, f64)> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                (
+                    self.lo + w * (i as f64 + 0.5),
+                    if self.n == 0 { 0.0 } else { c as f64 / self.n as f64 },
+                )
+            })
+            .collect()
+    }
+}
+
+/// Percentile of a sample (linear interpolation, q in [0,1]).
+pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
+    assert!(!samples.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (samples.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        samples[lo]
+    } else {
+        let frac = pos - lo as f64;
+        samples[lo] * (1.0 - frac) + samples[hi] * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_first_value_passthrough() {
+        let mut e = Ewma::new(0.3);
+        assert_eq!(e.get(), None);
+        assert_eq!(e.push(10.0), 10.0);
+        assert!((e.push(20.0) - 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant() {
+        let mut e = Ewma::new(0.2);
+        for _ in 0..200 {
+            e.push(5.0);
+        }
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_reset() {
+        let mut e = Ewma::new(0.5);
+        e.push(100.0);
+        e.reset();
+        assert_eq!(e.get(), None);
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.push(1.0), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ewma_rejects_bad_alpha() {
+        Ewma::new(1.5);
+    }
+
+    #[test]
+    fn running_matches_closed_form() {
+        let mut r = Running::new();
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        for &x in &xs {
+            r.push(x);
+        }
+        assert_eq!(r.n(), 8);
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+        assert!((r.cv() - r.std() / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamping() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 1.6, 9.9, -5.0, 25.0] {
+            h.push(x);
+        }
+        assert_eq!(h.bins()[0], 2); // 0.5 and clamped -5
+        assert_eq!(h.bins()[1], 2);
+        assert_eq!(h.bins()[9], 2); // 9.9 and clamped 25
+        assert_eq!(h.n(), 6);
+        let f = h.freqs();
+        assert!((f[0].0 - 0.5).abs() < 1e-12);
+        assert!((f.iter().map(|&(_, p)| p).sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&mut v, 0.0), 1.0);
+        assert_eq!(percentile(&mut v, 1.0), 4.0);
+        assert!((percentile(&mut v, 0.5) - 2.5).abs() < 1e-12);
+        let mut one = vec![7.0];
+        assert_eq!(percentile(&mut one, 0.9), 7.0);
+    }
+}

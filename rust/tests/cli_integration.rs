@@ -1,0 +1,143 @@
+//! CLI integration: drive the `hbatch` binary end to end.
+
+use std::process::Command;
+
+fn hbatch() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_hbatch"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = hbatch()
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn hbatch");
+    assert!(
+        out.status.success(),
+        "hbatch {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn no_args_prints_usage_and_fails() {
+    let out = hbatch().output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("commands:"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = hbatch().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn simulate_emits_json_report() {
+    let out = run_ok(&[
+        "simulate",
+        "--workload",
+        "mnist",
+        "--cores",
+        "4,8,16",
+        "--policy",
+        "dynamic",
+        "--iters",
+        "200",
+    ]);
+    let j = hetero_batch::util::json::Json::parse(&out).expect("valid json");
+    assert_eq!(j.get("total_iters").as_i64(), Some(200));
+    assert!(j.get("total_time_s").as_f64().unwrap() > 0.0);
+    assert_eq!(j.get("workers").as_arr().unwrap().len(), 3);
+}
+
+#[test]
+fn simulate_hlevel_generates_cluster() {
+    let out = run_ok(&[
+        "simulate",
+        "--workload",
+        "resnet",
+        "--hlevel",
+        "6",
+        "--policy",
+        "static",
+        "--iters",
+        "100",
+    ]);
+    let j = hetero_batch::util::json::Json::parse(&out).unwrap();
+    assert_eq!(j.get("workers").as_arr().unwrap().len(), 3);
+}
+
+#[test]
+fn figure_5_writes_csv() {
+    let dir = std::env::temp_dir().join("hbatch_cli_fig5");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = run_ok(&["figure", "5", "--out-dir", dir.to_str().unwrap()]);
+    assert!(out.contains("fig5_throughput_vs_batch"));
+    let csv =
+        std::fs::read_to_string(dir.join("fig5_throughput_vs_batch.csv")).unwrap();
+    assert!(csv.starts_with("device,batch,throughput_sps"));
+    assert!(csv.lines().count() > 10);
+}
+
+#[test]
+fn throughput_scan_is_csvish() {
+    let out = run_ok(&["throughput-scan", "--device", "gpu:T4", "--workload", "resnet"]);
+    assert!(out.starts_with("batch,throughput_sps,iter_time_s"));
+    assert!(out.lines().count() > 5);
+}
+
+#[test]
+fn info_lists_models() {
+    let out = run_ok(&["info"]);
+    for m in ["linreg", "mlp", "cnn", "transformer"] {
+        assert!(out.contains(m), "missing {m} in: {out}");
+    }
+    assert!(out.contains("grad_agg"));
+}
+
+#[test]
+fn bad_flag_values_fail_cleanly() {
+    for args in [
+        vec!["simulate", "--policy", "bogus"],
+        vec!["simulate", "--sync", "bogus"],
+        vec!["figure", "99"],
+        vec!["throughput-scan", "--device", "quantum:1"],
+    ] {
+        let out = hbatch()
+            .args(&args)
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "{args:?} should fail");
+    }
+}
+
+#[test]
+fn simulate_accepts_config_file() {
+    let path = std::env::temp_dir().join("hbatch_cfg.json");
+    std::fs::write(
+        &path,
+        r#"{"workload": "mnist", "policy": "static", "b0": 50,
+            "workers": [{"cpu": 4}, {"cpu": 16}]}"#,
+    )
+    .unwrap();
+    // CLI flags still override the file (cores here).
+    let out = run_ok(&[
+        "simulate",
+        "--config",
+        path.to_str().unwrap(),
+        "--workload",
+        "mnist",
+        "--cores",
+        "4,16",
+        "--policy",
+        "static",
+        "--iters",
+        "50",
+    ]);
+    let j = hetero_batch::util::json::Json::parse(&out).unwrap();
+    assert_eq!(j.get("total_iters").as_i64(), Some(50));
+}

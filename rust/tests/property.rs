@@ -1,0 +1,361 @@
+//! Property-based tests on coordinator invariants (util::proptest).
+//!
+//! These are the "for all clusters/allocations/observation streams"
+//! guarantees the paper's correctness story rests on:
+//! conservation of the global batch, bound enforcement, λ normalization,
+//! controller convergence on stationary throughputs, quantization
+//! soundness, and aggregation linearity.
+
+use hetero_batch::controller::bucket::{quantize, quantize_alloc};
+use hetero_batch::controller::{static_alloc, ControllerCfg, DynamicBatcher};
+use hetero_batch::ps::{aggregate_into, lambdas_from_batches};
+use hetero_batch::util::proptest::{check, FnStrategy, Strategy, UsizeRange, VecOf};
+use hetero_batch::util::rng::Rng;
+
+/// A random heterogeneous cluster scenario.
+#[derive(Debug, Clone)]
+struct Scenario {
+    /// True throughputs X_k (samples/s).
+    xs: Vec<f64>,
+    /// Initial batch allocation.
+    init: Vec<f64>,
+    /// Fixed per-iteration overhead (comm) seconds.
+    overhead: f64,
+    noise: f64,
+    seed: u64,
+}
+
+struct ScenarioStrategy;
+
+impl Strategy<Scenario> for ScenarioStrategy {
+    fn generate(&self, rng: &mut Rng) -> Scenario {
+        let k = rng.range_usize(2, 7);
+        let xs: Vec<f64> = (0..k).map(|_| rng.range_f64(5.0, 200.0)).collect();
+        let init: Vec<f64> = (0..k).map(|_| rng.range_f64(16.0, 256.0)).collect();
+        Scenario {
+            xs,
+            init,
+            overhead: rng.range_f64(0.0, 0.05),
+            noise: rng.range_f64(0.0, 0.05),
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self, s: &Scenario) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        if s.xs.len() > 2 {
+            let mut t = s.clone();
+            t.xs.pop();
+            t.init.pop();
+            out.push(t);
+        }
+        if s.noise > 0.0 {
+            let mut t = s.clone();
+            t.noise = 0.0;
+            out.push(t);
+        }
+        out
+    }
+}
+
+/// Drive a controller against the scenario's linear-time workers.
+fn drive(s: &Scenario, iters: usize, cfg: ControllerCfg) -> DynamicBatcher {
+    let mut ctl = DynamicBatcher::new(cfg, &s.init);
+    let mut rng = Rng::new(s.seed);
+    for _ in 0..iters {
+        let b = ctl.batches();
+        for (k, &x) in s.xs.iter().enumerate() {
+            let noise = if s.noise > 0.0 {
+                rng.lognormal(1.0, s.noise)
+            } else {
+                1.0
+            };
+            ctl.observe(k, (s.overhead + b[k] / x) * noise);
+        }
+        ctl.maybe_adjust();
+    }
+    ctl
+}
+
+fn default_cfg() -> ControllerCfg {
+    ControllerCfg {
+        min_obs: 3,
+        ..ControllerCfg::default()
+    }
+}
+
+#[test]
+fn prop_global_batch_conserved() {
+    check("global batch conserved", 150, ScenarioStrategy, |s| {
+        let ctl = drive(s, 60, default_cfg());
+        let sum: f64 = ctl.batches().iter().sum();
+        let expect: f64 = s.init.iter().sum();
+        (sum - expect).abs() / expect < 1e-6
+    });
+}
+
+#[test]
+fn prop_bounds_always_respected() {
+    check("bounds respected", 150, ScenarioStrategy, |s| {
+        let cfg = ControllerCfg {
+            b_min: 8.0,
+            b_max: 512.0,
+            conserve_global: false,
+            min_obs: 3,
+            ..ControllerCfg::default()
+        };
+        let ctl = drive(s, 60, cfg);
+        ctl.batches().iter().all(|&b| (8.0..=512.0).contains(&b))
+    });
+}
+
+#[test]
+fn prop_lambdas_normalized_and_positive() {
+    check("lambdas normalized", 150, ScenarioStrategy, |s| {
+        let ctl = drive(s, 40, default_cfg());
+        let l = ctl.lambdas();
+        let sum: f64 = l.iter().sum();
+        (sum - 1.0).abs() < 1e-9 && l.iter().all(|&x| x > 0.0)
+    });
+}
+
+#[test]
+fn prop_converges_on_stationary_noiseless_throughputs() {
+    // With zero noise and zero overhead, steady-state batches must be
+    // throughput-proportional (the paper's equilibrium) within quantization
+    // of the dead-band.
+    check("stationary convergence", 100, ScenarioStrategy, |s| {
+        let mut s = s.clone();
+        s.noise = 0.0;
+        s.overhead = 0.0;
+        let ctl = drive(&s, 80, default_cfg());
+        let b = ctl.batches();
+        let bsum: f64 = b.iter().sum();
+        let xsum: f64 = s.xs.iter().sum();
+        b.iter().zip(&s.xs).all(|(&bk, &xk)| {
+            let share_err = (bk / bsum - xk / xsum).abs() / (xk / xsum);
+            share_err < 0.15 // dead-band leaves residual error
+        })
+    });
+}
+
+#[test]
+fn prop_steady_state_goes_quiet() {
+    // After convergence the controller must stop adjusting (dead-band +
+    // cumulative-mean smoothing): no adjustments in the last half.
+    check("steady state quiet", 80, ScenarioStrategy, |s| {
+        let mut s = s.clone();
+        s.noise = s.noise.min(0.02);
+        let mut ctl = drive(&s, 100, default_cfg());
+        let before = ctl.adjustments();
+        // another 100 iterations
+        let mut rng = Rng::new(s.seed ^ 0xABCD);
+        for _ in 0..100 {
+            let b = ctl.batches();
+            for (k, &x) in s.xs.iter().enumerate() {
+                let noise = if s.noise > 0.0 {
+                    rng.lognormal(1.0, s.noise)
+                } else {
+                    1.0
+                };
+                ctl.observe(k, (s.overhead + b[k] / x) * noise);
+            }
+            ctl.maybe_adjust();
+        }
+        ctl.adjustments() - before <= 1
+    });
+}
+
+#[test]
+fn prop_static_alloc_conserves_and_orders() {
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(2, 8);
+        let est: Vec<f64> = (0..k).map(|_| rng.range_f64(0.5, 100.0)).collect();
+        let b0 = rng.range_f64(8.0, 512.0);
+        (est, b0)
+    });
+    check("static alloc", 300, strat, |(est, b0)| {
+        let alloc = static_alloc(*b0, est);
+        let sum: f64 = alloc.iter().sum();
+        let conserved = (sum - b0 * est.len() as f64).abs() / sum < 1e-9;
+        // Order-preserving: faster estimate ⇒ >= batch.
+        let ordered = est
+            .iter()
+            .zip(est.iter().skip(1))
+            .zip(alloc.iter().zip(alloc.iter().skip(1)))
+            .all(|((e1, e2), (a1, a2))| (e1 <= e2) == (a1 <= a2) || e1 == e2);
+        conserved && ordered
+    });
+}
+
+#[test]
+fn prop_quantize_picks_nearest_bucket() {
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let n = rng.range_usize(1, 10);
+        let mut buckets: Vec<usize> =
+            (0..n).map(|_| rng.range_usize(1, 1024)).collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        let proposal = rng.range_f64(0.0, 1200.0);
+        (buckets, proposal)
+    });
+    check("quantize nearest", 500, strat, |(buckets, p)| {
+        let q = quantize(*p, buckets);
+        let dq = (q as f64 - p).abs();
+        buckets.iter().all(|&b| dq <= (b as f64 - p).abs() + 1e-9)
+    });
+}
+
+#[test]
+fn prop_quantize_alloc_swap_mask_consistent() {
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(1, 6);
+        let proposals: Vec<f64> = (0..k).map(|_| rng.range_f64(1.0, 300.0)).collect();
+        let current: Vec<usize> = (0..k).map(|_| 1 << rng.range_usize(0, 9)).collect();
+        (proposals, current)
+    });
+    let buckets: Vec<usize> = (0..10).map(|i| 1 << i).collect();
+    check("swap mask", 300, strat, move |(proposals, current)| {
+        let (snapped, swaps) = quantize_alloc(proposals, &buckets, current);
+        snapped
+            .iter()
+            .zip(current)
+            .zip(&swaps)
+            .all(|((s, c), &w)| (s != c) == w)
+    });
+}
+
+#[test]
+fn prop_aggregation_equals_weighted_sum_of_any_index() {
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(1, 6);
+        let d = rng.range_usize(1, 2000);
+        let grads: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec_f32(d)).collect();
+        let batches: Vec<f64> = (0..k).map(|_| rng.range_f64(1.0, 256.0)).collect();
+        let idx = rng.range_usize(0, d);
+        (grads, batches, idx)
+    });
+    check("aggregation pointwise", 200, strat, |(grads, batches, idx)| {
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let lambdas = lambdas_from_batches(batches);
+        let mut out = vec![0.0f32; grads[0].len()];
+        aggregate_into(&mut out, &refs, &lambdas);
+        let manual: f64 = grads
+            .iter()
+            .zip(&lambdas)
+            .map(|(g, &l)| g[*idx] as f64 * l)
+            .sum();
+        (out[*idx] as f64 - manual).abs() < 1e-4
+    });
+}
+
+#[test]
+fn prop_uniform_batches_give_uniform_lambdas() {
+    let strat = FnStrategy(|rng: &mut Rng| {
+        (rng.range_usize(1, 10), rng.range_f64(1.0, 512.0))
+    });
+    check("uniform lambda", 200, strat, |(k, b)| {
+        let l = lambdas_from_batches(&vec![*b; *k]);
+        l.iter().all(|&x| (x - 1.0 / *k as f64).abs() < 1e-12)
+    });
+}
+
+#[test]
+fn prop_hlevel_splits_conserve_total() {
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(2, 6);
+        let total = rng.range_usize(k * 4, 128);
+        let h = rng.range_f64(1.0, 12.0);
+        (total, k, h)
+    });
+    check("hlevel conservation", 300, strat, |(total, k, h)| {
+        match hetero_batch::cluster::hlevel_split(*total, *k, *h) {
+            None => true, // infeasible is fine
+            Some(split) => {
+                split.iter().sum::<usize>() == *total
+                    && split.len() == *k
+                    && split.windows(2).all(|w| w[0] <= w[1])
+                    && split.iter().all(|&c| c >= 1)
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_water_fill_conserves_and_bounds() {
+    use hetero_batch::controller::water_fill;
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(1, 8);
+        let proposal: Vec<f64> = (0..k).map(|_| rng.range_f64(1.0, 500.0)).collect();
+        let b_min = rng.range_f64(1.0, 8.0);
+        let b_max: Vec<f64> = (0..k)
+            .map(|_| rng.range_f64(b_min + 1.0, 1000.0))
+            .collect();
+        // Keep the target feasible for b_min (hard bound): >= k*b_min.
+        let target = rng.range_f64(b_min * k as f64, 1500.0);
+        (proposal, target, b_min, b_max)
+    });
+    check(
+        "water_fill",
+        400,
+        strat,
+        |(proposal, target, b_min, b_max)| {
+            let mut p = proposal.clone();
+            water_fill(&mut p, *target, *b_min, b_max);
+            let sum: f64 = p.iter().sum();
+            let min_ok = p.iter().all(|&x| x >= *b_min - 1e-9);
+            // Conservation holds whenever target >= Σb_min (b_max is soft).
+            let conserved = (sum - target).abs() / target < 1e-6;
+            min_ok && conserved
+        },
+    );
+}
+
+#[test]
+fn prop_controller_recovers_from_regime_change() {
+    // Whatever stationary state the controller converged to, after a
+    // sustained capacity change it must re-converge to the *new*
+    // throughput-proportional split (drift detection + backoff reset).
+    check("regime recovery", 60, ScenarioStrategy, |s| {
+        let mut s = s.clone();
+        s.noise = s.noise.min(0.03);
+        s.overhead = 0.0;
+        let mut ctl = drive(&s, 80, default_cfg());
+        // Halve worker 0's true throughput and keep driving.
+        let mut xs = s.xs.clone();
+        xs[0] *= 0.5;
+        let mut rng = Rng::new(s.seed ^ 0xFEED);
+        for _ in 0..120 {
+            let b = ctl.batches();
+            for (k, &x) in xs.iter().enumerate() {
+                let noise = if s.noise > 0.0 {
+                    rng.lognormal(1.0, s.noise)
+                } else {
+                    1.0
+                };
+                ctl.observe(k, (b[k] / x) * noise);
+            }
+            ctl.maybe_adjust();
+        }
+        let b = ctl.batches();
+        let bsum: f64 = b.iter().sum();
+        let xsum: f64 = xs.iter().sum();
+        // Worker 0's share tracks its halved throughput within 25%.
+        let share_err =
+            (b[0] / bsum - xs[0] / xsum).abs() / (xs[0] / xsum);
+        share_err < 0.25
+    });
+}
+
+#[test]
+fn prop_vecof_strategy_smoke() {
+    // Exercise VecOf shrinking machinery itself.
+    let strat = VecOf {
+        elem: UsizeRange(0, 100),
+        min_len: 1,
+        max_len: 8,
+    };
+    check("vecof in bounds", 200, strat, |v| {
+        (1..=8).contains(&v.len()) && v.iter().all(|&x| x <= 100)
+    });
+}

@@ -1,0 +1,217 @@
+//! Integration tests over the PJRT runtime: load real artifacts, execute
+//! train/eval steps, and check numerics against closed forms.
+//!
+//! Requires `make artifacts`; tests panic with a clear message otherwise
+//! (artifacts are part of the build contract, not an optional extra).
+
+use hetero_batch::data::{self, Batch, Dataset};
+use hetero_batch::ps;
+use hetero_batch::runtime::{Runtime, StepKind};
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn open() -> Runtime {
+    Runtime::open(artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_covers_all_models() {
+    let rt = open();
+    for name in ["linreg", "mlp", "cnn", "transformer"] {
+        let m = rt.model(name).unwrap();
+        assert!(!m.buckets.is_empty(), "{name} has no buckets");
+        assert!(m.param_total > 0);
+    }
+}
+
+#[test]
+fn init_params_load_and_are_finite() {
+    let rt = open();
+    for name in ["linreg", "mlp", "cnn", "transformer"] {
+        let p = rt.init_params(name).unwrap();
+        assert_eq!(p.len(), rt.model(name).unwrap().param_total);
+        assert!(p.iter().all(|x| x.is_finite()), "{name} has non-finite init");
+    }
+}
+
+#[test]
+fn linreg_gradients_match_closed_form() {
+    // dL/dw = 2/b · Xᵀ(Xw + b − y); dL/db = 2·mean(resid).
+    let mut rt = open();
+    let b = 8usize;
+    let params = vec![0.5f32, -0.25, 0.1, 0.05]; // w=(.5,-.25,.1), b=.05
+    let x: Vec<f32> = (0..b * 3).map(|i| (i as f32 * 0.37).sin()).collect();
+    let y: Vec<f32> = (0..b).map(|i| (i as f32 * 0.11).cos()).collect();
+    let batch = Batch {
+        x_f32: x.clone(),
+        x_i32: vec![],
+        y_f32: y.clone(),
+        y_i32: vec![],
+        batch_size: b,
+    };
+    let out = rt.train_step("linreg", b, &params, &batch).unwrap();
+
+    // Closed form in f64.
+    let w = [0.5f64, -0.25, 0.1];
+    let bias = 0.05f64;
+    let mut gw = [0.0f64; 3];
+    let mut gb = 0.0f64;
+    let mut loss = 0.0f64;
+    for i in 0..b {
+        let xi = &x[i * 3..(i + 1) * 3];
+        let pred: f64 =
+            xi.iter().zip(&w).map(|(&a, &b)| a as f64 * b).sum::<f64>() + bias;
+        let r = pred - y[i] as f64;
+        loss += r * r;
+        for j in 0..3 {
+            gw[j] += 2.0 * r * xi[j] as f64;
+        }
+        gb += 2.0 * r;
+    }
+    loss /= b as f64;
+    for j in 0..3 {
+        gw[j] /= b as f64;
+    }
+    gb /= b as f64;
+
+    assert!((out.loss as f64 - loss).abs() < 1e-4, "loss {} vs {loss}", out.loss);
+    for j in 0..3 {
+        assert!(
+            (out.grads[j] as f64 - gw[j]).abs() < 1e-4,
+            "gw[{j}] {} vs {}",
+            out.grads[j],
+            gw[j]
+        );
+    }
+    assert!((out.grads[3] as f64 - gb).abs() < 1e-4);
+}
+
+#[test]
+fn mlp_initial_loss_near_ln10() {
+    let mut rt = open();
+    let params = rt.init_params("mlp").unwrap();
+    let mut ds = data::for_model("mlp", 1, 0);
+    let batch = ds.next_batch(0, 32);
+    let out = rt.train_step("mlp", 32, &params, &batch).unwrap();
+    assert!(
+        (out.loss - (10.0f32).ln()).abs() < 1.5,
+        "initial CE {} far from ln10",
+        out.loss
+    );
+    assert!(out.grads.iter().all(|g| g.is_finite()));
+    // Gradient must be non-trivial.
+    let norm: f32 = out.grads.iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(norm > 1e-3, "zero gradient? norm={norm}");
+}
+
+#[test]
+fn sgd_loop_reduces_loss_all_models() {
+    let mut rt = open();
+    for (name, bucket, lr, steps) in [
+        ("linreg", 32usize, 0.05f32, 30),
+        ("mlp", 16, 0.05, 25),
+        ("cnn", 8, 0.05, 20),
+        ("transformer", 4, 0.2, 25),
+    ] {
+        let mut params = rt.init_params(name).unwrap();
+        let mut ds = data::for_model(name, 1, 7);
+        let mut first = None;
+        let mut last = 0.0f32;
+        for _ in 0..steps {
+            let batch = ds.next_batch(0, bucket);
+            let out = rt.train_step(name, bucket, &params, &batch).unwrap();
+            first.get_or_insert(out.loss);
+            last = out.loss;
+            for (p, g) in params.iter_mut().zip(&out.grads) {
+                *p -= lr * g;
+            }
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first,
+            "{name}: loss did not decrease ({first} -> {last})"
+        );
+    }
+}
+
+#[test]
+fn eval_step_reports_metric() {
+    let mut rt = open();
+    let params = rt.init_params("mlp").unwrap();
+    let mut ds = data::for_model("mlp", 1, 0);
+    let batch = ds.next_batch(0, 64);
+    let out = rt.eval_step("mlp", 64, &params, &batch).unwrap();
+    assert!(out.loss.is_finite());
+    // Accuracy at init ≈ 10% (10 classes).
+    assert!((0.0..=1.0).contains(&out.metric), "acc={}", out.metric);
+}
+
+#[test]
+fn bucket_mismatch_rejected() {
+    let mut rt = open();
+    let params = rt.init_params("mlp").unwrap();
+    let mut ds = data::for_model("mlp", 1, 0);
+    let batch = ds.next_batch(0, 16);
+    // Batch of 16 against bucket 8 must fail fast, not execute.
+    assert!(rt.train_step("mlp", 8, &params, &batch).is_err());
+    // Bad param vector too.
+    let batch = ds.next_batch(0, 8);
+    assert!(rt.train_step("mlp", 8, &params[1..], &batch).is_err());
+    // Unknown model.
+    assert!(rt.train_step("nope", 8, &params, &batch).is_err());
+}
+
+#[test]
+fn warmup_compiles_all_buckets() {
+    let mut rt = open();
+    rt.warmup("linreg", &[StepKind::Train, StepKind::Eval]).unwrap();
+    let n = rt.model("linreg").unwrap().buckets.len();
+    assert_eq!(rt.compiled_count(), 2 * n);
+}
+
+#[test]
+fn xla_agg_matches_rust_agg() {
+    // The Pallas grad_agg artifact and the Rust hot-path aggregation must
+    // agree — this closes the loop L1 kernel ↔ L3 implementation.
+    let mut rt = open();
+    let d = 1_500_000usize; // spans 2 chunks of the 1M-wide kernel
+    let mut rng = hetero_batch::util::rng::Rng::new(3);
+    let grads: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec_f32(d)).collect();
+    let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+    let lambdas = ps::lambdas_from_batches(&[32.0, 64.0, 96.0]);
+
+    let xla_out = rt.agg_step(&lambdas, &refs).unwrap();
+    let mut rust_out = vec![0.0f32; d];
+    ps::aggregate_into(&mut rust_out, &refs, &lambdas);
+
+    for i in (0..d).step_by(997) {
+        assert!(
+            (xla_out[i] - rust_out[i]).abs() < 1e-5,
+            "idx {i}: {} vs {}",
+            xla_out[i],
+            rust_out[i]
+        );
+    }
+}
+
+#[test]
+fn transformer_train_step_runs_at_every_bucket() {
+    let mut rt = open();
+    let params = rt.init_params("transformer").unwrap();
+    let buckets = rt.model("transformer").unwrap().buckets.clone();
+    let mut ds = data::for_model("transformer", 1, 0);
+    for &b in &buckets {
+        let batch = ds.next_batch(0, b);
+        let out = rt.train_step("transformer", b, &params, &batch).unwrap();
+        assert!(out.loss.is_finite(), "bucket {b}");
+        // LM loss at init ≈ ln(vocab) = ln(512) ≈ 6.24, plus O(1) spread
+        // from He-init logits.
+        assert!(
+            (out.loss - 512.0f32.ln()).abs() < 2.0,
+            "bucket {b}: init loss {}",
+            out.loss
+        );
+    }
+}
