@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         policy: Policy::Dynamic,
         steps,
         seed: 0,
-        agg_threads: 8,
+        pool_threads: 8,
         ..TrainOpts::default()
     };
     let mut dataset = data::for_model(&model, cores.len(), 0);

@@ -2,24 +2,35 @@
 //! per-iteration critical path, plus the PJRT step itself.
 //!
 //! Used by the §Perf pass in EXPERIMENTS.md: aggregation (single- vs
-//! multi-threaded vs the AOT Pallas kernel), optimizer updates, the
-//! controller step, data generation, and real train-step execution per
-//! model/bucket.
+//! pool-sharded vs spawn-per-call vs the AOT Pallas kernel), optimizer
+//! updates (unfused / fused / sharded fused), the controller step, data
+//! generation, and real train-step execution per model/bucket.
+//!
+//! Results are also written machine-readably to `BENCH_hotpath.json` at
+//! the repo root (the ROADMAP perf trajectory artifact), including the
+//! `fused_mt{2,4,8}` and `pool_vs_spawn` series plus derived speedup
+//! ratios.
+//!
+//! Flags: `--agg-only` limits the run to the aggregation + optimizer
+//! groups (no PJRT artifacts needed) — used by `scripts/tier1.sh` as a
+//! CI smoke. `HBATCH_BENCH_QUICK=1` shrinks measurement windows.
 
 use hetero_batch::controller::{ControllerCfg, DynamicBatcher};
 use hetero_batch::data::{self};
 use hetero_batch::ps::{
-    self, aggregate_into, aggregate_into_mt, lambdas_from_batches, Optimizer,
+    self, aggregate_into, aggregate_into_mt, aggregate_into_spawn,
+    lambdas_from_batches, Optimizer,
 };
 use hetero_batch::runtime::Runtime;
-use hetero_batch::util::bench::Bench;
+use hetero_batch::util::bench::{find_mean_ns, suite_json, Bench};
+use hetero_batch::util::json::Json;
 use hetero_batch::util::rng::Rng;
 
 fn artifacts_dir() -> String {
     format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
 }
 
-fn bench_aggregation() {
+fn bench_aggregation() -> Bench {
     let mut b = Bench::new("agg");
     let mut rng = Rng::new(0);
     // e2e-transformer-sized gradient set: K=3 × 12.6M params.
@@ -36,22 +47,29 @@ fn bench_aggregation() {
             aggregate_into(&mut out, &refs, &lambdas);
             out[0]
         });
+        // pool_vs_spawn series: identical sharding, persistent pool
+        // dispatch vs the seed's spawn-per-call scoped threads.
         for threads in [2, 4, 8] {
             b.run(&format!("mt{threads}/{tag}"), || {
                 aggregate_into_mt(&mut out, &refs, &lambdas, threads);
                 out[0]
             });
+            b.run(&format!("spawn{threads}/{tag}"), || {
+                aggregate_into_spawn(&mut out, &refs, &lambdas, threads);
+                out[0]
+            });
         }
     }
     b.report();
+    b
 }
 
-fn bench_agg_xla_vs_rust() {
+fn bench_agg_xla_vs_rust() -> Option<Bench> {
     let mut rt = match Runtime::open(artifacts_dir()) {
         Ok(rt) => rt,
         Err(e) => {
             println!("skipping XLA agg bench: {e}");
-            return;
+            return None;
         }
     };
     let mut b = Bench::new("agg_xla");
@@ -69,9 +87,10 @@ fn bench_agg_xla_vs_rust() {
         out[0]
     });
     b.report();
+    Some(b)
 }
 
-fn bench_optimizers() {
+fn bench_optimizers() -> Bench {
     let mut b = Bench::new("optimizer");
     let d = 12_600_000usize;
     let mut rng = Rng::new(2);
@@ -112,6 +131,17 @@ fn bench_optimizers() {
         fused.step(&mut params, &refs, &lambdas);
         params[0]
     });
+    // §Perf iteration 4: sharded fused pass on the persistent pool.
+    for threads in [2usize, 4, 8] {
+        let mut fused_mt = ps::FusedOptimizer::Adam(ps::Adam::new(
+            ps::LrSchedule::Constant(0.001),
+            d,
+        ));
+        b.run(&format!("fused_mt{threads}_agg+adam/3x12.6M"), || {
+            fused_mt.step_mt(&mut params, &refs, &lambdas, threads);
+            params[0]
+        });
+    }
     let mut sgd2 = ps::Sgd::new(ps::LrSchedule::Constant(0.01));
     b.run("unfused_agg+sgd/3x12.6M", || {
         aggregate_into(&mut agg, &refs, &lambdas);
@@ -124,10 +154,17 @@ fn bench_optimizers() {
         fused_sgd.step(&mut params, &refs, &lambdas);
         params[0]
     });
+    let mut fused_sgd_mt =
+        ps::FusedOptimizer::Sgd(ps::Sgd::new(ps::LrSchedule::Constant(0.01)));
+    b.run("fused_mt4_agg+sgd/3x12.6M", || {
+        fused_sgd_mt.step_mt(&mut params, &refs, &lambdas, 4);
+        params[0]
+    });
     b.report();
+    b
 }
 
-fn bench_controller() {
+fn bench_controller() -> Bench {
     let mut b = Bench::new("controller");
     for k in [3usize, 16, 64] {
         let init = vec![64.0; k];
@@ -150,23 +187,25 @@ fn bench_controller() {
         });
     }
     b.report();
+    b
 }
 
-fn bench_datagen() {
+fn bench_datagen() -> Bench {
     let mut b = Bench::new("datagen");
     let mut mnist = data::for_model("mlp", 1, 0);
     b.run("mlp/b64", || mnist.next_batch(0, 64).x_f32.len());
     let mut lm = data::for_model("transformer", 1, 0);
     b.run("transformer/b8", || lm.next_batch(0, 8).x_i32.len());
     b.report();
+    b
 }
 
-fn bench_train_steps() {
+fn bench_train_steps() -> Option<Bench> {
     let mut rt = match Runtime::open(artifacts_dir()) {
         Ok(rt) => rt,
         Err(e) => {
             println!("skipping train-step bench: {e}");
-            return;
+            return None;
         }
     };
     let mut b = Bench::new("train_step");
@@ -188,14 +227,70 @@ fn bench_train_steps() {
         }
     }
     b.report();
+    Some(b)
+}
+
+/// Derived speedup ratios (baseline_mean / candidate_mean; > 1 = faster)
+/// for the headline series: sharded fused vs single-threaded fused, and
+/// pool dispatch vs spawn-per-call at equal thread counts.
+fn derived_ratios(groups: &[&Bench]) -> Json {
+    let mut o = Json::obj();
+    let mut ratio = |label: &str, base: &str, cand: &str| {
+        if let (Some(b), Some(c)) = (find_mean_ns(groups, base), find_mean_ns(groups, cand)) {
+            if c > 0.0 {
+                o.set(label, Json::Num(b / c));
+            }
+        }
+    };
+    for t in [2, 4, 8] {
+        ratio(
+            &format!("fused_adam_mt{t}_vs_st/3x12.6M"),
+            "optimizer/fused_agg+adam/3x12.6M",
+            &format!("optimizer/fused_mt{t}_agg+adam/3x12.6M"),
+        );
+        for tag in ["3x400k", "3x12.6M", "8x1M"] {
+            ratio(
+                &format!("pool{t}_vs_spawn{t}/{tag}"),
+                &format!("agg/spawn{t}/{tag}"),
+                &format!("agg/mt{t}/{tag}"),
+            );
+        }
+    }
+    ratio(
+        "fused_sgd_mt4_vs_st/3x12.6M",
+        "optimizer/fused_agg+sgd/3x12.6M",
+        "optimizer/fused_mt4_agg+sgd/3x12.6M",
+    );
+    o
 }
 
 fn main() {
-    bench_aggregation();
-    bench_agg_xla_vs_rust();
-    bench_optimizers();
-    bench_controller();
-    bench_datagen();
-    bench_train_steps();
-    println!("\nall hotpath benches complete");
+    let agg_only = std::env::args().any(|a| a == "--agg-only");
+    let mut groups: Vec<Bench> = Vec::new();
+    groups.push(bench_aggregation());
+    groups.push(bench_optimizers());
+    if !agg_only {
+        if let Some(b) = bench_agg_xla_vs_rust() {
+            groups.push(b);
+        }
+        groups.push(bench_controller());
+        groups.push(bench_datagen());
+        if let Some(b) = bench_train_steps() {
+            groups.push(b);
+        }
+    }
+    let refs: Vec<&Bench> = groups.iter().collect();
+    let json = suite_json("hotpath", &refs, derived_ratios(&refs));
+    // Quick/partial runs must not clobber the canonical perf-trajectory
+    // artifact (full windows, all groups) with 8-sample smoke data.
+    let partial = agg_only || refs.iter().any(|b| b.is_quick());
+    let fname = if partial {
+        "BENCH_hotpath_quick.json"
+    } else {
+        "BENCH_hotpath.json"
+    };
+    let path = format!("{}/../{fname}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&path, json.to_pretty()).expect("write bench json");
+    println!("\nwrote {path}");
+    println!("all hotpath benches complete");
 }

@@ -32,6 +32,9 @@ pub trait Dataset: Send {
     /// Per-example x element count (f32 path) or token count (i32 path).
     fn x_elems(&self) -> usize;
     fn y_elems(&self) -> usize;
+    /// Number of independent shard streams this dataset was built with
+    /// (valid `shard` arguments to [`Dataset::next_batch`]).
+    fn shards(&self) -> usize;
     /// Draw the next batch of `b` examples for shard `shard`.
     fn next_batch(&mut self, shard: usize, b: usize) -> Batch;
     /// The loss a perfect model would approach (monitoring floor).
@@ -78,6 +81,10 @@ impl Dataset for Regression {
 
     fn y_elems(&self) -> usize {
         1
+    }
+
+    fn shards(&self) -> usize {
+        self.rngs.len()
     }
 
     fn next_batch(&mut self, shard: usize, b: usize) -> Batch {
@@ -155,6 +162,10 @@ impl Dataset for Classification {
 
     fn y_elems(&self) -> usize {
         1
+    }
+
+    fn shards(&self) -> usize {
+        self.rngs.len()
     }
 
     fn next_batch(&mut self, shard: usize, b: usize) -> Batch {
@@ -235,6 +246,10 @@ impl Dataset for TokenStream {
 
     fn y_elems(&self) -> usize {
         self.seq
+    }
+
+    fn shards(&self) -> usize {
+        self.rngs.len()
     }
 
     fn next_batch(&mut self, shard: usize, b: usize) -> Batch {
@@ -378,8 +393,24 @@ mod tests {
     fn for_model_covers_registry() {
         for name in ["linreg", "mlp", "cnn", "transformer"] {
             let mut d = for_model(name, 2, 0);
+            assert_eq!(d.shards(), 2);
             let b = d.next_batch(1, 4);
             assert_eq!(b.batch_size, 4);
         }
+    }
+
+    #[test]
+    fn extra_shards_leave_earlier_streams_unchanged() {
+        // The engine's dedicated eval shard (k) relies on this: building
+        // a dataset with k+1 shards must not alter shards 0..k.
+        let mut a = Regression::new(3, 2, 0.1, 7);
+        let mut b = Regression::new(3, 3, 0.1, 7);
+        assert_eq!(a.next_batch(1, 16).x_f32, b.next_batch(1, 16).x_f32);
+        let mut a = Classification::mnist_standin(2, 9);
+        let mut b = Classification::mnist_standin(3, 9);
+        assert_eq!(a.next_batch(0, 8).x_f32, b.next_batch(0, 8).x_f32);
+        let mut a = TokenStream::new(64, 16, 3, 2, 11);
+        let mut b = TokenStream::new(64, 16, 3, 3, 11);
+        assert_eq!(a.next_batch(1, 8).x_i32, b.next_batch(1, 8).x_i32);
     }
 }

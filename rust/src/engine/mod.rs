@@ -22,12 +22,13 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::config::{ExperimentCfg, Policy};
-use crate::controller::bucket::quantize_alloc;
+use crate::controller::bucket::{quantize, quantize_alloc};
 use crate::controller::{static_alloc, uniform_alloc, Adjustment, DynamicBatcher};
-use crate::data::Dataset;
-use crate::metrics::{AdjustEvent, IterRecord, RunReport};
+use crate::data::{Batch, Dataset};
+use crate::metrics::{AdjustEvent, EvalRecord, IterRecord, RunReport};
 use crate::ps::{lambdas_from_batches, FusedOptimizer};
 use crate::runtime::{Runtime, StepKind};
+use crate::util::pool;
 
 /// Per-worker slowdown factors: capacity c ⇒ sleep compute·(1/c − 1).
 /// c = 1.0 means full speed (no injection).
@@ -53,11 +54,20 @@ pub struct TrainOpts {
     pub model: String,
     pub policy: Policy,
     pub steps: u64,
-    /// Evaluate every N global steps (0 = never).
+    /// Evaluate every N global steps (0 = never); results land in
+    /// [`RunReport::evals`]. Evals draw from dataset shard `k` (workers
+    /// use shards `0..k`), so enabling them never perturbs the training
+    /// streams — build the dataset with `k + 1` shards when set.
     pub eval_every: u64,
     pub seed: u64,
-    /// Aggregation threads.
-    pub agg_threads: usize,
+    /// Shard count for the PS hot path: the leader's fused
+    /// aggregate+optimizer pass runs sharded across the persistent
+    /// worker pool ([`FusedOptimizer::step_mt`]). Clamped to available
+    /// parallelism; 1 = single-threaded.
+    pub pool_threads: usize,
+    /// Overlap batch generation for worker w+1 with worker w's PJRT
+    /// train step (double-buffered `Dataset::next_batch` on the pool).
+    pub prefetch: bool,
     /// Stop early when train loss falls below this (0 = disabled).
     pub loss_target: f64,
 }
@@ -70,7 +80,8 @@ impl Default for TrainOpts {
             steps: 50,
             eval_every: 0,
             seed: 0,
-            agg_threads: 4,
+            pool_threads: 4,
+            prefetch: true,
             loss_target: 0.0,
         }
     }
@@ -125,6 +136,14 @@ impl<'rt> Engine<'rt> {
     /// Run BSP training; returns the report with the real loss curve.
     pub fn run(&mut self, dataset: &mut dyn Dataset) -> Result<RunReport> {
         let k = self.cfg.workers.len();
+        if self.opts.eval_every > 0 && dataset.shards() <= k {
+            bail!(
+                "eval_every needs a dedicated eval shard: dataset has {} shard(s) \
+                 for k = {k} workers — build it with k + 1 (workers draw from \
+                 shards 0..k, evals from shard k)",
+                dataset.shards()
+            );
+        }
         let model_name = self.opts.model.clone();
         let m = self.runtime.model(&model_name)?.clone();
         let buckets = m.buckets.clone();
@@ -164,6 +183,23 @@ impl<'rt> Engine<'rt> {
 
         // Warm up all bucket executables so swaps are cheap.
         self.runtime.warmup(&model_name, &[StepKind::Train])?;
+        // Periodic evals run at one fixed bucket (nearest to b0), so
+        // only that eval executable is compiled.
+        let eval_bucket = quantize(b0, &buckets);
+        if self.opts.eval_every > 0 {
+            self.runtime
+                .ensure_compiled(&model_name, StepKind::Eval, eval_bucket)?;
+        }
+
+        // Prefetch pipelining (§Perf iteration 4): the dataset and a
+        // one-slot hand-off buffer live behind mutexes so a pool worker
+        // can generate worker w+1's batch while the leader drives worker
+        // w's PJRT step. Batch generation order is unchanged (w, w+1,
+        // ... strictly in turn), so the run is bit-identical with
+        // prefetch on or off.
+        let ds = Mutex::new(dataset);
+        let slot: Mutex<Option<Batch>> = Mutex::new(None);
+        let prefetch = self.opts.prefetch && k > 1;
 
         let wall0 = Instant::now();
         let mut step = 0u64;
@@ -178,7 +214,26 @@ impl<'rt> Engine<'rt> {
             let param_lits = self.runtime.prepare_params(&model_name, &params)?;
             for w in 0..k {
                 let b = cur_buckets[w];
-                let batch = dataset.next_batch(w, b);
+                let batch = match slot.lock().unwrap().take() {
+                    Some(batch) => batch, // prefetched during worker w−1
+                    None => ds.lock().unwrap().next_batch(w, b),
+                };
+                let handle = if prefetch && w + 1 < k {
+                    let (nw, nb) = (w + 1, cur_buckets[w + 1]);
+                    let (dsr, slotr) = (&ds, &slot);
+                    // SAFETY: the handle is joined inside this loop
+                    // iteration — `h.wait()` below on the normal path,
+                    // `Drop` on the `?` early return — before `ds` and
+                    // `slot` can go out of scope; it is never leaked.
+                    Some(unsafe {
+                        pool::global().submit(move || {
+                            let next = dsr.lock().unwrap().next_batch(nw, nb);
+                            *slotr.lock().unwrap() = Some(next);
+                        })
+                    })
+                } else {
+                    None
+                };
                 let t0 = Instant::now();
                 let loss = self.runtime.train_step_prepared(
                     &model_name,
@@ -192,6 +247,9 @@ impl<'rt> Engine<'rt> {
                 let injected = compute * (1.0 / c - 1.0);
                 durations[w] = compute + injected;
                 losses[w] = loss;
+                if let Some(h) = handle {
+                    h.wait(); // batch generation ran under the PJRT step
+                }
             }
             drop(param_lits);
             // Injected slowdowns are *accounted*, not slept: worker
@@ -212,12 +270,13 @@ impl<'rt> Engine<'rt> {
                 });
             }
 
-            // --- leader: fused weighted aggregation + optimizer (Eq. 2–3) ---
+            // --- leader: fused weighted aggregation + optimizer (Eq. 2–3),
+            // sharded across the persistent pool (§Perf iteration 4) ---
             let lambdas =
                 lambdas_from_batches(&cur_buckets.iter().map(|&b| b as f64).collect::<Vec<_>>());
             let grad_refs: Vec<&[f32]> =
                 grads_per_worker.iter().map(|g| g.as_slice()).collect();
-            optimizer.step(&mut params, &grad_refs, &lambdas);
+            optimizer.step_mt(&mut params, &grad_refs, &lambdas, self.opts.pool_threads);
 
             // Global loss = λ-weighted worker losses.
             let loss: f64 = losses
@@ -230,6 +289,24 @@ impl<'rt> Engine<'rt> {
                 .push((wall0.elapsed().as_secs_f64(), step, loss));
 
             step += 1;
+
+            // --- periodic evaluation (StepKind::Eval executable) ---
+            // Shard k is the dedicated eval stream: training shards
+            // 0..k stay untouched, so eval-on vs eval-off runs produce
+            // identical loss curves.
+            if self.opts.eval_every > 0 && step % self.opts.eval_every == 0 {
+                let batch = ds.lock().unwrap().next_batch(k, eval_bucket);
+                let ev = self
+                    .runtime
+                    .eval_step(&model_name, eval_bucket, &params, &batch)?;
+                report.evals.push(EvalRecord {
+                    time: wall0.elapsed().as_secs_f64(),
+                    iter: step,
+                    loss: ev.loss as f64,
+                    metric: ev.metric as f64,
+                });
+            }
+
             if self.opts.loss_target > 0.0 && loss < self.opts.loss_target {
                 report.reached_target = true;
                 break;
@@ -286,6 +363,9 @@ mod tests {
         let o = TrainOpts::default();
         assert!(o.steps > 0);
         assert_eq!(o.policy, Policy::Dynamic);
+        assert!(o.pool_threads >= 1);
+        assert!(o.prefetch);
+        assert_eq!(o.eval_every, 0);
     }
     // Engine integration tests (need artifacts) live in
     // rust/tests/engine_integration.rs.

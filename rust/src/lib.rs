@@ -28,8 +28,9 @@
 //!   this build is fully offline, so no external crates besides `xla`
 //!   and `anyhow`).
 //!
-//! See `DESIGN.md` for the paper→repo mapping and the experiment index,
-//! and `EXPERIMENTS.md` for the recorded reproductions.
+//! See `DESIGN.md` (repo root) for the paper→repo mapping and the
+//! experiment index, and `EXPERIMENTS.md` for the recorded
+//! reproductions and the §Perf iteration log.
 
 pub mod cluster;
 pub mod config;

@@ -108,7 +108,9 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .opt("seed", "0", "rng seed")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("loss-target", "0", "stop early at this train loss (0 = off)")
-        .opt("agg-threads", "4", "aggregation threads")
+        .opt("eval-every", "0", "run an eval step every N global steps (0 = never)")
+        .opt("pool-threads", "4", "PS hot-path shards on the worker pool (1 = single-threaded)")
+        .flag("no-prefetch", "disable batch-generation/train-step overlap")
         .opt("report", "", "write full JSON report to this path")
         .parse(rest)?;
 
@@ -122,14 +124,17 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         model: a.get("model"),
         policy: cfg.policy,
         steps: a.get_u64("steps"),
-        eval_every: 0,
+        eval_every: a.get_u64("eval-every"),
         seed: cfg.seed,
-        agg_threads: a.get_usize("agg-threads"),
+        pool_threads: a.get_usize("pool-threads"),
+        prefetch: !a.get_flag("no-prefetch"),
         loss_target: a.get_f64("loss-target"),
     };
     let slow = Slowdowns::from_cores(&cores);
     let k = cores.len();
-    let mut dataset = data::for_model(&opts.model, k, cfg.seed);
+    // Shard k is the dedicated eval stream (training uses 0..k).
+    let shards = k + usize::from(opts.eval_every > 0);
+    let mut dataset = data::for_model(&opts.model, shards, cfg.seed);
     let mut engine =
         Engine::new(&mut runtime, cfg, opts, slow).map_err(|e| e.to_string())?;
     let report = engine.run(dataset.as_mut()).map_err(|e| e.to_string())?;
@@ -144,6 +149,15 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         println!("loss: {first:.4} -> {last:.4}");
     }
     println!("adjustments: {}", report.adjustments.len());
+    if let Some(e) = report.evals.last() {
+        println!(
+            "evals: {} (last @ step {}: loss {:.4}, metric {:.4})",
+            report.evals.len(),
+            e.iter,
+            e.loss,
+            e.metric
+        );
+    }
     if let Some(b) = report.final_batches() {
         println!("final batches: {b:?}");
     }

@@ -17,6 +17,18 @@ pub struct IterRecord {
     pub wait: f64,
 }
 
+/// One periodic evaluation (`StepKind::Eval`) during a real run.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    /// Wall time of the eval (seconds since run start).
+    pub time: f64,
+    /// Global step the eval ran after.
+    pub iter: u64,
+    pub loss: f64,
+    /// Task metric: accuracy (classification/LM) or MSE (regression).
+    pub metric: f64,
+}
+
 /// A batch readjustment event.
 #[derive(Debug, Clone)]
 pub struct AdjustEvent {
@@ -35,6 +47,8 @@ pub struct RunReport {
     pub adjustments: Vec<AdjustEvent>,
     /// (time, global_iter, loss) samples — real-execution runs only.
     pub losses: Vec<(f64, u64, f64)>,
+    /// Periodic eval results (`TrainOpts::eval_every`) — real runs only.
+    pub evals: Vec<EvalRecord>,
     /// Total time to completion/target (seconds, virtual or wall).
     pub total_time: f64,
     /// Global iterations executed.
@@ -138,6 +152,21 @@ impl RunReport {
                 .collect();
             o.set("loss_curve", Json::Arr(pts));
         }
+        if !self.evals.is_empty() {
+            let pts: Vec<Json> = self
+                .evals
+                .iter()
+                .map(|e| {
+                    let mut eo = Json::obj();
+                    eo.set("time_s", Json::Num(e.time));
+                    eo.set("iter", Json::Num(e.iter as f64));
+                    eo.set("loss", Json::Num(e.loss));
+                    eo.set("metric", Json::Num(e.metric));
+                    eo
+                })
+                .collect();
+            o.set("evals", Json::Arr(pts));
+        }
         o
     }
 }
@@ -211,11 +240,18 @@ mod tests {
         r.reached_target = true;
         r.losses.push((1.0, 1, 0.5));
         r.iters.push(rec(0, 0, 1.0, 0.0));
+        r.evals.push(EvalRecord {
+            time: 2.0,
+            iter: 5,
+            loss: 0.4,
+            metric: 0.9,
+        });
         let j = r.to_json(1);
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("label").as_str(), Some("run1"));
         assert_eq!(parsed.get("total_time_s").as_f64(), Some(12.5));
         assert_eq!(parsed.get("reached_target").as_bool(), Some(true));
         assert_eq!(parsed.get("loss_curve").idx(0).idx(2).as_f64(), Some(0.5));
+        assert_eq!(parsed.get("evals").idx(0).get("metric").as_f64(), Some(0.9));
     }
 }

@@ -13,9 +13,17 @@
 //!
 //! Numerics are identical to `aggregate_into` + `Optimizer::step` (same
 //! operation order per element), verified by unit tests.
+//!
+//! §Perf iteration 4 adds sharded variants (`fused_agg_*_mt`): params
+//! and optimizer state split into contiguous shards across the
+//! persistent pool ([`crate::util::pool`]), one tiled fused pass per
+//! shard. Elementwise numerics are unchanged — equivalence across shard
+//! counts and multi-step state evolution is property-tested in
+//! `rust/tests/property.rs`.
 
-use crate::ps::aggregate_into;
 use crate::ps::optimizer::{Adam, LrSchedule, Momentum, Optimizer, Sgd};
+use crate::ps::{aggregate_into, effective_threads};
+use crate::util::pool;
 
 /// Tile length: 8 K f32 = 32 KiB — fits L1d alongside the param tile.
 const TILE: usize = 8192;
@@ -26,19 +34,43 @@ fn tiled<F: FnMut(&mut [f32], &[f32], usize)>(
     params: &mut [f32],
     grads: &[&[f32]],
     lambdas: &[f64],
+    update: F,
+) {
+    tiled_at(params, grads, lambdas, 0, update)
+}
+
+/// Tiled pass over one contiguous shard: `params` is the shard, `base`
+/// its offset into the full parameter vector (gradients are indexed
+/// globally, `update`'s tile start is shard-local). The sharded kernels
+/// run one of these per pool worker; `tiled` is the base == 0 case.
+fn tiled_at<F: FnMut(&mut [f32], &[f32], usize)>(
+    params: &mut [f32],
+    grads: &[&[f32]],
+    lambdas: &[f64],
+    base: usize,
     mut update: F,
 ) {
     let mut buf = [0.0f32; TILE];
+    // Slice headers reused across tiles — §Perf iteration 4; the seed
+    // allocated this Vec once per 8K-element tile, on the hot path.
+    let mut slices: Vec<&[f32]> = Vec::with_capacity(grads.len());
     let n = params.len();
     let mut start = 0;
     while start < n {
         let len = TILE.min(n - start);
-        let slices: Vec<&[f32]> =
-            grads.iter().map(|g| &g[start..start + len]).collect();
+        slices.clear();
+        slices.extend(grads.iter().map(|g| &g[base + start..base + start + len]));
         aggregate_into(&mut buf[..len], &slices, lambdas);
         update(&mut params[start..start + len], &buf[..len], start);
         start += len;
     }
+}
+
+/// Shard count for an explicit `shards` request (sharded kernels honor
+/// the request so tests can exercise every split; only degenerate
+/// values are clamped).
+fn clamp_shards(shards: usize, len: usize) -> usize {
+    shards.max(1).min(len.max(1))
 }
 
 /// Aggregate λ-weighted gradients and apply an SGD step in one pass.
@@ -114,6 +146,132 @@ pub fn fused_agg_adam(
     opt.bump_to(t);
 }
 
+// ---------------------------------------------------------------------
+// Sharded variants (§Perf iteration 4): params + optimizer state are
+// split into contiguous shards across the persistent pool, each shard
+// running its own tiled fused pass. Per-element operation order is
+// identical to the single-threaded kernels (aggregation visits workers
+// in the same order for every element), so numerics match exactly.
+
+/// Sharded fused aggregation + SGD across the worker pool.
+pub fn fused_agg_sgd_mt(
+    params: &mut [f32],
+    grads: &[&[f32]],
+    lambdas: &[f64],
+    opt: &mut Sgd,
+    shards: usize,
+) {
+    validate(params, grads, lambdas);
+    let shards = clamp_shards(shards, params.len());
+    if shards == 1 {
+        return fused_agg_sgd(params, grads, lambdas, opt);
+    }
+    let lr = opt.schedule.at(opt.iterations()) as f32;
+    pool::global().run_sharded(params, shards, |_, base, shard| {
+        tiled_at(shard, grads, lambdas, base, |p_tile, g_tile, _| {
+            for (p, &g) in p_tile.iter_mut().zip(g_tile) {
+                *p -= lr * g;
+            }
+        });
+    });
+    opt.bump();
+}
+
+/// Sharded fused aggregation + momentum: velocity is sharded alongside
+/// the parameters (same chunking), so each task owns a disjoint
+/// (params, velocity) pair.
+pub fn fused_agg_momentum_mt(
+    params: &mut [f32],
+    grads: &[&[f32]],
+    lambdas: &[f64],
+    opt: &mut Momentum,
+    shards: usize,
+) {
+    validate(params, grads, lambdas);
+    assert_eq!(params.len(), opt.velocity().len());
+    let shards = clamp_shards(shards, params.len());
+    if shards == 1 {
+        return fused_agg_momentum(params, grads, lambdas, opt);
+    }
+    let lr = opt.schedule.at(opt.iterations()) as f32;
+    let mu = opt.mu as f32;
+    let chunk = (params.len() + shards - 1) / shards;
+    let v = opt.velocity_mut();
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = params
+        .chunks_mut(chunk)
+        .zip(v.chunks_mut(chunk))
+        .enumerate()
+        .map(|(i, (p_shard, v_shard))| {
+            let base = i * chunk;
+            Box::new(move || {
+                tiled_at(p_shard, grads, lambdas, base, |p_tile, g_tile, start| {
+                    let v_tile = &mut v_shard[start..start + p_tile.len()];
+                    for ((p, vel), &g) in
+                        p_tile.iter_mut().zip(v_tile.iter_mut()).zip(g_tile)
+                    {
+                        *vel = mu * *vel + g;
+                        *p -= lr * *vel;
+                    }
+                });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool::global().run_tasks(tasks);
+    opt.bump();
+}
+
+/// Sharded fused aggregation + Adam: m and v shard with the parameters.
+pub fn fused_agg_adam_mt(
+    params: &mut [f32],
+    grads: &[&[f32]],
+    lambdas: &[f64],
+    opt: &mut Adam,
+    shards: usize,
+) {
+    validate(params, grads, lambdas);
+    assert_eq!(params.len(), opt.m().len());
+    let shards = clamp_shards(shards, params.len());
+    if shards == 1 {
+        return fused_agg_adam(params, grads, lambdas, opt);
+    }
+    let t = opt.iterations() + 1;
+    let lr = opt.schedule.at(t - 1);
+    let (b1, b2, eps) = (opt.beta1, opt.beta2, opt.eps);
+    let bc1 = 1.0 - b1.powi(t as i32);
+    let bc2 = 1.0 - b2.powi(t as i32);
+    let step = (lr * bc2.sqrt() / bc1) as f32;
+    let (b1, b2, eps) = (b1 as f32, b2 as f32, eps as f32);
+    let chunk = (params.len() + shards - 1) / shards;
+    let (m, v) = opt.state_mut();
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = params
+        .chunks_mut(chunk)
+        .zip(m.chunks_mut(chunk))
+        .zip(v.chunks_mut(chunk))
+        .enumerate()
+        .map(|(i, ((p_shard, m_shard), v_shard))| {
+            let base = i * chunk;
+            Box::new(move || {
+                tiled_at(p_shard, grads, lambdas, base, |p_tile, g_tile, start| {
+                    let m_tile = &mut m_shard[start..start + p_tile.len()];
+                    let v_tile = &mut v_shard[start..start + p_tile.len()];
+                    for (((p, mi), vi), &g) in p_tile
+                        .iter_mut()
+                        .zip(m_tile.iter_mut())
+                        .zip(v_tile.iter_mut())
+                        .zip(g_tile)
+                    {
+                        *mi = b1 * *mi + (1.0 - b1) * g;
+                        *vi = b2 * *vi + (1.0 - b2) * g * g;
+                        *p -= step * *mi / (vi.sqrt() + eps);
+                    }
+                });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool::global().run_tasks(tasks);
+    opt.bump_to(t);
+}
+
 /// Dispatch over the optimizer kinds used by the engine.
 pub enum FusedOptimizer {
     Sgd(Sgd),
@@ -137,12 +295,34 @@ impl FusedOptimizer {
         }
     }
 
-    /// One fused aggregate+update pass.
+    /// One fused aggregate+update pass, single-threaded.
     pub fn step(&mut self, params: &mut [f32], grads: &[&[f32]], lambdas: &[f64]) {
         match self {
             FusedOptimizer::Sgd(o) => fused_agg_sgd(params, grads, lambdas, o),
             FusedOptimizer::Momentum(o) => fused_agg_momentum(params, grads, lambdas, o),
             FusedOptimizer::Adam(o) => fused_agg_adam(params, grads, lambdas, o),
+        }
+    }
+
+    /// One fused aggregate+update pass, sharded across the persistent
+    /// pool. `threads` is a request: it is clamped to available
+    /// parallelism and the pass stays single-threaded below
+    /// [`crate::ps::MT_MIN_LEN`] elements. Numerics are identical to
+    /// [`FusedOptimizer::step`] either way.
+    pub fn step_mt(
+        &mut self,
+        params: &mut [f32],
+        grads: &[&[f32]],
+        lambdas: &[f64],
+        threads: usize,
+    ) {
+        let shards = effective_threads(threads, params.len());
+        match self {
+            FusedOptimizer::Sgd(o) => fused_agg_sgd_mt(params, grads, lambdas, o, shards),
+            FusedOptimizer::Momentum(o) => {
+                fused_agg_momentum_mt(params, grads, lambdas, o, shards)
+            }
+            FusedOptimizer::Adam(o) => fused_agg_adam_mt(params, grads, lambdas, o, shards),
         }
     }
 
@@ -233,6 +413,63 @@ mod tests {
             o1.step(&mut p1, &agg);
             fused_agg_adam(&mut p2, &refs, &lambdas, &mut o2);
         }
+        assert_close(&p1, &p2);
+    }
+
+    #[test]
+    fn sharded_kernels_match_single_threaded_over_steps() {
+        // Dim deliberately a non-multiple of both TILE and any shard
+        // count; state (velocity, m/v) must evolve identically.
+        let d = 2 * super::TILE + 1234;
+        let (params, grads, lambdas) = setup(d);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        for shards in [2usize, 3, 5, 8] {
+            // SGD
+            let (mut p_st, mut p_mt) = (params.clone(), params.clone());
+            let mut o_st = Sgd::new(LrSchedule::Constant(0.05));
+            let mut o_mt = Sgd::new(LrSchedule::Constant(0.05));
+            for _ in 0..3 {
+                fused_agg_sgd(&mut p_st, &refs, &lambdas, &mut o_st);
+                fused_agg_sgd_mt(&mut p_mt, &refs, &lambdas, &mut o_mt, shards);
+            }
+            assert_close(&p_st, &p_mt);
+            assert_eq!(o_st.iterations(), o_mt.iterations());
+            // Momentum
+            let (mut p_st, mut p_mt) = (params.clone(), params.clone());
+            let mut o_st = Momentum::new(LrSchedule::Constant(0.05), 0.9, d);
+            let mut o_mt = Momentum::new(LrSchedule::Constant(0.05), 0.9, d);
+            for _ in 0..3 {
+                fused_agg_momentum(&mut p_st, &refs, &lambdas, &mut o_st);
+                fused_agg_momentum_mt(&mut p_mt, &refs, &lambdas, &mut o_mt, shards);
+            }
+            assert_close(&p_st, &p_mt);
+            assert_close(o_st.velocity(), o_mt.velocity());
+            // Adam
+            let (mut p_st, mut p_mt) = (params.clone(), params.clone());
+            let mut o_st = Adam::new(LrSchedule::Constant(0.001), d);
+            let mut o_mt = Adam::new(LrSchedule::Constant(0.001), d);
+            for _ in 0..3 {
+                fused_agg_adam(&mut p_st, &refs, &lambdas, &mut o_st);
+                fused_agg_adam_mt(&mut p_mt, &refs, &lambdas, &mut o_mt, shards);
+            }
+            assert_close(&p_st, &p_mt);
+            assert_close(o_st.m(), o_mt.m());
+            assert_eq!(o_st.iterations(), o_mt.iterations());
+        }
+    }
+
+    #[test]
+    fn step_mt_heuristic_falls_back_below_cutoff() {
+        // Small model: step_mt must take the single-threaded path and
+        // still produce the exact step() result.
+        let (params, grads, lambdas) = setup(4_000);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mut p1 = params.clone();
+        let mut p2 = params;
+        let mut f1 = FusedOptimizer::Adam(Adam::new(LrSchedule::Constant(0.001), p1.len()));
+        let mut f2 = FusedOptimizer::Adam(Adam::new(LrSchedule::Constant(0.001), p2.len()));
+        f1.step(&mut p1, &refs, &lambdas);
+        f2.step_mt(&mut p2, &refs, &lambdas, 8);
         assert_close(&p1, &p2);
     }
 

@@ -53,9 +53,31 @@ pub fn aggregate_into(out: &mut [f32], grads: &[&[f32]], lambdas: &[f64]) {
     }
 }
 
-/// Multi-threaded aggregation: splits the parameter vector into chunks
-/// across `threads` OS threads. Used for large models (e2e transformer has
-/// ~12M params ⇒ ~48 MB of gradients per worker).
+/// Below this many elements the multi-threaded PS paths fall back to a
+/// single-threaded pass: thread dispatch costs more than the memory
+/// pass saves. Shared by [`aggregate_into_mt`], the spawn baseline, and
+/// the sharded fused kernels in [`fused`].
+pub const MT_MIN_LEN: usize = 1 << 16;
+
+/// Thread/shard count actually used for a parameter-sized pass: 1 below
+/// [`MT_MIN_LEN`], otherwise `requested` clamped to the machine's
+/// available parallelism (the seed clamped only by vector length, which
+/// allowed absurd thread counts for mid-sized vectors).
+pub fn effective_threads(requested: usize, len: usize) -> usize {
+    if len < MT_MIN_LEN {
+        return 1;
+    }
+    let cap = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    requested.max(1).min(cap)
+}
+
+/// Multi-threaded aggregation: shards the parameter vector across the
+/// persistent worker pool ([`crate::util::pool::global`]). Used for
+/// large models (e2e transformer has ~12M params ⇒ ~48 MB of gradients
+/// per worker). §Perf iteration 4: the seed spawned fresh OS threads on
+/// every call ([`aggregate_into_spawn`], kept as the bench baseline).
 pub fn aggregate_into_mt(
     out: &mut [f32],
     grads: &[&[f32]],
@@ -63,11 +85,37 @@ pub fn aggregate_into_mt(
     threads: usize,
 ) {
     assert_eq!(grads.len(), lambdas.len());
+    assert!(!grads.is_empty(), "no gradients");
     for g in grads {
         assert_eq!(g.len(), out.len());
     }
-    let threads = threads.max(1).min(out.len().max(1));
-    if threads == 1 || out.len() < 1 << 16 {
+    let threads = effective_threads(threads, out.len());
+    if threads == 1 {
+        return aggregate_into(out, grads, lambdas);
+    }
+    crate::util::pool::global().run_sharded(out, threads, |_, start, shard| {
+        let slices: Vec<&[f32]> =
+            grads.iter().map(|g| &g[start..start + shard.len()]).collect();
+        aggregate_into(shard, &slices, lambdas);
+    });
+}
+
+/// Spawn-per-call multi-threaded aggregation — the seed implementation,
+/// kept only as the `pool_vs_spawn` baseline in `benches/hotpath.rs`.
+/// Production callers use [`aggregate_into_mt`].
+pub fn aggregate_into_spawn(
+    out: &mut [f32],
+    grads: &[&[f32]],
+    lambdas: &[f64],
+    threads: usize,
+) {
+    assert_eq!(grads.len(), lambdas.len());
+    assert!(!grads.is_empty(), "no gradients");
+    for g in grads {
+        assert_eq!(g.len(), out.len());
+    }
+    let threads = effective_threads(threads, out.len());
+    if threads == 1 {
         return aggregate_into(out, grads, lambdas);
     }
     let chunk = (out.len() + threads - 1) / threads;
@@ -143,8 +191,25 @@ mod tests {
                 let mut mt = vec![0.0; n];
                 aggregate_into_mt(&mut mt, &refs, &lam, threads);
                 assert_close(&mt, &st, 1e-6);
+                let mut sp = vec![0.0; n];
+                aggregate_into_spawn(&mut sp, &refs, &lam, threads);
+                assert_close(&sp, &st, 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn effective_threads_clamps_sanely() {
+        // Below the cutoff: always single-threaded.
+        assert_eq!(effective_threads(8, MT_MIN_LEN - 1), 1);
+        assert_eq!(effective_threads(0, MT_MIN_LEN - 1), 1);
+        // At/above the cutoff: at least 1, never above the machine.
+        let cap = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        assert_eq!(effective_threads(0, MT_MIN_LEN), 1);
+        assert!(effective_threads(usize::MAX, 1 << 24) <= cap);
+        assert!(effective_threads(2, 1 << 24) >= 1);
     }
 
     #[test]

@@ -181,6 +181,10 @@ impl Adam {
         &self.m
     }
 
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+
     pub(crate) fn state_mut(&mut self) -> (&mut [f32], &mut [f32]) {
         (&mut self.m, &mut self.v)
     }

@@ -11,6 +11,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 /// One measured benchmark result.
 #[derive(Debug, Clone)]
 pub struct Measurement {
@@ -25,6 +27,17 @@ pub struct Measurement {
 impl Measurement {
     pub fn mean(&self) -> Duration {
         Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()));
+        o.set("iters", Json::Num(self.iters as f64));
+        o.set("mean_ns", Json::Num(self.mean_ns));
+        o.set("p50_ns", Json::Num(self.p50_ns));
+        o.set("p95_ns", Json::Num(self.p95_ns));
+        o.set("min_ns", Json::Num(self.min_ns));
+        o
     }
 }
 
@@ -97,6 +110,15 @@ impl Bench {
         &self.results
     }
 
+    pub fn group(&self) -> &str {
+        &self.group
+    }
+
+    /// Was this run in HBATCH_BENCH_QUICK smoke mode?
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
     /// Print the criterion-style report table.
     pub fn report(&self) {
         println!("\n== bench group: {} ==", self.group);
@@ -115,6 +137,45 @@ impl Bench {
             );
         }
     }
+}
+
+/// Machine-readable results for a whole bench suite: flat measurement
+/// list plus caller-supplied derived ratios. `benches/hotpath.rs` writes
+/// this to `BENCH_hotpath.json` so the ROADMAP perf trajectory has a
+/// durable artifact per run.
+pub fn suite_json(suite: &str, groups: &[&Bench], derived: Json) -> Json {
+    let mut o = Json::obj();
+    o.set("suite", Json::Str(suite.to_string()));
+    o.set(
+        "quick",
+        Json::Bool(groups.iter().any(|b| b.is_quick())),
+    );
+    // Thread-count series (mt8 etc.) are clamped to this machine cap —
+    // consumers need it to tell a real 8-thread run from a capped one.
+    o.set(
+        "available_parallelism",
+        Json::Num(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1) as f64,
+        ),
+    );
+    let results: Vec<Json> = groups
+        .iter()
+        .flat_map(|b| b.results().iter().map(Measurement::to_json))
+        .collect();
+    o.set("results", Json::Arr(results));
+    o.set("derived", derived);
+    o
+}
+
+/// Mean of a measurement by full name (`group/name`) across groups.
+pub fn find_mean_ns(groups: &[&Bench], full_name: &str) -> Option<f64> {
+    groups
+        .iter()
+        .flat_map(|b| b.results())
+        .find(|m| m.name == full_name)
+        .map(|m| m.mean_ns)
 }
 
 /// Human-format nanoseconds.
@@ -154,6 +215,29 @@ mod tests {
         let small = b.run("small", || (0..100u64).sum::<u64>()).mean_ns;
         let big = b.run("big", || (0..100_000u64).sum::<u64>()).mean_ns;
         assert!(big > small * 5.0, "big={big} small={small}");
+    }
+
+    #[test]
+    fn suite_json_flattens_groups_and_derives() {
+        std::env::set_var("HBATCH_BENCH_QUICK", "1");
+        let mut a = Bench::new("g1");
+        a.run("x", || 1u64 + 1);
+        let mut b = Bench::new("g2");
+        b.run("y", || 2u64 + 2);
+        let groups = [&a, &b];
+        assert!(find_mean_ns(&groups, "g1/x").is_some());
+        assert!(find_mean_ns(&groups, "g1/nope").is_none());
+        let mut derived = Json::obj();
+        derived.set("ratio", Json::Num(2.0));
+        let j = suite_json("test_suite", &groups, derived);
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.get("suite").as_str(), Some("test_suite"));
+        assert_eq!(parsed.get("results").as_arr().unwrap().len(), 2);
+        assert_eq!(
+            parsed.get("results").idx(0).get("name").as_str(),
+            Some("g1/x")
+        );
+        assert_eq!(parsed.get("derived").get("ratio").as_f64(), Some(2.0));
     }
 
     #[test]

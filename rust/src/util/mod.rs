@@ -4,12 +4,14 @@
 //! the usual ecosystem crates are reimplemented here at the size this
 //! project needs: [`json`] (serde_json), [`rng`] (rand), [`cli`] (clap),
 //! [`stats`] (streaming statistics), [`bench`] (criterion),
-//! [`proptest`] (property testing), [`csv`] (csv writer).
+//! [`proptest`] (property testing), [`csv`] (csv writer),
+//! [`pool`] (rayon-style scoped thread pool).
 
 pub mod bench;
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,452 @@
+//! Persistent worker thread pool (§Perf iteration 4).
+//!
+//! The PS hot path runs a memory-bound pass over parameter-sized vectors
+//! every iteration. Spawning OS threads per call (as the seed's
+//! `aggregate_into_mt` did via `std::thread::scope`) costs tens of
+//! microseconds of clone/teardown per thread per iteration — comparable
+//! to the pass itself for mid-sized models. This pool keeps long-lived
+//! workers parked on a condvar-backed queue and gives the hot path three
+//! dispatch shapes:
+//!
+//! - [`ThreadPool::run_sharded`]: split one `&mut [T]` into disjoint
+//!   contiguous shards and run a kernel on each — the shape of
+//!   λ-aggregation and the sharded fused optimizer kernels.
+//! - [`ThreadPool::run_tasks`]: a scoped fork-join over arbitrary
+//!   borrowing closures (used when several parallel `&mut` slices —
+//!   params + optimizer state — must be sharded together).
+//! - [`ThreadPool::submit`]: fire one task and get a [`JobHandle`] to
+//!   join later — the engine's batch-prefetch pipelining.
+//!
+//! The `run_*` entry points are *scoped*: they block until every
+//! dispatched task has finished, so borrows captured by tasks cannot
+//! expire first — that guarantee is what makes the internal lifetime
+//! erasure ([`erase`]) sound. [`ThreadPool::submit`] offers the same
+//! join via [`JobHandle`] but cannot stop safe code from leaking the
+//! handle, so it is an `unsafe fn` with that contract.
+//!
+//! Tasks must not dispatch onto the same pool they run on (the workers
+//! they would wait for may be occupied by their parents — deadlock).
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A dispatched task, lifetime-erased (see [`erase`]).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Task),
+    Shutdown,
+}
+
+/// Unbounded MPMC queue: `Mutex<VecDeque>` + condvar. mpsc's `Sender`
+/// is not usable from a shared `&'static` pool on older toolchains, and
+/// the hot path enqueues at most a handful of shards per pass, so the
+/// single lock is nowhere near contended.
+struct Queue {
+    q: Mutex<VecDeque<Msg>>,
+    cv: Condvar,
+}
+
+impl Queue {
+    fn new() -> Self {
+        Queue {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, m: Msg) {
+        self.q.lock().unwrap().push_back(m);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Msg {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(m) = q.pop_front() {
+                return m;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+/// Fork-join completion latch: counts dispatched tasks down to zero and
+/// records whether any of them panicked.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    poisoned: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch {
+            remaining: Mutex::new(n),
+            cv: Condvar::new(),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut n = self.remaining.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut n = self.remaining.lock().unwrap();
+        while *n > 0 {
+            n = self.cv.wait(n).unwrap();
+        }
+    }
+
+    fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+}
+
+/// Waits the latch even if the enclosing scope unwinds, so borrows held
+/// by in-flight tasks stay valid until the workers are done with them.
+struct WaitGuard<'l>(&'l Latch);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// Erase a task's borrow lifetime so it can cross the worker channel.
+///
+/// # Safety
+/// The caller must not let `'a` end before the task has finished
+/// executing. Every dispatch path in this module blocks on a [`Latch`]
+/// (directly, via [`WaitGuard`], or in [`JobHandle`]'s `Drop`) before
+/// the borrowed data can go out of scope.
+unsafe fn erase<'a>(t: Box<dyn FnOnce() + Send + 'a>) -> Task {
+    std::mem::transmute(t)
+}
+
+/// Wrap a task so worker threads survive its panic; the latch records it
+/// for the joining thread to re-raise.
+fn instrumented(t: Task, latch: Arc<Latch>) -> Task {
+    Box::new(move || {
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(t)).is_err() {
+            latch.poison();
+        }
+        latch.count_down();
+    })
+}
+
+/// Long-lived worker pool. Workers park on the queue between calls, so
+/// steady-state dispatch is one lock + one condvar wake per shard.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `threads` persistent workers (at least 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let queue = Arc::new(Queue::new());
+        let workers = (0..threads)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("hbatch-pool-{i}"))
+                    .spawn(move || loop {
+                        match q.pop() {
+                            Msg::Run(task) => task(),
+                            Msg::Shutdown => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { queue, workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run every task to completion before returning (fork-join). The
+    /// final task runs inline on the calling thread — with `shards ==
+    /// workers + 1` nobody idles. Panics in any task are re-raised here
+    /// after all tasks finish.
+    pub fn run_tasks<'a>(&self, mut tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        let Some(last) = tasks.pop() else { return };
+        if tasks.is_empty() {
+            return last();
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        for t in tasks {
+            // SAFETY: the WaitGuard below blocks (even on unwind) until
+            // every dispatched task has run, so `'a` outlives them.
+            let t = unsafe { erase(t) };
+            self.queue.push(Msg::Run(instrumented(t, Arc::clone(&latch))));
+        }
+        {
+            let _join = WaitGuard(&latch);
+            last();
+        }
+        if latch.is_poisoned() {
+            panic!("thread pool task panicked");
+        }
+    }
+
+    /// Split `data` into `shards` contiguous chunks and run
+    /// `f(shard_idx, global_start, shard)` on each in parallel.
+    /// `shards` is clamped to `data.len()`; tasks beyond the worker
+    /// count queue up (correct, just no extra parallelism).
+    pub fn run_sharded<T, F>(&self, data: &mut [T], shards: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        let n = data.len();
+        let shards = shards.max(1).min(n.max(1));
+        if shards == 1 {
+            return f(0, 0, data);
+        }
+        let chunk = (n + shards - 1) / shards;
+        let fr = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(i, shard)| {
+                Box::new(move || fr(i, i * chunk, shard)) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.run_tasks(tasks);
+    }
+
+    /// Dispatch one task; the returned handle joins it (in `wait()` or
+    /// in `Drop`). Used to overlap work with the calling thread (engine
+    /// batch prefetch).
+    ///
+    /// # Safety
+    /// The caller must let the returned handle join — normally or by
+    /// unwinding — before the borrows captured by `f` end. Leaking the
+    /// handle (`mem::forget`, `Box::leak`, reference cycles) defeats
+    /// the `Drop` join and leaves the worker executing `f` against
+    /// freed borrows; that is why this is not a safe fn (the classic
+    /// pre-1.0 `thread::scoped` hole). Prefer [`ThreadPool::run_tasks`]
+    /// / [`ThreadPool::run_sharded`], which block before returning.
+    pub unsafe fn submit<'a, F: FnOnce() + Send + 'a>(&self, f: F) -> JobHandle<'a> {
+        let latch = Arc::new(Latch::new(1));
+        let boxed: Box<dyn FnOnce() + Send + 'a> = Box::new(f);
+        // SAFETY: the caller upholds that the handle joins before `'a`
+        // ends (this fn's contract).
+        let t = unsafe { erase(boxed) };
+        self.queue.push(Msg::Run(instrumented(t, Arc::clone(&latch))));
+        JobHandle {
+            latch,
+            joined: false,
+            _scope: PhantomData,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            self.queue.push(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Join handle for a [`ThreadPool::submit`] task. Must complete before
+/// the task's borrows end, so `Drop` blocks if `wait` was never called.
+pub struct JobHandle<'a> {
+    latch: Arc<Latch>,
+    joined: bool,
+    _scope: PhantomData<&'a mut &'a ()>,
+}
+
+impl JobHandle<'_> {
+    /// Block until the task finishes; re-raises its panic, if any.
+    pub fn wait(mut self) {
+        self.join();
+        if self.latch.is_poisoned() {
+            panic!("thread pool task panicked");
+        }
+    }
+
+    fn join(&mut self) {
+        if !self.joined {
+            self.latch.wait();
+            self.joined = true;
+        }
+    }
+}
+
+impl Drop for JobHandle<'_> {
+    fn drop(&mut self) {
+        // No panic propagation here: panicking in Drop during an unwind
+        // aborts. `wait()` is the loud path.
+        self.join();
+    }
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The process-wide pool the PS hot path dispatches onto, sized to the
+/// machine's available parallelism. Callers pick a *shard count* per
+/// call (e.g. `TrainOpts::pool_threads`); the worker count is fixed.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+/// Worker count for [`global`]: `available_parallelism`, min 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn run_tasks_executes_every_task() {
+        let pool = ThreadPool::new(3);
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..17)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_tasks(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 17);
+    }
+
+    #[test]
+    fn run_sharded_covers_disjoint_mut_shards() {
+        let pool = ThreadPool::new(4);
+        let mut data: Vec<u64> = (0..10_001).collect();
+        pool.run_sharded(&mut data, 4, |_, start, shard| {
+            for (i, x) in shard.iter_mut().enumerate() {
+                // Each element sees exactly its own global index.
+                assert_eq!(*x, (start + i) as u64);
+                *x *= 2;
+            }
+        });
+        assert!(data.iter().enumerate().all(|(i, &x)| x == 2 * i as u64));
+    }
+
+    #[test]
+    fn run_sharded_single_and_oversharded_edges() {
+        let pool = ThreadPool::new(2);
+        let mut tiny = vec![7u64; 3];
+        // More shards than elements: clamped, still correct.
+        pool.run_sharded(&mut tiny, 16, |_, _, s| {
+            for x in s {
+                *x += 1;
+            }
+        });
+        assert_eq!(tiny, vec![8, 8, 8]);
+        // Empty data degenerates to one call on the empty slice.
+        let mut empty: Vec<u64> = vec![];
+        pool.run_sharded(&mut empty, 4, |i, start, s| {
+            assert_eq!((i, start), (0, 0));
+            assert!(s.is_empty());
+        });
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_calls() {
+        let pool = ThreadPool::new(2);
+        let mut data = vec![0u64; 1000];
+        for _ in 0..100 {
+            pool.run_sharded(&mut data, 3, |_, _, s| {
+                for x in s {
+                    *x += 1;
+                }
+            });
+        }
+        assert!(data.iter().all(|&x| x == 100));
+    }
+
+    #[test]
+    fn submit_joins_before_borrow_ends() {
+        let pool = ThreadPool::new(2);
+        let mut slot: Option<Vec<u32>> = None;
+        {
+            let slot_ref = Mutex::new(&mut slot);
+            // SAFETY: the handle is waited before slot_ref drops.
+            let h = unsafe {
+                pool.submit(|| {
+                    **slot_ref.lock().unwrap() = Some(vec![1, 2, 3]);
+                })
+            };
+            h.wait();
+        }
+        assert_eq!(slot, Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn dropped_handle_still_joins() {
+        let pool = ThreadPool::new(1);
+        let done = AtomicBool::new(false);
+        {
+            // SAFETY: the handle drops (and joins) before `done` does.
+            let _h = unsafe {
+                pool.submit(|| {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    done.store(true, Ordering::SeqCst);
+                })
+            };
+            // _h dropped here without wait(): Drop must block.
+        }
+        assert!(done.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("boom")),
+                Box::new(|| {}),
+            ];
+            pool.run_tasks(tasks);
+        }));
+        assert!(caught.is_err(), "panic must re-raise on the caller");
+        // Workers caught the panic and are still serving.
+        let mut data = vec![1u64; 100];
+        pool.run_sharded(&mut data, 2, |_, _, s| {
+            for x in s {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = global() as *const ThreadPool;
+        let b = global() as *const ThreadPool;
+        assert_eq!(a, b);
+        assert!(global().threads() >= 1);
+        assert_eq!(global().threads(), default_threads());
+    }
+}

@@ -99,6 +99,29 @@ fn info_lists_models() {
 }
 
 #[test]
+fn train_exercises_pool_eval_and_prefetch_flags() {
+    // Needs built artifacts (like engine_integration). Exercises the
+    // §Perf iteration 4 knobs end to end from the CLI.
+    let out = run_ok(&[
+        "train",
+        "--model",
+        "mlp",
+        "--steps",
+        "6",
+        "--eval-every",
+        "3",
+        "--pool-threads",
+        "2",
+        "--no-prefetch",
+        "--cores",
+        "4,8",
+    ]);
+    assert!(out.contains("steps: 6"), "missing step count in: {out}");
+    // Evals at steps 3 and 6.
+    assert!(out.contains("evals: 2"), "missing eval summary in: {out}");
+}
+
+#[test]
 fn bad_flag_values_fail_cleanly() {
     for args in [
         vec!["simulate", "--policy", "bogus"],

@@ -114,6 +114,107 @@ fn variable_batching_reduces_iteration_gap_in_real_engine() {
     );
 }
 
+fn run_mlp_eval(eval_every: u64, steps: u64) -> hetero_batch::metrics::RunReport {
+    let mut runtime = Runtime::open(artifacts_dir()).expect("make artifacts");
+    let mut cfg = ExperimentCfg::default();
+    cfg.workers = cpu_cluster(&[8, 8]);
+    cfg.policy = Policy::Uniform;
+    let opts = TrainOpts {
+        model: "mlp".into(),
+        policy: Policy::Uniform,
+        steps,
+        eval_every,
+        seed: 1,
+        ..TrainOpts::default()
+    };
+    // Shard 2 (= k) is the dedicated eval stream; shards 0..2 train.
+    let mut ds = data::for_model("mlp", 3, 1);
+    let mut engine = Engine::new(&mut runtime, cfg, opts, Slowdowns::none(2)).unwrap();
+    engine.run(ds.as_mut()).unwrap()
+}
+
+#[test]
+fn eval_every_records_periodic_evals() {
+    let r = run_mlp_eval(4, 10);
+    // Evals after steps 4 and 8.
+    assert_eq!(r.evals.len(), 2, "expected 2 evals, got {:?}", r.evals);
+    assert_eq!(r.evals[0].iter, 4);
+    assert_eq!(r.evals[1].iter, 8);
+    for e in &r.evals {
+        assert!(e.loss.is_finite());
+        assert!(e.metric.is_finite());
+    }
+    // Classification metric is accuracy in [0, 1].
+    assert!(r.evals.iter().all(|e| (0.0..=1.0).contains(&e.metric)));
+}
+
+#[test]
+fn eval_is_observation_only() {
+    // Evals draw from the dedicated shard, so enabling them must not
+    // change the training trajectory at all.
+    let with = run_mlp_eval(3, 9);
+    let without = run_mlp_eval(0, 9);
+    assert_eq!(with.evals.len(), 3);
+    assert!(without.evals.is_empty());
+    for (a, b) in with.losses.iter().zip(&without.losses) {
+        assert_eq!(a.2, b.2, "eval perturbed training at step {}", a.1);
+    }
+}
+
+fn run_with(prefetch: bool, pool_threads: usize, steps: u64) -> (hetero_batch::metrics::RunReport, f64) {
+    let cores = [4usize, 16];
+    let mut runtime = Runtime::open(artifacts_dir()).expect("make artifacts");
+    let mut cfg = ExperimentCfg::default();
+    cfg.workers = cpu_cluster(&cores);
+    cfg.policy = Policy::Uniform;
+    let opts = TrainOpts {
+        model: "mlp".into(),
+        policy: Policy::Uniform,
+        steps,
+        seed: 1,
+        prefetch,
+        pool_threads,
+        ..TrainOpts::default()
+    };
+    let mut ds = data::for_model("mlp", cores.len(), 1);
+    let mut engine =
+        Engine::new(&mut runtime, cfg, opts, Slowdowns::from_cores(&cores)).unwrap();
+    let t0 = std::time::Instant::now();
+    let r = engine.run(ds.as_mut()).unwrap();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+#[test]
+fn prefetch_is_bit_identical_and_not_slower() {
+    // Batch generation order is unchanged by prefetch, so the loss
+    // curves must match exactly; wall time must not regress (batch
+    // generation overlaps the PJRT step). Timing gets a generous noise
+    // margin — the hard claim is equality of numerics.
+    let (plain, t_plain) = run_with(false, 1, 25);
+    let (pre, t_pre) = run_with(true, 1, 25);
+    assert_eq!(plain.losses.len(), pre.losses.len());
+    for (a, b) in plain.losses.iter().zip(&pre.losses) {
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2, "prefetch changed numerics at step {}", a.1);
+    }
+    println!("round wall: prefetch {t_pre:.3}s vs plain {t_plain:.3}s");
+    assert!(
+        t_pre <= t_plain * 1.20,
+        "prefetch regressed wall time: {t_pre:.3}s vs {t_plain:.3}s"
+    );
+}
+
+#[test]
+fn sharded_optimizer_path_is_bit_identical() {
+    // pool_threads routes the leader update through the sharded fused
+    // kernels; numerics must match the single-threaded path exactly.
+    let (st, _) = run_with(true, 1, 15);
+    let (mt, _) = run_with(true, 4, 15);
+    for (a, b) in st.losses.iter().zip(&mt.losses) {
+        assert_eq!(a.2, b.2, "sharded optimizer diverged at step {}", a.1);
+    }
+}
+
 #[test]
 fn loss_target_stops_early() {
     let mut runtime = Runtime::open(artifacts_dir()).unwrap();

@@ -8,7 +8,14 @@
 
 use hetero_batch::controller::bucket::{quantize, quantize_alloc};
 use hetero_batch::controller::{static_alloc, ControllerCfg, DynamicBatcher};
-use hetero_batch::ps::{aggregate_into, lambdas_from_batches};
+use hetero_batch::ps::fused::{
+    fused_agg_adam, fused_agg_adam_mt, fused_agg_momentum, fused_agg_momentum_mt,
+    fused_agg_sgd, fused_agg_sgd_mt,
+};
+use hetero_batch::ps::{
+    aggregate_into, aggregate_into_mt, lambdas_from_batches, Adam, LrSchedule,
+    Momentum, Sgd,
+};
 use hetero_batch::util::proptest::{check, FnStrategy, Strategy, UsizeRange, VecOf};
 use hetero_batch::util::rng::Rng;
 
@@ -344,6 +351,140 @@ fn prop_controller_recovers_from_regime_change() {
         let share_err =
             (b[0] / bsum - xs[0] / xsum).abs() / (xs[0] / xsum);
         share_err < 0.25
+    });
+}
+
+// ---------------------------------------------------------------------
+// Sharded PS hot path (§Perf iteration 4): pool-sharded aggregation and
+// the sharded fused optimizer kernels must be elementwise equivalent to
+// the single-threaded paths — across random dims (including
+// non-multiples of the 8K tile and of the shard count), shard counts
+// 1–8, and multi-step optimizer-state evolution.
+
+const FUSED_TOL: f32 = 1e-6;
+
+fn close(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(&x, &y)| (x - y).abs() <= FUSED_TOL)
+}
+
+/// Random (dim, k, shards, steps, seed) fused-kernel scenario.
+fn fused_strategy() -> FnStrategy<impl Fn(&mut Rng) -> (usize, usize, usize, usize, u64)> {
+    FnStrategy(|rng: &mut Rng| {
+        // Dims span several 8192-element tiles; +1 below keeps hi > lo
+        // exclusive bounds valid and lands on odd sizes.
+        let d = rng.range_usize(1, 3 * 8192 + 70);
+        let k = rng.range_usize(1, 6);
+        let shards = rng.range_usize(1, 9);
+        let steps = rng.range_usize(1, 4);
+        (d, k, shards, steps, rng.next_u64())
+    })
+}
+
+fn random_problem(
+    d: usize,
+    k: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<Vec<f32>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let params = rng.normal_vec_f32(d);
+    let grads: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec_f32(d)).collect();
+    let batches: Vec<f64> = (0..k).map(|_| rng.range_f64(1.0, 256.0)).collect();
+    (params, grads, lambdas_from_batches(&batches))
+}
+
+#[test]
+fn prop_sharded_fused_sgd_matches_single_threaded() {
+    check("sharded fused sgd", 40, fused_strategy(), |c| {
+        let &(d, k, shards, steps, seed) = c;
+        let (params, grads, lambdas) = random_problem(d, k, seed);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let (mut p_st, mut p_mt) = (params.clone(), params);
+        let mut o_st = Sgd::new(LrSchedule::Constant(0.05));
+        let mut o_mt = Sgd::new(LrSchedule::Constant(0.05));
+        for _ in 0..steps {
+            fused_agg_sgd(&mut p_st, &refs, &lambdas, &mut o_st);
+            fused_agg_sgd_mt(&mut p_mt, &refs, &lambdas, &mut o_mt, shards);
+        }
+        close(&p_st, &p_mt)
+    });
+}
+
+#[test]
+fn prop_sharded_fused_momentum_matches_with_state() {
+    check("sharded fused momentum", 40, fused_strategy(), |c| {
+        let &(d, k, shards, steps, seed) = c;
+        let (params, grads, lambdas) = random_problem(d, k, seed);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let (mut p_st, mut p_mt) = (params.clone(), params);
+        let mut o_st = Momentum::new(LrSchedule::Constant(0.05), 0.9, d);
+        let mut o_mt = Momentum::new(LrSchedule::Constant(0.05), 0.9, d);
+        for _ in 0..steps {
+            fused_agg_momentum(&mut p_st, &refs, &lambdas, &mut o_st);
+            fused_agg_momentum_mt(&mut p_mt, &refs, &lambdas, &mut o_mt, shards);
+        }
+        close(&p_st, &p_mt) && close(o_st.velocity(), o_mt.velocity())
+    });
+}
+
+#[test]
+fn prop_sharded_fused_adam_matches_with_state() {
+    check("sharded fused adam", 40, fused_strategy(), |c| {
+        let &(d, k, shards, steps, seed) = c;
+        let (params, grads, lambdas) = random_problem(d, k, seed);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let (mut p_st, mut p_mt) = (params.clone(), params);
+        let mut o_st = Adam::new(LrSchedule::Constant(0.001), d);
+        let mut o_mt = Adam::new(LrSchedule::Constant(0.001), d);
+        for _ in 0..steps {
+            fused_agg_adam(&mut p_st, &refs, &lambdas, &mut o_st);
+            fused_agg_adam_mt(&mut p_mt, &refs, &lambdas, &mut o_mt, shards);
+        }
+        close(&p_st, &p_mt)
+            && close(o_st.m(), o_mt.m())
+            && close(o_st.v(), o_mt.v())
+    });
+}
+
+#[test]
+fn sharded_fused_adam_exact_at_tile_and_shard_boundaries() {
+    // Deterministic boundary sweep: dims exactly at / adjacent to the
+    // 8K tile, and a dim above the MT_MIN_LEN heuristic cutoff.
+    for &d in &[1usize, 2, 8191, 8192, 8193, 16384, 65_537] {
+        let (params, grads, lambdas) = random_problem(d, 3, d as u64);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mut p_st = params.clone();
+        let mut o_st = Adam::new(LrSchedule::Constant(0.001), d);
+        fused_agg_adam(&mut p_st, &refs, &lambdas, &mut o_st);
+        for shards in [1usize, 2, 3, 5, 8] {
+            let mut p_mt = params.clone();
+            let mut o_mt = Adam::new(LrSchedule::Constant(0.001), d);
+            fused_agg_adam_mt(&mut p_mt, &refs, &lambdas, &mut o_mt, shards);
+            assert!(
+                close(&p_st, &p_mt) && close(o_st.v(), o_mt.v()),
+                "divergence at d={d} shards={shards}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pool_aggregation_matches_reference() {
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let d = rng.range_usize(1, 200_000);
+        let k = rng.range_usize(1, 6);
+        let threads = rng.range_usize(1, 9);
+        (d, k, threads, rng.next_u64())
+    });
+    check("pool aggregation", 30, strat, |c| {
+        let &(d, k, threads, seed) = c;
+        let (_, grads, lambdas) = random_problem(d, k, seed);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mut st = vec![0.0f32; d];
+        let mut mt = vec![0.0f32; d];
+        aggregate_into(&mut st, &refs, &lambdas);
+        aggregate_into_mt(&mut mt, &refs, &lambdas, threads);
+        close(&st, &mt)
     });
 }
 

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 gate (see ROADMAP.md) + hot-path bench smoke.
+#
+#   build --release  →  test -q  →  quick aggregation-only hotpath bench
+#
+# The bench smoke runs with --agg-only (no PJRT artifacts needed) and
+# HBATCH_BENCH_QUICK=1 (short measurement windows); partial/quick runs
+# write BENCH_hotpath_quick.json so they never clobber the canonical
+# BENCH_hotpath.json, which only a full `cargo bench --bench hotpath`
+# (no flags) refreshes.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "tier1: cargo not on PATH — install the rust toolchain first" >&2
+    exit 1
+fi
+
+echo "== tier1: cargo build --release =="
+cargo build --release
+
+echo "== tier1: cargo test -q =="
+cargo test -q
+
+echo "== tier1: hotpath bench smoke (agg only, quick) =="
+HBATCH_BENCH_QUICK=1 cargo bench --bench hotpath -- --agg-only
+
+echo "tier1: OK"
