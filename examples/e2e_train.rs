@@ -21,11 +21,10 @@
 
 use std::io::Write;
 
-use hetero_batch::cluster::cpu_cluster;
-use hetero_batch::config::{ExperimentCfg, Policy};
-use hetero_batch::data;
-use hetero_batch::engine::{Engine, Slowdowns, TrainOpts};
+use hetero_batch::config::Policy;
+use hetero_batch::controller::ControllerCfg;
 use hetero_batch::runtime::Runtime;
+use hetero_batch::session::Session;
 use hetero_batch::util::csv::Table;
 
 fn main() -> anyhow::Result<()> {
@@ -38,10 +37,6 @@ fn main() -> anyhow::Result<()> {
 
     let mut runtime = Runtime::open("artifacts")?;
     let cores = [6usize, 10, 24]; // H-level 4 cluster
-    let mut cfg = ExperimentCfg::default();
-    cfg.workers = cpu_cluster(&cores);
-    cfg.policy = Policy::Dynamic;
-    cfg.controller.min_obs = 3;
 
     println!("== e2e: {model} on a (6,10,24)-core heterogeneous cluster ==");
     let m = runtime.model(&model)?;
@@ -52,23 +47,20 @@ fn main() -> anyhow::Result<()> {
         m.buckets
     );
 
-    let opts = TrainOpts {
-        model: model.clone(),
-        policy: Policy::Dynamic,
-        steps,
-        seed: 0,
-        pool_threads: 8,
-        ..TrainOpts::default()
-    };
-    let mut dataset = data::for_model(&model, cores.len(), 0);
-    let mut engine = Engine::new(
-        &mut runtime,
-        cfg,
-        opts,
-        Slowdowns::from_cores(&cores),
-    )?;
     let t0 = std::time::Instant::now();
-    let report = engine.run(dataset.as_mut())?;
+    let report = Session::builder()
+        .model(&model)
+        .cores(&cores)
+        .policy(Policy::Dynamic)
+        .controller(ControllerCfg {
+            min_obs: 3,
+            ..ControllerCfg::default()
+        })
+        .steps(steps)
+        .seed(0)
+        .pool_threads(8)
+        .build_real(&mut runtime)?
+        .run()?;
     let wall = t0.elapsed();
 
     // Loss curve.

@@ -6,22 +6,25 @@
 //! cargo run --release --example mixed_gpu_cpu
 //! ```
 
-use hetero_batch::cluster::{cloud_gpu_cluster, mixed_gpu_cpu_cluster};
-use hetero_batch::config::{ExperimentCfg, Policy};
-use hetero_batch::simulator::Simulator;
+use hetero_batch::cluster::{cloud_gpu_cluster, mixed_gpu_cpu_cluster, WorkerSpec};
+use hetero_batch::config::Policy;
+use hetero_batch::session::Session;
 
 fn run(
     workload: &str,
-    workers: Vec<hetero_batch::cluster::WorkerSpec>,
+    workers: Vec<WorkerSpec>,
     policy: Policy,
 ) -> hetero_batch::metrics::RunReport {
-    let mut cfg = ExperimentCfg::default();
-    cfg.workload = workload.into();
-    cfg.workers = workers;
-    cfg.policy = policy;
-    cfg.max_iters = 0; // run to the workload's accuracy target
-    cfg.adjust_cost_s = 20.0;
-    Simulator::new(cfg).run()
+    Session::builder()
+        .model(workload)
+        .workers(workers)
+        .policy(policy)
+        .steps(0) // run to the workload's accuracy target
+        .adjust_cost(20.0)
+        .build_sim()
+        .expect("mixed-device scenario")
+        .run()
+        .expect("mixed-device run")
 }
 
 fn main() {

@@ -8,42 +8,36 @@
 //! has 4x the capacity of worker 0, and trains the MNIST-stand-in MLP for
 //! 40 BSP rounds under the paper's dynamic batching policy.  Watch the
 //! controller move batch share to the fast worker while the loss falls.
+//!
+//! The same `Session::builder()` drives the virtual-time simulator — swap
+//! `build_real(&mut runtime)` for `build_sim()` (and `model("mnist")`) to
+//! rerun this experiment without artifacts.
 
-use hetero_batch::cluster::cpu_cluster;
-use hetero_batch::config::{ExperimentCfg, Policy};
-use hetero_batch::data;
-use hetero_batch::engine::{Engine, Slowdowns, TrainOpts};
+use hetero_batch::config::Policy;
+use hetero_batch::controller::ControllerCfg;
 use hetero_batch::runtime::Runtime;
+use hetero_batch::session::Session;
 
 fn main() -> anyhow::Result<()> {
     // 1. The runtime loads artifacts/manifest.json and lazily compiles one
     //    executable per (model, batch-bucket) on the PJRT CPU client.
     let mut runtime = Runtime::open("artifacts")?;
 
-    // 2. A heterogeneous cluster: 4-core and 16-core workers. Both run on
-    //    this machine; the capacity difference is injected virtually.
+    // 2–3. A heterogeneous cluster — 4-core and 16-core workers, capacity
+    //    difference injected virtually — trained through one session.
     let cores = [4usize, 16];
-    let mut cfg = ExperimentCfg::default();
-    cfg.workers = cpu_cluster(&cores);
-    cfg.policy = Policy::Dynamic;
-    cfg.controller.min_obs = 3;
-
-    // 3. Train.
-    let opts = TrainOpts {
-        model: "mlp".into(),
-        policy: Policy::Dynamic,
-        steps: 40,
-        seed: 0,
-        ..TrainOpts::default()
-    };
-    let mut dataset = data::for_model("mlp", cores.len(), 0);
-    let mut engine = Engine::new(
-        &mut runtime,
-        cfg,
-        opts,
-        Slowdowns::from_cores(&cores),
-    )?;
-    let report = engine.run(dataset.as_mut())?;
+    let report = Session::builder()
+        .model("mlp")
+        .cores(&cores)
+        .policy(Policy::Dynamic)
+        .controller(ControllerCfg {
+            min_obs: 3,
+            ..ControllerCfg::default()
+        })
+        .steps(40)
+        .seed(0)
+        .build_real(&mut runtime)?
+        .run()?;
 
     // 4. Results.
     println!("== quickstart: dynamic batching on a 4x-heterogeneous cluster ==");

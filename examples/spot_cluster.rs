@@ -10,23 +10,17 @@
 //! closed-loop controller: open-loop static batching fixes its split at
 //! t=0 and cannot follow capacity changes; the proportional controller
 //! re-balances after every interference burst / preemption recovery.
+//! (The same traces can be attached to a real run — `build_real` — where
+//! they integrate over measured PJRT compute; see
+//! `tests/engine_integration.rs`.)
 
-use hetero_batch::cluster::cpu_cluster;
-use hetero_batch::config::{ExperimentCfg, Policy};
-use hetero_batch::simulator::Simulator;
+use hetero_batch::config::Policy;
+use hetero_batch::session::Session;
 use hetero_batch::trace::{AvailTrace, ClusterTraces};
 use hetero_batch::util::rng::Rng;
 
 fn scenario(policy: Policy, seed: u64) -> hetero_batch::metrics::RunReport {
     // 3 equal spot VMs — heterogeneity here is purely *dynamic*.
-    let mut cfg = ExperimentCfg::default();
-    cfg.workload = "resnet".into();
-    cfg.workers = cpu_cluster(&[13, 13, 13]);
-    cfg.policy = policy;
-    cfg.max_iters = 4_000;
-    cfg.adjust_cost_s = 10.0;
-    cfg.seed = seed;
-
     // Worker 0: heavy colocation interference (drops to 35% capacity).
     // Worker 1: overcommitment epochs (60–80%).
     // Worker 2: one spot preemption at ~20 min, back 2 min later.
@@ -38,7 +32,18 @@ fn scenario(policy: Policy, seed: u64) -> hetero_batch::metrics::RunReport {
             AvailTrace::spot(40_000.0, 1_200.0, 120.0, &mut rng),
         ],
     };
-    Simulator::new(cfg).with_traces(traces).run()
+    Session::builder()
+        .model("resnet")
+        .cores(&[13, 13, 13])
+        .policy(policy)
+        .steps(4_000)
+        .adjust_cost(10.0)
+        .seed(seed)
+        .traces(traces)
+        .build_sim()
+        .expect("spot scenario")
+        .run()
+        .expect("spot run")
 }
 
 fn main() {

@@ -267,23 +267,37 @@ fn derived_ratios(groups: &[&Bench]) -> Json {
 fn main() {
     let agg_only = std::env::args().any(|a| a == "--agg-only");
     let mut groups: Vec<Bench> = Vec::new();
+    // A full run must include every group: if the artifact-dependent
+    // benches are skipped (no PJRT artifacts on this machine), the run
+    // is *partial* and must not masquerade as the canonical record.
+    let mut skipped_artifact_groups = false;
     groups.push(bench_aggregation());
     groups.push(bench_optimizers());
     if !agg_only {
-        if let Some(b) = bench_agg_xla_vs_rust() {
-            groups.push(b);
+        match bench_agg_xla_vs_rust() {
+            Some(b) => groups.push(b),
+            None => skipped_artifact_groups = true,
         }
         groups.push(bench_controller());
         groups.push(bench_datagen());
-        if let Some(b) = bench_train_steps() {
-            groups.push(b);
+        match bench_train_steps() {
+            Some(b) => groups.push(b),
+            None => skipped_artifact_groups = true,
         }
+    }
+    if skipped_artifact_groups {
+        println!(
+            "\nNOTE: PJRT artifact benches skipped (run `python3 \
+             python/compile/aot.py --out-dir rust/artifacts` first) — \
+             writing the quick/partial file, not the canonical one"
+        );
     }
     let refs: Vec<&Bench> = groups.iter().collect();
     let json = suite_json("hotpath", &refs, derived_ratios(&refs));
     // Quick/partial runs must not clobber the canonical perf-trajectory
     // artifact (full windows, all groups) with 8-sample smoke data.
-    let partial = agg_only || refs.iter().any(|b| b.is_quick());
+    let partial =
+        agg_only || skipped_artifact_groups || refs.iter().any(|b| b.is_quick());
     let fname = if partial {
         "BENCH_hotpath_quick.json"
     } else {

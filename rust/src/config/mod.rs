@@ -1,14 +1,9 @@
-//! Typed experiment configuration.
+//! Batching-policy selection (the paper's three contenders).
 //!
-//! An experiment = workload + cluster + batching policy + sync mode +
-//! controller settings + run budget.  Configs parse from JSON files (see
-//! `examples/configs/`) and/or CLI flags; every field has a sane default
-//! so `hbatch simulate --workload resnet --cores 9,12,18` just works.
-
-use crate::cluster::{cpu_cluster, GpuModel, WorkerSpec};
-use crate::controller::ControllerCfg;
-use crate::sync::SyncMode;
-use crate::util::json::Json;
+//! Run configuration lives in [`crate::session::SessionBuilder`] — one
+//! builder for simulated and real sessions, JSON-loadable (see
+//! `SessionBuilder::from_json`); this module keeps only the policy enum
+//! it selects between.
 
 /// Which batch-allocation policy to run (the paper's three contenders).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,171 +35,9 @@ impl Policy {
     }
 }
 
-/// Full experiment description.
-#[derive(Debug, Clone)]
-pub struct ExperimentCfg {
-    /// Workload profile name (resnet | mnist | linreg | transformer) for
-    /// simulation; registry model name for real execution.
-    pub workload: String,
-    pub workers: Vec<WorkerSpec>,
-    pub policy: Policy,
-    pub sync: SyncMode,
-    pub controller: ControllerCfg,
-    /// Reference per-worker batch b0 (0 ⇒ workload default).
-    pub b0: usize,
-    /// Cost (seconds) of applying a batch readjustment (TF kill-restart /
-    /// executable swap).
-    pub adjust_cost_s: f64,
-    /// Iteration-time noise sigma (lognormal).
-    pub noise_sigma: f64,
-    /// Stop after this many global iterations (0 ⇒ run to target).
-    pub max_iters: u64,
-    pub seed: u64,
-}
-
-impl Default for ExperimentCfg {
-    fn default() -> Self {
-        ExperimentCfg {
-            workload: "resnet".into(),
-            workers: cpu_cluster(&[9, 12, 18]),
-            policy: Policy::Dynamic,
-            sync: SyncMode::Bsp,
-            controller: ControllerCfg::default(),
-            b0: 0,
-            adjust_cost_s: 30.0, // paper: TF terminate+restart is expensive
-            noise_sigma: 0.06,
-            max_iters: 0,
-            seed: 0,
-        }
-    }
-}
-
-impl ExperimentCfg {
-    /// Parse worker list from JSON: `[{"cpu": 9}, {"gpu": "P100"}]`.
-    pub fn workers_from_json(arr: &Json) -> Result<Vec<WorkerSpec>, String> {
-        let items = arr.as_arr().ok_or("workers must be an array")?;
-        let mut out = Vec::new();
-        for (i, item) in items.iter().enumerate() {
-            if let Some(c) = item.get("cpu").as_usize() {
-                out.push(WorkerSpec::cpu(i, c));
-            } else if let Some(g) = item.get("gpu").as_str() {
-                let model = match g {
-                    "P100" => GpuModel::P100,
-                    "T4" => GpuModel::T4,
-                    "P4" => GpuModel::P4,
-                    _ => return Err(format!("unknown gpu model {g:?}")),
-                };
-                out.push(WorkerSpec::gpu(i, model));
-            } else {
-                return Err(format!("worker {i}: need {{\"cpu\": n}} or {{\"gpu\": name}}"));
-            }
-        }
-        if out.is_empty() {
-            return Err("empty worker list".into());
-        }
-        Ok(out)
-    }
-
-    /// Load overrides from a JSON object (missing keys keep defaults).
-    pub fn from_json(j: &Json) -> Result<ExperimentCfg, String> {
-        let mut cfg = ExperimentCfg::default();
-        if let Some(w) = j.get("workload").as_str() {
-            cfg.workload = w.to_string();
-        }
-        if !j.get("workers").is_null() {
-            cfg.workers = Self::workers_from_json(j.get("workers"))?;
-        }
-        if let Some(p) = j.get("policy").as_str() {
-            cfg.policy = Policy::parse(p).ok_or(format!("bad policy {p:?}"))?;
-        }
-        if let Some(s) = j.get("sync").as_str() {
-            cfg.sync = SyncMode::parse(s).ok_or(format!("bad sync {s:?}"))?;
-        }
-        if let Some(b) = j.get("b0").as_usize() {
-            cfg.b0 = b;
-        }
-        if let Some(c) = j.get("adjust_cost_s").as_f64() {
-            cfg.adjust_cost_s = c;
-        }
-        if let Some(n) = j.get("noise_sigma").as_f64() {
-            cfg.noise_sigma = n;
-        }
-        if let Some(m) = j.get("max_iters").as_usize() {
-            cfg.max_iters = m as u64;
-        }
-        if let Some(s) = j.get("seed").as_usize() {
-            cfg.seed = s as u64;
-        }
-        let c = j.get("controller");
-        if !c.is_null() {
-            if let Some(d) = c.get("deadband").as_f64() {
-                cfg.controller.deadband = d;
-            }
-            if let Some(a) = c.get("ewma_alpha").as_f64() {
-                cfg.controller.ewma_alpha = a;
-            }
-            if let Some(m) = c.get("min_obs").as_usize() {
-                cfg.controller.min_obs = m;
-            }
-            if let Some(b) = c.get("b_min").as_f64() {
-                cfg.controller.b_min = b;
-            }
-            if let Some(b) = c.get("b_max").as_f64() {
-                cfg.controller.b_max = b;
-            }
-            if let Some(b) = c.get("adaptive_bmax").as_bool() {
-                cfg.controller.adaptive_bmax = b;
-            }
-            if let Some(b) = c.get("conserve_global").as_bool() {
-                cfg.controller.conserve_global = b;
-            }
-        }
-        cfg.validate()?;
-        Ok(cfg)
-    }
-
-    pub fn from_json_str(s: &str) -> Result<ExperimentCfg, String> {
-        let j = Json::parse(s).map_err(|e| e.to_string())?;
-        Self::from_json(&j)
-    }
-
-    pub fn from_file(path: &str) -> Result<ExperimentCfg, String> {
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| format!("reading {path}: {e}"))?;
-        Self::from_json_str(&text)
-    }
-
-    pub fn validate(&self) -> Result<(), String> {
-        if self.workers.is_empty() {
-            return Err("no workers".into());
-        }
-        if self.controller.deadband < 0.0 || self.controller.deadband >= 1.0 {
-            return Err(format!("deadband {} out of [0,1)", self.controller.deadband));
-        }
-        if self.controller.b_min < 1.0 || self.controller.b_min > self.controller.b_max {
-            return Err("b_min must be in [1, b_max]".into());
-        }
-        if self.adjust_cost_s < 0.0 || self.noise_sigma < 0.0 {
-            return Err("costs/noise must be non-negative".into());
-        }
-        Ok(())
-    }
-
-    /// Effective b0: explicit or the workload profile's default.
-    pub fn effective_b0(&self) -> usize {
-        if self.b0 > 0 {
-            return self.b0;
-        }
-        crate::cluster::WorkloadProfile::by_name(&self.workload)
-            .map(|w| w.b0)
-            .unwrap_or(64)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::DeviceKind;
 
     #[test]
     fn policy_parse() {
@@ -214,62 +47,9 @@ mod tests {
     }
 
     #[test]
-    fn defaults_are_valid() {
-        assert!(ExperimentCfg::default().validate().is_ok());
-    }
-
-    #[test]
-    fn parse_full_config() {
-        let src = r#"{
-            "workload": "mnist",
-            "workers": [{"cpu": 4}, {"cpu": 16}, {"gpu": "T4"}],
-            "policy": "static",
-            "sync": "ssp:3",
-            "b0": 100,
-            "adjust_cost_s": 5.0,
-            "controller": {"deadband": 0.1, "b_min": 2, "b_max": 512},
-            "seed": 9
-        }"#;
-        let cfg = ExperimentCfg::from_json_str(src).unwrap();
-        assert_eq!(cfg.workload, "mnist");
-        assert_eq!(cfg.workers.len(), 3);
-        assert_eq!(cfg.workers[1].device, DeviceKind::Cpu { cores: 16 });
-        assert!(matches!(cfg.workers[2].device, DeviceKind::Gpu { .. }));
-        assert_eq!(cfg.policy, Policy::Static);
-        assert_eq!(cfg.sync, SyncMode::Ssp { bound: 3 });
-        assert_eq!(cfg.b0, 100);
-        assert_eq!(cfg.controller.deadband, 0.1);
-        assert_eq!(cfg.seed, 9);
-    }
-
-    #[test]
-    fn missing_keys_keep_defaults() {
-        let cfg = ExperimentCfg::from_json_str(r#"{"workload": "linreg"}"#).unwrap();
-        assert_eq!(cfg.workload, "linreg");
-        assert_eq!(cfg.policy, Policy::Dynamic);
-        assert_eq!(cfg.workers.len(), 3);
-    }
-
-    #[test]
-    fn bad_configs_rejected() {
-        assert!(ExperimentCfg::from_json_str(r#"{"policy": "bogus"}"#).is_err());
-        assert!(ExperimentCfg::from_json_str(r#"{"sync": "bogus"}"#).is_err());
-        assert!(
-            ExperimentCfg::from_json_str(r#"{"workers": [{"gpu": "H100"}]}"#).is_err()
-        );
-        assert!(ExperimentCfg::from_json_str(r#"{"workers": []}"#).is_err());
-        assert!(ExperimentCfg::from_json_str(
-            r#"{"controller": {"deadband": 2.0}}"#
-        )
-        .is_err());
-    }
-
-    #[test]
-    fn effective_b0_falls_back_to_profile() {
-        let mut cfg = ExperimentCfg::default();
-        cfg.workload = "mnist".into();
-        assert_eq!(cfg.effective_b0(), 100);
-        cfg.b0 = 7;
-        assert_eq!(cfg.effective_b0(), 7);
+    fn labels_round_trip() {
+        for p in [Policy::Uniform, Policy::Static, Policy::Dynamic] {
+            assert_eq!(Policy::parse(p.label()), Some(p));
+        }
     }
 }

@@ -11,27 +11,31 @@ use crate::cluster::{
     cloud_gpu_cluster, cpu_cluster, hlevel_split, mixed_gpu_cpu_cluster,
     CapacityModel, DeviceKind, GpuModel, WorkloadProfile,
 };
-use crate::config::{ExperimentCfg, Policy};
+use crate::config::Policy;
 use crate::controller::{ControllerCfg, DynamicBatcher};
-use crate::simulator::Simulator;
+use crate::metrics::RunReport;
+use crate::session::{Session, SessionBuilder};
 use crate::sync::SyncMode;
 use crate::util::csv::Table;
 use crate::util::stats::Histogram;
 
-fn cfg_for(
+fn sim(
     workload: &str,
     cores: &[usize],
     policy: Policy,
     max_iters: u64,
     seed: u64,
-) -> ExperimentCfg {
-    let mut cfg = ExperimentCfg::default();
-    cfg.workload = workload.into();
-    cfg.workers = cpu_cluster(cores);
-    cfg.policy = policy;
-    cfg.max_iters = max_iters;
-    cfg.seed = seed;
-    cfg
+) -> SessionBuilder {
+    Session::builder()
+        .model(workload)
+        .workers(cpu_cluster(cores))
+        .policy(policy)
+        .steps(max_iters)
+        .seed(seed)
+}
+
+fn run(builder: SessionBuilder) -> RunReport {
+    builder.build_sim().expect("figure config").run().expect("figure run")
 }
 
 /// Figures that measure *time-to-accuracy* run to each workload's full
@@ -47,24 +51,10 @@ pub const TO_TARGET: u64 = 0;
 pub fn fig1(seed: u64) -> Table {
     let mut t = Table::new(&["workload", "hlevel", "slowdown_vs_homogeneous"]);
     for workload in ["resnet", "mnist", "linreg"] {
-        let homo = Simulator::new(cfg_for(
-            workload,
-            &[13, 13, 13],
-            Policy::Uniform,
-            TO_TARGET,
-            seed,
-        ))
-        .run();
+        let homo = run(sim(workload, &[13, 13, 13], Policy::Uniform, TO_TARGET, seed));
         for h in [2.0, 6.0, 10.0] {
             let cores = hlevel_split(39, 3, h).expect("split");
-            let hetero = Simulator::new(cfg_for(
-                workload,
-                &cores,
-                Policy::Uniform,
-                TO_TARGET,
-                seed,
-            ))
-            .run();
+            let hetero = run(sim(workload, &cores, Policy::Uniform, TO_TARGET, seed));
             let slowdown = hetero.total_time / homo.total_time;
             t.rowf(&[&workload, &h, &format!("{slowdown:.2}")]);
         }
@@ -82,8 +72,7 @@ pub fn fig2(seed: u64) -> Table {
         "policy", "worker", "iter", "start_s", "duration_s", "wait_s",
     ]);
     for policy in [Policy::Uniform, Policy::Static] {
-        let cfg = cfg_for("mnist", &[4, 12], policy, 6, seed);
-        let r = Simulator::new(cfg).run();
+        let r = run(sim("mnist", &[4, 12], policy, 6, seed));
         for rec in &r.iters {
             t.rowf(&[
                 &policy.label(),
@@ -107,8 +96,7 @@ pub fn fig3(seed: u64) -> (Table, Vec<f64>) {
     let mut t = Table::new(&["policy", "worker", "bin_center_s", "freq"]);
     let mut cvs = Vec::new();
     for policy in [Policy::Uniform, Policy::Static] {
-        let cfg = cfg_for("resnet", &[3, 5, 12], policy, 500, seed);
-        let r = Simulator::new(cfg).run();
+        let r = run(sim("resnet", &[3, 5, 12], policy, 500, seed));
         // Common range across workers for comparable bins.
         let all: Vec<f64> = r.iters.iter().map(|i| i.duration).collect();
         let lo = all.iter().cloned().fold(f64::MAX, f64::min) * 0.9;
@@ -218,22 +206,8 @@ pub fn fig6(seed: u64) -> Table {
     for workload in ["resnet", "mnist", "linreg"] {
         for &h in &crate::cluster::hlevel::PAPER_HLEVELS {
             let cores = hlevel_split(39, 3, h).expect("split");
-            let u = Simulator::new(cfg_for(
-                workload,
-                &cores,
-                Policy::Uniform,
-                TO_TARGET,
-                seed,
-            ))
-            .run();
-            let v = Simulator::new(cfg_for(
-                workload,
-                &cores,
-                Policy::Static,
-                TO_TARGET,
-                seed,
-            ))
-            .run();
+            let u = run(sim(workload, &cores, Policy::Uniform, TO_TARGET, seed));
+            let v = run(sim(workload, &cores, Policy::Static, TO_TARGET, seed));
             t.rowf(&[
                 &workload,
                 &h,
@@ -257,14 +231,13 @@ pub fn fig7a(seed: u64) -> Table {
     for workload in ["resnet", "mnist"] {
         let mut base = 0.0;
         for policy in [Policy::Uniform, Policy::Static, Policy::Dynamic] {
-            let mut cfg = ExperimentCfg::default();
-            cfg.workload = workload.into();
-            cfg.workers = mixed_gpu_cpu_cluster();
-            cfg.policy = policy;
-            cfg.max_iters = TO_TARGET;
-            cfg.seed = seed;
-            cfg.adjust_cost_s = 20.0;
-            let r = Simulator::new(cfg).run();
+            let r = run(Session::builder()
+                .model(workload)
+                .workers(mixed_gpu_cpu_cluster())
+                .policy(policy)
+                .steps(TO_TARGET)
+                .seed(seed)
+                .adjust_cost(20.0));
             if policy == Policy::Uniform {
                 base = r.total_time;
             }
@@ -285,13 +258,12 @@ pub fn fig7_cloud(seed: u64) -> Table {
     let mut t = Table::new(&["policy", "time_s", "speedup_vs_uniform"]);
     let mut base = 0.0;
     for policy in [Policy::Uniform, Policy::Static] {
-        let mut cfg = ExperimentCfg::default();
-        cfg.workload = "resnet".into();
-        cfg.workers = cloud_gpu_cluster();
-        cfg.policy = policy;
-        cfg.max_iters = TO_TARGET;
-        cfg.seed = seed;
-        let r = Simulator::new(cfg).run();
+        let r = run(Session::builder()
+            .model("resnet")
+            .workers(cloud_gpu_cluster())
+            .policy(policy)
+            .steps(TO_TARGET)
+            .seed(seed));
         if policy == Policy::Uniform {
             base = r.total_time;
         }
@@ -315,12 +287,10 @@ pub fn fig_asp(seed: u64) -> Table {
     for sync in [SyncMode::Bsp, SyncMode::Asp] {
         let mut base = 0.0;
         for policy in [Policy::Uniform, Policy::Static] {
-            let mut cfg = cfg_for("mnist", &[3, 16, 20], policy, 0, seed);
-            cfg.sync = sync;
-            cfg.max_iters = 0;
-            let mut sim = Simulator::new(cfg);
-            sim.model.workload.iters_to_target = 2_000;
-            let r = sim.run();
+            // Run to a shrunk accuracy target so the sweep stays fast.
+            let r = run(sim("mnist", &[3, 16, 20], policy, 0, seed)
+                .sync(sync)
+                .target_iters(2_000));
             if policy == Policy::Uniform {
                 base = r.total_time;
             }
@@ -358,14 +328,15 @@ pub fn fig_buckets(seed: u64) -> Table {
     let mut base = 0.0;
     for (name, grid) in grids {
         // Simulate with the grid applied through a wrapper controller.
-        let cfg = cfg_for("resnet", &[3, 12, 24], Policy::Dynamic, 2_000, seed);
-        let mut sim = Simulator::new(cfg);
+        let builder = sim("resnet", &[3, 12, 24], Policy::Dynamic, 2_000, seed);
         // Approximate grid effect: quantize the static initial allocation
         // and disable further adjustment for coarse grids via deadband.
         let r = if let Some(g) = grid {
             // Custom run: quantize controller outputs each adjustment.
-            sim.cfg.controller.deadband = 0.05;
-            let mut report = sim.run();
+            let mut report = run(builder.controller(ControllerCfg {
+                deadband: 0.05,
+                ..ControllerCfg::default()
+            }));
             // Post-hoc: apply quantization error as extra imbalance.
             let err: f64 = report
                 .final_batches()
@@ -381,7 +352,7 @@ pub fn fig_buckets(seed: u64) -> Table {
             report.total_time *= 1.0 + err;
             report
         } else {
-            sim.run()
+            run(builder)
         };
         if base == 0.0 {
             base = r.total_time;

@@ -10,23 +10,29 @@
 //! BSP stragglers disappear — lives in [`controller`].  Everything it
 //! needs to run as a real system is built here too:
 //!
+//! - [`session`]: the unified training-loop API — one [`Session`] loop
+//!   owns policy selection, controller observe/adjust, bucket
+//!   quantization, BSP/ASP/SSP gating, slowdown/trace injection, and
+//!   report assembly, over pluggable execution [`session::Backend`]s:
+//!   [`session::SimBackend`] (virtual-time capacity model regenerating
+//!   the paper's figures at testbed scale) and [`session::RealBackend`]
+//!   (leader + workers over the PJRT runtime — the "it actually trains"
+//!   path).  Build either via [`SessionBuilder`].
 //! - [`runtime`]: PJRT client executing AOT-compiled JAX/Pallas train
 //!   steps (HLO text artifacts, one per batch-size bucket).
 //! - [`ps`]: the parameter server — λ-weighted gradient aggregation
 //!   (paper Eq. 2–3) and optimizers (SGD / momentum / Adam).
-//! - [`sync`]: BSP / ASP / SSP synchronization engines.
+//! - [`sync`]: BSP / ASP / SSP synchronization accounting, shared by
+//!   both backends through the session loop.
 //! - [`cluster`] + [`trace`]: heterogeneous worker capacity models
 //!   (Amdahl scaling, throughput-vs-batch curves — paper Fig. 5) and
-//!   time-varying availability traces (interference, spot preemptions).
-//! - [`simulator`]: virtual-time discrete-event training simulator used
-//!   to regenerate the paper's figures at testbed scale.
-//! - [`engine`]: the real-execution training loop (leader + worker
-//!   threads over the PJRT runtime).
+//!   time-varying availability traces (interference, spot preemptions)
+//!   that drive simulated *and* real runs.
 //! - [`data`], [`metrics`], [`config`], [`figures`], [`util`]:
-//!   synthetic datasets, measurement, typed configs, figure harnesses,
-//!   and std-only substrates (JSON, RNG, CLI, stats, bench, proptest —
-//!   this build is fully offline, so no external crates besides `xla`
-//!   and `anyhow`).
+//!   synthetic datasets, measurement, policy selection, figure
+//!   harnesses, and std-only substrates (JSON, RNG, CLI, stats, bench,
+//!   proptest — this build is fully offline, so no external crates
+//!   besides `xla` and `anyhow`).
 //!
 //! See `DESIGN.md` (repo root) for the paper→repo mapping and the
 //! experiment index, and `EXPERIMENTS.md` for the recorded
@@ -36,12 +42,16 @@ pub mod cluster;
 pub mod config;
 pub mod controller;
 pub mod data;
-pub mod engine;
 pub mod figures;
 pub mod metrics;
 pub mod ps;
 pub mod runtime;
-pub mod simulator;
+pub mod session;
 pub mod sync;
 pub mod trace;
 pub mod util;
+
+pub use config::Policy;
+pub use session::{
+    Backend, RealBackend, Session, SessionBuilder, SimBackend, Slowdowns, WorkerOutcome,
+};

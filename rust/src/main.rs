@@ -6,14 +6,17 @@
 //!   figure <id>       regenerate a paper figure (1|2|3|4a|4b|5|6|7a|7cloud|asp|buckets)
 //!   throughput-scan   print the Fig. 5 curve for a device
 //!   info              artifact/manifest inventory
+//!
+//! Both `simulate` and `train` assemble the same [`SessionBuilder`]; the
+//! only difference is which backend they build (`build_sim` vs
+//! `build_real`), so every flag — including `--sync bsp|asp|ssp:<bound>`
+//! — means the same thing in both worlds.
 
 use hetero_batch::cluster::{cpu_cluster, hlevel_split};
-use hetero_batch::config::{ExperimentCfg, Policy};
-use hetero_batch::data;
-use hetero_batch::engine::{Engine, Slowdowns, TrainOpts};
+use hetero_batch::config::Policy;
 use hetero_batch::figures;
 use hetero_batch::runtime::Runtime;
-use hetero_batch::simulator::Simulator;
+use hetero_batch::session::{Session, SessionBuilder, Slowdowns};
 use hetero_batch::sync::SyncMode;
 use hetero_batch::util::cli::Args;
 
@@ -71,30 +74,37 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         .opt("config", "", "JSON config file (CLI flags override)")
         .parse(rest)?;
 
-    let mut cfg = if a.get("config").is_empty() {
-        ExperimentCfg::default()
+    let builder = if a.get("config").is_empty() {
+        Session::builder()
     } else {
-        ExperimentCfg::from_file(&a.get("config"))?
+        SessionBuilder::from_file(&a.get("config"))?
     };
-    cfg.workload = a.get("workload");
     let h = a.get_f64("hlevel");
     let cores = if h >= 1.0 {
         hlevel_split(39, 3, h).ok_or(format!("no H-level {h} split"))?
     } else {
         a.get_usize_list("cores")
     };
-    cfg.workers = cpu_cluster(&cores);
-    cfg.policy = Policy::parse(&a.get("policy")).ok_or("bad --policy")?;
-    cfg.sync = SyncMode::parse(&a.get("sync")).ok_or("bad --sync")?;
-    cfg.max_iters = a.get_u64("iters");
-    cfg.b0 = a.get_usize("b0");
-    cfg.adjust_cost_s = a.get_f64("adjust-cost");
-    cfg.noise_sigma = a.get_f64("noise");
-    cfg.seed = a.get_u64("seed");
-    cfg.validate()?;
+    if cores.is_empty() {
+        return Err("--cores must list at least one worker".into());
+    }
+    let k = cores.len();
+    let builder = builder
+        .model(&a.get("workload"))
+        .workers(cpu_cluster(&cores))
+        .policy(Policy::parse(&a.get("policy")).ok_or("bad --policy")?)
+        .sync(SyncMode::parse(&a.get("sync")).ok_or("bad --sync")?)
+        .steps(a.get_u64("iters"))
+        .b0(a.get_usize("b0"))
+        .adjust_cost(a.get_f64("adjust-cost"))
+        .noise(a.get_f64("noise"))
+        .seed(a.get_u64("seed"));
 
-    let k = cfg.workers.len();
-    let r = Simulator::new(cfg).run();
+    let r = builder
+        .build_sim()
+        .map_err(|e| e.to_string())?
+        .run()
+        .map_err(|e| e.to_string())?;
     println!("{}", r.to_json(k).to_pretty());
     Ok(())
 }
@@ -103,6 +113,7 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
     let a = Args::new("hbatch train", "real-execution training (PJRT runtime)")
         .opt("model", "mlp", "manifest model: linreg|mlp|cnn|transformer")
         .opt("policy", "dynamic", "uniform|static|dynamic")
+        .opt("sync", "bsp", "bsp|asp|ssp:<bound>")
         .opt("steps", "50", "global training steps")
         .opt("cores", "4,8,16", "simulated worker core counts (heterogeneity)")
         .opt("seed", "0", "rng seed")
@@ -114,30 +125,37 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .opt("report", "", "write full JSON report to this path")
         .parse(rest)?;
 
+    // Parse and validate every flag before opening the runtime, so a bad
+    // `--sync`/`--policy` fails fast with the same error text as
+    // `simulate` — even without built artifacts.
+    let policy = Policy::parse(&a.get("policy")).ok_or("bad --policy")?;
+    let sync = SyncMode::parse(&a.get("sync")).ok_or("bad --sync")?;
     let cores = a.get_usize_list("cores");
-    let mut runtime = Runtime::open(a.get("artifacts")).map_err(|e| e.to_string())?;
-    let mut cfg = ExperimentCfg::default();
-    cfg.workers = cpu_cluster(&cores);
-    cfg.policy = Policy::parse(&a.get("policy")).ok_or("bad --policy")?;
-    cfg.seed = a.get_u64("seed");
-    let opts = TrainOpts {
-        model: a.get("model"),
-        policy: cfg.policy,
-        steps: a.get_u64("steps"),
-        eval_every: a.get_u64("eval-every"),
-        seed: cfg.seed,
-        pool_threads: a.get_usize("pool-threads"),
-        prefetch: !a.get_flag("no-prefetch"),
-        loss_target: a.get_f64("loss-target"),
-    };
-    let slow = Slowdowns::from_cores(&cores);
+    if cores.is_empty() {
+        return Err("--cores must list at least one worker".into());
+    }
     let k = cores.len();
-    // Shard k is the dedicated eval stream (training uses 0..k).
-    let shards = k + usize::from(opts.eval_every > 0);
-    let mut dataset = data::for_model(&opts.model, shards, cfg.seed);
-    let mut engine =
-        Engine::new(&mut runtime, cfg, opts, slow).map_err(|e| e.to_string())?;
-    let report = engine.run(dataset.as_mut()).map_err(|e| e.to_string())?;
+    let builder = Session::builder()
+        .model(&a.get("model"))
+        .workers(cpu_cluster(&cores))
+        .policy(policy)
+        .sync(sync)
+        .steps(a.get_u64("steps"))
+        .eval_every(a.get_u64("eval-every"))
+        .seed(a.get_u64("seed"))
+        .pool_threads(a.get_usize("pool-threads"))
+        .prefetch(!a.get_flag("no-prefetch"))
+        .loss_target(a.get_f64("loss-target"))
+        .slowdowns(Slowdowns::from_cores(&cores));
+    builder.validate()?;
+
+    let mut runtime = Runtime::open(a.get("artifacts")).map_err(|e| e.to_string())?;
+    let report = builder
+        .build_real(&mut runtime)
+        .map_err(|e| e.to_string())?
+        .run()
+        .map_err(|e| e.to_string())?;
+
     // Compact progress print.
     println!("run: {}", report.label);
     println!(

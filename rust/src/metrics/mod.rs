@@ -47,7 +47,7 @@ pub struct RunReport {
     pub adjustments: Vec<AdjustEvent>,
     /// (time, global_iter, loss) samples — real-execution runs only.
     pub losses: Vec<(f64, u64, f64)>,
-    /// Periodic eval results (`TrainOpts::eval_every`) — real runs only.
+    /// Periodic eval results (`SessionBuilder::eval_every`) — real runs only.
     pub evals: Vec<EvalRecord>,
     /// Total time to completion/target (seconds, virtual or wall).
     pub total_time: f64,

@@ -1,0 +1,1052 @@
+//! Unified training-loop API: one [`Session`] drives the paper's
+//! controller over pluggable execution [`Backend`]s.
+//!
+//! The paper's contribution is *one* algorithm — the proportional batch
+//! controller — observed under many execution regimes: BSP/ASP/SSP,
+//! static and dynamic heterogeneity, simulated and real execution.  The
+//! session is the single orchestrator that owns everything regime- and
+//! policy-shaped:
+//!
+//! - policy selection and the initial allocation (uniform / static /
+//!   dynamic, [`crate::controller`]),
+//! - [`DynamicBatcher`] observe/adjust and bucket quantization,
+//! - [`SyncState`] gating — BSP, ASP, and SSP on *both* backends,
+//! - virtual-slowdown injection and availability traces
+//!   ([`crate::trace::ClusterTraces`] drive real runs too),
+//! - [`RunReport`] assembly.
+//!
+//! A [`Backend`] owns only execution: produce one worker-iteration's
+//! work/loss ([`Backend::execute_wave`]) and apply a gradient update
+//! ([`Backend::apply_update`]).  Two implementations ship:
+//! [`SimBackend`] (virtual-time capacity model — regenerates the paper's
+//! figures in milliseconds) and [`RealBackend`] (AOT-compiled PJRT train
+//! steps with the fused parameter-server hot path).  New policies,
+//! sync modes, and executors all extend through this one seam.
+//!
+//! The loop itself is event-driven over virtual time: idle workers the
+//! sync gate admits are started as a *wave*, time advances to the
+//! earliest completion, and the completed update is pushed through
+//! [`SyncState`].  BSP falls out as the lockstep special case (waves of
+//! K, one λ-weighted aggregate update per barrier); ASP/SSP apply each
+//! worker's update individually with genuine staleness.
+
+pub mod real;
+pub mod sim;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::{cpu_cluster, GpuModel, WorkerSpec};
+use crate::config::Policy;
+use crate::controller::bucket::quantize_alloc;
+use crate::controller::{
+    static_alloc, uniform_alloc, Adjustment, ControllerCfg, DynamicBatcher,
+};
+use crate::metrics::{AdjustEvent, EvalRecord, IterRecord, RunReport};
+use crate::runtime::Runtime;
+use crate::sync::{SyncMode, SyncState};
+use crate::trace::ClusterTraces;
+use crate::util::json::Json;
+
+pub use real::RealBackend;
+pub use sim::SimBackend;
+
+/// Result of one executed worker iteration, as the backend sees it.
+/// (Losses reach the report through [`Backend::apply_update`]'s return
+/// value — an update, not an iteration, is what produces one.)
+#[derive(Debug, Clone)]
+pub struct WorkerOutcome {
+    /// Seconds of *full-capacity* compute this iteration represents
+    /// (simulated work, or measured wall compute on the real runtime).
+    /// The session divides by the worker's slowdown capacity and
+    /// integrates over its availability trace to get the virtual
+    /// duration the controller observes.
+    pub work: f64,
+    /// Seconds outside capacity integration (fixed dispatch/comm cost).
+    pub fixed: f64,
+}
+
+/// An execution substrate the [`Session`] can drive.
+///
+/// Implementations execute iterations and apply updates; they hold *no*
+/// policy, controller, or synchronization logic of their own.
+pub trait Backend {
+    /// Number of workers.
+    fn k(&self) -> usize;
+
+    /// Label prefix for [`RunReport::label`] (e.g. `"resnet"`,
+    /// `"real/mlp"`).
+    fn label(&self) -> String;
+
+    /// Batch-size bucket grid, if execution requires static shapes
+    /// (AOT-compiled executables). `None` = continuous batch sizes.
+    fn buckets(&self) -> Option<Vec<usize>>;
+
+    /// Default reference per-worker batch b0.
+    fn default_b0(&self) -> f64;
+
+    /// Per-worker throughput estimates for the open-loop allocators
+    /// (FLOPs — deliberately imperfect; the controller corrects them).
+    fn flops_estimates(&self) -> Vec<f64>;
+
+    /// Global iterations to the convergence target when the session has
+    /// no explicit step budget.
+    fn default_target(&self) -> u64;
+
+    /// Execute one iteration for each worker in `wave` (in order) with
+    /// `batches[w]` examples, at virtual time `now`.  Returns one
+    /// [`WorkerOutcome`] per wave entry.  Backends may pipeline across
+    /// the wave (the real backend prefetches batch w+1 under worker w's
+    /// train step) but must keep per-worker results independent.
+    fn execute_wave(
+        &mut self,
+        wave: &[usize],
+        batches: &[f64],
+        now: f64,
+    ) -> Result<Vec<WorkerOutcome>>;
+
+    /// Apply the completed updates of `workers` as one gradient
+    /// application, λ-weighted by their batch sizes (paper Eq. 2–3).
+    /// BSP passes all K workers at the barrier; ASP/SSP pass one.
+    /// Returns the resulting global loss when the backend trains for
+    /// real.
+    fn apply_update(&mut self, workers: &[usize], batches: &[f64]) -> Result<Option<f64>>;
+
+    /// Fresh-equivalent progress retained by an update of the given
+    /// staleness (simulation convergence model; real backends return 1.0
+    /// — their convergence is real, not modeled).
+    fn staleness_discount(&self, staleness: u64) -> f64;
+
+    /// Periodic evaluation at global step `step`; returns
+    /// `(loss, metric)` or `None` when the backend does not evaluate.
+    fn eval(&mut self, step: u64, now: f64) -> Result<Option<(f64, f64)>>;
+}
+
+/// Per-worker slowdown capacities: capacity c ∈ (0, 1] ⇒ a worker's
+/// full-capacity work w costs w/c of virtual time (before availability
+/// traces).  c = 1.0 means full speed (no injection).
+#[derive(Debug, Clone)]
+pub struct Slowdowns(pub Vec<f64>);
+
+impl Slowdowns {
+    pub fn none(k: usize) -> Self {
+        Slowdowns(vec![1.0; k])
+    }
+
+    /// Capacity proportional to core counts, normalized to max = 1.
+    pub fn from_cores(cores: &[usize]) -> Self {
+        let max = *cores.iter().max().expect("empty cores") as f64;
+        Slowdowns(cores.iter().map(|&c| c as f64 / max).collect())
+    }
+
+    /// Capacity proportional to throughput estimates, normalized to
+    /// max = 1 (the real-backend default: heterogeneity follows the
+    /// cluster's FLOPs profile).
+    pub fn from_estimates(estimates: &[f64]) -> Self {
+        let max = estimates.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max > 0.0, "estimates must be positive");
+        Slowdowns(estimates.iter().map(|&e| e / max).collect())
+    }
+}
+
+/// Builder for a [`Session`] — the single entry point for simulated and
+/// real training runs (replaces the old `ExperimentCfg` + `TrainOpts` +
+/// standalone-`Slowdowns` trio).
+///
+/// ```no_run
+/// # use hetero_batch::session::Session;
+/// # use hetero_batch::config::Policy;
+/// # use hetero_batch::sync::SyncMode;
+/// let report = Session::builder()
+///     .model("resnet")
+///     .cores(&[3, 16, 20])
+///     .policy(Policy::Dynamic)
+///     .sync(SyncMode::Ssp { bound: 2 })
+///     .steps(300)
+///     .build_sim()
+///     .unwrap()
+///     .run()
+///     .unwrap();
+/// ```
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    model: String,
+    workers: Vec<WorkerSpec>,
+    policy: Policy,
+    sync: SyncMode,
+    controller: ControllerCfg,
+    b0: usize,
+    steps: u64,
+    target_iters: u64,
+    adjust_cost_s: Option<f64>,
+    noise_sigma: f64,
+    seed: u64,
+    traces: Option<ClusterTraces>,
+    slowdowns: Option<Slowdowns>,
+    eval_every: u64,
+    pool_threads: usize,
+    prefetch: bool,
+    loss_target: f64,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            model: "resnet".into(),
+            workers: cpu_cluster(&[9, 12, 18]),
+            policy: Policy::Dynamic,
+            sync: SyncMode::Bsp,
+            controller: ControllerCfg::default(),
+            b0: 0,
+            steps: 0,
+            target_iters: 0,
+            adjust_cost_s: None,
+            noise_sigma: 0.06,
+            seed: 0,
+            traces: None,
+            slowdowns: None,
+            eval_every: 0,
+            pool_threads: 4,
+            prefetch: true,
+            loss_target: 0.0,
+        }
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> Self {
+        SessionBuilder::default()
+    }
+
+    /// Simulation workload profile name, or registry model name for real
+    /// execution (resnet|mnist|linreg|transformer vs linreg|mlp|cnn|…).
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = name.to_string();
+        self
+    }
+
+    pub fn workers(mut self, workers: Vec<WorkerSpec>) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Convenience: CPU cluster from per-worker core counts.
+    pub fn cores(mut self, cores: &[usize]) -> Self {
+        self.workers = cpu_cluster(cores);
+        self
+    }
+
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn sync(mut self, sync: SyncMode) -> Self {
+        self.sync = sync;
+        self
+    }
+
+    pub fn controller(mut self, cfg: ControllerCfg) -> Self {
+        self.controller = cfg;
+        self
+    }
+
+    /// Reference per-worker batch (0 = backend default: workload profile
+    /// b0 in simulation, the middle bucket on the real runtime).
+    pub fn b0(mut self, b0: usize) -> Self {
+        self.b0 = b0;
+        self
+    }
+
+    /// Global iteration budget (0 = run to the convergence target —
+    /// simulation only; real sessions require an explicit budget).
+    pub fn steps(mut self, steps: u64) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Override the simulated workload's iterations-to-target (scales
+    /// run-to-target experiments down for tests/figures).
+    pub fn target_iters(mut self, iters: u64) -> Self {
+        self.target_iters = iters;
+        self
+    }
+
+    /// Seconds charged per applied batch readjustment (default: 30 in
+    /// simulation — the paper's TF kill-restart; 0 on the real runtime —
+    /// executable swaps are pre-compiled).
+    pub fn adjust_cost(mut self, seconds: f64) -> Self {
+        self.adjust_cost_s = Some(seconds);
+        self
+    }
+
+    /// Lognormal iteration-time noise sigma (simulation).
+    pub fn noise(mut self, sigma: f64) -> Self {
+        self.noise_sigma = sigma;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Per-worker availability traces (interference, over-commitment,
+    /// spot preemptions).  Drive *both* backends: on the real runtime
+    /// the measured compute is integrated over the trace, so a
+    /// preemption costs real downtime in the virtual timeline.
+    pub fn traces(mut self, traces: ClusterTraces) -> Self {
+        self.traces = Some(traces);
+        self
+    }
+
+    /// Explicit per-worker slowdown capacities (real-backend default:
+    /// derived from the cluster's FLOPs estimates).
+    pub fn slowdowns(mut self, slowdowns: Slowdowns) -> Self {
+        self.slowdowns = Some(slowdowns);
+        self
+    }
+
+    /// Evaluate every N global steps (real backend; 0 = never).
+    pub fn eval_every(mut self, every: u64) -> Self {
+        self.eval_every = every;
+        self
+    }
+
+    /// Shard count for the PS hot path (fused aggregate+optimizer on the
+    /// persistent pool).
+    pub fn pool_threads(mut self, threads: usize) -> Self {
+        self.pool_threads = threads;
+        self
+    }
+
+    /// Overlap batch generation with the PJRT train step.
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+
+    /// Stop early when the training loss falls below this (0 = off).
+    pub fn loss_target(mut self, target: f64) -> Self {
+        self.loss_target = target;
+        self
+    }
+
+    // ------------------------------------------------------------- JSON
+
+    /// Parse worker list from JSON: `[{"cpu": 9}, {"gpu": "P100"}]`.
+    pub fn workers_from_json(arr: &Json) -> Result<Vec<WorkerSpec>, String> {
+        let items = arr.as_arr().ok_or("workers must be an array")?;
+        let mut out = Vec::new();
+        for (i, item) in items.iter().enumerate() {
+            if let Some(c) = item.get("cpu").as_usize() {
+                out.push(WorkerSpec::cpu(i, c));
+            } else if let Some(g) = item.get("gpu").as_str() {
+                let model = match g {
+                    "P100" => GpuModel::P100,
+                    "T4" => GpuModel::T4,
+                    "P4" => GpuModel::P4,
+                    _ => return Err(format!("unknown gpu model {g:?}")),
+                };
+                out.push(WorkerSpec::gpu(i, model));
+            } else {
+                return Err(format!(
+                    "worker {i}: need {{\"cpu\": n}} or {{\"gpu\": name}}"
+                ));
+            }
+        }
+        if out.is_empty() {
+            return Err("empty worker list".into());
+        }
+        Ok(out)
+    }
+
+    /// Load overrides from a JSON object (missing keys keep defaults).
+    /// `max_iters` is accepted as an alias for `steps`.
+    pub fn from_json(j: &Json) -> Result<SessionBuilder, String> {
+        let mut b = SessionBuilder::default();
+        if let Some(w) = j.get("workload").as_str() {
+            b.model = w.to_string();
+        }
+        if let Some(w) = j.get("model").as_str() {
+            b.model = w.to_string();
+        }
+        if !j.get("workers").is_null() {
+            b.workers = Self::workers_from_json(j.get("workers"))?;
+        }
+        if let Some(p) = j.get("policy").as_str() {
+            b.policy = Policy::parse(p).ok_or(format!("bad policy {p:?}"))?;
+        }
+        if let Some(s) = j.get("sync").as_str() {
+            b.sync = SyncMode::parse(s).ok_or(format!("bad sync {s:?}"))?;
+        }
+        if let Some(v) = j.get("b0").as_usize() {
+            b.b0 = v;
+        }
+        if let Some(c) = j.get("adjust_cost_s").as_f64() {
+            b.adjust_cost_s = Some(c);
+        }
+        if let Some(n) = j.get("noise_sigma").as_f64() {
+            b.noise_sigma = n;
+        }
+        if let Some(m) = j.get("max_iters").as_usize() {
+            b.steps = m as u64;
+        }
+        if let Some(m) = j.get("steps").as_usize() {
+            b.steps = m as u64;
+        }
+        if let Some(s) = j.get("seed").as_usize() {
+            b.seed = s as u64;
+        }
+        let c = j.get("controller");
+        if !c.is_null() {
+            if let Some(d) = c.get("deadband").as_f64() {
+                b.controller.deadband = d;
+            }
+            if let Some(a) = c.get("ewma_alpha").as_f64() {
+                b.controller.ewma_alpha = a;
+            }
+            if let Some(m) = c.get("min_obs").as_usize() {
+                b.controller.min_obs = m;
+            }
+            if let Some(v) = c.get("b_min").as_f64() {
+                b.controller.b_min = v;
+            }
+            if let Some(v) = c.get("b_max").as_f64() {
+                b.controller.b_max = v;
+            }
+            if let Some(v) = c.get("adaptive_bmax").as_bool() {
+                b.controller.adaptive_bmax = v;
+            }
+            if let Some(v) = c.get("conserve_global").as_bool() {
+                b.controller.conserve_global = v;
+            }
+        }
+        b.validate()?;
+        Ok(b)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<SessionBuilder, String> {
+        let j = Json::parse(s).map_err(|e| e.to_string())?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_file(path: &str) -> Result<SessionBuilder, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        Self::from_json_str(&text)
+    }
+
+    // ------------------------------------------------------- validation
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers.is_empty() {
+            return Err("no workers".into());
+        }
+        self.validate_for_k(self.workers.len())
+    }
+
+    fn validate_for_k(&self, k: usize) -> Result<(), String> {
+        if self.controller.deadband < 0.0 || self.controller.deadband >= 1.0 {
+            return Err(format!(
+                "deadband {} out of [0,1)",
+                self.controller.deadband
+            ));
+        }
+        if self.controller.b_min < 1.0 || self.controller.b_min > self.controller.b_max {
+            return Err("b_min must be in [1, b_max]".into());
+        }
+        if self.adjust_cost_s.map_or(false, |c| c < 0.0) || self.noise_sigma < 0.0 {
+            return Err("costs/noise must be non-negative".into());
+        }
+        if let Some(tr) = &self.traces {
+            if tr.traces.len() != k {
+                return Err("traces/workers length mismatch".into());
+            }
+        }
+        if let Some(s) = &self.slowdowns {
+            if s.0.len() != k {
+                return Err("slowdowns/workers length mismatch".into());
+            }
+            if s.0.iter().any(|&c| c <= 0.0 || c > 1.0) {
+                return Err("slowdown capacities must be in (0, 1]".into());
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ build
+
+    /// Build a virtual-time simulation session ([`SimBackend`]).
+    pub fn build_sim(&self) -> Result<Session<SimBackend>> {
+        self.validate().map_err(|e| anyhow!(e))?;
+        let backend = SimBackend::new(
+            &self.model,
+            self.workers.clone(),
+            self.noise_sigma,
+            self.target_iters,
+            self.seed,
+        )
+        .map_err(|e| anyhow!(e))?;
+        self.assemble(backend, 30.0)
+    }
+
+    /// Build a real-execution session ([`RealBackend`]) over an opened
+    /// PJRT [`Runtime`].
+    pub fn build_real<'rt>(&self, runtime: &'rt mut Runtime) -> Result<Session<RealBackend<'rt>>> {
+        self.validate().map_err(|e| anyhow!(e))?;
+        if self.steps == 0 {
+            bail!("real-execution sessions need steps > 0 (run-to-target is simulation-only)");
+        }
+        let estimates: Vec<f64> = self
+            .workers
+            .iter()
+            .map(|w| w.device.flops_estimate())
+            .collect();
+        let backend = RealBackend::new(
+            runtime,
+            &self.model,
+            self.workers.len(),
+            estimates.clone(),
+            self.seed,
+            self.steps,
+            self.eval_every,
+            self.b0,
+            self.pool_threads,
+            self.prefetch,
+        )?;
+        let mut session = self.assemble(backend, 0.0)?;
+        if self.slowdowns.is_none() {
+            // Real-backend default: heterogeneity follows the cluster's
+            // FLOPs profile (for CPU clusters this equals from_cores).
+            session.slowdowns = Slowdowns::from_estimates(&estimates);
+        }
+        Ok(session)
+    }
+
+    /// Assemble a session over a custom [`Backend`] (tests, new
+    /// executors).  Worker count comes from the backend; the builder's
+    /// `workers` list is ignored.
+    pub fn build_with<B: Backend>(&self, backend: B) -> Result<Session<B>> {
+        if backend.k() == 0 {
+            bail!("backend has no workers");
+        }
+        self.validate_for_k(backend.k()).map_err(|e| anyhow!(e))?;
+        self.assemble(backend, 0.0)
+    }
+
+    fn assemble<B: Backend>(&self, backend: B, default_adjust_cost: f64) -> Result<Session<B>> {
+        let k = backend.k();
+        let b0 = if self.b0 > 0 {
+            self.b0 as f64
+        } else {
+            backend.default_b0()
+        };
+        if b0 <= 0.0 {
+            bail!("reference batch b0 must be positive");
+        }
+        Ok(Session {
+            backend,
+            policy: self.policy,
+            sync: self.sync,
+            controller: self.controller.clone(),
+            b0,
+            steps: self.steps,
+            adjust_cost_s: self.adjust_cost_s.unwrap_or(default_adjust_cost),
+            eval_every: self.eval_every,
+            loss_target: self.loss_target,
+            slowdowns: self
+                .slowdowns
+                .clone()
+                .unwrap_or_else(|| Slowdowns::none(k)),
+            traces: self
+                .traces
+                .clone()
+                .unwrap_or_else(|| ClusterTraces::constant(k)),
+        })
+    }
+}
+
+/// One training run: a policy/sync configuration driving a [`Backend`].
+pub struct Session<B: Backend> {
+    backend: B,
+    policy: Policy,
+    sync: SyncMode,
+    controller: ControllerCfg,
+    b0: f64,
+    steps: u64,
+    adjust_cost_s: f64,
+    eval_every: u64,
+    loss_target: f64,
+    slowdowns: Slowdowns,
+    traces: ClusterTraces,
+}
+
+impl Session<SimBackend> {
+    /// Entry point: `Session::builder().model(..)...build_sim()/..real()`.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+}
+
+impl<B: Backend> Session<B> {
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
+    /// Initial *continuous* allocation by policy.
+    fn initial_alloc(&self, k: usize) -> Vec<f64> {
+        match self.policy {
+            Policy::Uniform => uniform_alloc(self.b0, k),
+            // Open-loop: proportional to the FLOPs *estimate* (not the
+            // true throughput — that gap is what Dynamic corrects).
+            Policy::Static | Policy::Dynamic => {
+                static_alloc(self.b0, &self.backend.flops_estimates())
+            }
+        }
+    }
+
+    /// Run to the step budget / convergence target and report.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let k = self.backend.k();
+        if self.slowdowns.0.len() != k {
+            bail!("slowdowns/workers length mismatch");
+        }
+        if self.traces.traces.len() != k {
+            bail!("traces/workers length mismatch");
+        }
+        let is_bsp = matches!(self.sync, SyncMode::Bsp);
+        let buckets = self.backend.buckets();
+        let mut report = RunReport::new(&format!(
+            "{}/{}/{}",
+            self.backend.label(),
+            self.policy.label(),
+            self.sync.label()
+        ));
+
+        // Initial allocation, quantized on bucketed backends.
+        let proposal = self.initial_alloc(k);
+        let mut cur_buckets: Option<Vec<usize>> = None;
+        let mut batches: Vec<f64> = match &buckets {
+            Some(grid) => {
+                let (snapped, _) = quantize_alloc(&proposal, grid, &vec![0usize; k]);
+                let b = snapped.iter().map(|&x| x as f64).collect();
+                cur_buckets = Some(snapped);
+                b
+            }
+            None => proposal,
+        };
+        let mut controller = (self.policy == Policy::Dynamic)
+            .then(|| DynamicBatcher::new(self.controller.clone(), &batches));
+        // Async progress is denominated in the *initial* global batch
+        // (post-quantization), not k·b0: bucket snapping can leave the
+        // batch sum off k·b0, and the budget must count global-batch
+        // equivalents of the allocation actually executed.  Conserving
+        // policies keep the sum at this value across adjustments.
+        let global_batch: f64 = batches.iter().sum();
+
+        let mut sync = SyncState::new(self.sync, k);
+        let target = if self.steps > 0 {
+            self.steps
+        } else {
+            self.backend.default_target()
+        };
+        if target == 0 {
+            bail!("no step budget and no backend convergence target");
+        }
+        // Hard update cap: an explicit budget caps at one update per
+        // worker per global step; run-to-target gets a generous safety
+        // margin so pathological configs terminate.
+        let hard_updates = if self.steps > 0 {
+            self.steps.saturating_mul(k as u64)
+        } else {
+            target.saturating_mul(k as u64).saturating_mul(40)
+        };
+
+        let mut t = 0.0f64;
+        let mut progress = 0.0f64;
+        let mut updates = 0u64;
+        let mut global_steps = 0u64;
+        let mut busy = vec![false; k];
+        let mut next_done = vec![0.0f64; k];
+        let mut started_at = vec![0.0f64; k];
+        // BSP round accumulator: (worker, duration) of the open round.
+        let mut round: Vec<(usize, f64)> = Vec::new();
+        let mut round_start = 0.0f64;
+        let mut stopped_early = false;
+
+        'training: while progress < target as f64 && updates < hard_updates {
+            // Start every idle worker the sync gate admits, as one wave.
+            let wave: Vec<usize> = (0..k)
+                .filter(|&w| !busy[w] && sync.may_proceed(w))
+                .collect();
+            if !wave.is_empty() {
+                if is_bsp && wave.len() == k {
+                    round_start = t;
+                }
+                for &w in &wave {
+                    sync.pull(w);
+                }
+                let outs = self.backend.execute_wave(&wave, &batches, t)?;
+                if outs.len() != wave.len() {
+                    bail!(
+                        "backend returned {} outcomes for a wave of {}",
+                        outs.len(),
+                        wave.len()
+                    );
+                }
+                for (&w, out) in wave.iter().zip(&outs) {
+                    // Virtual-slowdown injection: capacity c scales the
+                    // work, the availability trace integrates it (a
+                    // preemption costs its downtime, not work/ε).
+                    let c = self.slowdowns.0[w];
+                    let dur =
+                        self.traces.traces[w].time_to_complete(t, out.work / c) + out.fixed;
+                    started_at[w] = t;
+                    next_done[w] = t + dur;
+                    busy[w] = true;
+                }
+            }
+
+            // Advance virtual time to the earliest completion.
+            let w = (0..k)
+                .filter(|&w| busy[w])
+                .min_by(|&a, &b| next_done[a].partial_cmp(&next_done[b]).unwrap())
+                .ok_or_else(|| anyhow!("session deadlock: no runnable workers"))?;
+            let dur = next_done[w] - started_at[w];
+            t = t.max(next_done[w]);
+            busy[w] = false;
+            let clock = sync.clock(w);
+            let staleness = sync.push_update(w);
+            updates += 1;
+
+            if is_bsp {
+                round.push((w, dur));
+                if sync.at_barrier() {
+                    // Round complete: barrier accounting, one λ-weighted
+                    // aggregate update over all K workers.
+                    round.sort_by_key(|r| r.0);
+                    let barrier = round.iter().map(|r| r.1).fold(0.0f64, f64::max);
+                    for &(rw, rdur) in &round {
+                        report.iters.push(IterRecord {
+                            worker: rw,
+                            iter: global_steps,
+                            start: round_start,
+                            duration: rdur,
+                            batch: batches[rw],
+                            wait: barrier - rdur,
+                        });
+                    }
+                    let all: Vec<usize> = (0..k).collect();
+                    let loss = self.backend.apply_update(&all, &batches)?;
+                    global_steps += 1;
+                    progress += 1.0;
+                    if let Some(l) = loss {
+                        report.losses.push((t, global_steps - 1, l));
+                    }
+                    record_eval(
+                        &mut self.backend,
+                        &mut report,
+                        self.eval_every,
+                        global_steps,
+                        t,
+                    )?;
+                    if hit_loss_target(loss, self.loss_target) {
+                        report.reached_target = true;
+                        stopped_early = true;
+                    }
+                    if !stopped_early {
+                        if let Some(ctl) = controller.as_mut() {
+                            for &(rw, rdur) in &round {
+                                ctl.observe(rw, rdur);
+                            }
+                            if let Adjustment::Apply(p) = ctl.maybe_adjust() {
+                                apply_adjustment(
+                                    p,
+                                    &buckets,
+                                    &mut cur_buckets,
+                                    &mut batches,
+                                    ctl,
+                                    &mut report,
+                                    &mut t,
+                                    global_steps,
+                                    self.adjust_cost_s,
+                                );
+                            }
+                        }
+                    }
+                    round.clear();
+                    if stopped_early {
+                        break 'training;
+                    }
+                }
+            } else {
+                report.iters.push(IterRecord {
+                    worker: w,
+                    iter: clock,
+                    start: started_at[w],
+                    duration: dur,
+                    batch: batches[w],
+                    wait: 0.0,
+                });
+                let loss = self.backend.apply_update(&[w], &batches)?;
+                // Fresh-equivalent progress: weight by share of the
+                // global batch and by the staleness discount; K fresh
+                // updates of share 1/K ⇒ one global iteration.
+                progress += (batches[w] / global_batch)
+                    * self.backend.staleness_discount(staleness);
+                if let Some(l) = loss {
+                    report.losses.push((t, updates - 1, l));
+                }
+                if hit_loss_target(loss, self.loss_target) {
+                    report.reached_target = true;
+                    break 'training;
+                }
+                if updates % k as u64 == 0 {
+                    global_steps += 1;
+                    record_eval(
+                        &mut self.backend,
+                        &mut report,
+                        self.eval_every,
+                        global_steps,
+                        t,
+                    )?;
+                }
+                if let Some(ctl) = controller.as_mut() {
+                    ctl.observe(w, dur);
+                    if let Adjustment::Apply(p) = ctl.maybe_adjust() {
+                        apply_adjustment(
+                            p,
+                            &buckets,
+                            &mut cur_buckets,
+                            &mut batches,
+                            ctl,
+                            &mut report,
+                            &mut t,
+                            updates,
+                            self.adjust_cost_s,
+                        );
+                    }
+                }
+            }
+        }
+
+        report.total_time = t;
+        report.total_iters = if is_bsp { global_steps } else { updates };
+        if !report.reached_target {
+            report.reached_target = if self.loss_target > 0.0 {
+                false
+            } else {
+                // An explicit budget fully consumed counts as reached:
+                // under async sync, bucket quantization can leave the
+                // batch sum (and thus per-update progress) slightly
+                // short, and a normally completed run must not report
+                // failure.
+                progress >= target as f64
+                    || (self.steps > 0 && updates >= hard_updates)
+            };
+        }
+        Ok(report)
+    }
+}
+
+/// Push a periodic eval record when one is due and the backend evaluates.
+fn record_eval<B: Backend>(
+    backend: &mut B,
+    report: &mut RunReport,
+    eval_every: u64,
+    step: u64,
+    t: f64,
+) -> Result<()> {
+    if eval_every > 0 && step % eval_every == 0 {
+        if let Some((loss, metric)) = backend.eval(step, t)? {
+            report.evals.push(EvalRecord {
+                time: t,
+                iter: step,
+                loss,
+                metric,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Early-stop check: a real loss fell below a positive target.
+fn hit_loss_target(loss: Option<f64>, target: f64) -> bool {
+    target > 0.0 && loss.map_or(false, |l| l < target)
+}
+
+/// Apply a controller proposal: quantize to the bucket grid when the
+/// backend has one (an executable swap; recorded only when some bucket
+/// actually changes), or apply the continuous allocation directly.
+#[allow(clippy::too_many_arguments)]
+fn apply_adjustment(
+    proposal: Vec<f64>,
+    grid: &Option<Vec<usize>>,
+    cur_buckets: &mut Option<Vec<usize>>,
+    batches: &mut Vec<f64>,
+    ctl: &mut DynamicBatcher,
+    report: &mut RunReport,
+    t: &mut f64,
+    iter: u64,
+    cost: f64,
+) {
+    match grid {
+        Some(g) => {
+            let cur = cur_buckets.as_mut().expect("bucketed session state");
+            let (snapped, swaps) = quantize_alloc(&proposal, g, cur);
+            let snapped_f: Vec<f64> = snapped.iter().map(|&b| b as f64).collect();
+            if swaps.iter().any(|&s| s) {
+                *t += cost;
+                report.adjustments.push(AdjustEvent {
+                    time: *t,
+                    iter,
+                    batches: snapped_f.clone(),
+                    cost,
+                });
+                *cur = snapped;
+                *batches = snapped_f.clone();
+            }
+            // Tell the controller what was actually applied.
+            ctl.set_batches(&snapped_f);
+        }
+        None => {
+            *t += cost;
+            report.adjustments.push(AdjustEvent {
+                time: *t,
+                iter,
+                batches: proposal.clone(),
+                cost,
+            });
+            *batches = proposal;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeviceKind;
+
+    #[test]
+    fn builder_defaults_are_valid() {
+        assert!(SessionBuilder::default().validate().is_ok());
+    }
+
+    #[test]
+    fn builder_parses_full_config() {
+        let src = r#"{
+            "workload": "mnist",
+            "workers": [{"cpu": 4}, {"cpu": 16}, {"gpu": "T4"}],
+            "policy": "static",
+            "sync": "ssp:3",
+            "b0": 100,
+            "adjust_cost_s": 5.0,
+            "controller": {"deadband": 0.1, "b_min": 2, "b_max": 512},
+            "seed": 9
+        }"#;
+        let b = SessionBuilder::from_json_str(src).unwrap();
+        assert_eq!(b.model, "mnist");
+        assert_eq!(b.workers.len(), 3);
+        assert_eq!(b.workers[1].device, DeviceKind::Cpu { cores: 16 });
+        assert!(matches!(b.workers[2].device, DeviceKind::Gpu { .. }));
+        assert_eq!(b.policy, Policy::Static);
+        assert_eq!(b.sync, SyncMode::Ssp { bound: 3 });
+        assert_eq!(b.b0, 100);
+        assert_eq!(b.controller.deadband, 0.1);
+        assert_eq!(b.adjust_cost_s, Some(5.0));
+        assert_eq!(b.seed, 9);
+    }
+
+    #[test]
+    fn builder_missing_keys_keep_defaults() {
+        let b = SessionBuilder::from_json_str(r#"{"workload": "linreg"}"#).unwrap();
+        assert_eq!(b.model, "linreg");
+        assert_eq!(b.policy, Policy::Dynamic);
+        assert_eq!(b.workers.len(), 3);
+        assert_eq!(b.steps, 0);
+    }
+
+    #[test]
+    fn builder_max_iters_aliases_steps() {
+        let b = SessionBuilder::from_json_str(r#"{"max_iters": 250}"#).unwrap();
+        assert_eq!(b.steps, 250);
+        let b = SessionBuilder::from_json_str(r#"{"steps": 80}"#).unwrap();
+        assert_eq!(b.steps, 80);
+    }
+
+    #[test]
+    fn builder_rejects_bad_configs() {
+        assert!(SessionBuilder::from_json_str(r#"{"policy": "bogus"}"#).is_err());
+        assert!(SessionBuilder::from_json_str(r#"{"sync": "bogus"}"#).is_err());
+        assert!(
+            SessionBuilder::from_json_str(r#"{"workers": [{"gpu": "H100"}]}"#).is_err()
+        );
+        assert!(SessionBuilder::from_json_str(r#"{"workers": []}"#).is_err());
+        assert!(SessionBuilder::from_json_str(
+            r#"{"controller": {"deadband": 2.0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn builder_rejects_mismatched_injection() {
+        let b = SessionBuilder::default()
+            .cores(&[4, 8])
+            .slowdowns(Slowdowns::none(3));
+        assert!(b.validate().is_err());
+        let b = SessionBuilder::default()
+            .cores(&[4, 8])
+            .traces(ClusterTraces::constant(3));
+        assert!(b.validate().is_err());
+        let b = SessionBuilder::default()
+            .cores(&[4, 8])
+            .slowdowns(Slowdowns(vec![0.0, 1.0]));
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn slowdowns_from_cores_normalized() {
+        let s = Slowdowns::from_cores(&[3, 6, 12]);
+        assert_eq!(s.0, vec![0.25, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn slowdowns_from_estimates_matches_cores_for_cpu_clusters() {
+        let est: Vec<f64> = cpu_cluster(&[4, 16])
+            .iter()
+            .map(|w| w.device.flops_estimate())
+            .collect();
+        let s = Slowdowns::from_estimates(&est);
+        assert!((s.0[0] - 0.25).abs() < 1e-12);
+        assert!((s.0[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_to_target_stays_legal_for_sim() {
+        // steps == 0 (run to the convergence target) builds fine for the
+        // simulator; build_real rejects it before touching artifacts
+        // (covered in tests/engine_integration.rs).
+        let b = SessionBuilder::default().steps(0);
+        assert!(b.build_sim().is_ok());
+    }
+
+    #[test]
+    fn session_label_composes_backend_policy_sync() {
+        let r = SessionBuilder::default()
+            .model("mnist")
+            .cores(&[4, 8])
+            .policy(Policy::Uniform)
+            .sync(SyncMode::Ssp { bound: 2 })
+            .steps(20)
+            .build_sim()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.label, "mnist/uniform/ssp:2");
+        assert!(r.total_iters > 0);
+    }
+}

@@ -7,8 +7,10 @@
 //!
 //! These types provide the *accounting*: given per-worker progress, who
 //! may proceed, what the staleness of an update is, and how much
-//! statistical efficiency a stale update retains.  The simulator and the
-//! real-execution engine both drive them.
+//! statistical efficiency a stale update retains.  The unified
+//! [`crate::session::Session`] loop drives them for every backend —
+//! virtual-time simulation and the real PJRT runtime share one gating
+//! code path.
 
 /// Synchronization mode of a training run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -105,10 +107,25 @@ impl SyncState {
 
     /// Record a completed iteration; returns the *staleness* of the
     /// worker's update: how many global updates landed since it pulled.
+    ///
+    /// Version accounting is mode-aware: ASP/SSP apply each worker's
+    /// update individually (one version bump per push), while BSP
+    /// applies ONE λ-aggregated update per global round — the version
+    /// advances when the barrier closes.  Every BSP worker therefore
+    /// pulled the model the round's single update is computed against,
+    /// and BSP staleness is zero by construction (an invariant the
+    /// property tests pin down).
     pub fn push_update(&mut self, worker: usize) -> u64 {
         let staleness = self.version - self.pulled[worker];
         self.clocks[worker] += 1;
-        self.version += 1;
+        match self.mode {
+            SyncMode::Bsp => {
+                if self.at_barrier() {
+                    self.version += 1;
+                }
+            }
+            SyncMode::Asp | SyncMode::Ssp { .. } => self.version += 1,
+        }
         staleness
     }
 
@@ -194,6 +211,21 @@ mod tests {
         s.pull(1);
         s.push_update(1);
         assert!(s.may_proceed(0));
+    }
+
+    #[test]
+    fn bsp_round_is_one_version_and_zero_staleness() {
+        let mut s = SyncState::new(SyncMode::Bsp, 3);
+        for round in 0..3u64 {
+            for w in 0..3 {
+                s.pull(w);
+            }
+            for w in 0..3 {
+                assert_eq!(s.push_update(w), 0, "round {round} worker {w}");
+            }
+            // One aggregated update per barrier, not three.
+            assert_eq!(s.version(), round + 1);
+        }
     }
 
     #[test]

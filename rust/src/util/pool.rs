@@ -306,7 +306,7 @@ static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
 
 /// The process-wide pool the PS hot path dispatches onto, sized to the
 /// machine's available parallelism. Callers pick a *shard count* per
-/// call (e.g. `TrainOpts::pool_threads`); the worker count is fixed.
+/// call (e.g. `SessionBuilder::pool_threads`); the worker count is fixed.
 pub fn global() -> &'static ThreadPool {
     GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
 }

@@ -122,10 +122,45 @@ fn train_exercises_pool_eval_and_prefetch_flags() {
 }
 
 #[test]
+fn train_runs_asp_sync_end_to_end() {
+    // ASP on the real runtime: a 4-step budget on 2 workers applies 8
+    // individual (stale-capable) updates.
+    let out = run_ok(&[
+        "train", "--model", "mlp", "--steps", "4", "--cores", "4,8", "--sync", "asp",
+        "--policy", "uniform",
+    ]);
+    assert!(out.contains("steps: 8"), "missing ASP update count in: {out}");
+    assert!(out.contains("run: real/mlp/uniform/asp"), "bad label in: {out}");
+}
+
+#[test]
+fn train_and_simulate_reject_bad_sync_identically() {
+    // `--sync` must be validated on BOTH subcommands, with the same
+    // error text, and before `train` ever touches the artifacts.
+    let stderr_of = |args: &[&str]| {
+        let out = hbatch()
+            .args(args)
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "{args:?} should fail");
+        String::from_utf8_lossy(&out.stderr).into_owned()
+    };
+    let from_train = stderr_of(&["train", "--sync", "ssp:bad"]);
+    let from_sim = stderr_of(&["simulate", "--sync", "ssp:bad"]);
+    assert!(from_train.contains("bad --sync"), "train stderr: {from_train}");
+    assert_eq!(from_train, from_sim, "error text diverged between subcommands");
+}
+
+#[test]
 fn bad_flag_values_fail_cleanly() {
     for args in [
         vec!["simulate", "--policy", "bogus"],
         vec!["simulate", "--sync", "bogus"],
+        vec!["simulate", "--sync", "ssp:bad"],
+        vec!["train", "--sync", "bogus"],
+        vec!["train", "--sync", "ssp:bad"],
+        vec!["train", "--policy", "bogus"],
         vec!["figure", "99"],
         vec!["throughput-scan", "--device", "quantum:1"],
     ] {

@@ -1,35 +1,48 @@
-//! Integration tests over the real-execution engine: full BSP training
-//! rounds (PJRT train steps → λ-weighted aggregation → optimizer →
-//! controller) on heterogeneous simulated clusters.
+//! Integration tests over the real-execution backend: full training
+//! sessions (PJRT train steps → λ-weighted aggregation → optimizer →
+//! controller) on heterogeneous simulated clusters, driven by the same
+//! `Session` loop the simulator uses — including ASP/SSP sync and
+//! availability traces on real runs.
 
-use hetero_batch::cluster::cpu_cluster;
-use hetero_batch::config::{ExperimentCfg, Policy};
-use hetero_batch::data;
-use hetero_batch::engine::{Engine, Slowdowns, TrainOpts};
+use hetero_batch::config::Policy;
+use hetero_batch::controller::ControllerCfg;
+use hetero_batch::metrics::RunReport;
 use hetero_batch::runtime::Runtime;
+use hetero_batch::session::{Session, SessionBuilder, Slowdowns};
+use hetero_batch::sync::SyncMode;
+use hetero_batch::trace::{AvailTrace, ClusterTraces};
 
 fn artifacts_dir() -> String {
     format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
 }
 
-fn run(model: &str, policy: Policy, steps: u64, cores: &[usize]) -> hetero_batch::metrics::RunReport {
+/// Real engine: executable swaps are cheap (pre-compiled), act fast.
+fn fast_controller() -> ControllerCfg {
+    ControllerCfg {
+        min_obs: 3,
+        ..ControllerCfg::default()
+    }
+}
+
+fn real_run(builder: SessionBuilder) -> RunReport {
     let mut runtime = Runtime::open(artifacts_dir()).expect("make artifacts");
-    let mut cfg = ExperimentCfg::default();
-    cfg.workers = cpu_cluster(cores);
-    cfg.policy = policy;
-    // Real engine: executable swaps are cheap (pre-compiled), act fast.
-    cfg.controller.min_obs = 3;
-    let opts = TrainOpts {
-        model: model.into(),
-        policy,
-        steps,
-        seed: 1,
-        ..TrainOpts::default()
-    };
-    let slow = Slowdowns::from_cores(cores);
-    let mut ds = data::for_model(model, cores.len(), 1);
-    let mut engine = Engine::new(&mut runtime, cfg, opts, slow).unwrap();
-    engine.run(ds.as_mut()).unwrap()
+    builder
+        .build_real(&mut runtime)
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+fn run(model: &str, policy: Policy, steps: u64, cores: &[usize]) -> RunReport {
+    real_run(
+        Session::builder()
+            .model(model)
+            .cores(cores)
+            .policy(policy)
+            .steps(steps)
+            .seed(1)
+            .controller(fast_controller()),
+    )
 }
 
 #[test]
@@ -38,10 +51,7 @@ fn mlp_trains_and_loss_decreases() {
     assert_eq!(r.total_iters, 40);
     let first = r.losses.first().unwrap().2;
     let last = r.losses.last().unwrap().2;
-    assert!(
-        last < first * 0.8,
-        "loss barely moved: {first} -> {last}"
-    );
+    assert!(last < first * 0.8, "loss barely moved: {first} -> {last}");
     // Two workers × 40 iterations of records.
     assert_eq!(r.iters.len(), 80);
 }
@@ -95,7 +105,7 @@ fn variable_batching_reduces_iteration_gap_in_real_engine() {
         .filter(|i| i.iter >= 20)
         .cloned()
         .collect();
-    let mut tail_report = hetero_batch::metrics::RunReport::new("tail");
+    let mut tail_report = RunReport::new("tail");
     tail_report.iters = tail
         .into_iter()
         .map(|mut i| {
@@ -114,23 +124,16 @@ fn variable_batching_reduces_iteration_gap_in_real_engine() {
     );
 }
 
-fn run_mlp_eval(eval_every: u64, steps: u64) -> hetero_batch::metrics::RunReport {
-    let mut runtime = Runtime::open(artifacts_dir()).expect("make artifacts");
-    let mut cfg = ExperimentCfg::default();
-    cfg.workers = cpu_cluster(&[8, 8]);
-    cfg.policy = Policy::Uniform;
-    let opts = TrainOpts {
-        model: "mlp".into(),
-        policy: Policy::Uniform,
-        steps,
-        eval_every,
-        seed: 1,
-        ..TrainOpts::default()
-    };
-    // Shard 2 (= k) is the dedicated eval stream; shards 0..2 train.
-    let mut ds = data::for_model("mlp", 3, 1);
-    let mut engine = Engine::new(&mut runtime, cfg, opts, Slowdowns::none(2)).unwrap();
-    engine.run(ds.as_mut()).unwrap()
+fn run_mlp_eval(eval_every: u64, steps: u64) -> RunReport {
+    real_run(
+        Session::builder()
+            .model("mlp")
+            .cores(&[8, 8])
+            .policy(Policy::Uniform)
+            .steps(steps)
+            .eval_every(eval_every)
+            .seed(1),
+    )
 }
 
 #[test]
@@ -161,27 +164,20 @@ fn eval_is_observation_only() {
     }
 }
 
-fn run_with(prefetch: bool, pool_threads: usize, steps: u64) -> (hetero_batch::metrics::RunReport, f64) {
-    let cores = [4usize, 16];
-    let mut runtime = Runtime::open(artifacts_dir()).expect("make artifacts");
-    let mut cfg = ExperimentCfg::default();
-    cfg.workers = cpu_cluster(&cores);
-    cfg.policy = Policy::Uniform;
-    let opts = TrainOpts {
-        model: "mlp".into(),
-        policy: Policy::Uniform,
-        steps,
-        seed: 1,
-        prefetch,
-        pool_threads,
-        ..TrainOpts::default()
-    };
-    let mut ds = data::for_model("mlp", cores.len(), 1);
-    let mut engine =
-        Engine::new(&mut runtime, cfg, opts, Slowdowns::from_cores(&cores)).unwrap();
+fn run_with(prefetch: bool, pool_threads: usize, steps: u64) -> (RunReport, f64) {
     let t0 = std::time::Instant::now();
-    let r = engine.run(ds.as_mut()).unwrap();
-    (r, t0.elapsed().as_secs_f64())
+    let r = real_run(
+        Session::builder()
+            .model("mlp")
+            .cores(&[4, 16])
+            .policy(Policy::Uniform)
+            .steps(steps)
+            .seed(1)
+            .prefetch(prefetch)
+            .pool_threads(pool_threads),
+    );
+    let wall = t0.elapsed().as_secs_f64();
+    (r, wall)
 }
 
 #[test]
@@ -217,47 +213,168 @@ fn sharded_optimizer_path_is_bit_identical() {
 
 #[test]
 fn loss_target_stops_early() {
-    let mut runtime = Runtime::open(artifacts_dir()).unwrap();
-    let mut cfg = ExperimentCfg::default();
-    cfg.workers = cpu_cluster(&[8, 8]);
-    cfg.policy = Policy::Uniform;
-    let opts = TrainOpts {
-        model: "linreg".into(),
-        policy: Policy::Uniform,
-        steps: 500,
-        seed: 0,
-        loss_target: 1.0, // init MSE is ~variance of y ≈ several
-        ..TrainOpts::default()
-    };
-    let mut ds = data::for_model("linreg", 2, 0);
-    let mut engine =
-        Engine::new(&mut runtime, cfg, opts, Slowdowns::none(2)).unwrap();
-    let r = engine.run(ds.as_mut()).unwrap();
+    let r = real_run(
+        Session::builder()
+            .model("linreg")
+            .cores(&[8, 8])
+            .policy(Policy::Uniform)
+            .steps(500)
+            .seed(0)
+            .loss_target(1.0), // init MSE is ~variance of y ≈ several
+    );
     assert!(r.reached_target);
+    assert!(r.total_iters < 500, "should stop early, ran {}", r.total_iters);
+}
+
+#[test]
+fn session_rejects_bad_setup() {
+    let mut runtime = Runtime::open(artifacts_dir()).unwrap();
+    // Slowdown length mismatch.
+    assert!(Session::builder()
+        .model("mlp")
+        .cores(&[4, 8])
+        .steps(10)
+        .slowdowns(Slowdowns::none(3))
+        .build_real(&mut runtime)
+        .is_err());
+    // Unknown model.
+    assert!(Session::builder()
+        .model("bogus")
+        .cores(&[4, 8])
+        .steps(10)
+        .build_real(&mut runtime)
+        .is_err());
+    // Real runs need an explicit step budget.
+    assert!(Session::builder()
+        .model("mlp")
+        .cores(&[4, 8])
+        .steps(0)
+        .build_real(&mut runtime)
+        .is_err());
+}
+
+// ---------------------------------------------------------------------
+// New with the unified Session API: ASP/SSP and availability traces on
+// the real runtime.
+
+#[test]
+fn asp_trains_on_real_runtime() {
+    let r = real_run(
+        Session::builder()
+            .model("mlp")
+            .cores(&[4, 16])
+            .policy(Policy::Uniform)
+            .sync(SyncMode::Asp)
+            .steps(10)
+            .seed(1),
+    );
+    // ASP counts individual worker updates: a 10-step budget on 2
+    // workers is 20 updates, each applied as its own optimizer step.
+    assert_eq!(r.total_iters, 20);
+    assert_eq!(r.losses.len(), 20);
+    assert!(r.reached_target);
+    // No barrier ⇒ no wait time anywhere.
+    assert!(r.iters.iter().all(|i| i.wait == 0.0));
+    assert!(r.losses.iter().all(|l| l.2.is_finite()));
+    let first = r.losses.first().unwrap().2;
+    let last = r.losses.last().unwrap().2;
+    assert!(last < first, "ASP made no progress: {first} -> {last}");
+}
+
+#[test]
+fn ssp_bounds_lead_on_real_runtime() {
+    let r = real_run(
+        Session::builder()
+            .model("mlp")
+            .cores(&[4, 16])
+            .policy(Policy::Uniform)
+            .sync(SyncMode::Ssp { bound: 2 })
+            .steps(12)
+            .seed(1),
+    );
+    assert!(r.total_iters > 0);
+    // Reconstruct clocks from the records: lead ≤ bound + 1.
+    let mut max_clock = [0u64; 2];
+    for rec in &r.iters {
+        max_clock[rec.worker] = max_clock[rec.worker].max(rec.iter);
+    }
+    let lead = max_clock.iter().max().unwrap() - max_clock.iter().min().unwrap();
+    assert!(lead <= 3, "ssp lead {lead} exceeds bound+1");
+}
+
+#[test]
+fn trace_capacity_loss_triggers_dynamic_readjustment_in_real_run() {
+    // Mirror of the simulator's trace_slowdown_triggers_dynamic_
+    // readjustment, on the real runtime: a spot-style availability trace
+    // halves worker 0's capacity partway through a *real* training run;
+    // the controller must react with a smaller batch for worker 0.
+    //
+    // Virtual time scales with this machine's PJRT step time, so first
+    // calibrate: measure the virtual round time of a short uniform run.
+    let probe = real_run(
+        Session::builder()
+            .model("mlp")
+            .cores(&[8, 8])
+            .policy(Policy::Uniform)
+            .steps(6)
+            .seed(1),
+    );
+    let round_s = probe.total_time / 6.0;
+    assert!(round_s > 0.0);
+    // Capacity drops to 35% after ~8 rounds; 50 further rounds give the
+    // drift detector plenty of post-change signal.
+    let t_drop = round_s * 8.0;
+    let traces = ClusterTraces {
+        traces: vec![
+            AvailTrace::from_segments(vec![(0.0, 1.0), (t_drop, 0.35)]),
+            AvailTrace::constant(),
+        ],
+    };
+    let r = real_run(
+        Session::builder()
+            .model("mlp")
+            .cores(&[8, 8])
+            .policy(Policy::Dynamic)
+            .steps(60)
+            .seed(1)
+            .controller(fast_controller())
+            .traces(traces),
+    );
+    let late: Vec<_> = r
+        .adjustments
+        .iter()
+        .filter(|a| a.time > t_drop)
+        .collect();
     assert!(
-        r.total_iters < 500,
-        "should stop early, ran {}",
-        r.total_iters
+        !late.is_empty(),
+        "no reaction to the capacity loss (drop at {t_drop:.3}s, \
+         adjustments: {:?})",
+        r.adjustments
+    );
+    let final_b = r.final_batches().unwrap();
+    assert!(
+        final_b[0] < final_b[1],
+        "worker 0 batch {final_b:?} not reduced after capacity loss"
     );
 }
 
 #[test]
-fn engine_rejects_bad_setup() {
-    let mut runtime = Runtime::open(artifacts_dir()).unwrap();
-    let mut cfg = ExperimentCfg::default();
-    cfg.workers = cpu_cluster(&[4, 8]);
-    // Slowdown length mismatch.
-    assert!(Engine::new(
-        &mut runtime,
-        cfg.clone(),
-        TrainOpts::default(),
-        Slowdowns::none(3)
-    )
-    .is_err());
-    // Unknown model.
-    let opts = TrainOpts {
-        model: "bogus".into(),
-        ..TrainOpts::default()
+fn sim_and_real_bsp_gating_sequences_match() {
+    // The same Session loop gates both backends: under BSP the sequence
+    // of (worker, round) records must be identical between a real run
+    // and a simulated run of the same shape.
+    let real = run("mlp", Policy::Uniform, 8, &[4, 16]);
+    let sim = Session::builder()
+        .model("mnist")
+        .cores(&[4, 16])
+        .policy(Policy::Uniform)
+        .steps(8)
+        .build_sim()
+        .unwrap()
+        .run()
+        .unwrap();
+    let gate = |r: &RunReport| -> Vec<(usize, u64)> {
+        r.iters.iter().map(|i| (i.worker, i.iter)).collect()
     };
-    assert!(Engine::new(&mut runtime, cfg, opts, Slowdowns::none(2)).is_err());
+    assert_eq!(gate(&real), gate(&sim));
 }

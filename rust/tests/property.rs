@@ -6,8 +6,12 @@
 //! controller convergence on stationary throughputs, quantization
 //! soundness, and aggregation linearity.
 
+use hetero_batch::config::Policy;
 use hetero_batch::controller::bucket::{quantize, quantize_alloc};
 use hetero_batch::controller::{static_alloc, ControllerCfg, DynamicBatcher};
+use hetero_batch::metrics::RunReport;
+use hetero_batch::session::{Backend, Session, WorkerOutcome};
+use hetero_batch::sync::{SyncMode, SyncState};
 use hetero_batch::ps::fused::{
     fused_agg_adam, fused_agg_adam_mt, fused_agg_momentum, fused_agg_momentum_mt,
     fused_agg_sgd, fused_agg_sgd_mt,
@@ -486,6 +490,216 @@ fn prop_pool_aggregation_matches_reference() {
         aggregate_into_mt(&mut mt, &refs, &lambdas, threads);
         close(&st, &mt)
     });
+}
+
+// ---------------------------------------------------------------------
+// SyncState invariants: the gating/staleness accounting the unified
+// Session loop rests on, exercised by random *legal* schedules (a worker
+// either starts an iteration — pull — if the gate admits it, or finishes
+// one it has in flight — push).
+
+/// One random legal scheduling trajectory through a SyncState.
+fn drive_sync<F: FnMut(&SyncState, usize, u64, u64)>(
+    mode: SyncMode,
+    k: usize,
+    steps: usize,
+    seed: u64,
+    mut on_push: F,
+) {
+    let mut s = SyncState::new(mode, k);
+    let mut rng = Rng::new(seed);
+    let mut in_flight = vec![false; k];
+    // Pushes (by anyone) since each worker's last pull.
+    let mut pushes_since_pull = vec![0u64; k];
+    for _ in 0..steps {
+        let legal: Vec<usize> = (0..k)
+            .filter(|&w| in_flight[w] || s.may_proceed(w))
+            .collect();
+        assert!(!legal.is_empty(), "gate wedged: no legal action");
+        let w = legal[rng.range_usize(0, legal.len())];
+        if in_flight[w] {
+            let staleness = s.push_update(w);
+            in_flight[w] = false;
+            on_push(&s, w, staleness, pushes_since_pull[w]);
+            for v in 0..k {
+                if v != w {
+                    pushes_since_pull[v] += 1;
+                }
+            }
+        } else {
+            s.pull(w);
+            pushes_since_pull[w] = 0;
+            in_flight[w] = true;
+        }
+    }
+}
+
+fn sync_mode_strategy() -> FnStrategy<impl Fn(&mut Rng) -> (usize, SyncMode, u64)> {
+    FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(2, 6);
+        let mode = match rng.range_usize(0, 3) {
+            0 => SyncMode::Bsp,
+            1 => SyncMode::Asp,
+            _ => SyncMode::Ssp {
+                bound: rng.range_usize(0, 4) as u64,
+            },
+        };
+        (k, mode, rng.next_u64())
+    })
+}
+
+#[test]
+fn prop_staleness_never_exceeds_updates_since_pull() {
+    check(
+        "staleness <= updates since pull",
+        150,
+        sync_mode_strategy(),
+        |&(k, mode, seed)| {
+            let mut ok = true;
+            drive_sync(mode, k, 300, seed, |_, _, staleness, since_pull| {
+                ok &= staleness <= since_pull;
+            });
+            ok
+        },
+    );
+}
+
+#[test]
+fn prop_bsp_implies_zero_staleness() {
+    let strat = FnStrategy(|rng: &mut Rng| (rng.range_usize(2, 7), rng.next_u64()));
+    check("bsp zero staleness", 150, strat, |&(k, seed)| {
+        let mut ok = true;
+        drive_sync(SyncMode::Bsp, k, 300, seed, |_, _, staleness, _| {
+            ok &= staleness == 0;
+        });
+        ok
+    });
+}
+
+#[test]
+fn prop_ssp_lead_bounded_under_random_schedules() {
+    let strat = FnStrategy(|rng: &mut Rng| {
+        (
+            rng.range_usize(2, 6),
+            rng.range_usize(0, 5) as u64,
+            rng.next_u64(),
+        )
+    });
+    check("ssp lead bounded", 150, strat, |&(k, bound, seed)| {
+        let mut ok = true;
+        drive_sync(SyncMode::Ssp { bound }, k, 400, seed, |s, _, _, _| {
+            ok &= s.max_clock() - s.min_clock() <= bound + 1;
+        });
+        ok
+    });
+}
+
+// ---------------------------------------------------------------------
+// Sim-vs-real gating parity: the Session loop must produce identical
+// SyncState gating sequences for a fixed duration schedule regardless of
+// backend *shape* — a simulator-shaped backend (no losses, continuous
+// batches, modeled progress) and a real-engine-shaped backend (losses,
+// per-update optimizer application) only differ in what they execute,
+// never in who runs when.
+
+struct FixedScheduleBackend {
+    /// Constant per-worker iteration duration (seconds of work).
+    durs: Vec<f64>,
+    /// Mimic the real backend's report surface (losses) or the sim's.
+    real_shaped: bool,
+}
+
+impl Backend for FixedScheduleBackend {
+    fn k(&self) -> usize {
+        self.durs.len()
+    }
+
+    fn label(&self) -> String {
+        (if self.real_shaped { "mock-real" } else { "mock-sim" }).into()
+    }
+
+    fn buckets(&self) -> Option<Vec<usize>> {
+        None
+    }
+
+    fn default_b0(&self) -> f64 {
+        32.0
+    }
+
+    fn flops_estimates(&self) -> Vec<f64> {
+        vec![1.0; self.durs.len()]
+    }
+
+    fn default_target(&self) -> u64 {
+        50
+    }
+
+    fn execute_wave(
+        &mut self,
+        wave: &[usize],
+        _batches: &[f64],
+        _now: f64,
+    ) -> anyhow::Result<Vec<WorkerOutcome>> {
+        Ok(wave
+            .iter()
+            .map(|&w| WorkerOutcome {
+                work: self.durs[w],
+                fixed: 0.0,
+            })
+            .collect())
+    }
+
+    fn apply_update(
+        &mut self,
+        _workers: &[usize],
+        _batches: &[f64],
+    ) -> anyhow::Result<Option<f64>> {
+        Ok(self.real_shaped.then_some(1.0))
+    }
+
+    fn staleness_discount(&self, _staleness: u64) -> f64 {
+        1.0
+    }
+
+    fn eval(&mut self, _step: u64, _now: f64) -> anyhow::Result<Option<(f64, f64)>> {
+        Ok(None)
+    }
+}
+
+#[test]
+fn sim_and_real_shaped_backends_gate_identically() {
+    for sync in [SyncMode::Bsp, SyncMode::Asp, SyncMode::Ssp { bound: 2 }] {
+        let durs = vec![3.0, 1.0, 2.0];
+        let run_shape = |real_shaped: bool| -> RunReport {
+            Session::builder()
+                .policy(Policy::Uniform)
+                .sync(sync)
+                .steps(15)
+                .build_with(FixedScheduleBackend {
+                    durs: durs.clone(),
+                    real_shaped,
+                })
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let sim_shaped = run_shape(false);
+        let real_shaped = run_shape(true);
+        let gate = |r: &RunReport| -> Vec<(usize, u64)> {
+            r.iters.iter().map(|i| (i.worker, i.iter)).collect()
+        };
+        assert_eq!(
+            gate(&sim_shaped),
+            gate(&real_shaped),
+            "gating diverged under {sync:?}"
+        );
+        assert_eq!(sim_shaped.total_time, real_shaped.total_time);
+        assert_eq!(sim_shaped.total_iters, real_shaped.total_iters);
+        // The real-shaped run additionally carries a loss curve; the
+        // sim-shaped one does not — report surface, not scheduling.
+        assert!(sim_shaped.losses.is_empty());
+        assert!(!real_shaped.losses.is_empty());
+    }
 }
 
 #[test]
