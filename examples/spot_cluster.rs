@@ -16,10 +16,10 @@
 
 use hetero_batch::config::Policy;
 use hetero_batch::session::Session;
-use hetero_batch::trace::{AvailTrace, ClusterTraces};
+use hetero_batch::trace::{AvailTrace, ClusterTraces, MembershipPlan};
 use hetero_batch::util::rng::Rng;
 
-fn scenario(policy: Policy, seed: u64) -> hetero_batch::metrics::RunReport {
+fn scenario(policy: Policy, elastic: bool, seed: u64) -> hetero_batch::metrics::RunReport {
     // 3 equal spot VMs — heterogeneity here is purely *dynamic*.
     // Worker 0: heavy colocation interference (drops to 35% capacity).
     // Worker 1: overcommitment epochs (60–80%).
@@ -32,13 +32,21 @@ fn scenario(policy: Policy, seed: u64) -> hetero_batch::metrics::RunReport {
             AvailTrace::spot(40_000.0, 1_200.0, 120.0, &mut rng),
         ],
     };
-    Session::builder()
+    let mut builder = Session::builder()
         .model("resnet")
         .cores(&[13, 13, 13])
         .policy(policy)
         .steps(4_000)
         .adjust_cost(10.0)
-        .seed(seed)
+        .seed(seed);
+    if elastic {
+        // Elastic membership (DESIGN.md §9): any worker down past a
+        // 60 s grace is revoked (mass water-filled onto survivors) and
+        // rejoins on recovery — here that covers worker 2's ~2 min
+        // spot preemption.
+        builder = builder.membership(MembershipPlan::from_traces(&traces, 60.0));
+    }
+    builder
         .traces(traces)
         .build_sim()
         .expect("spot scenario")
@@ -53,14 +61,24 @@ fn main() {
         "policy", "time_to_4k", "vs uniform", "adjusts", "wait_frac"
     );
     let mut base = 0.0;
-    for policy in [Policy::Uniform, Policy::Static, Policy::Dynamic] {
-        let r = scenario(policy, 7);
+    for (policy, elastic) in [
+        (Policy::Uniform, false),
+        (Policy::Static, false),
+        (Policy::Dynamic, false),
+        (Policy::Dynamic, true),
+    ] {
+        let r = scenario(policy, elastic, 7);
         if policy == Policy::Uniform {
             base = r.total_time;
         }
+        let label = if elastic {
+            format!("{}+el", policy.label())
+        } else {
+            policy.label().to_string()
+        };
         println!(
             "{:<10} {:>10.0} s {:>13.2}x {:>12} {:>12.3}",
-            policy.label(),
+            label,
             r.total_time,
             base / r.total_time,
             r.adjustments.len(),
@@ -70,5 +88,7 @@ fn main() {
     println!();
     println!("static batching cannot react to capacity changes (its split is");
     println!("fixed at t=0 and the workers start equal, so it IS uniform here);");
-    println!("the dynamic controller re-balances after each capacity shift.");
+    println!("the dynamic controller re-balances after each capacity shift, and");
+    println!("'+el' additionally revokes a preempted worker after a 60 s grace");
+    println!("instead of stalling the barrier until its VM returns.");
 }

@@ -29,5 +29,6 @@ fn main() {
     timed("fig7cloud_t4_p4", || figures::fig7_cloud(seed));
     timed("fig_asp", || figures::fig_asp(seed));
     timed("fig_buckets_ablation", || figures::fig_buckets(seed));
+    timed("fig_revocation_timeline", || figures::fig_revocation(seed));
     println!("\nall figure benches complete");
 }

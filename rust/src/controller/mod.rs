@@ -203,12 +203,30 @@ struct WorkerState {
     /// Personal upper bound (starts at cfg.b_max, shrinks adaptively).
     b_max: f64,
     /// (batch, throughput) at the last adjustment, for knee detection.
+    /// Survives retirement — it doubles as the warm-start throughput
+    /// estimate when the worker is later re-admitted.
     last_point: Option<(f64, f64)>,
     /// Adjustments since the knee cap was set (cap expires at KNEE_TTL —
     /// periodic re-probing, so a stale cap from a transient capacity dip
     /// cannot strangle the worker forever; a true memory knee is simply
     /// re-detected one adjustment after each expiry).
     cap_age: usize,
+    /// Membership: retired (spot-revoked) workers hold no batch mass and
+    /// are invisible to the control law until re-admitted.
+    active: bool,
+}
+
+impl WorkerState {
+    /// Best available throughput estimate: the live smoothed one if the
+    /// current interval has observations, else the estimate memorized at
+    /// the last adjustment.
+    fn throughput_estimate(&self) -> Option<f64> {
+        self.ewma
+            .get()
+            .filter(|_| self.batch > 0.0)
+            .map(|mu| self.batch / mu)
+            .or(self.last_point.map(|(_, x)| x))
+    }
 }
 
 /// Outcome of an adjustment attempt.
@@ -220,12 +238,20 @@ pub enum Adjustment {
     Hold,
 }
 
-/// The closed-loop dynamic batcher (paper §III-C).
+/// The closed-loop dynamic batcher (paper §III-C), resizable for
+/// elastic membership: [`DynamicBatcher::retire`] removes a worker
+/// (water-filling its batch mass onto the survivors) and
+/// [`DynamicBatcher::admit`] brings one back with a warm-start batch
+/// derived from the controller's smoothed throughput estimates.  The
+/// global batch Σb is invariant under adjustments *and* membership
+/// transitions, so λ-weighted aggregation (Eq. 2) stays statistically
+/// equivalent across epochs.
 #[derive(Debug, Clone)]
 pub struct DynamicBatcher {
     cfg: ControllerCfg,
     workers: Vec<WorkerState>,
-    /// K·b0, fixed at construction (invariant under adjustments).
+    /// Σb of the initially-live cohort, fixed at construction (invariant
+    /// under adjustments and membership epochs).
     global_batch: f64,
     adjustments: usize,
     /// Current required-observation multiplier (see ControllerCfg::backoff).
@@ -236,20 +262,38 @@ impl DynamicBatcher {
     /// Start from any initial allocation (§III-C: "works with any initial
     /// batch size"; farther from ideal ⇒ more adjustment steps).
     pub fn new(cfg: ControllerCfg, initial: &[f64]) -> Self {
+        let live = vec![true; initial.len()];
+        Self::with_membership(cfg, initial, &live)
+    }
+
+    /// Start with an explicit membership: absent workers (scheduled
+    /// `join_at` ranks) carry no batch and no bounds check until
+    /// admitted.
+    pub fn with_membership(cfg: ControllerCfg, initial: &[f64], live: &[bool]) -> Self {
         assert!(!initial.is_empty());
-        for &b in initial {
-            assert!(b >= cfg.b_min && b <= cfg.b_max, "initial batch {b} out of bounds");
+        assert_eq!(initial.len(), live.len());
+        for (&b, &l) in initial.iter().zip(live) {
+            if l {
+                assert!(b >= cfg.b_min && b <= cfg.b_max, "initial batch {b} out of bounds");
+            }
         }
-        let global_batch = initial.iter().sum();
+        let global_batch = initial
+            .iter()
+            .zip(live)
+            .filter(|(_, &l)| l)
+            .map(|(&b, _)| b)
+            .sum();
         DynamicBatcher {
             workers: initial
                 .iter()
-                .map(|&b| WorkerState {
-                    batch: b,
+                .zip(live)
+                .map(|(&b, &l)| WorkerState {
+                    batch: if l { b } else { 0.0 },
                     ewma: Smoother::new(cfg.ewma_alpha, cfg.drift_reset),
                     b_max: cfg.b_max,
                     last_point: None,
                     cap_age: 0,
+                    active: l,
                 })
                 .collect(),
             cfg,
@@ -263,13 +307,24 @@ impl DynamicBatcher {
         self.workers.len()
     }
 
+    pub fn is_active(&self, k: usize) -> bool {
+        self.workers[k].active
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.workers.iter().filter(|w| w.active).count()
+    }
+
+    /// Full-length batch vector; retired workers hold 0.
     pub fn batches(&self) -> Vec<f64> {
         self.workers.iter().map(|w| w.batch).collect()
     }
 
-    /// λ_k = b_k / Σ b_i — the gradient weights (Eq. 2).
+    /// λ_k = b_k / Σ b_i — the gradient weights (Eq. 2), normalized over
+    /// the live cohort (retired workers get λ = 0).
     pub fn lambdas(&self) -> Vec<f64> {
         let total: f64 = self.workers.iter().map(|w| w.batch).sum();
+        assert!(total > 0.0, "lambdas of an empty cohort");
         self.workers.iter().map(|w| w.batch / total).collect()
     }
 
@@ -284,6 +339,7 @@ impl DynamicBatcher {
     /// Feed one iteration-time observation for worker `k`.
     pub fn observe(&mut self, k: usize, iter_time: f64) {
         assert!(iter_time > 0.0, "iteration time must be positive");
+        assert!(self.workers[k].active, "observation for retired worker {k}");
         self.workers[k].ewma.push(iter_time);
     }
 
@@ -292,38 +348,126 @@ impl DynamicBatcher {
         self.workers.iter().map(|w| w.ewma.get()).collect()
     }
 
+    // -------------------------------------------------- elastic membership
+
+    /// Retire worker `k` (spot revocation): its batch mass is
+    /// water-filled onto the survivors, conserving Σb; its smoothing
+    /// window resets (the next admission starts a fresh interval) while
+    /// its knee memory is kept as a future warm-start estimate.
+    pub fn retire(&mut self, k: usize) {
+        assert!(self.workers[k].active, "retire of retired worker {k}");
+        self.workers[k].active = false;
+        self.workers[k].batch = 0.0;
+        self.workers[k].ewma.reset();
+        self.rebalance_active();
+    }
+
+    /// Re-admit worker `k` with a warm-start batch from the controller's
+    /// smoothed throughput estimates: its own remembered throughput when
+    /// it has been seen before, else the mean of the live cohort's
+    /// estimates (⇒ an equal share).  Survivors are then water-filled
+    /// back down so Σb returns to the global target.
+    pub fn admit(&mut self, k: usize) {
+        assert!(!self.workers[k].active, "admit of active worker {k}");
+        let cohort_x: Vec<f64> = self
+            .workers
+            .iter()
+            .filter(|w| w.active)
+            .filter_map(|w| w.throughput_estimate())
+            .collect();
+        let n_active = self.active_count();
+        let sum_b: f64 = self
+            .workers
+            .iter()
+            .filter(|w| w.active)
+            .map(|w| w.batch)
+            .sum();
+        // The warm batch is expressed in the *survivors' current batch
+        // scale*: the water-fill below rescales everyone proportionally
+        // back to the global target, so this lands the cohort on the
+        // intended shares (throughput-proportional when estimates exist,
+        // an equal split otherwise).
+        let warm = if cohort_x.len() == n_active && n_active > 0 && sum_b > 0.0 {
+            let sum_x: f64 = cohort_x.iter().sum();
+            let x_new = self.workers[k]
+                .throughput_estimate()
+                .unwrap_or(sum_x / n_active as f64);
+            x_new * sum_b / sum_x
+        } else if n_active > 0 && sum_b > 0.0 {
+            sum_b / n_active as f64
+        } else {
+            self.global_batch
+        };
+        let w = &mut self.workers[k];
+        w.active = true;
+        w.batch = warm.clamp(self.cfg.b_min, w.b_max);
+        w.ewma.reset();
+        self.rebalance_active();
+    }
+
+    /// Water-fill the live cohort's batches to the global target
+    /// (conservation across adjustments and membership epochs alike).
+    fn rebalance_active(&mut self) {
+        let idx: Vec<usize> = (0..self.workers.len())
+            .filter(|&i| self.workers[i].active)
+            .collect();
+        if idx.is_empty() {
+            return;
+        }
+        let mut prop: Vec<f64> = idx.iter().map(|&i| self.workers[i].batch).collect();
+        let bmax: Vec<f64> = idx.iter().map(|&i| self.workers[i].b_max).collect();
+        water_fill(&mut prop, self.global_batch, self.cfg.b_min, &bmax);
+        for (&i, &b) in idx.iter().zip(&prop) {
+            self.workers[i].batch = b;
+            // Batches changed ⇒ old iteration times are for the wrong
+            // batch size: restart the smoothing interval (same rule as
+            // an applied adjustment / set_batches).  Warm-start uses
+            // last_point, which survives.
+            self.workers[i].ewma.reset();
+        }
+    }
+
     /// Run the control step ("putting it all together", §III-C):
     /// 1. μ_k from EWMA; 2. Eq. 4–5 proposal; 3. bounds; 4. dead-band.
+    /// Retired workers are invisible — the law runs over the live cohort.
     pub fn maybe_adjust(&mut self) -> Adjustment {
-        // Need enough fresh observations on every worker (scaled by the
-        // current backoff multiplier) — unless a regime change (drift
+        let active: Vec<usize> = (0..self.workers.len())
+            .filter(|&i| self.workers[i].active)
+            .collect();
+        if active.is_empty() {
+            return Adjustment::Hold;
+        }
+        // Need enough fresh observations on every live worker (scaled by
+        // the current backoff multiplier) — unless a regime change (drift
         // reset) was just detected, which overrides the backoff so the
         // controller reacts to interference within a few iterations.
         let drifted = self
             .workers
             .iter_mut()
+            .filter(|w| w.active)
             .map(|w| w.ewma.take_drifted())
             .fold(false, |a, b| a | b);
         if drifted {
             self.backoff_mult = 1;
         }
         let required = if drifted { 2 } else { self.cfg.min_obs * self.backoff_mult };
-        if self
-            .workers
+        if active
             .iter()
-            .any(|w| w.ewma.count() < required || w.ewma.get().is_none())
+            .any(|&i| self.workers[i].ewma.count() < required || self.workers[i].ewma.get().is_none())
         {
             return Adjustment::Hold;
         }
-        let mu: Vec<f64> = self.workers.iter().map(|w| w.ewma.get().unwrap()).collect();
+        let mu: Vec<f64> = active
+            .iter()
+            .map(|&i| self.workers[i].ewma.get().unwrap())
+            .collect();
         let t_bar = mu.iter().sum::<f64>() / mu.len() as f64;
 
         // Proportional proposal: b' = b · t̄/μ  (equivalent to Δb = −X·τ).
-        let mut proposal: Vec<f64> = self
-            .workers
+        let mut proposal: Vec<f64> = active
             .iter()
             .zip(&mu)
-            .map(|(w, &m)| w.batch * t_bar / m)
+            .map(|(&i, &m)| self.workers[i].batch * t_bar / m)
             .collect();
 
         // Bounds + global-batch conservation. Clamping after a plain
@@ -333,20 +477,19 @@ impl DynamicBatcher {
         // the clamped ones gave up, iterating until no new bound binds
         // (≤ K rounds).
         if self.cfg.conserve_global {
-            let bmaxes: Vec<f64> = self.workers.iter().map(|w| w.b_max).collect();
+            let bmaxes: Vec<f64> = active.iter().map(|&i| self.workers[i].b_max).collect();
             water_fill(&mut proposal, self.global_batch, self.cfg.b_min, &bmaxes);
         } else {
-            for (b, w) in proposal.iter_mut().zip(&self.workers) {
-                *b = b.clamp(self.cfg.b_min, w.b_max);
+            for (b, &i) in proposal.iter_mut().zip(&active) {
+                *b = b.clamp(self.cfg.b_min, self.workers[i].b_max);
             }
         }
 
         // Dead-band: act only if the largest relative change is material.
-        let max_rel = self
-            .workers
+        let max_rel = active
             .iter()
             .zip(&proposal)
-            .map(|(w, &p)| ((p - w.batch) / w.batch).abs())
+            .map(|(&i, &p)| ((p - self.workers[i].batch) / self.workers[i].batch).abs())
             .fold(0.0, f64::max);
         if max_rel <= self.cfg.deadband {
             return Adjustment::Hold;
@@ -365,14 +508,18 @@ impl DynamicBatcher {
         // Apply: record throughput points for knee detection, then reset
         // the EWMAs (the paper smooths within the interval since the last
         // readjustment only).
-        for (w, (&p, &m)) in self.workers.iter_mut().zip(proposal.iter().zip(&mu)) {
+        let b_max_cfg = self.cfg.b_max;
+        let b_min_cfg = self.cfg.b_min;
+        let adaptive = self.cfg.adaptive_bmax;
+        for ((&i, &p), &m) in active.iter().zip(&proposal).zip(&mu) {
+            let w = &mut self.workers[i];
             let throughput = w.batch / m;
-            if self.cfg.adaptive_bmax {
+            if adaptive {
                 // Expire stale knee caps (periodic re-probing).
-                if w.b_max < self.cfg.b_max {
+                if w.b_max < b_max_cfg {
                     w.cap_age += 1;
                     if w.cap_age >= KNEE_TTL {
-                        w.b_max = self.cfg.b_max;
+                        w.b_max = b_max_cfg;
                         w.cap_age = 0;
                     }
                 }
@@ -389,7 +536,7 @@ impl DynamicBatcher {
                         && w.batch > prev_b * 1.02
                         && throughput < prev_x * 0.90
                     {
-                        w.b_max = w.b_max.min(prev_b.max(self.cfg.b_min));
+                        w.b_max = w.b_max.min(prev_b.max(b_min_cfg));
                         w.cap_age = 0;
                     }
                 }
@@ -406,11 +553,16 @@ impl DynamicBatcher {
     }
 
     /// Force-set batches (bucket quantization round-trips through this).
+    /// Retired workers stay at 0 regardless of the passed value.
     pub fn set_batches(&mut self, batches: &[f64]) {
         assert_eq!(batches.len(), self.workers.len());
         for (w, &b) in self.workers.iter_mut().zip(batches) {
-            w.batch = b.clamp(self.cfg.b_min, w.b_max);
-            w.ewma.reset();
+            if w.active {
+                w.batch = b.clamp(self.cfg.b_min, w.b_max);
+                w.ewma.reset();
+            } else {
+                w.batch = 0.0;
+            }
         }
     }
 }
@@ -431,6 +583,7 @@ pub const KNEE_TTL: usize = 6;
 pub fn water_fill(proposal: &mut [f64], target: f64, b_min: f64, b_max: &[f64]) {
     assert_eq!(proposal.len(), b_max.len());
     let k = proposal.len();
+    let orig: Vec<f64> = proposal.to_vec();
     let mut fixed = vec![false; k];
     for _round in 0..=k {
         let fixed_sum: f64 = (0..k).filter(|&i| fixed[i]).map(|i| proposal[i]).sum();
@@ -464,13 +617,48 @@ pub fn water_fill(proposal: &mut [f64], target: f64, b_min: f64, b_max: &[f64]) 
             break;
         }
     }
-    // Conservation dominates soft b_max caps: if the caps made the target
-    // unreachable, spread the deficit proportionally (b_min stays hard).
     let sum: f64 = proposal.iter().sum();
     if sum > 0.0 && (sum - target).abs() / target.max(1.0) > 1e-12 && sum < target {
-        let scale = target / sum;
-        for p in proposal.iter_mut() {
-            *p = (*p * scale).max(b_min);
+        let max_sum: f64 = b_max.iter().map(|&m| m.max(b_min)).sum();
+        if target > max_sum {
+            // Conservation dominates soft b_max caps: the caps made the
+            // target genuinely unreachable, so spread the deficit
+            // proportionally (b_min stays hard).
+            let scale = target / sum;
+            for p in proposal.iter_mut() {
+                *p = (*p * scale).max(b_min);
+            }
+        } else {
+            // The round loop undershot only because b_min- and
+            // b_max-pins landed in the same round (a single shared scale
+            // pinned low entries that a larger final scale would have
+            // left free).  The target *is* reachable inside the box, so
+            // project exactly: Σ clamp(orig·s, b_min, b_max) is monotone
+            // in s — bisect for the s that restores the target.
+            let f = |s: f64| -> f64 {
+                orig.iter()
+                    .zip(b_max)
+                    .map(|(&p, &m)| (p * s).clamp(b_min, m.max(b_min)))
+                    .sum()
+            };
+            let mut hi = 1.0f64;
+            let mut guard = 0;
+            while f(hi) < target && guard < 200 {
+                hi *= 2.0;
+                guard += 1;
+            }
+            let mut lo = 0.0f64;
+            for _ in 0..200 {
+                let mid = 0.5 * (lo + hi);
+                if f(mid) < target {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            for ((p, &o), &m) in proposal.iter_mut().zip(&orig).zip(b_max) {
+                *p = (o * hi).clamp(b_min, m.max(b_min));
+            }
         }
     }
 }
@@ -720,6 +908,120 @@ mod tests {
     fn observe_rejects_nonpositive_time() {
         let mut ctl = DynamicBatcher::new(ControllerCfg::default(), &[64.0]);
         ctl.observe(0, 0.0);
+    }
+
+    // ------------------------------------------------- elastic membership
+
+    #[test]
+    fn retire_water_fills_mass_onto_survivors() {
+        let mut ctl = DynamicBatcher::new(ControllerCfg::default(), &[32.0, 64.0, 96.0]);
+        ctl.retire(0);
+        let b = ctl.batches();
+        assert_eq!(b[0], 0.0);
+        // Σb conserved; survivors keep their 64:96 = 2:3 proportion.
+        assert!((b.iter().sum::<f64>() - 192.0).abs() < EPS, "{b:?}");
+        assert!((b[2] / b[1] - 1.5).abs() < 1e-9, "{b:?}");
+        assert_eq!(ctl.active_count(), 2);
+        assert!(!ctl.is_active(0));
+        // λ re-normalizes over the survivors.
+        let l = ctl.lambdas();
+        assert_eq!(l[0], 0.0);
+        assert!((l[1] + l[2] - 1.0).abs() < EPS);
+    }
+
+    #[test]
+    fn retire_then_admit_restores_sum_and_lambdas() {
+        let mut ctl = DynamicBatcher::new(ControllerCfg::default(), &[40.0, 80.0, 120.0]);
+        ctl.retire(1);
+        ctl.admit(1);
+        let b = ctl.batches();
+        assert!((b.iter().sum::<f64>() - 240.0).abs() < 1e-6, "{b:?}");
+        assert!(b.iter().all(|&x| x > 0.0), "{b:?}");
+        let l = ctl.lambdas();
+        assert!((l.iter().sum::<f64>() - 1.0).abs() < EPS);
+        assert_eq!(ctl.active_count(), 3);
+    }
+
+    #[test]
+    fn admit_cold_cohort_gets_equal_share() {
+        let mut ctl = DynamicBatcher::new(ControllerCfg::default(), &[60.0, 60.0, 60.0]);
+        ctl.retire(2);
+        // No observations anywhere: the rejoiner gets an equal share.
+        ctl.admit(2);
+        let b = ctl.batches();
+        assert!((b[2] - 60.0).abs() < 1e-6, "{b:?}");
+        assert!((b.iter().sum::<f64>() - 180.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn admit_warm_starts_from_throughput_estimates() {
+        // Converge on a 1:3 cluster so last_point carries real estimates,
+        // then bounce worker 0: its warm-start batch must come back near
+        // its known (slow) share, not an equal split.
+        let cfg = ControllerCfg {
+            min_obs: 1,
+            deadband: 0.0,
+            ..ControllerCfg::default()
+        };
+        let xs = [10.0, 30.0];
+        let mut ctl = DynamicBatcher::new(cfg, &[64.0, 64.0]);
+        for _ in 0..6 {
+            let b = ctl.batches();
+            for k in 0..2 {
+                ctl.observe(k, b[k] / xs[k]);
+            }
+            ctl.maybe_adjust();
+        }
+        ctl.retire(0);
+        ctl.admit(0);
+        let b = ctl.batches();
+        assert!((b.iter().sum::<f64>() - 128.0).abs() < 1e-6, "{b:?}");
+        // Throughput-proportional: worker 0 ≈ 1/4 of the global batch.
+        assert!((b[0] / 128.0 - 0.25).abs() < 0.05, "warm start {b:?}");
+    }
+
+    #[test]
+    fn retired_worker_is_invisible_to_the_control_law() {
+        let cfg = ControllerCfg {
+            min_obs: 2,
+            ..ControllerCfg::default()
+        };
+        let mut ctl = DynamicBatcher::new(cfg, &[64.0, 64.0, 64.0]);
+        ctl.retire(2);
+        // Only live workers observe; the law must act without rank 2.
+        for _ in 0..3 {
+            ctl.observe(0, 2.0);
+            ctl.observe(1, 1.0);
+        }
+        match ctl.maybe_adjust() {
+            Adjustment::Apply(b) => {
+                assert_eq!(b[2], 0.0, "{b:?}");
+                assert!(b[0] < b[1], "{b:?}");
+                assert!((b.iter().sum::<f64>() - 192.0).abs() < 1e-6, "{b:?}");
+            }
+            Adjustment::Hold => panic!("controller held with a retired rank"),
+        }
+    }
+
+    #[test]
+    fn with_membership_starts_absent_ranks_at_zero() {
+        let ctl = DynamicBatcher::with_membership(
+            ControllerCfg::default(),
+            &[64.0, 64.0, 0.0],
+            &[true, true, false],
+        );
+        assert_eq!(ctl.global_batch(), 128.0);
+        assert_eq!(ctl.batches(), vec![64.0, 64.0, 0.0]);
+        assert!(!ctl.is_active(2));
+    }
+
+    #[test]
+    fn set_batches_leaves_retired_at_zero() {
+        let mut ctl = DynamicBatcher::new(ControllerCfg::default(), &[64.0, 64.0]);
+        ctl.retire(0);
+        ctl.set_batches(&[32.0, 128.0]);
+        assert_eq!(ctl.batches()[0], 0.0);
+        assert_eq!(ctl.batches()[1], 128.0);
     }
 
     #[test]

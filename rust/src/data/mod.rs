@@ -285,6 +285,80 @@ impl Dataset for TokenStream {
     }
 }
 
+// ---------------------------------------------------------------------
+// Elastic shard routing
+
+/// Maps dataset shard streams to live workers under elastic membership.
+///
+/// Worker `w` starts as the owner of its home shard `w`.  When a worker
+/// is revoked, its shards are handed round-robin to the survivors so the
+/// departed rank's data keeps flowing; when it rejoins it reclaims its
+/// home shard.  Shard *streams* are never reset or duplicated — each
+/// shard's RNG lives in the [`Dataset`] and continues wherever it left
+/// off — so reassignment never repeats a sample and never skips one.
+#[derive(Debug, Clone)]
+pub struct ShardRouter {
+    /// owner[s] = worker currently drawing shard s.
+    owner: Vec<usize>,
+    /// Per-worker round-robin cursor over its owned shards.
+    cursor: Vec<usize>,
+    live: Vec<bool>,
+}
+
+impl ShardRouter {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        ShardRouter {
+            owner: (0..k).collect(),
+            cursor: vec![0; k],
+            live: vec![true; k],
+        }
+    }
+
+    pub fn is_live(&self, w: usize) -> bool {
+        self.live[w]
+    }
+
+    /// Shards currently owned by `w`, ascending.
+    pub fn shards_of(&self, w: usize) -> Vec<usize> {
+        (0..self.owner.len()).filter(|&s| self.owner[s] == w).collect()
+    }
+
+    /// Revoke worker `w`: its shards go round-robin to the survivors.
+    /// With no survivors the shards stay parked on `w` (nobody draws).
+    pub fn revoke(&mut self, w: usize) {
+        assert!(self.live[w], "revoke of dead worker {w}");
+        self.live[w] = false;
+        let survivors: Vec<usize> =
+            (0..self.live.len()).filter(|&v| self.live[v]).collect();
+        if survivors.is_empty() {
+            return;
+        }
+        for (i, s) in self.shards_of(w).into_iter().enumerate() {
+            self.owner[s] = survivors[i % survivors.len()];
+        }
+    }
+
+    /// Re-admit worker `w`: it reclaims exactly its home shard (the
+    /// current holder keeps any others it inherited).
+    pub fn admit(&mut self, w: usize) {
+        assert!(!self.live[w], "admit of live worker {w}");
+        self.live[w] = true;
+        self.owner[w] = w;
+        self.cursor[w] = 0;
+    }
+
+    /// Next shard worker `w` should draw from (round-robin over its
+    /// owned shards).
+    pub fn next_shard(&mut self, w: usize) -> usize {
+        let owned = self.shards_of(w);
+        assert!(!owned.is_empty(), "worker {w} owns no shards");
+        let s = owned[self.cursor[w] % owned.len()];
+        self.cursor[w] = self.cursor[w].wrapping_add(1);
+        s
+    }
+}
+
 /// Build the stand-in dataset for a registry model name.
 pub fn for_model(name: &str, shards: usize, seed: u64) -> Box<dyn Dataset> {
     match name {
@@ -397,6 +471,66 @@ mod tests {
             let b = d.next_batch(1, 4);
             assert_eq!(b.batch_size, 4);
         }
+    }
+
+    #[test]
+    fn shard_router_reassigns_and_reclaims() {
+        let mut r = ShardRouter::new(3);
+        assert_eq!(r.shards_of(1), vec![1]);
+        // Revoke worker 2: its shard goes to the first survivor.
+        r.revoke(2);
+        assert_eq!(r.shards_of(0), vec![0, 2]);
+        assert_eq!(r.shards_of(2), vec![]);
+        // Worker 0 round-robins over both owned shards.
+        assert_eq!(r.next_shard(0), 0);
+        assert_eq!(r.next_shard(0), 2);
+        assert_eq!(r.next_shard(0), 0);
+        assert_eq!(r.next_shard(1), 1);
+        // Rejoin: worker 2 reclaims exactly its home shard.
+        r.admit(2);
+        assert_eq!(r.shards_of(2), vec![2]);
+        assert_eq!(r.shards_of(0), vec![0]);
+        assert_eq!(r.next_shard(2), 2);
+    }
+
+    #[test]
+    fn shard_router_cascaded_revocations_cover_all_shards() {
+        let mut r = ShardRouter::new(3);
+        r.revoke(2); // shard 2 -> worker 0
+        r.revoke(0); // shards {0, 2} -> worker 1 (only survivor)
+        assert_eq!(r.shards_of(1), vec![0, 1, 2]);
+        // Rejoins give each worker its home shard back.
+        r.admit(0);
+        assert_eq!(r.shards_of(0), vec![0]);
+        assert_eq!(r.shards_of(1), vec![1, 2]);
+        r.admit(2);
+        assert_eq!(r.shards_of(1), vec![1]);
+        assert_eq!(r.shards_of(2), vec![2]);
+    }
+
+    #[test]
+    fn shard_router_revoking_everyone_parks_shards() {
+        let mut r = ShardRouter::new(2);
+        r.revoke(0);
+        r.revoke(1);
+        // Nobody draws; shards wait for a rejoin.
+        r.admit(0);
+        assert_eq!(r.shards_of(0), vec![0]);
+        // Worker 1's home shard is still parked on the dead worker 1 —
+        // reachable again the moment it rejoins.
+        r.admit(1);
+        assert_eq!(r.shards_of(1), vec![1]);
+    }
+
+    #[test]
+    fn shard_router_initially_absent_rank_via_revoke() {
+        // The Session marks ranks that start the run absent by calling
+        // the backend's retire hook, which lands here as a revoke.
+        let mut r = ShardRouter::new(3);
+        r.revoke(1);
+        assert!(!r.is_live(1));
+        assert_eq!(r.shards_of(0), vec![0, 1]);
+        assert_eq!(r.shards_of(2), vec![2]);
     }
 
     #[test]

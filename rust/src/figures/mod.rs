@@ -366,6 +366,74 @@ pub fn fig_buckets(seed: u64) -> Table {
     t
 }
 
+// =====================================================================
+// Revocation timeline — elastic membership under spot churn
+
+/// Timeline of one spot revocation + rejoin on a 3-worker dynamic BSP
+/// session: every membership epoch and every controller adjustment as a
+/// row, with the live count and per-worker batch allocation after each.
+/// Shows the mechanism end to end: mass water-fills onto survivors at
+/// the revocation, and the rejoiner comes back warm-started from the
+/// controller's throughput estimates.
+pub fn fig_revocation(seed: u64) -> Table {
+    use crate::trace::{AvailTrace, ClusterTraces, MembershipPlan, DOWN_EPS};
+    // Worker 0 is preempted at t=120 s for 240 s; 20 s grace.
+    let traces = ClusterTraces {
+        traces: vec![
+            AvailTrace::from_segments(vec![(0.0, 1.0), (120.0, DOWN_EPS), (360.0, 1.0)]),
+            AvailTrace::constant(),
+            AvailTrace::constant(),
+        ],
+    };
+    let plan = MembershipPlan::from_traces(&traces, 20.0);
+    let r = run(sim("resnet", &[9, 12, 18], Policy::Dynamic, 200, seed)
+        .adjust_cost(5.0)
+        .traces(traces)
+        .membership(plan));
+    let mut t = Table::new(&["time_s", "event", "worker", "live", "b0", "b1", "b2"]);
+    // Merge epochs and adjustments into one time-ordered timeline.
+    let mut rows: Vec<(f64, String, String, usize, Vec<f64>)> = Vec::new();
+    for e in &r.epochs {
+        rows.push((
+            e.time,
+            e.kind.label().to_string(),
+            e.worker.to_string(),
+            e.live,
+            e.batches.clone(),
+        ));
+    }
+    let live_at = |time: f64| -> usize {
+        r.epochs
+            .iter()
+            .filter(|e| e.time <= time)
+            .last()
+            .map(|e| e.live)
+            .unwrap_or(3)
+    };
+    for a in &r.adjustments {
+        rows.push((
+            a.time,
+            "adjust".into(),
+            "-".into(),
+            live_at(a.time),
+            a.batches.clone(),
+        ));
+    }
+    rows.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+    for (time, event, worker, live, b) in rows {
+        t.rowf(&[
+            &format!("{time:.1}"),
+            &event,
+            &worker,
+            &live,
+            &format!("{:.1}", b[0]),
+            &format!("{:.1}", b[1]),
+            &format!("{:.1}", b[2]),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -434,6 +502,28 @@ mod tests {
         let peak_idx = gpu.iter().position(|&x| x == peak).unwrap();
         assert!(peak_idx > 2, "peak too early");
         assert!(*gpu.last().unwrap() < peak * 0.5, "no GPU cliff");
+    }
+
+    #[test]
+    fn fig_revocation_has_revoke_and_rejoin_rows() {
+        let t = fig_revocation(1);
+        let text = t.to_string();
+        let revoke = text.lines().find(|l| l.contains(",revoke,"));
+        let join = text.lines().find(|l| l.contains(",join,"));
+        assert!(revoke.is_some(), "no revoke row:\n{text}");
+        assert!(join.is_some(), "no join row:\n{text}");
+        // The revoke row zeroes worker 0's batch and keeps Σb on the
+        // survivors; the join row restores a positive share.
+        let cells = |l: &str| -> Vec<String> {
+            l.split(',').map(|s| s.to_string()).collect()
+        };
+        let rv = cells(revoke.unwrap());
+        assert_eq!(rv[2], "0");
+        assert_eq!(rv[3], "2");
+        assert_eq!(rv[4], "0.0");
+        let jn = cells(join.unwrap());
+        assert_eq!(jn[3], "3");
+        assert!(jn[4].parse::<f64>().unwrap() > 0.0);
     }
 
     #[test]

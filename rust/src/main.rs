@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   simulate          virtual-time experiment (policy × cluster × workload)
 //!   train             real-execution training over the PJRT runtime
-//!   figure <id>       regenerate a paper figure (1|2|3|4a|4b|5|6|7a|7cloud|asp|buckets)
+//!   figure <id>       regenerate a paper figure (1|2|3|4a|4b|5|6|7a|7cloud|asp|buckets|revocation)
 //!   throughput-scan   print the Fig. 5 curve for a device
 //!   info              artifact/manifest inventory
 //!
@@ -18,7 +18,30 @@ use hetero_batch::figures;
 use hetero_batch::runtime::Runtime;
 use hetero_batch::session::{Session, SessionBuilder, Slowdowns};
 use hetero_batch::sync::SyncMode;
+use hetero_batch::trace::{JoinSpec, SpotSpec};
 use hetero_batch::util::cli::Args;
+
+/// Parse the shared elastic-membership flags (`--spot mttf:down[:grace]`
+/// and `--join k@t[,k@t...]`) and fold them into the builder.  Both
+/// subcommands validate these *before* any artifact is opened, with the
+/// same error text (`bad --spot` / `bad --join`, matching `bad --sync`).
+fn apply_membership_flags(
+    builder: SessionBuilder,
+    a: &Args,
+) -> Result<SessionBuilder, String> {
+    let mut builder = builder;
+    let spot = a.get("spot");
+    if !spot.is_empty() {
+        let spec = SpotSpec::parse(&spot).ok_or("bad --spot")?;
+        builder = builder.spot(spec);
+    }
+    let join = a.get("join");
+    if !join.is_empty() {
+        let joins = JoinSpec::parse_list(&join).ok_or("bad --join")?;
+        builder = builder.joins(&joins);
+    }
+    Ok(builder)
+}
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -52,7 +75,7 @@ fn usage() -> String {
      commands:\n\
      \x20 simulate          virtual-time experiment (fast, reproduces paper figures)\n\
      \x20 train             real training over AOT-compiled XLA artifacts\n\
-     \x20 figure <id>       regenerate a paper figure: 1 2 3 4a 4b 5 6 7a 7cloud asp buckets all\n\
+     \x20 figure <id>       regenerate a paper figure: 1 2 3 4a 4b 5 6 7a 7cloud asp buckets revocation all\n\
      \x20 throughput-scan   throughput-vs-batch curve for a device\n\
      \x20 info              show artifact manifest\n\
      run `hbatch <cmd> --help` for options"
@@ -71,6 +94,8 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         .opt("adjust-cost", "30", "seconds charged per batch readjustment")
         .opt("noise", "0.06", "lognormal iteration-time noise sigma")
         .opt("seed", "0", "rng seed")
+        .opt("spot", "", "spot churn mttf:down[:grace] (s): revoke/rejoin workers")
+        .opt("join", "", "scheduled joins k@t[,k@t..]: worker k first appears at t")
         .opt("config", "", "JSON config file (CLI flags override)")
         .parse(rest)?;
 
@@ -99,6 +124,8 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         .adjust_cost(a.get_f64("adjust-cost"))
         .noise(a.get_f64("noise"))
         .seed(a.get_u64("seed"));
+    let builder = apply_membership_flags(builder, &a)?;
+    builder.validate()?;
 
     let r = builder
         .build_sim()
@@ -117,6 +144,8 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .opt("steps", "50", "global training steps")
         .opt("cores", "4,8,16", "simulated worker core counts (heterogeneity)")
         .opt("seed", "0", "rng seed")
+        .opt("spot", "", "spot churn mttf:down[:grace] (s): revoke/rejoin workers")
+        .opt("join", "", "scheduled joins k@t[,k@t..]: worker k first appears at t")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("loss-target", "0", "stop early at this train loss (0 = off)")
         .opt("eval-every", "0", "run an eval step every N global steps (0 = never)")
@@ -147,6 +176,7 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .prefetch(!a.get_flag("no-prefetch"))
         .loss_target(a.get_f64("loss-target"))
         .slowdowns(Slowdowns::from_cores(&cores));
+    let builder = apply_membership_flags(builder, &a)?;
     builder.validate()?;
 
     let mut runtime = Runtime::open(a.get("artifacts")).map_err(|e| e.to_string())?;
@@ -167,6 +197,9 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         println!("loss: {first:.4} -> {last:.4}");
     }
     println!("adjustments: {}", report.adjustments.len());
+    if !report.epochs.is_empty() {
+        println!("membership epochs: {}", report.epochs.len());
+    }
     if let Some(e) = report.evals.last() {
         println!(
             "evals: {} (last @ step {}: loss {:.4}, metric {:.4})",
@@ -196,12 +229,13 @@ fn cmd_figure(rest: &[String]) -> Result<(), String> {
     let which = a
         .positionals()
         .first()
-        .ok_or("which figure? 1 2 3 4a 4b 5 6 7a 7cloud asp buckets all")?
+        .ok_or("which figure? 1 2 3 4a 4b 5 6 7a 7cloud asp buckets revocation all")?
         .clone();
     let out_dir = a.get("out-dir");
     let ids: Vec<&str> = if which == "all" {
         vec![
             "1", "2", "3", "4a", "4b", "5", "6", "7a", "7cloud", "asp", "buckets",
+            "revocation",
         ]
     } else {
         vec![which.as_str()]
@@ -219,6 +253,7 @@ fn cmd_figure(rest: &[String]) -> Result<(), String> {
             "7cloud" => ("fig7_cloud_t4_p4", figures::fig7_cloud(seed)),
             "asp" => ("fig_asp", figures::fig_asp(seed)),
             "buckets" => ("fig_buckets_ablation", figures::fig_buckets(seed)),
+            "revocation" => ("fig_revocation_timeline", figures::fig_revocation(seed)),
             other => return Err(format!("unknown figure {other:?}")),
         };
         println!("=== {name} ===");

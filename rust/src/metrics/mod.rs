@@ -1,6 +1,7 @@
 //! Measurement: iteration records, per-worker timelines, batch-size
 //! traces, and the training report the figure harnesses consume.
 
+use crate::trace::MembershipKind;
 use crate::util::json::Json;
 use crate::util::stats::{percentile, Running};
 
@@ -39,12 +40,30 @@ pub struct AdjustEvent {
     pub cost: f64,
 }
 
+/// One membership-epoch transition (a worker revoked or (re)joined).
+#[derive(Debug, Clone)]
+pub struct EpochEvent {
+    /// Virtual/wall time of the transition.
+    pub time: f64,
+    /// Epoch number after the transition (epoch 0 is the initial
+    /// membership; the first transition opens epoch 1).
+    pub epoch: u64,
+    pub worker: usize,
+    pub kind: MembershipKind,
+    /// Live workers after the transition.
+    pub live: usize,
+    /// Batch allocation after the rebalance (0 for absent ranks).
+    pub batches: Vec<f64>,
+}
+
 /// Complete record of one training run.
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
     pub label: String,
     pub iters: Vec<IterRecord>,
     pub adjustments: Vec<AdjustEvent>,
+    /// Membership-epoch transitions (spot revocations / mid-run joins).
+    pub epochs: Vec<EpochEvent>,
     /// (time, global_iter, loss) samples — real-execution runs only.
     pub losses: Vec<(f64, u64, f64)>,
     /// Periodic eval results (`SessionBuilder::eval_every`) — real runs only.
@@ -118,9 +137,20 @@ impl RunReport {
         }
     }
 
-    /// Final batch allocation (from last adjustment, or None).
+    /// Final batch allocation: the latest of the last controller
+    /// adjustment and the last membership rebalance (None when neither
+    /// happened).
     pub fn final_batches(&self) -> Option<&[f64]> {
-        self.adjustments.last().map(|a| a.batches.as_slice())
+        match (self.adjustments.last(), self.epochs.last()) {
+            (Some(a), Some(e)) => Some(if e.time >= a.time {
+                e.batches.as_slice()
+            } else {
+                a.batches.as_slice()
+            }),
+            (Some(a), None) => Some(a.batches.as_slice()),
+            (None, Some(e)) => Some(e.batches.as_slice()),
+            (None, None) => None,
+        }
     }
 
     pub fn to_json(&self, k: usize) -> Json {
@@ -131,6 +161,27 @@ impl RunReport {
         o.set("reached_target", Json::Bool(self.reached_target));
         o.set("wait_fraction", Json::Num(self.wait_fraction()));
         o.set("n_adjustments", Json::Num(self.adjustments.len() as f64));
+        o.set("n_epochs", Json::Num(self.epochs.len() as f64));
+        if !self.epochs.is_empty() {
+            let evs: Vec<Json> = self
+                .epochs
+                .iter()
+                .map(|e| {
+                    let mut eo = Json::obj();
+                    eo.set("time_s", Json::Num(e.time));
+                    eo.set("epoch", Json::Num(e.epoch as f64));
+                    eo.set("worker", Json::Num(e.worker as f64));
+                    eo.set("kind", Json::Str(e.kind.label().into()));
+                    eo.set("live", Json::Num(e.live as f64));
+                    eo.set(
+                        "batches",
+                        Json::Arr(e.batches.iter().map(|&b| Json::Num(b)).collect()),
+                    );
+                    eo
+                })
+                .collect();
+            o.set("epochs", Json::Arr(evs));
+        }
         let stats = self.worker_time_stats(k);
         let mut workers = Vec::new();
         for (w, s) in stats.iter().enumerate() {
@@ -230,6 +281,50 @@ mod tests {
         assert!((stats[0].mean() - 1.5).abs() < 1e-12);
         assert_eq!(stats[1].n(), 1);
         assert_eq!(r.worker_durations(1), vec![5.0]);
+    }
+
+    #[test]
+    fn final_batches_prefers_latest_of_adjust_and_epoch() {
+        let mut r = RunReport::new("t");
+        assert!(r.final_batches().is_none());
+        r.adjustments.push(AdjustEvent {
+            time: 10.0,
+            iter: 3,
+            batches: vec![20.0, 44.0],
+            cost: 0.0,
+        });
+        assert_eq!(r.final_batches().unwrap(), &[20.0, 44.0]);
+        r.epochs.push(EpochEvent {
+            time: 15.0,
+            epoch: 1,
+            worker: 0,
+            kind: MembershipKind::Revoke,
+            live: 1,
+            batches: vec![0.0, 64.0],
+        });
+        assert_eq!(r.final_batches().unwrap(), &[0.0, 64.0]);
+    }
+
+    #[test]
+    fn epochs_serialize_to_json() {
+        let mut r = RunReport::new("t");
+        let j = r.to_json(1);
+        assert_eq!(j.get("n_epochs").as_i64(), Some(0));
+        assert!(j.get("epochs").is_null());
+        r.epochs.push(EpochEvent {
+            time: 2.5,
+            epoch: 1,
+            worker: 2,
+            kind: MembershipKind::Join,
+            live: 3,
+            batches: vec![32.0, 32.0, 32.0],
+        });
+        let j = Json::parse(&r.to_json(3).to_string()).unwrap();
+        let e = j.get("epochs").idx(0);
+        assert_eq!(e.get("kind").as_str(), Some("join"));
+        assert_eq!(e.get("worker").as_i64(), Some(2));
+        assert_eq!(e.get("live").as_i64(), Some(3));
+        assert_eq!(e.get("batches").idx(1).as_f64(), Some(32.0));
     }
 
     #[test]

@@ -35,16 +35,19 @@ pub mod sim;
 
 use anyhow::{anyhow, bail, Result};
 
+use std::collections::VecDeque;
+
 use crate::cluster::{cpu_cluster, GpuModel, WorkerSpec};
 use crate::config::Policy;
 use crate::controller::bucket::quantize_alloc;
-use crate::controller::{
-    static_alloc, uniform_alloc, Adjustment, ControllerCfg, DynamicBatcher,
-};
-use crate::metrics::{AdjustEvent, EvalRecord, IterRecord, RunReport};
+use crate::controller::{Adjustment, ControllerCfg, DynamicBatcher};
+use crate::metrics::{AdjustEvent, EpochEvent, EvalRecord, IterRecord, RunReport};
 use crate::runtime::Runtime;
 use crate::sync::{SyncMode, SyncState};
-use crate::trace::ClusterTraces;
+use crate::trace::{
+    ClusterTraces, JoinSpec, MembershipEvent, MembershipKind, MembershipPlan,
+    SpotSpec, SPOT_HORIZON_S,
+};
 use crate::util::json::Json;
 
 pub use real::RealBackend;
@@ -119,6 +122,20 @@ pub trait Backend {
     /// Periodic evaluation at global step `step`; returns
     /// `(loss, metric)` or `None` when the backend does not evaluate.
     fn eval(&mut self, step: u64, now: f64) -> Result<Option<(f64, f64)>>;
+
+    /// Membership hook: worker `w` left the training group (spot
+    /// revocation / starts absent).  Backends owning per-worker
+    /// resources reroute them here (e.g. the real backend hands the
+    /// departed rank's data shards to survivors).  Default: no-op.
+    fn retire_worker(&mut self, _w: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Membership hook: worker `w` (re)joined, seeded from the current
+    /// global model.  Default: no-op.
+    fn admit_worker(&mut self, _w: usize) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Per-worker slowdown capacities: capacity c ∈ (0, 1] ⇒ a worker's
@@ -147,6 +164,10 @@ impl Slowdowns {
         Slowdowns(estimates.iter().map(|&e| e / max).collect())
     }
 }
+
+/// Seed perturbation for spot-trace generation, so the availability
+/// stream is decorrelated from the backend's iteration-noise stream.
+const SPOT_SEED_TAG: u64 = 0x51D0_7C4A;
 
 /// Builder for a [`Session`] — the single entry point for simulated and
 /// real training runs (replaces the old `ExperimentCfg` + `TrainOpts` +
@@ -182,6 +203,8 @@ pub struct SessionBuilder {
     seed: u64,
     traces: Option<ClusterTraces>,
     slowdowns: Option<Slowdowns>,
+    membership: Option<MembershipPlan>,
+    spot: Option<SpotSpec>,
     eval_every: u64,
     pool_threads: usize,
     prefetch: bool,
@@ -204,6 +227,8 @@ impl Default for SessionBuilder {
             seed: 0,
             traces: None,
             slowdowns: None,
+            membership: None,
+            spot: None,
             eval_every: 0,
             pool_threads: 4,
             prefetch: true,
@@ -304,6 +329,38 @@ impl SessionBuilder {
     pub fn slowdowns(mut self, slowdowns: Slowdowns) -> Self {
         self.slowdowns = Some(slowdowns);
         self
+    }
+
+    /// Explicit membership schedule (revocations / joins).  Merged with
+    /// any events already accumulated (e.g. from [`Self::spot`]).
+    pub fn membership(mut self, plan: MembershipPlan) -> Self {
+        self.membership = Some(match self.membership.take() {
+            Some(p) => p.merged(&plan),
+            None => plan,
+        });
+        self
+    }
+
+    /// Spot-churn scenario (`--spot mttf:down[:grace]`): every worker
+    /// gets an independent preemption trace seeded from the session
+    /// seed, and membership revoke/rejoin events are derived from those
+    /// traces with the spec's grace period.  The traces are materialized
+    /// at build time, so builder-call ordering relative to
+    /// `.workers()`/`.seed()` does not matter; a spot spec replaces any
+    /// explicitly-set traces.
+    pub fn spot(mut self, spec: SpotSpec) -> Self {
+        self.spot = Some(spec);
+        self
+    }
+
+    /// Scheduled mid-run joins (`--join k@t`): each listed worker starts
+    /// the run absent and first appears at its join time.
+    pub fn joins(mut self, joins: &[JoinSpec]) -> Self {
+        if joins.is_empty() {
+            return self;
+        }
+        let plan = MembershipPlan::default().with_joins(joins);
+        self.membership(plan)
     }
 
     /// Evaluate every N global steps (real backend; 0 = never).
@@ -421,6 +478,17 @@ impl SessionBuilder {
                 b.controller.conserve_global = v;
             }
         }
+        // Elastic-membership scenario keys (same shapes as the CLI
+        // flags; the spot scenario materializes at build time).
+        if let Some(s) = j.get("spot").as_str() {
+            let spec = SpotSpec::parse(s).ok_or(format!("bad spot {s:?}"))?;
+            b = b.spot(spec);
+        }
+        if let Some(s) = j.get("join").as_str() {
+            let joins =
+                JoinSpec::parse_list(s).ok_or(format!("bad join {s:?}"))?;
+            b = b.joins(&joins);
+        }
         b.validate()?;
         Ok(b)
     }
@@ -469,6 +537,25 @@ impl SessionBuilder {
             }
             if s.0.iter().any(|&c| c <= 0.0 || c > 1.0) {
                 return Err("slowdown capacities must be in (0, 1]".into());
+            }
+        }
+        if let Some(plan) = &self.membership {
+            if let Some(mw) = plan.max_worker() {
+                if mw >= k {
+                    return Err(format!(
+                        "membership event for worker {mw} but only {k} workers"
+                    ));
+                }
+            }
+            if plan
+                .events()
+                .iter()
+                .any(|e| !e.time.is_finite() || e.time < 0.0)
+            {
+                return Err("membership event times must be finite and non-negative".into());
+            }
+            if plan.initial_live(k).iter().all(|&l| !l) {
+                return Err("no initially-live workers (every rank is join_at)".into());
             }
         }
         Ok(())
@@ -544,6 +631,32 @@ impl SessionBuilder {
         if b0 <= 0.0 {
             bail!("reference batch b0 must be positive");
         }
+        // Materialize the spot-churn scenario now, when the final worker
+        // count and seed are known — builder-call ordering is immaterial.
+        // A spot spec supersedes explicitly-set traces.
+        let (traces, membership) = match &self.spot {
+            Some(spec) => {
+                let traces = ClusterTraces::spot_cluster(
+                    k,
+                    SPOT_HORIZON_S,
+                    spec.mttf_s,
+                    spec.down_s,
+                    self.seed ^ SPOT_SEED_TAG,
+                );
+                let derived = MembershipPlan::from_traces(&traces, spec.grace_s);
+                let membership = match &self.membership {
+                    Some(p) => p.clone().merged(&derived),
+                    None => derived,
+                };
+                (traces, membership)
+            }
+            None => (
+                self.traces
+                    .clone()
+                    .unwrap_or_else(|| ClusterTraces::constant(k)),
+                self.membership.clone().unwrap_or_default(),
+            ),
+        };
         Ok(Session {
             backend,
             policy: self.policy,
@@ -558,10 +671,8 @@ impl SessionBuilder {
                 .slowdowns
                 .clone()
                 .unwrap_or_else(|| Slowdowns::none(k)),
-            traces: self
-                .traces
-                .clone()
-                .unwrap_or_else(|| ClusterTraces::constant(k)),
+            traces,
+            membership,
         })
     }
 }
@@ -579,6 +690,7 @@ pub struct Session<B: Backend> {
     loss_target: f64,
     slowdowns: Slowdowns,
     traces: ClusterTraces,
+    membership: MembershipPlan,
 }
 
 impl Session<SimBackend> {
@@ -597,16 +709,48 @@ impl<B: Backend> Session<B> {
         &mut self.backend
     }
 
-    /// Initial *continuous* allocation by policy.
-    fn initial_alloc(&self, k: usize) -> Vec<f64> {
+    /// Policy allocation over the live cohort at total mass `mass`
+    /// (absent ranks get 0).  Used for the initial allocation *and* for
+    /// open-loop rebalances at membership epochs.  This is
+    /// [`crate::controller::uniform_alloc`]/[`crate::controller::static_alloc`]
+    /// generalized to a live mask — keep the arithmetic in sync.
+    fn policy_alloc(&self, live: &[bool], mass: f64) -> Vec<f64> {
+        let k = live.len();
+        let n = live.iter().filter(|&&l| l).count();
+        let mut out = vec![0.0; k];
+        if n == 0 {
+            return out;
+        }
         match self.policy {
-            Policy::Uniform => uniform_alloc(self.b0, k),
+            Policy::Uniform => {
+                for (b, &l) in out.iter_mut().zip(live) {
+                    if l {
+                        *b = mass / n as f64;
+                    }
+                }
+            }
             // Open-loop: proportional to the FLOPs *estimate* (not the
             // true throughput — that gap is what Dynamic corrects).
             Policy::Static | Policy::Dynamic => {
-                static_alloc(self.b0, &self.backend.flops_estimates())
+                let est = self.backend.flops_estimates();
+                let total: f64 = est
+                    .iter()
+                    .zip(live)
+                    .filter(|(_, &l)| l)
+                    .map(|(&e, _)| e)
+                    .sum();
+                assert!(
+                    total > 0.0,
+                    "live cohort's FLOPs estimates must be positive"
+                );
+                for ((b, &l), &e) in out.iter_mut().zip(live).zip(&est) {
+                    if l {
+                        *b = mass * e / total;
+                    }
+                }
             }
         }
+        out
     }
 
     /// Run to the step budget / convergence target and report.
@@ -618,6 +762,19 @@ impl<B: Backend> Session<B> {
         if self.traces.traces.len() != k {
             bail!("traces/workers length mismatch");
         }
+        if self.membership.max_worker().map_or(false, |w| w >= k) {
+            bail!("membership event for a worker outside 0..{k}");
+        }
+        let live = self.membership.initial_live(k);
+        if live.iter().all(|&l| !l) {
+            bail!("no initially-live workers (every rank is join_at)");
+        }
+        // Tell the backend about ranks that start the run absent.
+        for w in 0..k {
+            if !live[w] {
+                self.backend.retire_worker(w)?;
+            }
+        }
         let is_bsp = matches!(self.sync, SyncMode::Bsp);
         let buckets = self.backend.buckets();
         let mut report = RunReport::new(&format!(
@@ -627,28 +784,31 @@ impl<B: Backend> Session<B> {
             self.sync.label()
         ));
 
-        // Initial allocation, quantized on bucketed backends.
-        let proposal = self.initial_alloc(k);
+        // Initial allocation over the live cohort, quantized on
+        // bucketed backends.
+        let n_live = live.iter().filter(|&&l| l).count();
+        let proposal = self.policy_alloc(&live, self.b0 * n_live as f64);
         let mut cur_buckets: Option<Vec<usize>> = None;
-        let mut batches: Vec<f64> = match &buckets {
+        let batches: Vec<f64> = match &buckets {
             Some(grid) => {
-                let (snapped, _) = quantize_alloc(&proposal, grid, &vec![0usize; k]);
+                let (snapped, _) =
+                    quantize_alloc_live(&proposal, grid, &vec![0usize; k], &live);
                 let b = snapped.iter().map(|&x| x as f64).collect();
                 cur_buckets = Some(snapped);
                 b
             }
             None => proposal,
         };
-        let mut controller = (self.policy == Policy::Dynamic)
-            .then(|| DynamicBatcher::new(self.controller.clone(), &batches));
+        let controller = (self.policy == Policy::Dynamic)
+            .then(|| DynamicBatcher::with_membership(self.controller.clone(), &batches, &live));
         // Async progress is denominated in the *initial* global batch
         // (post-quantization), not k·b0: bucket snapping can leave the
         // batch sum off k·b0, and the budget must count global-batch
         // equivalents of the allocation actually executed.  Conserving
-        // policies keep the sum at this value across adjustments.
+        // policies keep the sum at this value across adjustments *and*
+        // membership epochs.
         let global_batch: f64 = batches.iter().sum();
 
-        let mut sync = SyncState::new(self.sync, k);
         let target = if self.steps > 0 {
             self.steps
         } else {
@@ -666,31 +826,55 @@ impl<B: Backend> Session<B> {
             target.saturating_mul(k as u64).saturating_mul(40)
         };
 
-        let mut t = 0.0f64;
-        let mut progress = 0.0f64;
-        let mut updates = 0u64;
-        let mut global_steps = 0u64;
-        let mut busy = vec![false; k];
-        let mut next_done = vec![0.0f64; k];
-        let mut started_at = vec![0.0f64; k];
-        // BSP round accumulator: (worker, duration) of the open round.
-        let mut round: Vec<(usize, f64)> = Vec::new();
-        let mut round_start = 0.0f64;
-        let mut stopped_early = false;
+        let mut events: VecDeque<MembershipEvent> =
+            self.membership.events().iter().copied().collect();
+        let mut st = LoopState {
+            batches: batches.clone(),
+            exec_batch: batches,
+            cur_buckets,
+            buckets,
+            controller,
+            sync: SyncState::with_live(self.sync, &live),
+            live,
+            epoch: 0,
+            t: 0.0,
+            progress: 0.0,
+            updates: 0,
+            global_steps: 0,
+            busy: vec![false; k],
+            next_done: vec![0.0; k],
+            started_at: vec![0.0; k],
+            round: Vec::new(),
+            stopped_early: false,
+            global_batch,
+            is_bsp,
+        };
 
-        'training: while progress < target as f64 && updates < hard_updates {
-            // Start every idle worker the sync gate admits, as one wave.
+        'training: while st.progress < target as f64 && st.updates < hard_updates {
+            // Membership transitions due now (revocations first at equal
+            // timestamps — the plan is pre-sorted).
+            while events.front().map_or(false, |e| e.time <= st.t) {
+                let ev = events.pop_front().unwrap();
+                self.apply_membership(ev, &mut st, &mut report)?;
+                if st.stopped_early {
+                    // A revocation-forced barrier can hit the loss target.
+                    break 'training;
+                }
+            }
+            if st.live.iter().all(|&l| !l) && events.is_empty() {
+                bail!("all workers revoked and no rejoin scheduled");
+            }
+
+            // Start every idle live worker the sync gate admits, as one
+            // wave.
             let wave: Vec<usize> = (0..k)
-                .filter(|&w| !busy[w] && sync.may_proceed(w))
+                .filter(|&w| st.live[w] && !st.busy[w] && st.sync.may_proceed(w))
                 .collect();
             if !wave.is_empty() {
-                if is_bsp && wave.len() == k {
-                    round_start = t;
-                }
                 for &w in &wave {
-                    sync.pull(w);
+                    st.sync.pull(w);
                 }
-                let outs = self.backend.execute_wave(&wave, &batches, t)?;
+                let outs = self.backend.execute_wave(&wave, &st.batches, st.t)?;
                 if outs.len() != wave.len() {
                     bail!(
                         "backend returned {} outcomes for a wave of {}",
@@ -703,83 +887,51 @@ impl<B: Backend> Session<B> {
                     // work, the availability trace integrates it (a
                     // preemption costs its downtime, not work/ε).
                     let c = self.slowdowns.0[w];
-                    let dur =
-                        self.traces.traces[w].time_to_complete(t, out.work / c) + out.fixed;
-                    started_at[w] = t;
-                    next_done[w] = t + dur;
-                    busy[w] = true;
+                    let dur = self.traces.traces[w].time_to_complete(st.t, out.work / c)
+                        + out.fixed;
+                    st.started_at[w] = st.t;
+                    st.next_done[w] = st.t + dur;
+                    st.busy[w] = true;
+                    // The batch this iteration actually runs with — a
+                    // mid-flight membership rebalance must not relabel it.
+                    st.exec_batch[w] = st.batches[w];
                 }
             }
 
-            // Advance virtual time to the earliest completion.
-            let w = (0..k)
-                .filter(|&w| busy[w])
-                .min_by(|&a, &b| next_done[a].partial_cmp(&next_done[b]).unwrap())
-                .ok_or_else(|| anyhow!("session deadlock: no runnable workers"))?;
-            let dur = next_done[w] - started_at[w];
-            t = t.max(next_done[w]);
-            busy[w] = false;
-            let clock = sync.clock(w);
-            let staleness = sync.push_update(w);
-            updates += 1;
+            // Advance virtual time to the earlier of the next completion
+            // and the next membership event (a revocation must be able to
+            // cut short an in-flight iteration a preemption has stretched
+            // to the VM's recovery — that is its whole point).
+            let next_completion = (0..k)
+                .filter(|&w| st.busy[w])
+                .min_by(|&a, &b| st.next_done[a].partial_cmp(&st.next_done[b]).unwrap());
+            let next_event_t = events.front().map(|e| e.time);
+            let w = match (next_completion, next_event_t) {
+                (Some(w), Some(te)) if te < st.next_done[w] => {
+                    st.t = st.t.max(te);
+                    continue 'training;
+                }
+                (Some(w), _) => w,
+                (None, Some(te)) => {
+                    // Nobody is live/running: fast-forward to the next
+                    // scheduled join.
+                    st.t = st.t.max(te);
+                    continue 'training;
+                }
+                (None, None) => bail!("session deadlock: no runnable workers"),
+            };
+            let dur = st.next_done[w] - st.started_at[w];
+            st.t = st.t.max(st.next_done[w]);
+            st.busy[w] = false;
+            let clock = st.sync.clock(w);
+            let staleness = st.sync.push_update(w);
+            st.updates += 1;
 
-            if is_bsp {
-                round.push((w, dur));
-                if sync.at_barrier() {
-                    // Round complete: barrier accounting, one λ-weighted
-                    // aggregate update over all K workers.
-                    round.sort_by_key(|r| r.0);
-                    let barrier = round.iter().map(|r| r.1).fold(0.0f64, f64::max);
-                    for &(rw, rdur) in &round {
-                        report.iters.push(IterRecord {
-                            worker: rw,
-                            iter: global_steps,
-                            start: round_start,
-                            duration: rdur,
-                            batch: batches[rw],
-                            wait: barrier - rdur,
-                        });
-                    }
-                    let all: Vec<usize> = (0..k).collect();
-                    let loss = self.backend.apply_update(&all, &batches)?;
-                    global_steps += 1;
-                    progress += 1.0;
-                    if let Some(l) = loss {
-                        report.losses.push((t, global_steps - 1, l));
-                    }
-                    record_eval(
-                        &mut self.backend,
-                        &mut report,
-                        self.eval_every,
-                        global_steps,
-                        t,
-                    )?;
-                    if hit_loss_target(loss, self.loss_target) {
-                        report.reached_target = true;
-                        stopped_early = true;
-                    }
-                    if !stopped_early {
-                        if let Some(ctl) = controller.as_mut() {
-                            for &(rw, rdur) in &round {
-                                ctl.observe(rw, rdur);
-                            }
-                            if let Adjustment::Apply(p) = ctl.maybe_adjust() {
-                                apply_adjustment(
-                                    p,
-                                    &buckets,
-                                    &mut cur_buckets,
-                                    &mut batches,
-                                    ctl,
-                                    &mut report,
-                                    &mut t,
-                                    global_steps,
-                                    self.adjust_cost_s,
-                                );
-                            }
-                        }
-                    }
-                    round.clear();
-                    if stopped_early {
+            if st.is_bsp {
+                st.round.push((w, st.started_at[w], dur));
+                if st.sync.at_barrier() {
+                    self.close_bsp_round(&mut st, &mut report, false)?;
+                    if st.stopped_early {
                         break 'training;
                     }
                 }
@@ -787,55 +939,61 @@ impl<B: Backend> Session<B> {
                 report.iters.push(IterRecord {
                     worker: w,
                     iter: clock,
-                    start: started_at[w],
+                    start: st.started_at[w],
                     duration: dur,
-                    batch: batches[w],
+                    batch: st.exec_batch[w],
                     wait: 0.0,
                 });
-                let loss = self.backend.apply_update(&[w], &batches)?;
+                let loss = self.backend.apply_update(&[w], &st.batches)?;
                 // Fresh-equivalent progress: weight by share of the
                 // global batch and by the staleness discount; K fresh
                 // updates of share 1/K ⇒ one global iteration.
-                progress += (batches[w] / global_batch)
+                st.progress += (st.exec_batch[w] / st.global_batch)
                     * self.backend.staleness_discount(staleness);
                 if let Some(l) = loss {
-                    report.losses.push((t, updates - 1, l));
+                    report.losses.push((st.t, st.updates - 1, l));
                 }
                 if hit_loss_target(loss, self.loss_target) {
                     report.reached_target = true;
                     break 'training;
                 }
-                if updates % k as u64 == 0 {
-                    global_steps += 1;
+                if st.updates % k as u64 == 0 {
+                    st.global_steps += 1;
                     record_eval(
                         &mut self.backend,
                         &mut report,
                         self.eval_every,
-                        global_steps,
-                        t,
+                        st.global_steps,
+                        st.t,
                     )?;
                 }
-                if let Some(ctl) = controller.as_mut() {
-                    ctl.observe(w, dur);
-                    if let Adjustment::Apply(p) = ctl.maybe_adjust() {
-                        apply_adjustment(
-                            p,
-                            &buckets,
-                            &mut cur_buckets,
-                            &mut batches,
-                            ctl,
-                            &mut report,
-                            &mut t,
-                            updates,
-                            self.adjust_cost_s,
-                        );
+                if let Some(ctl) = st.controller.as_mut() {
+                    // As at the barrier: an iteration that flew across a
+                    // membership rebalance describes the old batch size —
+                    // don't feed it into the fresh smoothing interval.
+                    if st.exec_batch[w] == st.batches[w] {
+                        ctl.observe(w, dur);
+                        if let Adjustment::Apply(p) = ctl.maybe_adjust() {
+                            apply_adjustment(
+                                p,
+                                &st.buckets,
+                                &mut st.cur_buckets,
+                                &mut st.batches,
+                                &st.live,
+                                ctl,
+                                &mut report,
+                                &mut st.t,
+                                st.updates,
+                                self.adjust_cost_s,
+                            );
+                        }
                     }
                 }
             }
         }
 
-        report.total_time = t;
-        report.total_iters = if is_bsp { global_steps } else { updates };
+        report.total_time = st.t;
+        report.total_iters = if is_bsp { st.global_steps } else { st.updates };
         if !report.reached_target {
             report.reached_target = if self.loss_target > 0.0 {
                 false
@@ -845,12 +1003,217 @@ impl<B: Backend> Session<B> {
                 // batch sum (and thus per-update progress) slightly
                 // short, and a normally completed run must not report
                 // failure.
-                progress >= target as f64
-                    || (self.steps > 0 && updates >= hard_updates)
+                st.progress >= target as f64
+                    || (self.steps > 0 && st.updates >= hard_updates)
             };
         }
         Ok(report)
     }
+
+    /// Close the open BSP round: barrier accounting, one λ-weighted
+    /// aggregate update over the round's members, controller
+    /// observe/adjust.  Called on a normal barrier and — with
+    /// `membership_forced` — when a mid-round revocation leaves every
+    /// survivor already at the barrier.
+    fn close_bsp_round(
+        &mut self,
+        st: &mut LoopState,
+        report: &mut RunReport,
+        membership_forced: bool,
+    ) -> Result<()> {
+        st.round.sort_by_key(|r| r.0);
+        // Barrier release time: the last member completion on a normal
+        // close; on a membership-forced close the survivors stall until
+        // the revocation itself (st.t), and that stall is wait too.
+        let round_end = st
+            .round
+            .iter()
+            .map(|&(_, s, d)| s + d)
+            .fold(f64::MIN, f64::max)
+            .max(st.t);
+        // Weight gradients by the batches they were *computed* with: a
+        // membership rebalance between a worker's wave start and the
+        // barrier must not relabel its contribution.
+        let mut exec = st.batches.clone();
+        for &(rw, _, _) in &st.round {
+            exec[rw] = st.exec_batch[rw];
+        }
+        for &(rw, rs, rd) in &st.round {
+            report.iters.push(IterRecord {
+                worker: rw,
+                iter: st.global_steps,
+                start: rs,
+                duration: rd,
+                batch: exec[rw],
+                wait: round_end - rs - rd,
+            });
+        }
+        let members: Vec<usize> = st.round.iter().map(|r| r.0).collect();
+        let loss = self.backend.apply_update(&members, &exec)?;
+        st.global_steps += 1;
+        st.progress += 1.0;
+        if let Some(l) = loss {
+            report.losses.push((st.t, st.global_steps - 1, l));
+        }
+        record_eval(
+            &mut self.backend,
+            report,
+            self.eval_every,
+            st.global_steps,
+            st.t,
+        )?;
+        if hit_loss_target(loss, self.loss_target) {
+            report.reached_target = true;
+            st.stopped_early = true;
+        }
+        // A membership-forced close skips the controller: the revoked
+        // rank is still active inside the DynamicBatcher at this point
+        // (retire runs right after, in rebalance_membership), so an
+        // adjustment here would be computed over the wrong cohort — and
+        // the imminent rebalance resets the smoothing interval anyway,
+        // making these observations moot.
+        if !st.stopped_early && !membership_forced {
+            if let Some(ctl) = st.controller.as_mut() {
+                for &(rw, _, rd) in &st.round {
+                    // Skip members whose batch was rebalanced mid-flight
+                    // (an epoch landed inside this round): their duration
+                    // describes the old batch size, and the controller's
+                    // smoothing interval was reset for the new one.
+                    if st.exec_batch[rw] == st.batches[rw] {
+                        ctl.observe(rw, rd);
+                    }
+                }
+                if let Adjustment::Apply(p) = ctl.maybe_adjust() {
+                    apply_adjustment(
+                        p,
+                        &st.buckets,
+                        &mut st.cur_buckets,
+                        &mut st.batches,
+                        &st.live,
+                        ctl,
+                        report,
+                        &mut st.t,
+                        st.global_steps,
+                        self.adjust_cost_s,
+                    );
+                }
+            }
+        }
+        st.round.clear();
+        Ok(())
+    }
+
+    /// Apply one membership transition (idempotent: a revoke of an
+    /// already-absent worker or a join of a live one is a no-op, so
+    /// trace-derived and explicit event lists compose safely).
+    fn apply_membership(
+        &mut self,
+        ev: MembershipEvent,
+        st: &mut LoopState,
+        report: &mut RunReport,
+    ) -> Result<()> {
+        let w = ev.worker;
+        match ev.kind {
+            MembershipKind::Revoke => {
+                if !st.live[w] {
+                    return Ok(());
+                }
+                st.epoch += 1;
+                st.live[w] = false;
+                // The instance is gone: in-flight work and any
+                // completed-but-unapplied round contribution die with it.
+                st.busy[w] = false;
+                st.round.retain(|r| r.0 != w);
+                st.sync.retire(w);
+                self.backend.retire_worker(w)?;
+                // A mid-round revocation can leave every survivor already
+                // waiting at the barrier: close the round now (with
+                // pre-revocation batch weights), then rebalance.
+                let n_live = st.live.iter().filter(|&&l| l).count();
+                if st.is_bsp && !st.round.is_empty() && st.round.len() == n_live {
+                    st.sync.close_round();
+                    self.close_bsp_round(st, report, true)?;
+                }
+                self.rebalance_membership(st, MembershipKind::Revoke, w);
+            }
+            MembershipKind::Join => {
+                if st.live[w] {
+                    return Ok(());
+                }
+                st.epoch += 1;
+                st.sync.admit(w);
+                st.live[w] = true;
+                self.backend.admit_worker(w)?;
+                self.rebalance_membership(st, MembershipKind::Join, w);
+            }
+        }
+        report.epochs.push(EpochEvent {
+            time: st.t,
+            epoch: st.epoch,
+            worker: w,
+            kind: ev.kind,
+            live: st.live.iter().filter(|&&l| l).count(),
+            batches: st.batches.clone(),
+        });
+        Ok(())
+    }
+
+    /// Redistribute batch mass after a membership transition, conserving
+    /// the global batch: the controller water-fills (revocation) or
+    /// warm-starts (join); open-loop policies recompute their allocation
+    /// over the live cohort.  Bucketed backends snap the result.
+    fn rebalance_membership(&mut self, st: &mut LoopState, kind: MembershipKind, worker: usize) {
+        let proposal: Vec<f64> = match st.controller.as_mut() {
+            Some(ctl) => {
+                match kind {
+                    MembershipKind::Revoke => ctl.retire(worker),
+                    MembershipKind::Join => ctl.admit(worker),
+                }
+                ctl.batches()
+            }
+            None => self.policy_alloc(&st.live, st.global_batch),
+        };
+        match &st.buckets {
+            Some(grid) => {
+                let cur = st.cur_buckets.as_mut().expect("bucketed session state");
+                let (snapped, _) = quantize_alloc_live(&proposal, grid, cur, &st.live);
+                st.batches = snapped.iter().map(|&b| b as f64).collect();
+                *cur = snapped;
+                if let Some(ctl) = st.controller.as_mut() {
+                    ctl.set_batches(&st.batches);
+                }
+            }
+            None => st.batches = proposal,
+        }
+    }
+}
+
+/// Mutable per-run state of the [`Session::run`] event loop, factored
+/// out so membership transitions and BSP round closure can live in
+/// helper methods without fighting the borrow checker.
+struct LoopState {
+    /// Current allocation (0 for absent ranks).
+    batches: Vec<f64>,
+    /// Batch each worker's current/last iteration executed with.
+    exec_batch: Vec<f64>,
+    cur_buckets: Option<Vec<usize>>,
+    buckets: Option<Vec<usize>>,
+    controller: Option<DynamicBatcher>,
+    sync: SyncState,
+    live: Vec<bool>,
+    epoch: u64,
+    t: f64,
+    progress: f64,
+    updates: u64,
+    global_steps: u64,
+    busy: Vec<bool>,
+    next_done: Vec<f64>,
+    started_at: Vec<f64>,
+    /// BSP round accumulator: (worker, start, duration) of the open round.
+    round: Vec<(usize, f64, f64)>,
+    stopped_early: bool,
+    global_batch: f64,
+    is_bsp: bool,
 }
 
 /// Push a periodic eval record when one is due and the backend evaluates.
@@ -879,6 +1242,28 @@ fn hit_loss_target(loss: Option<f64>, target: f64) -> bool {
     target > 0.0 && loss.map_or(false, |l| l < target)
 }
 
+/// Quantize only the live entries of an allocation to the bucket grid;
+/// absent ranks stay at bucket 0 / batch 0 (a 0 proposal must never
+/// snap to the grid's smallest bucket).
+fn quantize_alloc_live(
+    proposal: &[f64],
+    grid: &[usize],
+    cur: &[usize],
+    live: &[bool],
+) -> (Vec<usize>, Vec<bool>) {
+    let idx: Vec<usize> = (0..proposal.len()).filter(|&i| live[i]).collect();
+    let sub_p: Vec<f64> = idx.iter().map(|&i| proposal[i]).collect();
+    let sub_c: Vec<usize> = idx.iter().map(|&i| cur[i]).collect();
+    let (snapped, swaps) = quantize_alloc(&sub_p, grid, &sub_c);
+    let mut full_s = vec![0usize; proposal.len()];
+    let mut full_w = vec![false; proposal.len()];
+    for ((&i, &s), &w) in idx.iter().zip(&snapped).zip(&swaps) {
+        full_s[i] = s;
+        full_w[i] = w;
+    }
+    (full_s, full_w)
+}
+
 /// Apply a controller proposal: quantize to the bucket grid when the
 /// backend has one (an executable swap; recorded only when some bucket
 /// actually changes), or apply the continuous allocation directly.
@@ -888,6 +1273,7 @@ fn apply_adjustment(
     grid: &Option<Vec<usize>>,
     cur_buckets: &mut Option<Vec<usize>>,
     batches: &mut Vec<f64>,
+    live: &[bool],
     ctl: &mut DynamicBatcher,
     report: &mut RunReport,
     t: &mut f64,
@@ -897,7 +1283,7 @@ fn apply_adjustment(
     match grid {
         Some(g) => {
             let cur = cur_buckets.as_mut().expect("bucketed session state");
-            let (snapped, swaps) = quantize_alloc(&proposal, g, cur);
+            let (snapped, swaps) = quantize_alloc_live(&proposal, g, cur, live);
             let snapped_f: Vec<f64> = snapped.iter().map(|&b| b as f64).collect();
             if swaps.iter().any(|&s| s) {
                 *t += cost;
@@ -1006,6 +1392,84 @@ mod tests {
             .cores(&[4, 8])
             .slowdowns(Slowdowns(vec![0.0, 1.0]));
         assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_bad_membership() {
+        // Worker index out of range.
+        let b = SessionBuilder::default()
+            .cores(&[4, 8])
+            .joins(&[JoinSpec { worker: 5, time: 10.0 }]);
+        assert!(b.validate().is_err());
+        // Every rank scheduled as join_at ⇒ nobody to start the run.
+        let b = SessionBuilder::default().cores(&[4, 8]).joins(&[
+            JoinSpec { worker: 0, time: 5.0 },
+            JoinSpec { worker: 1, time: 9.0 },
+        ]);
+        assert!(b.validate().is_err());
+        // Negative event time.
+        let b = SessionBuilder::default()
+            .cores(&[4, 8])
+            .membership(MembershipPlan::new(vec![MembershipEvent {
+                time: -1.0,
+                worker: 0,
+                kind: MembershipKind::Revoke,
+            }]));
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn builder_parses_spot_and_join_keys() {
+        let b = SessionBuilder::from_json_str(
+            r#"{"workload": "mnist", "seed": 3, "spot": "5000:120:30", "join": "1@40"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            b.spot,
+            Some(SpotSpec { mttf_s: 5000.0, down_s: 120.0, grace_s: 30.0 })
+        );
+        let plan = b.membership.as_ref().unwrap();
+        assert!(plan.events().iter().any(|e| e.worker == 1
+            && e.kind == MembershipKind::Join
+            && e.time == 40.0));
+        assert!(SessionBuilder::from_json_str(r#"{"spot": "bogus"}"#).is_err());
+        assert!(SessionBuilder::from_json_str(r#"{"join": "bogus"}"#).is_err());
+        // join for a worker outside the cluster fails validation.
+        assert!(SessionBuilder::from_json_str(r#"{"join": "9@4"}"#).is_err());
+    }
+
+    #[test]
+    fn spot_scenario_is_deterministic_and_order_independent() {
+        // The spot spec materializes at build time, so .seed() placement
+        // relative to .spot() must not matter.
+        let spec = SpotSpec { mttf_s: 4_000.0, down_s: 200.0, grace_s: 20.0 };
+        let spot_first = SessionBuilder::default()
+            .cores(&[4, 8, 16])
+            .spot(spec)
+            .seed(11)
+            .build_sim()
+            .unwrap();
+        let seed_first = SessionBuilder::default()
+            .cores(&[4, 8, 16])
+            .seed(11)
+            .spot(spec)
+            .build_sim()
+            .unwrap();
+        assert_eq!(
+            spot_first.membership.events(),
+            seed_first.membership.events()
+        );
+        // And a different seed yields a different churn schedule.
+        let other = SessionBuilder::default()
+            .cores(&[4, 8, 16])
+            .seed(12)
+            .spot(spec)
+            .build_sim()
+            .unwrap();
+        assert_ne!(
+            spot_first.membership.events(),
+            other.membership.events()
+        );
     }
 
     #[test]

@@ -27,7 +27,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::controller::bucket::quantize;
-use crate::data::{self, Batch, Dataset};
+use crate::data::{self, Batch, Dataset, ShardRouter};
 use crate::ps::{lambdas_from_batches, FusedOptimizer};
 use crate::runtime::{ModelManifest, Runtime, StepKind};
 use crate::session::{Backend, WorkerOutcome};
@@ -39,6 +39,10 @@ pub struct RealBackend<'rt> {
     model_name: String,
     model: ModelManifest,
     dataset: Box<dyn Dataset>,
+    /// Elastic shard routing: a revoked worker's data shards flow to the
+    /// survivors (round-robin) and return when it rejoins — streams are
+    /// never reset, so no sample repeats.
+    router: ShardRouter,
     params: Vec<f32>,
     optimizer: FusedOptimizer,
     /// Per-worker gradient buffers, reused across waves (§Perf it. 2).
@@ -110,6 +114,7 @@ impl<'rt> RealBackend<'rt> {
             model_name: model_name.to_string(),
             model,
             dataset,
+            router: ShardRouter::new(k),
             params,
             optimizer,
             grads,
@@ -171,6 +176,11 @@ impl Backend for RealBackend<'_> {
             self.prepared = Some((self.version, lits));
         }
 
+        // Shard routing: resolve every wave entry's shard up front (in
+        // wave order) so the round-robin cursor advances identically
+        // with prefetch on or off.
+        let shards: Vec<usize> = wave.iter().map(|&w| self.router.next_shard(w)).collect();
+
         // Prefetch pipelining (§Perf iteration 4): the dataset and a
         // one-slot hand-off buffer live behind mutexes so a pool worker
         // can generate the next wave entry's batch while the leader
@@ -186,10 +196,11 @@ impl Backend for RealBackend<'_> {
             let b = batches[w] as usize;
             let batch = match slot.lock().unwrap().take() {
                 Some(batch) => batch, // prefetched under the previous step
-                None => ds.lock().unwrap().next_batch(w, b),
+                None => ds.lock().unwrap().next_batch(shards[i], b),
             };
             let handle = if prefetch && i + 1 < wave.len() {
                 let nw = wave[i + 1];
+                let ns = shards[i + 1];
                 let nb = batches[nw] as usize;
                 let (dsr, slotr) = (&ds, &slot);
                 // SAFETY: the handle is joined inside this loop
@@ -198,7 +209,7 @@ impl Backend for RealBackend<'_> {
                 // `slot` can go out of scope; it is never leaked.
                 Some(unsafe {
                     pool::global().submit(move || {
-                        let next = dsr.lock().unwrap().next_batch(nw, nb);
+                        let next = dsr.lock().unwrap().next_batch(ns, nb);
                         *slotr.lock().unwrap() = Some(next);
                     })
                 })
@@ -251,6 +262,16 @@ impl Backend for RealBackend<'_> {
 
     fn staleness_discount(&self, _staleness: u64) -> f64 {
         1.0 // convergence is real here, not modeled
+    }
+
+    fn retire_worker(&mut self, w: usize) -> Result<()> {
+        self.router.revoke(w);
+        Ok(())
+    }
+
+    fn admit_worker(&mut self, w: usize) -> Result<()> {
+        self.router.admit(w);
+        Ok(())
     }
 
     fn eval(&mut self, _step: u64, _now: f64) -> Result<Option<(f64, f64)>> {

@@ -126,7 +126,10 @@ mod tests {
     use crate::metrics::RunReport;
     use crate::session::{Session, SessionBuilder};
     use crate::sync::SyncMode;
-    use crate::trace::{AvailTrace, ClusterTraces};
+    use crate::trace::{
+        AvailTrace, ClusterTraces, JoinSpec, MembershipKind, MembershipPlan,
+        DOWN_EPS,
+    };
 
     fn quick(workload: &str, cores: &[usize], policy: Policy) -> SessionBuilder {
         Session::builder()
@@ -234,6 +237,155 @@ mod tests {
         let b = run(quick("mnist", &[4, 8, 27], Policy::Dynamic));
         assert_eq!(a.total_time, b.total_time);
         assert_eq!(a.adjustments.len(), b.adjustments.len());
+    }
+
+    // ---------------------------------------------------- elastic membership
+
+    /// A 150 s outage on worker 0 starting at t=60, as traces + the
+    /// membership plan derived from them (grace 15 s ⇒ revoke at t=75,
+    /// rejoin at t=210).  Timescale: a simulated resnet round on ~13
+    /// cores is ≈4 s, so both events land well inside a 120-step run.
+    fn outage_scenario() -> (ClusterTraces, MembershipPlan) {
+        let traces = ClusterTraces {
+            traces: vec![
+                AvailTrace::from_segments(vec![
+                    (0.0, 1.0),
+                    (60.0, DOWN_EPS),
+                    (210.0, 1.0),
+                ]),
+                AvailTrace::constant(),
+                AvailTrace::constant(),
+            ],
+        };
+        let plan = MembershipPlan::from_traces(&traces, 15.0);
+        (traces, plan)
+    }
+
+    #[test]
+    fn revocation_beats_riding_out_the_preemption_under_bsp() {
+        // Rigid BSP must eat the whole outage at the barrier; elastic
+        // membership revokes the preempted worker and keeps training.
+        let (traces, plan) = outage_scenario();
+        let rigid = run(quick("resnet", &[13, 13, 13], Policy::Uniform)
+            .steps(120)
+            .traces(traces.clone()));
+        let elastic = run(quick("resnet", &[13, 13, 13], Policy::Uniform)
+            .steps(120)
+            .traces(traces)
+            .membership(plan));
+        // Two transitions: revoke at 75, rejoin at 210.
+        assert_eq!(elastic.epochs.len(), 2);
+        assert_eq!(elastic.epochs[0].kind, MembershipKind::Revoke);
+        assert_eq!(elastic.epochs[0].worker, 0);
+        assert_eq!(elastic.epochs[0].live, 2);
+        assert_eq!(elastic.epochs[1].kind, MembershipKind::Join);
+        assert_eq!(elastic.epochs[1].live, 3);
+        // The rigid run pays ~the full 150 s outage at one barrier;
+        // elastic pays only the grace period plus temporarily bigger
+        // survivor batches.
+        assert!(
+            elastic.total_time + 50.0 < rigid.total_time,
+            "elastic {} vs rigid {}",
+            elastic.total_time,
+            rigid.total_time
+        );
+        assert!(elastic.reached_target);
+    }
+
+    #[test]
+    fn membership_conserves_global_batch_at_every_epoch() {
+        let (traces, plan) = outage_scenario();
+        for policy in [Policy::Uniform, Policy::Static, Policy::Dynamic] {
+            for sync in [SyncMode::Bsp, SyncMode::Asp, SyncMode::Ssp { bound: 2 }] {
+                let r = run(quick("resnet", &[4, 13, 22], policy)
+                    .steps(150)
+                    .sync(sync)
+                    .traces(traces.clone())
+                    .membership(plan.clone()));
+                assert!(!r.epochs.is_empty(), "{policy:?}/{sync:?}: no epochs");
+                // Σb of the initial allocation (each worker's first
+                // record predates the first adjustment: min_obs gates it)…
+                let initial: f64 = (0..3)
+                    .map(|w| r.iters.iter().find(|i| i.worker == w).unwrap().batch)
+                    .sum();
+                // …is conserved through every membership rebalance.
+                for e in &r.epochs {
+                    let sum: f64 = e.batches.iter().sum();
+                    assert!(
+                        (sum - initial).abs() < 1e-6,
+                        "{policy:?}/{sync:?} epoch {e:?}: sum {sum} != {initial}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scheduled_join_brings_worker_in_late() {
+        // Worker 2 is a scheduled join: absent at start, appears at
+        // t=4 s (≈ round 50 at mnist's ~80 ms rounds), seeded from the
+        // global model.
+        let r = run(quick("mnist", &[13, 13, 13], Policy::Uniform)
+            .steps(300)
+            .joins(&[JoinSpec { worker: 2, time: 4.0 }]));
+        assert_eq!(r.epochs.len(), 1);
+        assert_eq!(r.epochs[0].kind, MembershipKind::Join);
+        assert_eq!(r.epochs[0].live, 3);
+        // No records for worker 2 before the join…
+        assert!(r
+            .iters
+            .iter()
+            .filter(|i| i.worker == 2)
+            .all(|i| i.start >= 4.0));
+        // …and plenty after.
+        assert!(r.iters.iter().any(|i| i.worker == 2));
+        // Two-worker rounds carried the full global batch before the
+        // join; after it, three ways.
+        let early = r.iters.iter().find(|i| i.worker == 0).unwrap().batch;
+        let late = r.iters.iter().rev().find(|i| i.worker == 0).unwrap().batch;
+        assert!(late < early, "batch should shrink at the join: {early} -> {late}");
+    }
+
+    #[test]
+    fn dynamic_rebalances_after_rejoin() {
+        // After the outage worker 0 rejoins; the controller must fold it
+        // back in and keep conserving the global batch.
+        let (traces, plan) = outage_scenario();
+        let r = run(quick("resnet", &[13, 13, 13], Policy::Dynamic)
+            .adjust_cost(1.0)
+            .steps(200)
+            .traces(traces)
+            .membership(plan));
+        assert_eq!(r.epochs.len(), 2);
+        let rejoin = &r.epochs[1];
+        assert!(rejoin.batches[0] > 0.0, "rejoiner got no batch: {rejoin:?}");
+        // Worker 0 runs iterations again after rejoining.
+        assert!(r
+            .iters
+            .iter()
+            .any(|i| i.worker == 0 && i.start > rejoin.time));
+    }
+
+    #[test]
+    fn deterministic_under_spot_churn() {
+        use crate::trace::SpotSpec;
+        let mk = || {
+            // mnist rounds are ~0.1 s: an mttf of 8 s gives several
+            // preemptions inside a 250-step run.
+            run(quick("mnist", &[4, 8, 27], Policy::Dynamic)
+                .steps(250)
+                .seed(5)
+                .spot(SpotSpec { mttf_s: 8.0, down_s: 2.0, grace_s: 0.3 }))
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.epochs.len(), b.epochs.len());
+        assert_eq!(a.adjustments.len(), b.adjustments.len());
+        for (x, y) in a.epochs.iter().zip(&b.epochs) {
+            assert_eq!(x.time, y.time);
+            assert_eq!(x.worker, y.worker);
+            assert_eq!(x.kind, y.kind);
+        }
     }
 
     #[test]

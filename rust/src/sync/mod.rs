@@ -45,6 +45,12 @@ impl SyncMode {
 }
 
 /// Tracks per-worker clock (completed iterations) and enforces the gate.
+///
+/// Membership is *epoch-tagged*: a worker can be retired (spot
+/// revocation) or admitted (recovery / scheduled mid-run join), and every
+/// aggregate — `min_clock`, `max_clock`, the BSP barrier — counts only
+/// live workers, so a departed rank can neither hold a barrier hostage
+/// nor pin the SSP staleness window.  Each transition bumps the epoch.
 #[derive(Debug, Clone)]
 pub struct SyncState {
     mode: SyncMode,
@@ -53,15 +59,27 @@ pub struct SyncState {
     version: u64,
     /// Model version each worker last pulled.
     pulled: Vec<u64>,
+    /// Current cluster membership; dead ranks are invisible to gating.
+    live: Vec<bool>,
+    /// Membership epoch: bumped on every retire/admit.
+    epoch: u64,
 }
 
 impl SyncState {
     pub fn new(mode: SyncMode, k: usize) -> Self {
+        Self::with_live(mode, &vec![true; k])
+    }
+
+    /// Start with an explicit membership (scheduled `join_at` workers
+    /// begin absent).
+    pub fn with_live(mode: SyncMode, live: &[bool]) -> Self {
         SyncState {
             mode,
-            clocks: vec![0; k],
+            clocks: vec![0; live.len()],
             version: 0,
-            pulled: vec![0; k],
+            pulled: vec![0; live.len()],
+            live: live.to_vec(),
+            epoch: 0,
         }
     }
 
@@ -73,12 +91,38 @@ impl SyncState {
         self.clocks[worker]
     }
 
-    pub fn min_clock(&self) -> u64 {
-        *self.clocks.iter().min().unwrap()
+    pub fn is_live(&self, worker: usize) -> bool {
+        self.live[worker]
     }
 
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Min clock over *live* workers (0 when none are live).
+    pub fn min_clock(&self) -> u64 {
+        self.clocks
+            .iter()
+            .zip(&self.live)
+            .filter(|(_, &l)| l)
+            .map(|(&c, _)| c)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Max clock over *live* workers (0 when none are live).
     pub fn max_clock(&self) -> u64 {
-        *self.clocks.iter().max().unwrap()
+        self.clocks
+            .iter()
+            .zip(&self.live)
+            .filter(|(_, &l)| l)
+            .map(|(&c, _)| c)
+            .max()
+            .unwrap_or(0)
     }
 
     pub fn version(&self) -> u64 {
@@ -87,10 +131,14 @@ impl SyncState {
 
     /// May `worker` start its next iteration?
     ///
-    /// BSP: only if nobody is behind it (it will then wait at the barrier
-    /// anyway — the engine models waiting; here we gate at one-iteration
-    /// lockstep).  ASP: always.  SSP: if it leads the slowest by < bound.
+    /// Dead workers never proceed.  BSP: only if nobody live is behind it
+    /// (it will then wait at the barrier anyway — the engine models
+    /// waiting; here we gate at one-iteration lockstep).  ASP: always.
+    /// SSP: if it leads the slowest live worker by < bound.
     pub fn may_proceed(&self, worker: usize) -> bool {
+        if !self.live[worker] {
+            return false;
+        }
         match self.mode {
             SyncMode::Bsp => self.clocks[worker] == self.min_clock(),
             SyncMode::Asp => true,
@@ -98,6 +146,39 @@ impl SyncState {
                 self.clocks[worker] < self.min_clock() + bound + 1
             }
         }
+    }
+
+    /// Retire a live worker (spot revocation): it disappears from every
+    /// gating aggregate; its clock freezes where it was.
+    pub fn retire(&mut self, worker: usize) {
+        assert!(self.live[worker], "retire of already-dead worker {worker}");
+        self.live[worker] = false;
+        self.epoch += 1;
+    }
+
+    /// Admit an absent worker (recovery / scheduled join).  Its clock is
+    /// seeded to the current live minimum so BSP lockstep and the SSP
+    /// bound hold immediately, and it is marked as having pulled the
+    /// *current* model version (a rejoin starts from the global model,
+    /// never from stale pre-revocation state).
+    pub fn admit(&mut self, worker: usize) {
+        assert!(!self.live[worker], "admit of already-live worker {worker}");
+        if self.live_count() > 0 {
+            self.clocks[worker] = self.min_clock();
+        }
+        self.pulled[worker] = self.version;
+        self.live[worker] = true;
+        self.epoch += 1;
+    }
+
+    /// Close a BSP round *without* a final push: when a mid-round
+    /// revocation leaves every surviving worker already at the barrier,
+    /// the session applies the round's aggregate update and calls this
+    /// for the version bump `push_update` would otherwise have done.
+    pub fn close_round(&mut self) {
+        debug_assert!(matches!(self.mode, SyncMode::Bsp));
+        debug_assert!(self.at_barrier());
+        self.version += 1;
     }
 
     /// Record that `worker` pulled the current model (starts an iteration).
@@ -129,7 +210,7 @@ impl SyncState {
         staleness
     }
 
-    /// BSP full-barrier check: all workers at the same clock.
+    /// BSP full-barrier check: all *live* workers at the same clock.
     pub fn at_barrier(&self) -> bool {
         self.min_clock() == self.max_clock()
     }
@@ -226,6 +307,74 @@ mod tests {
             // One aggregated update per barrier, not three.
             assert_eq!(s.version(), round + 1);
         }
+    }
+
+    #[test]
+    fn retire_unblocks_bsp_barrier() {
+        let mut s = SyncState::new(SyncMode::Bsp, 3);
+        for w in 0..3 {
+            s.pull(w);
+        }
+        s.push_update(0);
+        s.push_update(1);
+        // Worker 2 never finishes — it gets revoked instead.
+        assert!(!s.at_barrier());
+        s.retire(2);
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(s.live_count(), 2);
+        // Survivors are now all at clock 1: barrier holds without rank 2.
+        assert!(s.at_barrier());
+        assert!(!s.may_proceed(2), "dead worker must not proceed");
+        s.close_round();
+        assert_eq!(s.version(), 1);
+        assert!(s.may_proceed(0) && s.may_proceed(1));
+    }
+
+    #[test]
+    fn retire_unpins_ssp_staleness_window() {
+        let mut s = SyncState::new(SyncMode::Ssp { bound: 1 }, 2);
+        s.pull(0);
+        s.push_update(0);
+        s.pull(0);
+        s.push_update(0);
+        // clock0=2, clock1=0, bound=1 ⇒ worker 0 is blocked on the laggard.
+        assert!(!s.may_proceed(0));
+        s.retire(1);
+        // min over live is now worker 0 itself ⇒ unblocked.
+        assert!(s.may_proceed(0));
+    }
+
+    #[test]
+    fn admit_seeds_clock_and_version() {
+        let mut s = SyncState::new(SyncMode::Bsp, 3);
+        s.retire(1);
+        for _ in 0..2 {
+            for w in [0usize, 2] {
+                s.pull(w);
+            }
+            for w in [0usize, 2] {
+                s.push_update(w);
+            }
+        }
+        assert_eq!(s.version(), 2);
+        assert_eq!(s.min_clock(), 2);
+        s.admit(1);
+        assert_eq!(s.epoch(), 2);
+        // Seeded at the live minimum and at the current model version:
+        // lockstep resumes with zero staleness for the rejoiner.
+        assert_eq!(s.clock(1), 2);
+        assert!(s.may_proceed(1));
+        s.pull(1);
+        assert_eq!(s.push_update(1), 0);
+    }
+
+    #[test]
+    fn initial_membership_can_start_absent() {
+        let s = SyncState::with_live(SyncMode::Bsp, &[true, false, true]);
+        assert_eq!(s.live_count(), 2);
+        assert!(!s.may_proceed(1));
+        assert!(s.may_proceed(0) && s.may_proceed(2));
+        assert_eq!(s.epoch(), 0);
     }
 
     #[test]

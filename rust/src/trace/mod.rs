@@ -154,6 +154,11 @@ impl AvailTrace {
 /// Capacity multiplier that stands for "preempted".
 pub const DOWN_EPS: f64 = 1e-3;
 
+/// Horizon over which `--spot` scenario traces (and their membership
+/// events) are generated.  Runs ending earlier simply never reach the
+/// tail; virtual and wall clocks both fit comfortably inside it.
+pub const SPOT_HORIZON_S: f64 = 100_000.0;
+
 /// Per-worker trace set for a cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterTraces {
@@ -167,9 +172,244 @@ impl ClusterTraces {
         }
     }
 
+    /// A cluster of spot VMs: every worker gets an independent
+    /// preemption trace (forked streams off one seed).
+    pub fn spot_cluster(
+        k: usize,
+        horizon_s: f64,
+        mttf_s: f64,
+        down_s: f64,
+        seed: u64,
+    ) -> Self {
+        let mut root = Rng::new(seed);
+        ClusterTraces {
+            traces: (0..k)
+                .map(|i| {
+                    let mut rng = root.fork(3000 + i as u64);
+                    AvailTrace::spot(horizon_s, mttf_s, down_s, &mut rng)
+                })
+                .collect(),
+        }
+    }
+
     pub fn at(&self, worker: usize, t: f64) -> f64 {
         self.traces[worker].at(t)
     }
+}
+
+// ---------------------------------------------------------------------
+// Elastic membership: revocation / join events over the cluster's life.
+
+/// Spot-churn scenario spec, the `--spot mttf:down[:grace]` CLI shape
+/// (all seconds): preemptions arrive Exp(`mttf_s`) per worker, last
+/// `down_s`, and a worker down longer than `grace_s` is *revoked* from
+/// the training group (rejoining when its VM returns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpotSpec {
+    pub mttf_s: f64,
+    pub down_s: f64,
+    pub grace_s: f64,
+}
+
+impl SpotSpec {
+    /// Parse `mttf:down[:grace]`; `None` on any malformed field.
+    pub fn parse(s: &str) -> Option<SpotSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() < 2 || parts.len() > 3 {
+            return None;
+        }
+        let mttf_s: f64 = parts[0].parse().ok()?;
+        let down_s: f64 = parts[1].parse().ok()?;
+        let grace_s: f64 = match parts.get(2) {
+            Some(p) => p.parse().ok()?,
+            None => 0.0,
+        };
+        let valid = mttf_s.is_finite()
+            && down_s.is_finite()
+            && grace_s.is_finite()
+            && mttf_s > 0.0
+            && down_s > 0.0
+            && grace_s >= 0.0;
+        valid.then_some(SpotSpec {
+            mttf_s,
+            down_s,
+            grace_s,
+        })
+    }
+
+    pub fn label(&self) -> String {
+        format!("spot:{}:{}:{}", self.mttf_s, self.down_s, self.grace_s)
+    }
+}
+
+/// Scheduled mid-run join, the `--join k@t` CLI shape: worker `k` first
+/// appears at time `t` (it starts the run absent).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JoinSpec {
+    pub worker: usize,
+    pub time: f64,
+}
+
+impl JoinSpec {
+    /// Parse a single `k@t`.
+    pub fn parse(s: &str) -> Option<JoinSpec> {
+        let (w, t) = s.split_once('@')?;
+        let worker: usize = w.parse().ok()?;
+        let time: f64 = t.parse().ok()?;
+        (time.is_finite() && time >= 0.0).then_some(JoinSpec { worker, time })
+    }
+
+    /// Parse a comma-separated list `k@t[,k@t...]` (empty string = none).
+    pub fn parse_list(s: &str) -> Option<Vec<JoinSpec>> {
+        if s.is_empty() {
+            return Some(vec![]);
+        }
+        s.split(',').map(|p| JoinSpec::parse(p.trim())).collect()
+    }
+}
+
+/// Kind of membership transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipKind {
+    /// The worker leaves the training group (spot revocation).
+    Revoke,
+    /// The worker (re)joins, seeded from the current global model.
+    Join,
+}
+
+impl MembershipKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MembershipKind::Revoke => "revoke",
+            MembershipKind::Join => "join",
+        }
+    }
+}
+
+/// One scheduled membership transition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MembershipEvent {
+    pub time: f64,
+    pub worker: usize,
+    pub kind: MembershipKind,
+}
+
+/// The run's membership schedule: revocations and joins over time,
+/// derived from availability traces (a worker down past the grace
+/// period is revoked, rejoining on recovery) and/or listed explicitly
+/// (`join_at` scenarios).  Events are kept sorted by
+/// (time, worker, revoke-before-join) so processing is deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct MembershipPlan {
+    events: Vec<MembershipEvent>,
+}
+
+impl MembershipPlan {
+    pub fn new(mut events: Vec<MembershipEvent>) -> Self {
+        sort_events(&mut events);
+        MembershipPlan { events }
+    }
+
+    /// Derive revocation/rejoin events from availability traces: every
+    /// down period (multiplier ≤ [`DOWN_EPS`]) longer than `grace_s`
+    /// revokes the worker at `down_start + grace_s` and rejoins it when
+    /// the trace recovers.
+    pub fn from_traces(traces: &ClusterTraces, grace_s: f64) -> Self {
+        assert!(grace_s >= 0.0, "grace must be non-negative");
+        let mut events = Vec::new();
+        for (w, tr) in traces.traces.iter().enumerate() {
+            let segs = tr.segments();
+            let mut i = 0;
+            while i < segs.len() {
+                if segs[i].1 > DOWN_EPS {
+                    i += 1;
+                    continue;
+                }
+                // Coalesce consecutive down segments into one period.
+                let start = segs[i].0;
+                let mut j = i + 1;
+                while j < segs.len() && segs[j].1 <= DOWN_EPS {
+                    j += 1;
+                }
+                let end = segs.get(j).map(|&(s, _)| s).unwrap_or(f64::INFINITY);
+                if end - start > grace_s {
+                    events.push(MembershipEvent {
+                        time: start + grace_s,
+                        worker: w,
+                        kind: MembershipKind::Revoke,
+                    });
+                    if end.is_finite() {
+                        events.push(MembershipEvent {
+                            time: end,
+                            worker: w,
+                            kind: MembershipKind::Join,
+                        });
+                    }
+                }
+                i = j;
+            }
+        }
+        MembershipPlan::new(events)
+    }
+
+    /// Add scheduled joins (`k@t`): each worker listed starts absent and
+    /// first appears at its join time.
+    pub fn with_joins(mut self, joins: &[JoinSpec]) -> Self {
+        for j in joins {
+            self.events.push(MembershipEvent {
+                time: j.time,
+                worker: j.worker,
+                kind: MembershipKind::Join,
+            });
+        }
+        sort_events(&mut self.events);
+        self
+    }
+
+    /// Merge another plan's events into this one.
+    pub fn merged(mut self, other: &MembershipPlan) -> Self {
+        self.events.extend(other.events.iter().copied());
+        sort_events(&mut self.events);
+        self
+    }
+
+    pub fn events(&self) -> &[MembershipEvent] {
+        &self.events
+    }
+
+    /// Initial membership for a k-worker cluster: a worker whose *first*
+    /// scheduled event is a Join starts the run absent (it cannot join a
+    /// group it is already part of); everyone else starts live.
+    pub fn initial_live(&self, k: usize) -> Vec<bool> {
+        let mut live = vec![true; k];
+        let mut seen = vec![false; k];
+        for ev in &self.events {
+            if ev.worker < k && !seen[ev.worker] {
+                seen[ev.worker] = true;
+                if ev.kind == MembershipKind::Join {
+                    live[ev.worker] = false;
+                }
+            }
+        }
+        live
+    }
+
+    /// Largest worker index referenced (None when empty).
+    pub fn max_worker(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.worker).max()
+    }
+}
+
+fn sort_events(events: &mut [MembershipEvent]) {
+    events.sort_by(|a, b| {
+        a.time
+            .partial_cmp(&b.time)
+            .expect("membership event times must be comparable")
+            .then(a.worker.cmp(&b.worker))
+            // Same worker, same instant: process the revoke first so a
+            // revoke+join pair is a bounce, not a no-op.
+            .then((a.kind == MembershipKind::Join).cmp(&(b.kind == MembershipKind::Join)))
+    });
 }
 
 #[cfg(test)]
@@ -291,5 +531,93 @@ mod tests {
     fn cluster_traces_indexing() {
         let ct = ClusterTraces::constant(3);
         assert_eq!(ct.at(2, 100.0), 1.0);
+    }
+
+    #[test]
+    fn spot_spec_parses_and_rejects() {
+        let s = SpotSpec::parse("800:120:30").unwrap();
+        assert_eq!(s.mttf_s, 800.0);
+        assert_eq!(s.down_s, 120.0);
+        assert_eq!(s.grace_s, 30.0);
+        // Grace defaults to 0 (revoke as soon as the VM is preempted).
+        assert_eq!(SpotSpec::parse("800:120").unwrap().grace_s, 0.0);
+        for bad in ["", "800", "800:120:30:4", "a:b", "800:0", "0:120", "-1:5", "800:120:-1", "nan:120"] {
+            assert!(SpotSpec::parse(bad).is_none(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn join_spec_parses_and_rejects() {
+        let j = JoinSpec::parse("2@350.5").unwrap();
+        assert_eq!(j.worker, 2);
+        assert_eq!(j.time, 350.5);
+        let l = JoinSpec::parse_list("0@10, 2@20").unwrap();
+        assert_eq!(l.len(), 2);
+        assert_eq!(l[1].worker, 2);
+        assert!(JoinSpec::parse_list("").unwrap().is_empty());
+        for bad in ["1", "@3", "1@", "x@3", "1@y", "1@-5", "1@nan", "0@1,bogus"] {
+            assert!(
+                JoinSpec::parse(bad).is_none() || bad.contains(','),
+                "accepted {bad:?}"
+            );
+            assert!(JoinSpec::parse_list(bad).is_none(), "list accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn membership_from_traces_applies_grace() {
+        // Worker 0: 300 s outage at t=100; worker 1: 20 s blip at t=50.
+        let traces = ClusterTraces {
+            traces: vec![
+                AvailTrace::from_segments(vec![(0.0, 1.0), (100.0, DOWN_EPS), (400.0, 1.0)]),
+                AvailTrace::from_segments(vec![(0.0, 1.0), (50.0, DOWN_EPS), (70.0, 1.0)]),
+            ],
+        };
+        let plan = MembershipPlan::from_traces(&traces, 30.0);
+        // The blip is shorter than the grace period: ridden out.
+        let evs = plan.events();
+        assert_eq!(evs.len(), 2, "{evs:?}");
+        assert_eq!(
+            evs[0],
+            MembershipEvent { time: 130.0, worker: 0, kind: MembershipKind::Revoke }
+        );
+        assert_eq!(
+            evs[1],
+            MembershipEvent { time: 400.0, worker: 0, kind: MembershipKind::Join }
+        );
+        // Everyone starts live (first events are revokes or nothing).
+        assert_eq!(plan.initial_live(2), vec![true, true]);
+    }
+
+    #[test]
+    fn membership_join_first_starts_absent() {
+        let plan = MembershipPlan::default()
+            .with_joins(&[JoinSpec { worker: 2, time: 40.0 }]);
+        assert_eq!(plan.initial_live(3), vec![true, true, false]);
+        assert_eq!(plan.max_worker(), Some(2));
+    }
+
+    #[test]
+    fn membership_events_sorted_revoke_before_join() {
+        let plan = MembershipPlan::new(vec![
+            MembershipEvent { time: 10.0, worker: 1, kind: MembershipKind::Join },
+            MembershipEvent { time: 10.0, worker: 1, kind: MembershipKind::Revoke },
+            MembershipEvent { time: 5.0, worker: 0, kind: MembershipKind::Revoke },
+        ]);
+        let evs = plan.events();
+        assert_eq!(evs[0].time, 5.0);
+        assert_eq!(evs[1].kind, MembershipKind::Revoke);
+        assert_eq!(evs[2].kind, MembershipKind::Join);
+    }
+
+    #[test]
+    fn spot_cluster_is_deterministic_and_independent() {
+        let a = ClusterTraces::spot_cluster(3, 50_000.0, 2_000.0, 120.0, 9);
+        let b = ClusterTraces::spot_cluster(3, 50_000.0, 2_000.0, 120.0, 9);
+        for w in 0..3 {
+            assert_eq!(a.traces[w].segments(), b.traces[w].segments());
+        }
+        // Different workers draw from different forked streams.
+        assert_ne!(a.traces[0].segments(), a.traces[1].segments());
     }
 }

@@ -153,6 +153,84 @@ fn train_and_simulate_reject_bad_sync_identically() {
 }
 
 #[test]
+fn simulate_join_schedules_membership_epoch() {
+    // Worker 2 joins at t=0: deterministic single epoch, visible in the
+    // JSON report.
+    let out = run_ok(&[
+        "simulate", "--workload", "mnist", "--cores", "4,8,16", "--policy", "static",
+        "--iters", "50", "--join", "2@0",
+    ]);
+    let j = hetero_batch::util::json::Json::parse(&out).expect("valid json");
+    assert_eq!(j.get("n_epochs").as_i64(), Some(1));
+    let e = j.get("epochs").idx(0);
+    assert_eq!(e.get("kind").as_str(), Some("join"));
+    assert_eq!(e.get("worker").as_i64(), Some(2));
+    assert_eq!(e.get("live").as_i64(), Some(3));
+}
+
+#[test]
+fn simulate_spot_flag_runs_end_to_end() {
+    // Spot churn is seeded; with a huge mttf the trace is event-free and
+    // the run must look like a plain one (flag plumbing, not behavior —
+    // behavior is pinned by tests/scenario_regression.rs).
+    let out = run_ok(&[
+        "simulate", "--workload", "mnist", "--cores", "4,8", "--iters", "40",
+        "--spot", "1000000000:1:0",
+    ]);
+    let j = hetero_batch::util::json::Json::parse(&out).expect("valid json");
+    assert_eq!(j.get("total_iters").as_i64(), Some(40));
+    assert_eq!(j.get("n_epochs").as_i64(), Some(0));
+}
+
+#[test]
+fn train_join_runs_membership_epoch_end_to_end() {
+    // Needs built artifacts. Worker 1 joins at t=0 on the real runtime.
+    let out = run_ok(&[
+        "train", "--model", "mlp", "--steps", "5", "--cores", "4,8", "--policy",
+        "uniform", "--join", "1@0",
+    ]);
+    assert!(out.contains("steps: 5"), "missing step count in: {out}");
+    assert!(out.contains("membership epochs: 1"), "missing epoch line in: {out}");
+}
+
+#[test]
+fn train_spot_flag_trains_normally_when_trace_is_event_free() {
+    // A *valid* --spot on train with huge mttf trains normally.
+    let out = run_ok(&[
+        "train", "--model", "mlp", "--steps", "4", "--cores", "4,8",
+        "--spot", "1000000000:1",
+    ]);
+    assert!(out.contains("steps: 4"), "missing step count in: {out}");
+}
+
+#[test]
+fn train_and_simulate_reject_bad_spot_and_join_identically() {
+    // Same convention as bad --sync: validated on BOTH subcommands with
+    // identical error text, before `train` touches the artifacts.
+    let stderr_of = |args: &[&str]| {
+        let out = hbatch()
+            .args(args)
+            .current_dir(env!("CARGO_MANIFEST_DIR"))
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "{args:?} should fail");
+        String::from_utf8_lossy(&out.stderr).into_owned()
+    };
+    for (flag, bad) in [("--spot", "100"), ("--spot", "a:b"), ("--join", "1@")] {
+        let from_train = stderr_of(&["train", flag, bad]);
+        let from_sim = stderr_of(&["simulate", flag, bad]);
+        assert!(
+            from_train.contains(&format!("bad {flag}")),
+            "train stderr for {flag} {bad}: {from_train}"
+        );
+        assert_eq!(
+            from_train, from_sim,
+            "error text diverged between subcommands for {flag} {bad}"
+        );
+    }
+}
+
+#[test]
 fn bad_flag_values_fail_cleanly() {
     for args in [
         vec!["simulate", "--policy", "bogus"],
@@ -161,6 +239,16 @@ fn bad_flag_values_fail_cleanly() {
         vec!["train", "--sync", "bogus"],
         vec!["train", "--sync", "ssp:bad"],
         vec!["train", "--policy", "bogus"],
+        vec!["simulate", "--spot", "100"],
+        vec!["simulate", "--spot", "100:0"],
+        vec!["simulate", "--spot", "1:2:3:4"],
+        vec!["simulate", "--join", "x@3"],
+        vec!["simulate", "--join", "1@-5"],
+        // Join for a worker outside the cluster fails validation.
+        vec!["simulate", "--cores", "4,8", "--join", "7@10"],
+        vec!["train", "--spot", "0:5"],
+        vec!["train", "--join", "bogus"],
+        vec!["train", "--cores", "4,8", "--join", "7@10"],
         vec!["figure", "99"],
         vec!["throughput-scan", "--device", "quantum:1"],
     ] {

@@ -323,6 +323,100 @@ fn prop_water_fill_conserves_and_bounds() {
 }
 
 #[test]
+fn prop_water_fill_clamps_when_feasible() {
+    use hetero_batch::controller::water_fill;
+    // When the target is reachable inside [Σb_min, Σb_max], every entry
+    // must land inside its own [b_min, b_max_i] box.
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(1, 8);
+        let proposal: Vec<f64> = (0..k).map(|_| rng.range_f64(1.0, 500.0)).collect();
+        let b_min = rng.range_f64(1.0, 8.0);
+        let b_max: Vec<f64> = (0..k)
+            .map(|_| rng.range_f64(b_min + 4.0, 600.0))
+            .collect();
+        let lo = b_min * k as f64;
+        let hi: f64 = b_max.iter().sum();
+        let target = rng.range_f64(lo, hi.max(lo + 1.0));
+        (proposal, target, b_min, b_max)
+    });
+    check("water_fill clamps", 400, strat, |(proposal, target, b_min, b_max)| {
+        let mut p = proposal.clone();
+        water_fill(&mut p, (*target).min(b_max.iter().sum()), *b_min, b_max);
+        p.iter()
+            .zip(b_max)
+            .all(|(&x, &hi)| x >= *b_min - 1e-9 && x <= hi + 1e-9)
+    });
+}
+
+#[test]
+fn prop_water_fill_idempotent_at_fixed_point() {
+    use hetero_batch::controller::water_fill;
+    // Applying water_fill to its own output must be a no-op: the output
+    // already sums to the target and sits inside the bounds.  Targets
+    // are drawn from the *feasible* band [Σb_min, Σb_max] — outside it
+    // the output is a documented compromise (hard b_min floor /
+    // conservation-over-soft-caps), not a fixed point of the projection.
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(1, 8);
+        let proposal: Vec<f64> = (0..k).map(|_| rng.range_f64(1.0, 500.0)).collect();
+        let b_min = rng.range_f64(1.0, 8.0);
+        let b_max: Vec<f64> = (0..k)
+            .map(|_| rng.range_f64(b_min + 1.0, 1000.0))
+            .collect();
+        let lo = b_min * k as f64;
+        let hi: f64 = b_max.iter().sum();
+        let target = lo + rng.f64() * (hi - lo);
+        (proposal, target, b_min, b_max)
+    });
+    check("water_fill idempotent", 400, strat, |(proposal, target, b_min, b_max)| {
+        let mut once = proposal.clone();
+        water_fill(&mut once, *target, *b_min, b_max);
+        let mut twice = once.clone();
+        water_fill(&mut twice, *target, *b_min, b_max);
+        once.iter()
+            .zip(&twice)
+            .all(|(&a, &b)| (a - b).abs() <= 1e-9 * a.abs().max(1.0))
+    });
+}
+
+#[test]
+fn prop_retire_admit_round_trip_restores_invariants() {
+    // retire(k) then admit(k) must restore Σb to the construction-time
+    // global batch with normalized λ over all ranks — for warm and cold
+    // controllers alike.
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(2, 7);
+        let init: Vec<f64> = (0..k).map(|_| rng.range_f64(16.0, 256.0)).collect();
+        let xs: Vec<f64> = (0..k).map(|_| rng.range_f64(5.0, 200.0)).collect();
+        let victim = rng.range_usize(0, k);
+        let warmup = rng.range_usize(0, 30);
+        (init, xs, victim, warmup)
+    });
+    check("retire/admit round trip", 200, strat, |(init, xs, victim, warmup)| {
+        let mut ctl = DynamicBatcher::new(default_cfg(), init);
+        for _ in 0..*warmup {
+            let b = ctl.batches();
+            for (k, &x) in xs.iter().enumerate() {
+                ctl.observe(k, b[k] / x);
+            }
+            ctl.maybe_adjust();
+        }
+        let global = ctl.global_batch();
+        ctl.retire(*victim);
+        let b = ctl.batches();
+        let mid_ok = b[*victim] == 0.0
+            && (b.iter().sum::<f64>() - global).abs() <= 1e-6 * global;
+        ctl.admit(*victim);
+        let b = ctl.batches();
+        let l = ctl.lambdas();
+        mid_ok
+            && (b.iter().sum::<f64>() - global).abs() <= 1e-6 * global
+            && b.iter().all(|&x| x > 0.0)
+            && (l.iter().sum::<f64>() - 1.0).abs() < 1e-9
+    });
+}
+
+#[test]
 fn prop_controller_recovers_from_regime_change() {
     // Whatever stationary state the controller converged to, after a
     // sustained capacity change it must re-converge to the *new*
@@ -699,6 +793,81 @@ fn sim_and_real_shaped_backends_gate_identically() {
         // sim-shaped one does not — report surface, not scheduling.
         assert!(sim_shaped.losses.is_empty());
         assert!(!real_shaped.losses.is_empty());
+    }
+}
+
+#[test]
+fn membership_epochs_identical_across_backend_shapes() {
+    // The acceptance scenario: one revocation + one rejoin mid-run must
+    // produce identical epoch AND gating sequences on a sim-shaped and a
+    // real-shaped backend, with Σb conserved at every transition.
+    use hetero_batch::trace::{MembershipEvent, MembershipKind, MembershipPlan};
+    for sync in [SyncMode::Bsp, SyncMode::Asp, SyncMode::Ssp { bound: 2 }] {
+        let durs = vec![3.0, 1.0, 2.0];
+        // BSP rounds take 3 s: revoke worker 0 mid-round-2 (t=7.5),
+        // rejoin mid-round-4 (t=13.5).
+        let plan = MembershipPlan::new(vec![
+            MembershipEvent { time: 7.5, worker: 0, kind: MembershipKind::Revoke },
+            MembershipEvent { time: 13.5, worker: 0, kind: MembershipKind::Join },
+        ]);
+        let run_shape = |real_shaped: bool| -> RunReport {
+            Session::builder()
+                .policy(Policy::Uniform)
+                .sync(sync)
+                .steps(12)
+                .membership(plan.clone())
+                .build_with(FixedScheduleBackend {
+                    durs: durs.clone(),
+                    real_shaped,
+                })
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let sim_shaped = run_shape(false);
+        let real_shaped = run_shape(true);
+        let gate = |r: &RunReport| -> Vec<(usize, u64)> {
+            r.iters.iter().map(|i| (i.worker, i.iter)).collect()
+        };
+        let epochs = |r: &RunReport| -> Vec<(u64, usize, &'static str, usize)> {
+            r.epochs
+                .iter()
+                .map(|e| (e.epoch, e.worker, e.kind.label(), e.live))
+                .collect()
+        };
+        assert_eq!(
+            epochs(&sim_shaped),
+            epochs(&real_shaped),
+            "epoch sequence diverged under {sync:?}"
+        );
+        assert_eq!(
+            epochs(&sim_shaped),
+            vec![(1, 0, "revoke", 2), (2, 0, "join", 3)],
+            "wrong epoch sequence under {sync:?}"
+        );
+        assert_eq!(
+            gate(&sim_shaped),
+            gate(&real_shaped),
+            "gating diverged under {sync:?}"
+        );
+        assert_eq!(sim_shaped.total_time, real_shaped.total_time);
+        // Σb conserved (to fp tolerance) across every epoch transition.
+        for r in [&sim_shaped, &real_shaped] {
+            for e in &r.epochs {
+                let sum: f64 = e.batches.iter().sum();
+                assert!(
+                    (sum - 96.0).abs() < 1e-9,
+                    "Σb {sum} != 96 at epoch {e:?} under {sync:?}"
+                );
+            }
+        }
+        // The revoked worker runs nothing between the transitions.
+        let (t_rev, t_join) = (sim_shaped.epochs[0].time, sim_shaped.epochs[1].time);
+        assert!(sim_shaped
+            .iters
+            .iter()
+            .filter(|i| i.worker == 0)
+            .all(|i| i.start + i.duration <= t_rev + 1e-9 || i.start >= t_join - 1e-9));
     }
 }
 

@@ -1,0 +1,353 @@
+//! Scenario-regression harness: seeded sim Sessions across the
+//! BSP/ASP/SSP × static/dynamic × spot-churn matrix, locked against
+//! committed golden summaries.
+//!
+//! Each scenario runs the virtual-time simulator (no artifacts needed),
+//! reduces the report to a small summary — final batches, λ vector,
+//! adjustment count, makespan, and the membership-epoch sequence — and
+//! compares it field-by-field against `tests/golden/<name>.json`
+//! (floats to 1e-9 relative).  The point is to pin the *trajectory* of
+//! the controller + membership machinery: any change to gating,
+//! water-filling, warm-starts, or event ordering shows up as a golden
+//! diff, not as a silently different paper figure.
+//!
+//! Workflows:
+//! - `cargo test --test scenario_regression` — compare against goldens.
+//! - `UPDATE_GOLDEN=1 cargo test --test scenario_regression` —
+//!   regenerate every golden (commit the diff deliberately).
+//! - A missing golden bootstraps itself (first toolchain run writes it,
+//!   loudly) — see `tests/golden/README.md`.
+//! - On mismatch the expected/actual pair is written to
+//!   `target/golden-diff/<name>.json`; CI uploads that directory as an
+//!   artifact when the gate fails.
+//!
+//! Event times are denominated in *probed round times* (a short seeded
+//! probe run measures the scenario's BSP round), so the revocation and
+//! rejoin land mid-run for every workload/cluster without hard-coding
+//! absolute virtual-time constants.
+
+use hetero_batch::config::Policy;
+use hetero_batch::metrics::RunReport;
+use hetero_batch::session::{Session, SessionBuilder};
+use hetero_batch::sync::SyncMode;
+use hetero_batch::trace::{
+    AvailTrace, ClusterTraces, JoinSpec, MembershipPlan, SpotSpec, DOWN_EPS,
+};
+use hetero_batch::util::json::Json;
+
+const CORES: [usize; 3] = [4, 8, 16];
+const STEPS: u64 = 60;
+const SEED: u64 = 42;
+const REL_TOL: f64 = 1e-9;
+
+fn golden_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+}
+
+fn diff_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("golden-diff")
+}
+
+/// Measured BSP round time of the scenario cluster (seeded, so this is
+/// as deterministic as the runs it calibrates).
+fn probe_round_s() -> f64 {
+    let r = Session::builder()
+        .model("mnist")
+        .cores(&CORES)
+        .policy(Policy::Uniform)
+        .steps(20)
+        .seed(SEED)
+        .build_sim()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(r.total_time > 0.0);
+    r.total_time / 20.0
+}
+
+/// The deterministic churn fixture: worker 0's VM goes down at 10.2
+/// rounds for 15.8 rounds; with a 2-round grace the membership plan
+/// derived from the trace revokes at ~12.2R and rejoins at ~26R.
+fn outage(round_s: f64) -> (ClusterTraces, MembershipPlan) {
+    let down_at = 10.2 * round_s;
+    let up_at = 26.0 * round_s;
+    let traces = ClusterTraces {
+        traces: vec![
+            AvailTrace::from_segments(vec![(0.0, 1.0), (down_at, DOWN_EPS), (up_at, 1.0)]),
+            AvailTrace::constant(),
+            AvailTrace::constant(),
+        ],
+    };
+    let plan = MembershipPlan::from_traces(&traces, 2.0 * round_s);
+    (traces, plan)
+}
+
+fn base(policy: Policy, sync: SyncMode) -> SessionBuilder {
+    Session::builder()
+        .model("mnist")
+        .cores(&CORES)
+        .policy(policy)
+        .sync(sync)
+        .steps(STEPS)
+        .adjust_cost(1.0)
+        .seed(SEED)
+}
+
+/// The scenario matrix: name → configured builder.
+fn scenarios() -> Vec<(&'static str, SessionBuilder)> {
+    let round_s = probe_round_s();
+    let churn = |policy, sync| {
+        let (traces, plan) = outage(round_s);
+        base(policy, sync).traces(traces).membership(plan)
+    };
+    vec![
+        ("bsp_static_churn", churn(Policy::Static, SyncMode::Bsp)),
+        ("bsp_dynamic_churn", churn(Policy::Dynamic, SyncMode::Bsp)),
+        ("asp_static_churn", churn(Policy::Static, SyncMode::Asp)),
+        ("asp_dynamic_churn", churn(Policy::Dynamic, SyncMode::Asp)),
+        (
+            "ssp2_static_churn",
+            churn(Policy::Static, SyncMode::Ssp { bound: 2 }),
+        ),
+        (
+            "ssp2_dynamic_churn",
+            churn(Policy::Dynamic, SyncMode::Ssp { bound: 2 }),
+        ),
+        // Scheduled mid-run join: worker 2 is a late arrival.
+        (
+            "bsp_dynamic_join",
+            base(Policy::Dynamic, SyncMode::Bsp).joins(&[JoinSpec {
+                worker: 2,
+                time: 8.4 * round_s,
+            }]),
+        ),
+        // Seeded random spot churn through the full `--spot` path.
+        (
+            "bsp_dynamic_spot",
+            base(Policy::Dynamic, SyncMode::Bsp).steps(120).spot(SpotSpec {
+                mttf_s: 40.0 * round_s,
+                down_s: 12.0 * round_s,
+                grace_s: 2.0 * round_s,
+            }),
+        ),
+        // No-churn baseline: pins the static-membership trajectory too.
+        ("bsp_dynamic_baseline", base(Policy::Dynamic, SyncMode::Bsp)),
+    ]
+}
+
+/// Reduce a run to the summary the goldens pin down.
+fn summarize(name: &str, r: &RunReport) -> Json {
+    let mut o = Json::obj();
+    o.set("scenario", Json::Str(name.into()));
+    o.set("label", Json::Str(r.label.clone()));
+    o.set("total_time_s", Json::Num(r.total_time));
+    o.set("total_iters", Json::Num(r.total_iters as f64));
+    o.set("reached_target", Json::Bool(r.reached_target));
+    o.set("n_adjustments", Json::Num(r.adjustments.len() as f64));
+    let final_b: Vec<Json> = r
+        .final_batches()
+        .map(|b| b.iter().map(|&x| Json::Num(x)).collect())
+        .unwrap_or_default();
+    o.set("final_batches", Json::Arr(final_b));
+    // λ over the live cohort at the end of the run.
+    if let Some(b) = r.final_batches() {
+        let total: f64 = b.iter().sum();
+        o.set(
+            "lambda",
+            Json::Arr(b.iter().map(|&x| Json::Num(x / total)).collect()),
+        );
+    }
+    let epochs: Vec<Json> = r
+        .epochs
+        .iter()
+        .map(|e| {
+            let mut eo = Json::obj();
+            eo.set("time_s", Json::Num(e.time));
+            eo.set("epoch", Json::Num(e.epoch as f64));
+            eo.set("worker", Json::Num(e.worker as f64));
+            eo.set("kind", Json::Str(e.kind.label().into()));
+            eo.set("live", Json::Num(e.live as f64));
+            eo.set(
+                "batch_sum",
+                Json::Num(e.batches.iter().sum::<f64>()),
+            );
+            eo
+        })
+        .collect();
+    o.set("epochs", Json::Arr(epochs));
+    o
+}
+
+/// Structural compare with a relative float tolerance, recording the
+/// first divergence path.
+fn json_close(a: &Json, b: &Json, path: &str, diff: &mut Vec<String>) {
+    match (a, b) {
+        (Json::Num(x), Json::Num(y)) => {
+            let scale = x.abs().max(y.abs()).max(1.0);
+            if (x - y).abs() > REL_TOL * scale {
+                diff.push(format!("{path}: {x} != {y}"));
+            }
+        }
+        (Json::Arr(xs), Json::Arr(ys)) => {
+            if xs.len() != ys.len() {
+                diff.push(format!("{path}: len {} != {}", xs.len(), ys.len()));
+                return;
+            }
+            for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+                json_close(x, y, &format!("{path}[{i}]"), diff);
+            }
+        }
+        (Json::Obj(xo), Json::Obj(yo)) => {
+            let keys: std::collections::BTreeSet<&String> =
+                xo.keys().chain(yo.keys()).collect();
+            for k in keys {
+                match (xo.get(k), yo.get(k)) {
+                    (Some(x), Some(y)) => json_close(x, y, &format!("{path}.{k}"), diff),
+                    _ => diff.push(format!("{path}.{k}: present on one side only")),
+                }
+            }
+        }
+        (x, y) => {
+            if x != y {
+                diff.push(format!("{path}: {x:?} != {y:?}"));
+            }
+        }
+    }
+}
+
+/// Invariants that must hold regardless of goldens: Σb conserved at
+/// every epoch transition, epoch numbering dense, live counts sane.
+fn assert_invariants(name: &str, r: &RunReport) {
+    let k = CORES.len();
+    for (i, e) in r.epochs.iter().enumerate() {
+        assert_eq!(e.epoch, i as u64 + 1, "{name}: epoch numbering gap at {i}");
+        assert!(e.live >= 1 && e.live <= k, "{name}: bad live count {e:?}");
+        assert!(e.worker < k, "{name}: bad worker {e:?}");
+    }
+    // Conservation: every rebalance carries the same global batch.
+    if let Some(first) = r.epochs.first() {
+        let expected: f64 = first.batches.iter().sum();
+        for e in &r.epochs {
+            let sum: f64 = e.batches.iter().sum();
+            assert!(
+                (sum - expected).abs() <= 1e-6 * expected.max(1.0),
+                "{name}: Σb {sum} != {expected} at epoch {}",
+                e.epoch
+            );
+        }
+        // When every worker ran before the first transition (churn
+        // scenarios), that sum is the initial allocation's too.
+        let pre: Vec<f64> = (0..k)
+            .filter_map(|w| {
+                r.iters
+                    .iter()
+                    .find(|it| it.worker == w)
+                    .filter(|it| it.start < first.time)
+                    .map(|it| it.batch)
+            })
+            .collect();
+        if pre.len() == k {
+            let initial: f64 = pre.iter().sum();
+            assert!(
+                (expected - initial).abs() <= 1e-6 * initial.max(1.0),
+                "{name}: epoch Σb {expected} != initial {initial}"
+            );
+        }
+    }
+}
+
+#[test]
+fn scenario_matrix_matches_goldens() {
+    let update = std::env::var("UPDATE_GOLDEN").map_or(false, |v| v == "1");
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut failures: Vec<String> = Vec::new();
+    for (name, builder) in scenarios() {
+        let run = || builder.clone().build_sim().unwrap().run().unwrap();
+        let r = run();
+        assert_invariants(name, &r);
+        // Determinism: the exact same scenario must replay bit-for-bit.
+        let r2 = run();
+        assert_eq!(r.total_time, r2.total_time, "{name}: nondeterministic makespan");
+        assert_eq!(r.epochs.len(), r2.epochs.len(), "{name}: nondeterministic epochs");
+
+        let actual = summarize(name, &r);
+        let path = dir.join(format!("{name}.json"));
+        if update || !path.exists() {
+            // Bootstrap-on-missing exists because the goldens were first
+            // authored without a local toolchain (see golden/README.md).
+            // Once the set is committed, HBATCH_REQUIRE_GOLDEN=1 turns a
+            // missing file into a hard failure so the gate can never
+            // silently compare nothing.
+            if !update && std::env::var("HBATCH_REQUIRE_GOLDEN").map_or(false, |v| v == "1")
+            {
+                failures.push(format!(
+                    "{name}: golden {} missing and HBATCH_REQUIRE_GOLDEN=1",
+                    path.display()
+                ));
+                continue;
+            }
+            std::fs::write(&path, actual.to_pretty()).unwrap();
+            eprintln!(
+                "scenario_regression: {} golden {}",
+                if update { "updated" } else { "bootstrapped" },
+                path.display()
+            );
+            continue;
+        }
+        let expected = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap_or_else(|e| panic!("{name}: unparsable golden: {e}"));
+        let mut diff = Vec::new();
+        json_close(&expected, &actual, name, &mut diff);
+        if !diff.is_empty() {
+            let dd = diff_dir();
+            std::fs::create_dir_all(&dd).unwrap();
+            let mut pair = Json::obj();
+            pair.set("expected", expected);
+            pair.set("actual", actual);
+            pair.set(
+                "diff",
+                Json::Arr(diff.iter().map(|d| Json::Str(d.clone())).collect()),
+            );
+            let dp = dd.join(format!("{name}.json"));
+            std::fs::write(&dp, pair.to_pretty()).unwrap();
+            failures.push(format!("{name}: {} (full diff: {})", diff[0], dp.display()));
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "golden mismatches (regenerate deliberately with UPDATE_GOLDEN=1):\n{}",
+        failures.join("\n")
+    );
+}
+
+#[test]
+fn churn_scenarios_actually_churn() {
+    // The deterministic-outage scenarios must contain exactly one
+    // revocation of worker 0 and one rejoin — otherwise the goldens
+    // would silently pin a churn-free run.
+    let round_s = probe_round_s();
+    for sync in [SyncMode::Bsp, SyncMode::Asp, SyncMode::Ssp { bound: 2 }] {
+        for policy in [Policy::Static, Policy::Dynamic] {
+            let (traces, plan) = outage(round_s);
+            let r = base(policy, sync)
+                .traces(traces)
+                .membership(plan)
+                .build_sim()
+                .unwrap()
+                .run()
+                .unwrap();
+            let kinds: Vec<&str> = r.epochs.iter().map(|e| e.kind.label()).collect();
+            assert_eq!(
+                kinds,
+                vec!["revoke", "join"],
+                "{policy:?}/{sync:?}: epochs {kinds:?}"
+            );
+            assert!(r.epochs.iter().all(|e| e.worker == 0));
+        }
+    }
+}
