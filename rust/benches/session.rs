@@ -1,0 +1,168 @@
+//! Session event-loop benches (util::bench): the fleet-scale scheduling
+//! rework of DESIGN.md §10, measured head-to-head against the retained
+//! linear-scan baseline.
+//!
+//! Scenario grid: k ∈ {8, 64, 512, 4096} × {BSP, ASP} ×
+//! {static, dynamic, churn} × {heap, scan}.  Step budgets shrink with k
+//! so every cell stays inside a bench window while the per-event cost —
+//! O(log k) for the heap scheduler, O(k) for the scan baseline — stays
+//! the dominant term at large k.  The churn cells attach seeded spot
+//! traces + the membership plan derived from them, so the revocation /
+//! rejoin machinery is on the measured path too.  The timed unit is one
+//! whole run *including* session construction (clone + build_sim);
+//! construction is identical in both arms, so the derived ratios are
+//! conservative lower bounds on the scheduling speedup (see
+//! `steps_for`).
+//!
+//! Results land machine-readably in `BENCH_session.json` at the repo
+//! root (full grid, full windows) with derived `heap_vs_scan/...`
+//! speedups; quick runs (`HBATCH_BENCH_QUICK=1`) or truncated grids
+//! (`--max-k n`, the `scripts/tier1.sh` smoke uses `--max-k 64`) write
+//! `BENCH_session_quick.json` instead — same convention as the hotpath
+//! suite.  No PJRT artifacts are needed: everything runs on the
+//! virtual-time simulator.
+//!
+//! Before measuring, each scenario is run once under both schedulers and
+//! the reports are asserted identical (makespan, iterations, epochs) —
+//! the bench refuses to record a speedup over a baseline that computes
+//! something else.
+
+use hetero_batch::config::Policy;
+use hetero_batch::metrics::RunReport;
+use hetero_batch::session::{Scheduler, Session, SessionBuilder};
+use hetero_batch::sync::SyncMode;
+use hetero_batch::trace::{ClusterTraces, MembershipPlan};
+use hetero_batch::util::bench::{find_mean_ns, suite_json, Bench};
+use hetero_batch::util::json::Json;
+
+/// Worker counts of the grid (the last is the fleet-scale headline).
+const KS: [usize; 4] = [8, 64, 512, 4096];
+const SYNCS: [(&str, SyncMode); 2] = [("bsp", SyncMode::Bsp), ("asp", SyncMode::Asp)];
+const VARIANTS: [&str; 3] = ["static", "dynamic", "churn"];
+
+/// Heterogeneous cores, cycled to any k.
+fn cores_for(k: usize) -> Vec<usize> {
+    (0..k).map(|i| [4usize, 8, 16][i % 3]).collect()
+}
+
+/// Step budget per k.  Sized so the event loop dominates the timed
+/// closure: each sample also pays an O(k) builder clone + build_sim
+/// (spot traces, membership plan, initial allocation), which would
+/// swamp the heap arm at large k if the run were only a round or two.
+/// Scan-side cost grows as steps·k² so the budget still shrinks with k
+/// to keep the baseline measurable.  Construction cost is identical in
+/// both arms, so the derived heap_vs_scan ratios are *conservative*
+/// (they understate the pure scheduling speedup).
+fn steps_for(k: usize) -> u64 {
+    match k {
+        0..=64 => 30,
+        65..=512 => 12,
+        _ => 4,
+    }
+}
+
+fn builder(k: usize, sync: SyncMode, variant: &str) -> SessionBuilder {
+    let policy = if variant == "static" {
+        Policy::Static
+    } else {
+        Policy::Dynamic
+    };
+    let mut b = Session::builder()
+        .model("mnist")
+        .cores(&cores_for(k))
+        .policy(policy)
+        .sync(sync)
+        .steps(steps_for(k))
+        .adjust_cost(1.0)
+        .seed(7)
+        // Fleet-scale reports are exactly what --report-sample exists
+        // for; keep the bench's allocation profile flat in k.
+        .report_sample(if k > 64 { 16 } else { 1 });
+    if variant == "churn" {
+        // Seeded per-worker spot traces over a short horizon (the
+        // builder's own --spot path generates 100k-second traces —
+        // far more segments than a bench window ever reaches).
+        let traces = ClusterTraces::spot_cluster(k, 60.0, 20.0, 2.0, 11);
+        let plan = MembershipPlan::from_traces(&traces, 0.3);
+        b = b.traces(traces).membership(plan);
+    }
+    b
+}
+
+fn run_once(b: &SessionBuilder, scheduler: Scheduler) -> RunReport {
+    b.clone()
+        .scheduler(scheduler)
+        .build_sim()
+        .expect("bench scenario")
+        .run()
+        .expect("bench run")
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let max_k = args
+        .iter()
+        .position(|a| a == "--max-k")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(usize::MAX);
+
+    let mut b = Bench::new("session");
+    for &k in KS.iter().filter(|&&k| k <= max_k) {
+        for (sname, sync) in SYNCS {
+            for variant in VARIANTS {
+                let bld = builder(k, sync, variant);
+                // Self-check: both schedulers must produce the same run.
+                let heap = run_once(&bld, Scheduler::Heap);
+                let scan = run_once(&bld, Scheduler::Scan);
+                assert_eq!(
+                    (heap.total_time, heap.total_iters, heap.epochs.len()),
+                    (scan.total_time, scan.total_iters, scan.epochs.len()),
+                    "heap/scan divergence at k={k} {sname} {variant}"
+                );
+                for (lbl, sched) in [("heap", Scheduler::Heap), ("scan", Scheduler::Scan)] {
+                    b.run(&format!("{lbl}/k{k}/{sname}/{variant}"), || {
+                        run_once(&bld, sched).total_time
+                    });
+                }
+            }
+        }
+    }
+    b.report();
+
+    // Derived heap-vs-scan speedups (scan_mean / heap_mean; > 1 = the
+    // O(log k) scheduler wins) — the ISSUE acceptance reads these at
+    // k = 512+.
+    let groups = [&b];
+    let mut derived = Json::obj();
+    for &k in KS.iter().filter(|&&k| k <= max_k) {
+        for (sname, _) in SYNCS {
+            for variant in VARIANTS {
+                let scan = find_mean_ns(&groups, &format!("session/scan/k{k}/{sname}/{variant}"));
+                let heap = find_mean_ns(&groups, &format!("session/heap/k{k}/{sname}/{variant}"));
+                if let (Some(s), Some(h)) = (scan, heap) {
+                    if h > 0.0 {
+                        derived.set(
+                            &format!("heap_vs_scan/k{k}/{sname}/{variant}"),
+                            Json::Num(s / h),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    let json = suite_json("session", &groups, derived);
+    // Quick windows or a truncated grid must not clobber the canonical
+    // perf-trajectory artifact.
+    let partial = b.is_quick() || max_k < *KS.last().unwrap();
+    let fname = if partial {
+        "BENCH_session_quick.json"
+    } else {
+        "BENCH_session.json"
+    };
+    let path = format!("{}/../{fname}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&path, json.to_pretty()).expect("write bench json");
+    println!("\nwrote {path}");
+    println!("all session benches complete");
+}

@@ -38,6 +38,24 @@ fn run(builder: SessionBuilder) -> RunReport {
     builder.build_sim().expect("figure config").run().expect("figure run")
 }
 
+/// Run many independent seeded simulations concurrently on the
+/// process-wide worker pool ([`crate::util::pool::global`]), returning
+/// reports in input order.
+///
+/// Every figure sweep is embarrassingly parallel — each builder carries
+/// its own seed and the simulator holds no shared state — so results
+/// are identical to a sequential loop no matter how the pool interleaves
+/// them; only the wall-clock drops.  Each task writes its own
+/// preallocated slot, so gathering is deterministic by construction.
+pub fn run_batch(builders: Vec<SessionBuilder>) -> Vec<RunReport> {
+    crate::util::pool::global().run_collect(
+        builders
+            .into_iter()
+            .map(|b| Box::new(move || run(b)) as Box<dyn FnOnce() -> RunReport + Send>)
+            .collect(),
+    )
+}
+
 /// Figures that measure *time-to-accuracy* run to each workload's full
 /// iteration target (virtual time is cheap), so readjustment costs
 /// amortize exactly as on the paper's testbed. `0` = run to target.
@@ -49,12 +67,22 @@ pub const TO_TARGET: u64 = 0;
 /// Training-time increase of a heterogeneous cluster vs a homogeneous one
 /// with the same total capacity, uniform batching, 3 workloads.
 pub fn fig1(seed: u64) -> Table {
-    let mut t = Table::new(&["workload", "hlevel", "slowdown_vs_homogeneous"]);
-    for workload in ["resnet", "mnist", "linreg"] {
-        let homo = run(sim(workload, &[13, 13, 13], Policy::Uniform, TO_TARGET, seed));
-        for h in [2.0, 6.0, 10.0] {
+    const WORKLOADS: [&str; 3] = ["resnet", "mnist", "linreg"];
+    const HLEVELS: [f64; 3] = [2.0, 6.0, 10.0];
+    let mut builders = Vec::new();
+    for workload in WORKLOADS {
+        builders.push(sim(workload, &[13, 13, 13], Policy::Uniform, TO_TARGET, seed));
+        for &h in &HLEVELS {
             let cores = hlevel_split(39, 3, h).expect("split");
-            let hetero = run(sim(workload, &cores, Policy::Uniform, TO_TARGET, seed));
+            builders.push(sim(workload, &cores, Policy::Uniform, TO_TARGET, seed));
+        }
+    }
+    let mut reports = run_batch(builders).into_iter();
+    let mut t = Table::new(&["workload", "hlevel", "slowdown_vs_homogeneous"]);
+    for workload in WORKLOADS {
+        let homo = reports.next().expect("homogeneous baseline");
+        for &h in &HLEVELS {
+            let hetero = reports.next().expect("hetero run");
             let slowdown = hetero.total_time / homo.total_time;
             t.rowf(&[&workload, &h, &format!("{slowdown:.2}")]);
         }
@@ -95,8 +123,14 @@ pub fn fig2(seed: u64) -> Table {
 pub fn fig3(seed: u64) -> (Table, Vec<f64>) {
     let mut t = Table::new(&["policy", "worker", "bin_center_s", "freq"]);
     let mut cvs = Vec::new();
-    for policy in [Policy::Uniform, Policy::Static] {
-        let r = run(sim("resnet", &[3, 5, 12], policy, 500, seed));
+    let policies = [Policy::Uniform, Policy::Static];
+    let reports = run_batch(
+        policies
+            .iter()
+            .map(|&p| sim("resnet", &[3, 5, 12], p, 500, seed))
+            .collect(),
+    );
+    for (policy, r) in policies.iter().zip(reports) {
         // Common range across workers for comparable bins.
         let all: Vec<f64> = r.iters.iter().map(|i| i.duration).collect();
         let lo = all.iter().cloned().fold(f64::MAX, f64::min) * 0.9;
@@ -203,11 +237,23 @@ pub fn fig6(seed: u64) -> Table {
         "variable_s",
         "speedup",
     ]);
-    for workload in ["resnet", "mnist", "linreg"] {
+    // The headline sweep: 3 workloads × 6 H-levels × 2 policies = 36
+    // independent to-target runs, fanned out over the worker pool.
+    const WORKLOADS: [&str; 3] = ["resnet", "mnist", "linreg"];
+    let mut builders = Vec::new();
+    for workload in WORKLOADS {
         for &h in &crate::cluster::hlevel::PAPER_HLEVELS {
             let cores = hlevel_split(39, 3, h).expect("split");
-            let u = run(sim(workload, &cores, Policy::Uniform, TO_TARGET, seed));
-            let v = run(sim(workload, &cores, Policy::Static, TO_TARGET, seed));
+            builders.push(sim(workload, &cores, Policy::Uniform, TO_TARGET, seed));
+            builders.push(sim(workload, &cores, Policy::Static, TO_TARGET, seed));
+        }
+    }
+    let mut reports = run_batch(builders).into_iter();
+    for workload in WORKLOADS {
+        for &h in &crate::cluster::hlevel::PAPER_HLEVELS {
+            let cores = hlevel_split(39, 3, h).expect("split");
+            let u = reports.next().expect("uniform run");
+            let v = reports.next().expect("variable run");
             t.rowf(&[
                 &workload,
                 &h,
@@ -228,16 +274,27 @@ pub fn fig6(seed: u64) -> Table {
 /// ResNet and MNIST.
 pub fn fig7a(seed: u64) -> Table {
     let mut t = Table::new(&["workload", "policy", "time_s", "speedup_vs_uniform"]);
-    for workload in ["resnet", "mnist"] {
+    const WORKLOADS: [&str; 2] = ["resnet", "mnist"];
+    const POLICIES: [Policy; 3] = [Policy::Uniform, Policy::Static, Policy::Dynamic];
+    let mut builders = Vec::new();
+    for workload in WORKLOADS {
+        for policy in POLICIES {
+            builders.push(
+                Session::builder()
+                    .model(workload)
+                    .workers(mixed_gpu_cpu_cluster())
+                    .policy(policy)
+                    .steps(TO_TARGET)
+                    .seed(seed)
+                    .adjust_cost(20.0),
+            );
+        }
+    }
+    let mut reports = run_batch(builders).into_iter();
+    for workload in WORKLOADS {
         let mut base = 0.0;
-        for policy in [Policy::Uniform, Policy::Static, Policy::Dynamic] {
-            let r = run(Session::builder()
-                .model(workload)
-                .workers(mixed_gpu_cpu_cluster())
-                .policy(policy)
-                .steps(TO_TARGET)
-                .seed(seed)
-                .adjust_cost(20.0));
+        for policy in POLICIES {
+            let r = reports.next().expect("fig7a run");
             if policy == Policy::Uniform {
                 base = r.total_time;
             }
@@ -256,15 +313,23 @@ pub fn fig7a(seed: u64) -> Table {
 /// Paper: 90 min uniform → 20 min variable (4.5×).
 pub fn fig7_cloud(seed: u64) -> Table {
     let mut t = Table::new(&["policy", "time_s", "speedup_vs_uniform"]);
+    let policies = [Policy::Uniform, Policy::Static];
+    let reports = run_batch(
+        policies
+            .iter()
+            .map(|&policy| {
+                Session::builder()
+                    .model("resnet")
+                    .workers(cloud_gpu_cluster())
+                    .policy(policy)
+                    .steps(TO_TARGET)
+                    .seed(seed)
+            })
+            .collect(),
+    );
     let mut base = 0.0;
-    for policy in [Policy::Uniform, Policy::Static] {
-        let r = run(Session::builder()
-            .model("resnet")
-            .workers(cloud_gpu_cluster())
-            .policy(policy)
-            .steps(TO_TARGET)
-            .seed(seed));
-        if policy == Policy::Uniform {
+    for (policy, r) in policies.iter().zip(reports) {
+        if *policy == Policy::Uniform {
             base = r.total_time;
         }
         t.rowf(&[
@@ -284,13 +349,24 @@ pub fn fig7_cloud(seed: u64) -> Table {
 /// BSP".
 pub fn fig_asp(seed: u64) -> Table {
     let mut t = Table::new(&["sync", "policy", "time_s", "updates", "speedup"]);
-    for sync in [SyncMode::Bsp, SyncMode::Asp] {
-        let mut base = 0.0;
-        for policy in [Policy::Uniform, Policy::Static] {
+    const SYNCS: [SyncMode; 2] = [SyncMode::Bsp, SyncMode::Asp];
+    const POLICIES: [Policy; 2] = [Policy::Uniform, Policy::Static];
+    let mut builders = Vec::new();
+    for sync in SYNCS {
+        for policy in POLICIES {
             // Run to a shrunk accuracy target so the sweep stays fast.
-            let r = run(sim("mnist", &[3, 16, 20], policy, 0, seed)
-                .sync(sync)
-                .target_iters(2_000));
+            builders.push(
+                sim("mnist", &[3, 16, 20], policy, 0, seed)
+                    .sync(sync)
+                    .target_iters(2_000),
+            );
+        }
+    }
+    let mut reports = run_batch(builders).into_iter();
+    for sync in SYNCS {
+        let mut base = 0.0;
+        for policy in POLICIES {
+            let r = reports.next().expect("asp run");
             if policy == Policy::Uniform {
                 base = r.total_time;
             }
@@ -437,6 +513,27 @@ pub fn fig_revocation(seed: u64) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn run_batch_matches_sequential_in_order() {
+        // The pooled sweep driver must be a pure wall-clock optimization:
+        // same reports, same order, regardless of pool interleaving.
+        let builders: Vec<_> = (0..5)
+            .map(|i| sim("mnist", &[4, 8, 16], Policy::Dynamic, 60, i as u64))
+            .collect();
+        let seq: Vec<(f64, u64, usize)> = builders
+            .iter()
+            .map(|b| {
+                let r = run(b.clone());
+                (r.total_time, r.total_iters, r.adjustments.len())
+            })
+            .collect();
+        let par: Vec<(f64, u64, usize)> = run_batch(builders)
+            .iter()
+            .map(|r| (r.total_time, r.total_iters, r.adjustments.len()))
+            .collect();
+        assert_eq!(seq, par);
+    }
 
     #[test]
     fn fig1_shows_hetero_penalty_ordering() {

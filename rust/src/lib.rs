@@ -53,5 +53,6 @@ pub mod util;
 
 pub use config::Policy;
 pub use session::{
-    Backend, RealBackend, Session, SessionBuilder, SimBackend, Slowdowns, WorkerOutcome,
+    Backend, RealBackend, Scheduler, Session, SessionBuilder, SimBackend, Slowdowns,
+    WorkerOutcome,
 };

@@ -16,7 +16,7 @@ use hetero_batch::cluster::{cpu_cluster, hlevel_split};
 use hetero_batch::config::Policy;
 use hetero_batch::figures;
 use hetero_batch::runtime::Runtime;
-use hetero_batch::session::{Session, SessionBuilder, Slowdowns};
+use hetero_batch::session::{Scheduler, Session, SessionBuilder, Slowdowns};
 use hetero_batch::sync::SyncMode;
 use hetero_batch::trace::{JoinSpec, SpotSpec};
 use hetero_batch::util::cli::Args;
@@ -96,7 +96,9 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         .opt("seed", "0", "rng seed")
         .opt("spot", "", "spot churn mttf:down[:grace] (s): revoke/rejoin workers")
         .opt("join", "", "scheduled joins k@t[,k@t..]: worker k first appears at t")
-        .opt("config", "", "JSON config file (CLI flags override)")
+        .opt("scheduler", "heap", "event scheduling: heap (O(log k)) | scan (O(k) baseline)")
+        .opt("report-sample", "1", "keep every n-th round/update record (bounds report memory at large k)")
+        .opt("config", "", "JSON config file (explicit CLI flags override)")
         .parse(rest)?;
 
     let builder = if a.get("config").is_empty() {
@@ -124,6 +126,16 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         .adjust_cost(a.get_f64("adjust-cost"))
         .noise(a.get_f64("noise"))
         .seed(a.get_u64("seed"));
+    // Applied only when explicitly passed, so the declared defaults
+    // never clobber a --config file's `scheduler`/`report_sample` keys.
+    let mut builder = builder;
+    if a.provided("scheduler") {
+        builder =
+            builder.scheduler(Scheduler::parse(&a.get("scheduler")).ok_or("bad --scheduler")?);
+    }
+    if a.provided("report-sample") {
+        builder = builder.report_sample(a.get_u64("report-sample"));
+    }
     let builder = apply_membership_flags(builder, &a)?;
     builder.validate()?;
 
@@ -151,6 +163,8 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .opt("eval-every", "0", "run an eval step every N global steps (0 = never)")
         .opt("pool-threads", "4", "PS hot-path shards on the worker pool (1 = single-threaded)")
         .flag("no-prefetch", "disable batch-generation/train-step overlap")
+        .opt("scheduler", "heap", "event scheduling: heap (O(log k)) | scan (O(k) baseline)")
+        .opt("report-sample", "1", "keep every n-th round/update record (bounds report memory at large k)")
         .opt("report", "", "write full JSON report to this path")
         .parse(rest)?;
 
@@ -175,6 +189,8 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .pool_threads(a.get_usize("pool-threads"))
         .prefetch(!a.get_flag("no-prefetch"))
         .loss_target(a.get_f64("loss-target"))
+        .report_sample(a.get_u64("report-sample"))
+        .scheduler(Scheduler::parse(&a.get("scheduler")).ok_or("bad --scheduler")?)
         .slowdowns(Slowdowns::from_cores(&cores));
     let builder = apply_membership_flags(builder, &a)?;
     builder.validate()?;

@@ -27,10 +27,19 @@ pub use store::ParamStore;
 
 /// λ_k = b_k / Σ b_i (Eq. 2's weights).
 pub fn lambdas_from_batches(batches: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(batches.len());
+    lambdas_into(&mut out, batches);
+    out
+}
+
+/// [`lambdas_from_batches`] into a caller-owned buffer (cleared first) —
+/// the per-update path reuses one allocation across the whole run.
+pub fn lambdas_into(out: &mut Vec<f64>, batches: &[f64]) {
     assert!(!batches.is_empty());
     let total: f64 = batches.iter().sum();
     assert!(total > 0.0, "batches sum to zero");
-    batches.iter().map(|&b| b / total).collect()
+    out.clear();
+    out.extend(batches.iter().map(|&b| b / total));
 }
 
 /// out[j] = Σ_k λ[k]·grads[k][j] — single-threaded reference.

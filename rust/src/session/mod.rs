@@ -29,13 +29,21 @@
 //! [`SyncState`].  BSP falls out as the lockstep special case (waves of
 //! K, one λ-weighted aggregate update per barrier); ASP/SSP apply each
 //! worker's update individually with genuine staleness.
+//!
+//! Event selection is O(log k) per event ([`Scheduler::Heap`], the
+//! default): a min-heap of completion times with lazy deletion plus a
+//! ready-queue for wave admission, so fleet-scale clusters (k in the
+//! thousands) cost k·iters·log k instead of the k²·iters the seed's
+//! per-event linear scans paid.  [`Scheduler::Scan`] keeps the linear
+//! path as the bench baseline; both produce identical reports
+//! (property-tested), and `benches/session.rs` records the speedup.
 
 pub mod real;
 pub mod sim;
 
 use anyhow::{anyhow, bail, Result};
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, VecDeque};
 
 use crate::cluster::{cpu_cluster, GpuModel, WorkerSpec};
 use crate::config::Policy;
@@ -110,13 +118,16 @@ pub trait Backend {
     /// Apply the completed updates of `workers` as one gradient
     /// application, λ-weighted by their batch sizes (paper Eq. 2–3).
     /// BSP passes all K workers at the barrier; ASP/SSP pass one.
-    /// Returns the resulting global loss when the backend trains for
-    /// real.
+    /// Only `batches[w]` for `w ∈ workers` is meaningful — entries for
+    /// other ranks may be stale (the session passes its executed-batch
+    /// buffer without per-round copies).  Returns the resulting global
+    /// loss when the backend trains for real.
     fn apply_update(&mut self, workers: &[usize], batches: &[f64]) -> Result<Option<f64>>;
 
     /// Fresh-equivalent progress retained by an update of the given
     /// staleness (simulation convergence model; real backends return 1.0
-    /// — their convergence is real, not modeled).
+    /// — their convergence is real, not modeled).  Must be a pure
+    /// function of `staleness`: the session memoizes small values.
     fn staleness_discount(&self, staleness: u64) -> f64;
 
     /// Periodic evaluation at global step `step`; returns
@@ -135,6 +146,38 @@ pub trait Backend {
     /// global model.  Default: no-op.
     fn admit_worker(&mut self, _w: usize) -> Result<()> {
         Ok(())
+    }
+}
+
+/// Event-scheduling implementation of the [`Session::run`] loop
+/// (DESIGN.md §10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheduler {
+    /// Indexed min-heap of completion times (lazy deletion via per-worker
+    /// generations) plus a ready-queue for wave admission: O(log k) per
+    /// event.  The default — required for fleet-scale (k ≫ 100) runs.
+    Heap,
+    /// The seed's per-event linear scans: O(k) per event.  Kept as the
+    /// `benches/session.rs` baseline and as the property-test
+    /// cross-check (`tests/property.rs` asserts both schedulers produce
+    /// identical `RunReport`s).
+    Scan,
+}
+
+impl Scheduler {
+    pub fn parse(s: &str) -> Option<Scheduler> {
+        match s {
+            "heap" => Some(Scheduler::Heap),
+            "scan" => Some(Scheduler::Scan),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheduler::Heap => "heap",
+            Scheduler::Scan => "scan",
+        }
     }
 }
 
@@ -209,6 +252,8 @@ pub struct SessionBuilder {
     pool_threads: usize,
     prefetch: bool,
     loss_target: f64,
+    scheduler: Scheduler,
+    report_sample: u64,
 }
 
 impl Default for SessionBuilder {
@@ -233,6 +278,8 @@ impl Default for SessionBuilder {
             pool_threads: 4,
             prefetch: true,
             loss_target: 0.0,
+            scheduler: Scheduler::Heap,
+            report_sample: 1,
         }
     }
 }
@@ -388,6 +435,27 @@ impl SessionBuilder {
         self
     }
 
+    /// Event-scheduling implementation (default [`Scheduler::Heap`];
+    /// [`Scheduler::Scan`] keeps the O(k)-per-event baseline for benches
+    /// and cross-checks — both produce identical reports).
+    pub fn scheduler(mut self, scheduler: Scheduler) -> Self {
+        self.scheduler = scheduler;
+        self
+    }
+
+    /// Keep every n-th BSP round (all of its member records) / every
+    /// n-th async update and loss sample in the [`RunReport`] (default
+    /// 1 = keep everything).  At fleet scale a full-fidelity report is
+    /// O(steps·k) memory; sampling bounds it without touching the run's
+    /// numerics — only the report density changes.  BSP sampling is
+    /// round-aligned so kept rounds stay complete: per-worker stats and
+    /// `iteration_gap` remain unbiased instead of aliasing with the
+    /// round period.
+    pub fn report_sample(mut self, n: u64) -> Self {
+        self.report_sample = n;
+        self
+    }
+
     // ------------------------------------------------------------- JSON
 
     /// Parse worker list from JSON: `[{"cpu": 9}, {"gpu": "P100"}]`.
@@ -453,6 +521,12 @@ impl SessionBuilder {
         }
         if let Some(s) = j.get("seed").as_usize() {
             b.seed = s as u64;
+        }
+        if let Some(s) = j.get("scheduler").as_str() {
+            b.scheduler = Scheduler::parse(s).ok_or(format!("bad scheduler {s:?}"))?;
+        }
+        if let Some(n) = j.get("report_sample").as_usize() {
+            b.report_sample = n as u64;
         }
         let c = j.get("controller");
         if !c.is_null() {
@@ -525,6 +599,9 @@ impl SessionBuilder {
         }
         if self.adjust_cost_s.map_or(false, |c| c < 0.0) || self.noise_sigma < 0.0 {
             return Err("costs/noise must be non-negative".into());
+        }
+        if self.report_sample == 0 {
+            return Err("report_sample must be >= 1".into());
         }
         if let Some(tr) = &self.traces {
             if tr.traces.len() != k {
@@ -667,6 +744,8 @@ impl SessionBuilder {
             adjust_cost_s: self.adjust_cost_s.unwrap_or(default_adjust_cost),
             eval_every: self.eval_every,
             loss_target: self.loss_target,
+            scheduler: self.scheduler,
+            report_sample: self.report_sample.max(1),
             slowdowns: self
                 .slowdowns
                 .clone()
@@ -688,6 +767,8 @@ pub struct Session<B: Backend> {
     adjust_cost_s: f64,
     eval_every: u64,
     loss_target: f64,
+    scheduler: Scheduler,
+    report_sample: u64,
     slowdowns: Slowdowns,
     traces: ClusterTraces,
     membership: MembershipPlan,
@@ -848,7 +929,27 @@ impl<B: Backend> Session<B> {
             stopped_early: false,
             global_batch,
             is_bsp,
+            heap_mode: self.scheduler == Scheduler::Heap,
+            ready: BTreeSet::new(),
+            blocked: BTreeMap::new(),
+            done_heap: BinaryHeap::new(),
+            gen: vec![0; k],
+            wave_buf: Vec::with_capacity(k),
+            members_buf: Vec::with_capacity(k),
+            report_sample: self.report_sample.max(1),
+            iter_seen: 0,
+            loss_seen: 0,
+            discount_cache: vec![f64::NAN; DISCOUNT_MEMO],
         };
+        if st.heap_mode {
+            // Every initially-live worker is idle at clock 0 = the live
+            // minimum, so the gate admits all of them in every mode.
+            for w in 0..k {
+                if st.live[w] {
+                    st.ready.insert(w);
+                }
+            }
+        }
 
         'training: while st.progress < target as f64 && st.updates < hard_updates {
             // Membership transitions due now (revocations first at equal
@@ -861,28 +962,37 @@ impl<B: Backend> Session<B> {
                     break 'training;
                 }
             }
-            if st.live.iter().all(|&l| !l) && events.is_empty() {
+            if st.sync.live_count() == 0 && events.is_empty() {
                 bail!("all workers revoked and no rejoin scheduled");
             }
 
             // Start every idle live worker the sync gate admits, as one
-            // wave.
-            let wave: Vec<usize> = (0..k)
-                .filter(|&w| st.live[w] && !st.busy[w] && st.sync.may_proceed(w))
-                .collect();
-            if !wave.is_empty() {
-                for &w in &wave {
-                    st.sync.pull(w);
+            // wave (ascending worker order — the backend consumes its
+            // noise stream in wave order, so ordering is part of the
+            // numerics).  Heap mode drains the ready-queue, which the
+            // bookkeeping below keeps equal to the scan's filter set.
+            st.wave_buf.clear();
+            if st.heap_mode {
+                st.wave_buf.extend(st.ready.iter().copied());
+                st.ready.clear();
+            } else {
+                st.wave_buf
+                    .extend((0..k).filter(|&w| st.live[w] && !st.busy[w] && st.sync.may_proceed(w)));
+            }
+            if !st.wave_buf.is_empty() {
+                for i in 0..st.wave_buf.len() {
+                    st.sync.pull(st.wave_buf[i]);
                 }
-                let outs = self.backend.execute_wave(&wave, &st.batches, st.t)?;
-                if outs.len() != wave.len() {
+                let outs = self.backend.execute_wave(&st.wave_buf, &st.batches, st.t)?;
+                if outs.len() != st.wave_buf.len() {
                     bail!(
                         "backend returned {} outcomes for a wave of {}",
                         outs.len(),
-                        wave.len()
+                        st.wave_buf.len()
                     );
                 }
-                for (&w, out) in wave.iter().zip(&outs) {
+                for (i, out) in outs.iter().enumerate() {
+                    let w = st.wave_buf[i];
                     // Virtual-slowdown injection: capacity c scales the
                     // work, the availability trace integrates it (a
                     // preemption costs its downtime, not work/ε).
@@ -895,16 +1005,30 @@ impl<B: Backend> Session<B> {
                     // The batch this iteration actually runs with — a
                     // mid-flight membership rebalance must not relabel it.
                     st.exec_batch[w] = st.batches[w];
+                    if st.heap_mode {
+                        st.gen[w] += 1;
+                        st.done_heap.push(DoneEntry {
+                            time: st.next_done[w],
+                            worker: w,
+                            gen: st.gen[w],
+                        });
+                    }
                 }
             }
 
             // Advance virtual time to the earlier of the next completion
             // and the next membership event (a revocation must be able to
             // cut short an in-flight iteration a preemption has stretched
-            // to the VM's recovery — that is its whole point).
-            let next_completion = (0..k)
-                .filter(|&w| st.busy[w])
-                .min_by(|&a, &b| st.next_done[a].partial_cmp(&st.next_done[b]).unwrap());
+            // to the VM's recovery — that is its whole point).  Ties on
+            // completion time break toward the lowest worker index in
+            // both scheduler modes.
+            let next_completion = if st.heap_mode {
+                st.peek_completion()
+            } else {
+                (0..k)
+                    .filter(|&w| st.busy[w])
+                    .min_by(|&a, &b| st.next_done[a].total_cmp(&st.next_done[b]))
+            };
             let next_event_t = events.front().map(|e| e.time);
             let w = match (next_completion, next_event_t) {
                 (Some(w), Some(te)) if te < st.next_done[w] => {
@@ -920,12 +1044,22 @@ impl<B: Backend> Session<B> {
                 }
                 (None, None) => bail!("session deadlock: no runnable workers"),
             };
+            if st.heap_mode {
+                st.done_heap.pop(); // `w`'s (validated) entry is the top
+            }
             let dur = st.next_done[w] - st.started_at[w];
             st.t = st.t.max(st.next_done[w]);
             st.busy[w] = false;
             let clock = st.sync.clock(w);
             let staleness = st.sync.push_update(w);
             st.updates += 1;
+            if st.heap_mode {
+                // The push may have advanced the live minimum (this was
+                // the laggard): admit newly-unblocked idle workers, then
+                // re-classify `w` itself.
+                st.drain_unblocked();
+                st.note_idle(w);
+            }
 
             if st.is_bsp {
                 st.round.push((w, st.started_at[w], dur));
@@ -936,22 +1070,29 @@ impl<B: Backend> Session<B> {
                     }
                 }
             } else {
-                report.iters.push(IterRecord {
-                    worker: w,
-                    iter: clock,
-                    start: st.started_at[w],
-                    duration: dur,
-                    batch: st.exec_batch[w],
-                    wait: 0.0,
-                });
+                if st.sample_iter() {
+                    report.iters.push(IterRecord {
+                        worker: w,
+                        iter: clock,
+                        start: st.started_at[w],
+                        duration: dur,
+                        batch: st.exec_batch[w],
+                        wait: 0.0,
+                    });
+                }
                 let loss = self.backend.apply_update(&[w], &st.batches)?;
                 // Fresh-equivalent progress: weight by share of the
                 // global batch and by the staleness discount; K fresh
-                // updates of share 1/K ⇒ one global iteration.
-                st.progress += (st.exec_batch[w] / st.global_batch)
-                    * self.backend.staleness_discount(staleness);
+                // updates of share 1/K ⇒ one global iteration.  The
+                // discount is memoized for small staleness (the common
+                // case — ASP/SSP staleness rarely exceeds the cohort
+                // size), saving a virtual call + float math per update.
+                let disc = st.discount(&self.backend, staleness);
+                st.progress += (st.exec_batch[w] / st.global_batch) * disc;
                 if let Some(l) = loss {
-                    report.losses.push((st.t, st.updates - 1, l));
+                    if st.sample_loss() {
+                        report.losses.push((st.t, st.updates - 1, l));
+                    }
                 }
                 if hit_loss_target(loss, self.loss_target) {
                     report.reached_target = true;
@@ -1029,31 +1170,40 @@ impl<B: Backend> Session<B> {
             .round
             .iter()
             .map(|&(_, s, d)| s + d)
-            .fold(f64::MIN, f64::max)
-            .max(st.t);
+            .max_by(f64::total_cmp)
+            .map_or(st.t, |m| m.max(st.t));
         // Weight gradients by the batches they were *computed* with: a
         // membership rebalance between a worker's wave start and the
-        // barrier must not relabel its contribution.
-        let mut exec = st.batches.clone();
-        for &(rw, _, _) in &st.round {
-            exec[rw] = st.exec_batch[rw];
+        // barrier must not relabel its contribution.  `exec_batch`
+        // already holds exactly that for every round member, and
+        // `apply_update` only reads its members' entries — no per-round
+        // clone of the allocation vector needed.
+        // Sampling is *round-aligned* under BSP: every n-th round keeps
+        // ALL its member records (a flat every-n-th-record rule would
+        // alias with the round period and drop whole workers from the
+        // report whenever n shares a factor with the live count).
+        let keep_round = st.global_steps % st.report_sample == 0;
+        if keep_round {
+            for &(rw, rs, rd) in &st.round {
+                report.iters.push(IterRecord {
+                    worker: rw,
+                    iter: st.global_steps,
+                    start: rs,
+                    duration: rd,
+                    batch: st.exec_batch[rw],
+                    wait: round_end - rs - rd,
+                });
+            }
         }
-        for &(rw, rs, rd) in &st.round {
-            report.iters.push(IterRecord {
-                worker: rw,
-                iter: st.global_steps,
-                start: rs,
-                duration: rd,
-                batch: exec[rw],
-                wait: round_end - rs - rd,
-            });
-        }
-        let members: Vec<usize> = st.round.iter().map(|r| r.0).collect();
-        let loss = self.backend.apply_update(&members, &exec)?;
+        st.members_buf.clear();
+        st.members_buf.extend(st.round.iter().map(|r| r.0));
+        let loss = self.backend.apply_update(&st.members_buf, &st.exec_batch)?;
         st.global_steps += 1;
         st.progress += 1.0;
         if let Some(l) = loss {
-            report.losses.push((st.t, st.global_steps - 1, l));
+            if keep_round {
+                report.losses.push((st.t, st.global_steps - 1, l));
+            }
         }
         record_eval(
             &mut self.backend,
@@ -1122,14 +1272,24 @@ impl<B: Backend> Session<B> {
                 st.live[w] = false;
                 // The instance is gone: in-flight work and any
                 // completed-but-unapplied round contribution die with it.
+                // (A stale heap entry for an in-flight iteration is
+                // filtered lazily — `busy` is false and the generation
+                // won't match any future reschedule.)
+                if st.heap_mode && !st.busy[w] {
+                    st.remove_idle(w);
+                }
                 st.busy[w] = false;
                 st.round.retain(|r| r.0 != w);
                 st.sync.retire(w);
+                if st.heap_mode {
+                    // Retiring the laggard can advance the live minimum.
+                    st.drain_unblocked();
+                }
                 self.backend.retire_worker(w)?;
                 // A mid-round revocation can leave every survivor already
                 // waiting at the barrier: close the round now (with
                 // pre-revocation batch weights), then rebalance.
-                let n_live = st.live.iter().filter(|&&l| l).count();
+                let n_live = st.sync.live_count();
                 if st.is_bsp && !st.round.is_empty() && st.round.len() == n_live {
                     st.sync.close_round();
                     self.close_bsp_round(st, report, true)?;
@@ -1143,6 +1303,11 @@ impl<B: Backend> Session<B> {
                 st.epoch += 1;
                 st.sync.admit(w);
                 st.live[w] = true;
+                if st.heap_mode {
+                    // Seeded at the live minimum ⇒ admissible in every
+                    // sync mode.
+                    st.note_idle(w);
+                }
                 self.backend.admit_worker(w)?;
                 self.rebalance_membership(st, MembershipKind::Join, w);
             }
@@ -1152,7 +1317,7 @@ impl<B: Backend> Session<B> {
             epoch: st.epoch,
             worker: w,
             kind: ev.kind,
-            live: st.live.iter().filter(|&&l| l).count(),
+            live: st.sync.live_count(),
             batches: st.batches.clone(),
         });
         Ok(())
@@ -1188,6 +1353,47 @@ impl<B: Backend> Session<B> {
     }
 }
 
+/// Memoization width for [`Backend::staleness_discount`]: staleness is
+/// bounded by in-flight updates, which rarely exceeds the cohort size —
+/// values at or above this fall through to the backend call.
+const DISCOUNT_MEMO: usize = 64;
+
+/// Completion-heap entry, ordered *min-first* by (time, worker) so
+/// `BinaryHeap` (a max-heap) pops the earliest completion with ties
+/// broken toward the lowest worker index — exactly the element the
+/// seed's first-minimum linear scan selected.  `gen` implements lazy
+/// deletion: an entry is live only while it matches the worker's current
+/// schedule generation (a revocation, or any reschedule, strands it).
+struct DoneEntry {
+    time: f64,
+    worker: usize,
+    gen: u64,
+}
+
+impl PartialEq for DoneEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for DoneEntry {}
+
+impl PartialOrd for DoneEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for DoneEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Deliberately reversed: the max-heap's top is the min entry.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.worker.cmp(&self.worker))
+    }
+}
+
 /// Mutable per-run state of the [`Session::run`] event loop, factored
 /// out so membership transitions and BSP round closure can live in
 /// helper methods without fighting the borrow checker.
@@ -1214,6 +1420,130 @@ struct LoopState {
     stopped_early: bool,
     global_batch: f64,
     is_bsp: bool,
+
+    // ----- O(log k) event scheduling (Scheduler::Heap, DESIGN.md §10)
+    heap_mode: bool,
+    /// Idle live workers the sync gate admits *now*; the next wave is
+    /// this set, drained in ascending order.
+    ready: BTreeSet<usize>,
+    /// Idle live workers the gate blocks, bucketed by their clock; when
+    /// the live minimum advances, whole buckets move to `ready`.
+    blocked: BTreeMap<u64, Vec<usize>>,
+    /// Min-heap of in-flight completion times (lazy deletion via `gen`).
+    done_heap: BinaryHeap<DoneEntry>,
+    /// Schedule generation per worker: bumped at every wave start, so
+    /// stranded heap entries from revoked iterations never resolve.
+    gen: Vec<u64>,
+
+    // ----- reusable hot-loop buffers (no per-event allocations)
+    wave_buf: Vec<usize>,
+    members_buf: Vec<usize>,
+
+    // ----- report sampling (`SessionBuilder::report_sample`)
+    report_sample: u64,
+    iter_seen: u64,
+    loss_seen: u64,
+
+    /// Memoized staleness discounts (NaN = not yet computed).
+    discount_cache: Vec<f64>,
+}
+
+impl LoopState {
+    /// Largest clock the gate admits for an idle live worker.
+    fn admit_threshold(&self) -> u64 {
+        match self.sync.mode() {
+            SyncMode::Bsp => self.sync.min_clock(),
+            SyncMode::Asp => u64::MAX,
+            SyncMode::Ssp { bound } => self.sync.min_clock().saturating_add(bound),
+        }
+    }
+
+    /// Classify an idle live worker: ready now, or blocked on its clock.
+    fn note_idle(&mut self, w: usize) {
+        debug_assert!(self.live[w] && !self.busy[w]);
+        let clock = self.sync.clock(w);
+        if clock <= self.admit_threshold() {
+            self.ready.insert(w);
+        } else {
+            self.blocked.entry(clock).or_default().push(w);
+        }
+    }
+
+    /// Move every blocked worker the gate now admits into `ready`.  Call
+    /// after any mutation that can advance the live minimum (push_update,
+    /// retire) — the admission threshold is monotone non-decreasing, so
+    /// `ready` members never need demotion.
+    fn drain_unblocked(&mut self) {
+        if self.blocked.is_empty() {
+            return;
+        }
+        let thr = self.admit_threshold();
+        while let Some(c) = self.blocked.keys().next().copied() {
+            if c > thr {
+                break;
+            }
+            for w in self.blocked.remove(&c).unwrap() {
+                self.ready.insert(w);
+            }
+        }
+    }
+
+    /// Forget an idle worker (revocation while not in flight).
+    fn remove_idle(&mut self, w: usize) {
+        if self.ready.remove(&w) {
+            return;
+        }
+        let clock = self.sync.clock(w);
+        if let Some(bucket) = self.blocked.get_mut(&clock) {
+            bucket.retain(|&x| x != w);
+            if bucket.is_empty() {
+                self.blocked.remove(&clock);
+            }
+        }
+    }
+
+    /// Earliest valid in-flight completion, discarding stranded entries
+    /// (revoked / rescheduled workers) along the way.  Leaves the valid
+    /// entry on the heap — the caller pops it only when it actually
+    /// completes (a membership event may pre-empt it).
+    fn peek_completion(&mut self) -> Option<usize> {
+        while let Some(top) = self.done_heap.peek() {
+            let w = top.worker;
+            if self.busy[w] && self.gen[w] == top.gen {
+                return Some(w);
+            }
+            self.done_heap.pop();
+        }
+        None
+    }
+
+    /// Keep this record? (every `report_sample`-th, starting with the first)
+    fn sample_iter(&mut self) -> bool {
+        let keep = self.iter_seen % self.report_sample == 0;
+        self.iter_seen += 1;
+        keep
+    }
+
+    fn sample_loss(&mut self) -> bool {
+        let keep = self.loss_seen % self.report_sample == 0;
+        self.loss_seen += 1;
+        keep
+    }
+
+    /// Staleness discount, memoized for small staleness values.  Sound
+    /// because [`Backend::staleness_discount`] is a pure function of the
+    /// staleness for a fixed backend.
+    fn discount<B: Backend>(&mut self, backend: &B, staleness: u64) -> f64 {
+        if (staleness as usize) < self.discount_cache.len() {
+            let slot = &mut self.discount_cache[staleness as usize];
+            if slot.is_nan() {
+                *slot = backend.staleness_discount(staleness);
+            }
+            *slot
+        } else {
+            backend.staleness_discount(staleness)
+        }
+    }
 }
 
 /// Push a periodic eval record when one is due and the backend evaluates.
@@ -1285,6 +1615,10 @@ fn apply_adjustment(
             let cur = cur_buckets.as_mut().expect("bucketed session state");
             let (snapped, swaps) = quantize_alloc_live(&proposal, g, cur, live);
             let snapped_f: Vec<f64> = snapped.iter().map(|&b| b as f64).collect();
+            // Tell the controller what was actually applied (only `ctl`
+            // reads between here and the assignment below, so ordering
+            // lets `snapped_f` move instead of cloning twice).
+            ctl.set_batches(&snapped_f);
             if swaps.iter().any(|&s| s) {
                 *t += cost;
                 report.adjustments.push(AdjustEvent {
@@ -1294,10 +1628,8 @@ fn apply_adjustment(
                     cost,
                 });
                 *cur = snapped;
-                *batches = snapped_f.clone();
+                *batches = snapped_f;
             }
-            // Tell the controller what was actually applied.
-            ctl.set_batches(&snapped_f);
         }
         None => {
             *t += cost;
@@ -1496,6 +1828,117 @@ mod tests {
         // (covered in tests/engine_integration.rs).
         let b = SessionBuilder::default().steps(0);
         assert!(b.build_sim().is_ok());
+    }
+
+    #[test]
+    fn scheduler_parses_and_round_trips_json() {
+        assert_eq!(Scheduler::parse("heap"), Some(Scheduler::Heap));
+        assert_eq!(Scheduler::parse("scan"), Some(Scheduler::Scan));
+        assert_eq!(Scheduler::parse("bogus"), None);
+        assert_eq!(Scheduler::Heap.label(), "heap");
+        let b = SessionBuilder::from_json_str(r#"{"scheduler": "scan"}"#).unwrap();
+        assert_eq!(b.scheduler, Scheduler::Scan);
+        assert!(SessionBuilder::from_json_str(r#"{"scheduler": "x"}"#).is_err());
+        // Default is the heap.
+        assert_eq!(SessionBuilder::default().scheduler, Scheduler::Heap);
+    }
+
+    #[test]
+    fn report_sample_parses_and_rejects_zero() {
+        let b = SessionBuilder::from_json_str(r#"{"report_sample": 10}"#).unwrap();
+        assert_eq!(b.report_sample, 10);
+        assert!(SessionBuilder::default().report_sample(0).validate().is_err());
+    }
+
+    /// The correctness lock for the O(log k) rework: heap- and
+    /// scan-scheduled runs of the same churny seeded scenario must be
+    /// *bitwise* identical — same event order, same numerics, same
+    /// report.  (tests/property.rs fans this out over random scenarios
+    /// on the mock backend; this pins the real simulator path.)
+    #[test]
+    fn heap_and_scan_schedulers_are_bit_identical_on_sim() {
+        use crate::trace::SpotSpec;
+        for sync in [SyncMode::Bsp, SyncMode::Asp, SyncMode::Ssp { bound: 2 }] {
+            let mk = |scheduler| {
+                SessionBuilder::default()
+                    .model("mnist")
+                    .cores(&[4, 8, 27])
+                    .policy(Policy::Dynamic)
+                    .sync(sync)
+                    .steps(200)
+                    .adjust_cost(1.0)
+                    .seed(5)
+                    .spot(SpotSpec { mttf_s: 8.0, down_s: 2.0, grace_s: 0.3 })
+                    .scheduler(scheduler)
+                    .build_sim()
+                    .unwrap()
+                    .run()
+                    .unwrap()
+            };
+            let (h, s) = (mk(Scheduler::Heap), mk(Scheduler::Scan));
+            assert_eq!(h.total_time, s.total_time, "{sync:?}");
+            assert_eq!(h.total_iters, s.total_iters, "{sync:?}");
+            assert_eq!(h.iters.len(), s.iters.len(), "{sync:?}");
+            for (a, b) in h.iters.iter().zip(&s.iters) {
+                assert_eq!(
+                    (a.worker, a.iter, a.start, a.duration, a.batch, a.wait),
+                    (b.worker, b.iter, b.start, b.duration, b.batch, b.wait),
+                    "{sync:?}"
+                );
+            }
+            assert_eq!(h.adjustments.len(), s.adjustments.len(), "{sync:?}");
+            for (a, b) in h.adjustments.iter().zip(&s.adjustments) {
+                assert_eq!((a.time, a.iter, &a.batches), (b.time, b.iter, &b.batches));
+            }
+            assert_eq!(h.epochs.len(), s.epochs.len(), "{sync:?}");
+            for (a, b) in h.epochs.iter().zip(&s.epochs) {
+                assert_eq!(
+                    (a.time, a.epoch, a.worker, a.kind, a.live, &a.batches),
+                    (b.time, b.epoch, b.worker, b.kind, b.live, &b.batches),
+                    "{sync:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn report_sample_thins_records_without_touching_the_run() {
+        let mk = |n: u64| {
+            SessionBuilder::default()
+                .model("mnist")
+                .cores(&[4, 8, 16])
+                .policy(Policy::Dynamic)
+                .steps(120)
+                .seed(3)
+                .report_sample(n)
+                .build_sim()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let full = mk(1);
+        let thin = mk(4);
+        // Same trajectory: makespan, iterations, adjustments untouched.
+        assert_eq!(full.total_time, thin.total_time);
+        assert_eq!(full.total_iters, thin.total_iters);
+        assert_eq!(full.adjustments.len(), thin.adjustments.len());
+        // BSP sampling keeps every 4th *round* whole (first kept): 120
+        // rounds -> 30 kept x 3 workers.
+        let rounds = full.total_iters;
+        let kept = (rounds + 3) / 4;
+        assert_eq!(thin.iters.len() as u64, kept * 3);
+        assert_eq!(
+            (thin.iters[0].worker, thin.iters[0].start),
+            (full.iters[0].worker, full.iters[0].start)
+        );
+        // Round alignment: no worker is aliased out of the report.
+        for w in 0..3 {
+            assert_eq!(
+                thin.iters.iter().filter(|r| r.worker == w).count() as u64,
+                kept,
+                "worker {w} under-represented"
+            );
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ use anyhow::{bail, Result};
 
 use crate::controller::bucket::quantize;
 use crate::data::{self, Batch, Dataset, ShardRouter};
-use crate::ps::{lambdas_from_batches, FusedOptimizer};
+use crate::ps::{lambdas_into, FusedOptimizer};
 use crate::runtime::{ModelManifest, Runtime, StepKind};
 use crate::session::{Backend, WorkerOutcome};
 use crate::util::pool;
@@ -49,6 +49,10 @@ pub struct RealBackend<'rt> {
     grads: Vec<Vec<f32>>,
     /// Last observed per-worker loss (consumed by `apply_update`).
     losses: Vec<f64>,
+    /// Reusable per-update scratch: member batch sizes and their λ
+    /// weights (one allocation for the whole run, not one per update).
+    lam_batches: Vec<f64>,
+    lambdas: Vec<f64>,
     /// (params version, marshaled literals): parameter literals are
     /// prepared once per parameter version and shared by every train
     /// step until the next update lands (§Perf it. 3 — one marshal per
@@ -119,6 +123,8 @@ impl<'rt> RealBackend<'rt> {
             optimizer,
             grads,
             losses: vec![0.0; k],
+            lam_batches: Vec::with_capacity(k),
+            lambdas: Vec::with_capacity(k),
             prepared: None,
             version: 0,
             k,
@@ -243,18 +249,20 @@ impl Backend for RealBackend<'_> {
             bail!("apply_update needs at least one worker");
         }
         // λ-weighted fused aggregation + optimizer (Eq. 2–3), sharded
-        // across the persistent pool (§Perf iteration 4).
-        let lam_batches: Vec<f64> = workers.iter().map(|&w| batches[w]).collect();
-        let lambdas = lambdas_from_batches(&lam_batches);
+        // across the persistent pool (§Perf iteration 4).  λ scratch
+        // buffers are reused across updates (§Perf iteration 5).
+        self.lam_batches.clear();
+        self.lam_batches.extend(workers.iter().map(|&w| batches[w]));
+        lambdas_into(&mut self.lambdas, &self.lam_batches);
         let grad_refs: Vec<&[f32]> =
             workers.iter().map(|&w| self.grads[w].as_slice()).collect();
         self.optimizer
-            .step_mt(&mut self.params, &grad_refs, &lambdas, self.pool_threads);
+            .step_mt(&mut self.params, &grad_refs, &self.lambdas, self.pool_threads);
         self.version += 1;
         // Global loss = λ-weighted worker losses.
         let loss: f64 = workers
             .iter()
-            .zip(&lambdas)
+            .zip(&self.lambdas)
             .map(|(&w, &lam)| self.losses[w] * lam)
             .sum();
         Ok(Some(loss))

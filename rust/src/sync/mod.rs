@@ -51,6 +51,13 @@ impl SyncMode {
 /// aggregate — `min_clock`, `max_clock`, the BSP barrier — counts only
 /// live workers, so a departed rank can neither hold a barrier hostage
 /// nor pin the SSP staleness window.  Each transition bumps the epoch.
+///
+/// Aggregates are maintained *incrementally* (DESIGN.md §10): a counting
+/// multiset of live-worker clocks plus a live counter make `min_clock`/
+/// `max_clock` O(log k), and `at_barrier`/`live_count` O(1), instead of
+/// the O(k) scans the seed paid per gating query — the scans survive as
+/// `debug_assert!` cross-checks, so every debug/test run still verifies
+/// the incremental state against first principles.
 #[derive(Debug, Clone)]
 pub struct SyncState {
     mode: SyncMode,
@@ -63,6 +70,11 @@ pub struct SyncState {
     live: Vec<bool>,
     /// Membership epoch: bumped on every retire/admit.
     epoch: u64,
+    /// Live workers (incremental mirror of `live`).
+    n_live: usize,
+    /// clock value → number of live workers currently at it.  First key
+    /// is `min_clock`, last is `max_clock`, `len() <= 1` is the barrier.
+    clock_counts: std::collections::BTreeMap<u64, usize>,
 }
 
 impl SyncState {
@@ -73,6 +85,11 @@ impl SyncState {
     /// Start with an explicit membership (scheduled `join_at` workers
     /// begin absent).
     pub fn with_live(mode: SyncMode, live: &[bool]) -> Self {
+        let n_live = live.iter().filter(|&&l| l).count();
+        let mut clock_counts = std::collections::BTreeMap::new();
+        if n_live > 0 {
+            clock_counts.insert(0u64, n_live);
+        }
         SyncState {
             mode,
             clocks: vec![0; live.len()],
@@ -80,6 +97,8 @@ impl SyncState {
             pulled: vec![0; live.len()],
             live: live.to_vec(),
             epoch: 0,
+            n_live,
+            clock_counts,
         }
     }
 
@@ -96,15 +115,36 @@ impl SyncState {
     }
 
     pub fn live_count(&self) -> usize {
-        self.live.iter().filter(|&&l| l).count()
+        debug_assert_eq!(
+            self.n_live,
+            self.live.iter().filter(|&&l| l).count(),
+            "incremental live count diverged from the scan"
+        );
+        self.n_live
     }
 
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
 
-    /// Min clock over *live* workers (0 when none are live).
-    pub fn min_clock(&self) -> u64 {
+    /// Remove one live worker currently at clock `c` from the multiset.
+    fn counts_remove(&mut self, c: u64) {
+        match self.clock_counts.get_mut(&c) {
+            Some(n) if *n > 1 => *n -= 1,
+            Some(_) => {
+                self.clock_counts.remove(&c);
+            }
+            None => debug_assert!(false, "clock {c} missing from the multiset"),
+        }
+    }
+
+    /// Add one live worker at clock `c` to the multiset.
+    fn counts_insert(&mut self, c: u64) {
+        *self.clock_counts.entry(c).or_insert(0) += 1;
+    }
+
+    /// The seed's O(k) min-clock scan, kept as the debug cross-check.
+    fn scan_min_clock(&self) -> u64 {
         self.clocks
             .iter()
             .zip(&self.live)
@@ -114,8 +154,8 @@ impl SyncState {
             .unwrap_or(0)
     }
 
-    /// Max clock over *live* workers (0 when none are live).
-    pub fn max_clock(&self) -> u64 {
+    /// The seed's O(k) max-clock scan, kept as the debug cross-check.
+    fn scan_max_clock(&self) -> u64 {
         self.clocks
             .iter()
             .zip(&self.live)
@@ -123,6 +163,20 @@ impl SyncState {
             .map(|(&c, _)| c)
             .max()
             .unwrap_or(0)
+    }
+
+    /// Min clock over *live* workers (0 when none are live).
+    pub fn min_clock(&self) -> u64 {
+        let m = self.clock_counts.keys().next().copied().unwrap_or(0);
+        debug_assert_eq!(m, self.scan_min_clock(), "incremental min-clock diverged");
+        m
+    }
+
+    /// Max clock over *live* workers (0 when none are live).
+    pub fn max_clock(&self) -> u64 {
+        let m = self.clock_counts.keys().next_back().copied().unwrap_or(0);
+        debug_assert_eq!(m, self.scan_max_clock(), "incremental max-clock diverged");
+        m
     }
 
     pub fn version(&self) -> u64 {
@@ -152,6 +206,8 @@ impl SyncState {
     /// gating aggregate; its clock freezes where it was.
     pub fn retire(&mut self, worker: usize) {
         assert!(self.live[worker], "retire of already-dead worker {worker}");
+        self.counts_remove(self.clocks[worker]);
+        self.n_live -= 1;
         self.live[worker] = false;
         self.epoch += 1;
     }
@@ -168,6 +224,8 @@ impl SyncState {
         }
         self.pulled[worker] = self.version;
         self.live[worker] = true;
+        self.counts_insert(self.clocks[worker]);
+        self.n_live += 1;
         self.epoch += 1;
     }
 
@@ -198,6 +256,10 @@ impl SyncState {
     /// property tests pin down).
     pub fn push_update(&mut self, worker: usize) -> u64 {
         let staleness = self.version - self.pulled[worker];
+        if self.live[worker] {
+            self.counts_remove(self.clocks[worker]);
+            self.counts_insert(self.clocks[worker] + 1);
+        }
         self.clocks[worker] += 1;
         match self.mode {
             SyncMode::Bsp => {
@@ -211,8 +273,15 @@ impl SyncState {
     }
 
     /// BSP full-barrier check: all *live* workers at the same clock.
+    /// O(1): the clock multiset has at most one distinct key.
     pub fn at_barrier(&self) -> bool {
-        self.min_clock() == self.max_clock()
+        let b = self.clock_counts.len() <= 1;
+        debug_assert_eq!(
+            b,
+            self.scan_min_clock() == self.scan_max_clock(),
+            "incremental barrier check diverged"
+        );
+        b
     }
 }
 
@@ -375,6 +444,56 @@ mod tests {
         assert!(!s.may_proceed(1));
         assert!(s.may_proceed(0) && s.may_proceed(2));
         assert_eq!(s.epoch(), 0);
+    }
+
+    #[test]
+    fn incremental_aggregates_track_churned_clocks() {
+        // Drive an SSP gate through uneven progress + churn; every query
+        // also runs the debug_assert scan cross-checks internally.
+        let mut s = SyncState::new(SyncMode::Ssp { bound: 3 }, 4);
+        for _ in 0..3 {
+            s.pull(0);
+            s.push_update(0);
+        }
+        s.pull(1);
+        s.push_update(1);
+        assert_eq!((s.min_clock(), s.max_clock()), (0, 3));
+        assert!(!s.at_barrier());
+        // Retiring the laggards advances the live minimum.
+        s.retire(2);
+        s.retire(3);
+        assert_eq!((s.min_clock(), s.max_clock()), (1, 3));
+        assert_eq!(s.live_count(), 2);
+        // Admission seeds at the live minimum: multiset gains a worker
+        // at clock 1.
+        s.admit(2);
+        assert_eq!(s.clock(2), 1);
+        assert_eq!((s.min_clock(), s.max_clock()), (1, 3));
+        assert_eq!(s.live_count(), 3);
+        // Catch everyone up to clock 3: barrier collapses to one key.
+        for _ in 0..2 {
+            for w in [1usize, 2] {
+                s.pull(w);
+                s.push_update(w);
+            }
+        }
+        assert!(s.at_barrier());
+        assert_eq!((s.min_clock(), s.max_clock()), (3, 3));
+    }
+
+    #[test]
+    fn all_revoked_aggregates_read_zero() {
+        let mut s = SyncState::new(SyncMode::Asp, 2);
+        s.pull(0);
+        s.push_update(0);
+        s.retire(0);
+        s.retire(1);
+        assert_eq!(s.live_count(), 0);
+        assert_eq!((s.min_clock(), s.max_clock()), (0, 0));
+        assert!(s.at_barrier());
+        // Sole survivor re-admitted: its frozen clock is the new band.
+        s.admit(0);
+        assert_eq!((s.min_clock(), s.max_clock()), (1, 1));
     }
 
     #[test]

@@ -127,6 +127,14 @@ impl Args {
             .unwrap_or_else(|| panic!("option --{name} was never declared"))
     }
 
+    /// Was this option/flag explicitly passed on the command line (vs
+    /// falling back to its declared default)?  Lets a subcommand layer
+    /// CLI values over config-file values without the declared defaults
+    /// silently clobbering the file's settings.
+    pub fn provided(&self, name: &str) -> bool {
+        self.values.contains_key(name) || self.flags.iter().any(|f| f == name)
+    }
+
     pub fn get(&self, name: &str) -> String {
         self.lookup(name)
     }
@@ -196,6 +204,16 @@ mod tests {
         assert_eq!(a.get_f64("lr"), 0.1);
         assert!(!a.get_flag("verbose"));
         assert_eq!(a.get_usize_list("cores"), vec![3, 5, 12]);
+    }
+
+    #[test]
+    fn provided_distinguishes_explicit_from_default() {
+        let a = base().parse(&raw(&["--steps", "7", "--verbose"])).unwrap();
+        assert!(a.provided("steps"));
+        assert!(a.provided("verbose"));
+        // Falls back to the default, but was never passed.
+        assert!(!a.provided("lr"));
+        assert_eq!(a.get_f64("lr"), 0.1);
     }
 
     #[test]

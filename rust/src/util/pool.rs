@@ -14,6 +14,9 @@
 //! - [`ThreadPool::run_tasks`]: a scoped fork-join over arbitrary
 //!   borrowing closures (used when several parallel `&mut` slices —
 //!   params + optimizer state — must be sharded together).
+//! - [`ThreadPool::run_collect`]: fork-join over value-returning tasks,
+//!   results gathered in task order — the deterministic-gather shape of
+//!   the figure sweep driver (`figures::run_batch`).
 //! - [`ThreadPool::submit`]: fire one task and get a [`JobHandle`] to
 //!   join later — the engine's batch-prefetch pipelining.
 //!
@@ -205,6 +208,32 @@ impl ThreadPool {
         }
     }
 
+    /// Run every task to completion and collect the return values *in
+    /// task order* (fork-join; order is independent of how the pool
+    /// interleaves execution — each task writes its own preallocated
+    /// slot).  Panics in any task re-raise here after all finish.
+    pub fn run_collect<'a, T: Send>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send + 'a>>,
+    ) -> Vec<T> {
+        let mut slots: Vec<Option<T>> = Vec::new();
+        slots.resize_with(tasks.len(), || None);
+        {
+            let wrapped: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+                .iter_mut()
+                .zip(tasks)
+                .map(|(slot, task)| {
+                    Box::new(move || *slot = Some(task())) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            self.run_tasks(wrapped);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("pool task completed"))
+            .collect()
+    }
+
     /// Split `data` into `shards` contiguous chunks and run
     /// `f(shard_idx, global_start, shard)` on each in parallel.
     /// `shards` is clamped to `data.len()`; tasks beyond the worker
@@ -369,6 +398,19 @@ mod tests {
             assert_eq!((i, start), (0, 0));
             assert!(s.is_empty());
         });
+    }
+
+    #[test]
+    fn run_collect_returns_results_in_task_order() {
+        let pool = ThreadPool::new(3);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..17usize)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = pool.run_collect(tasks);
+        assert_eq!(out, (0..17usize).map(|i| i * i).collect::<Vec<_>>());
+        // Empty input degenerates cleanly.
+        let none: Vec<Box<dyn FnOnce() -> usize + Send>> = Vec::new();
+        assert!(pool.run_collect(none).is_empty());
     }
 
     #[test]

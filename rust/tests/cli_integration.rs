@@ -231,6 +231,77 @@ fn train_and_simulate_reject_bad_spot_and_join_identically() {
 }
 
 #[test]
+fn simulate_scheduler_scan_matches_heap_byte_for_byte() {
+    // The O(k) baseline and the O(log k) heap must produce the same
+    // run — including every float in the JSON report.
+    let base = [
+        "simulate", "--workload", "mnist", "--cores", "4,8,16", "--policy", "dynamic",
+        "--iters", "120",
+    ];
+    let mut heap_args = base.to_vec();
+    heap_args.extend(["--scheduler", "heap"]);
+    let mut scan_args = base.to_vec();
+    scan_args.extend(["--scheduler", "scan"]);
+    assert_eq!(run_ok(&heap_args), run_ok(&scan_args));
+    // Bad value fails with the `bad --sync`-style error text.
+    let out = hbatch()
+        .args(["simulate", "--scheduler", "bogus"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bad --scheduler"));
+}
+
+#[test]
+fn simulate_report_sample_thins_records_not_the_run() {
+    let report = |sample: &str| {
+        let out = run_ok(&[
+            "simulate", "--workload", "mnist", "--cores", "4,8,16", "--policy",
+            "static", "--iters", "90", "--report-sample", sample,
+        ]);
+        hetero_batch::util::json::Json::parse(&out).expect("valid json")
+    };
+    let full = report("1");
+    let thin = report("9");
+    // The trajectory is untouched; only report density changes.
+    assert_eq!(
+        full.get("total_time_s").as_f64(),
+        thin.get("total_time_s").as_f64()
+    );
+    assert_eq!(full.get("total_iters").as_i64(), thin.get("total_iters").as_i64());
+    let records = |j: &hetero_batch::util::json::Json| -> i64 {
+        j.get("workers")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|w| w.get("n").as_i64().unwrap())
+            .sum()
+    };
+    // 90 BSP rounds × 3 workers = 270 records; every 9th round kept
+    // whole ⇒ 10 rounds × 3 workers = 30.
+    assert_eq!(records(&full), 270);
+    assert_eq!(records(&thin), 30);
+    // The config-file key works too: the CLI default (1) must not
+    // clobber it when --report-sample is not passed.
+    let cfg = std::env::temp_dir().join("hbatch_report_sample_cfg.json");
+    std::fs::write(&cfg, r#"{"report_sample": 9}"#).unwrap();
+    let out = run_ok(&[
+        "simulate", "--config", cfg.to_str().unwrap(), "--workload", "mnist",
+        "--cores", "4,8,16", "--policy", "static", "--iters", "90",
+    ]);
+    let via_cfg = hetero_batch::util::json::Json::parse(&out).expect("valid json");
+    assert_eq!(records(&via_cfg), 30);
+    // report_sample must be >= 1.
+    let out = hbatch()
+        .args(["simulate", "--report-sample", "0"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
 fn bad_flag_values_fail_cleanly() {
     for args in [
         vec!["simulate", "--policy", "bogus"],

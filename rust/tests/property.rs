@@ -10,8 +10,9 @@ use hetero_batch::config::Policy;
 use hetero_batch::controller::bucket::{quantize, quantize_alloc};
 use hetero_batch::controller::{static_alloc, ControllerCfg, DynamicBatcher};
 use hetero_batch::metrics::RunReport;
-use hetero_batch::session::{Backend, Session, WorkerOutcome};
+use hetero_batch::session::{Backend, Scheduler, Session, WorkerOutcome};
 use hetero_batch::sync::{SyncMode, SyncState};
+use hetero_batch::trace::{MembershipEvent, MembershipKind, MembershipPlan};
 use hetero_batch::ps::fused::{
     fused_agg_adam, fused_agg_adam_mt, fused_agg_momentum, fused_agg_momentum_mt,
     fused_agg_sgd, fused_agg_sgd_mt,
@@ -801,7 +802,6 @@ fn membership_epochs_identical_across_backend_shapes() {
     // The acceptance scenario: one revocation + one rejoin mid-run must
     // produce identical epoch AND gating sequences on a sim-shaped and a
     // real-shaped backend, with Σb conserved at every transition.
-    use hetero_batch::trace::{MembershipEvent, MembershipKind, MembershipPlan};
     for sync in [SyncMode::Bsp, SyncMode::Asp, SyncMode::Ssp { bound: 2 }] {
         let durs = vec![3.0, 1.0, 2.0];
         // BSP rounds take 3 s: revoke worker 0 mid-round-2 (t=7.5),
@@ -869,6 +869,210 @@ fn membership_epochs_identical_across_backend_shapes() {
             .filter(|i| i.worker == 0)
             .all(|i| i.start + i.duration <= t_rev + 1e-9 || i.start >= t_join - 1e-9));
     }
+}
+
+// ---------------------------------------------------------------------
+// O(log k) event scheduling (DESIGN.md §10): the heap scheduler must be
+// observationally *identical* to the retained linear-scan baseline — not
+// close, identical: same event order, same floats, same report — across
+// random durations, sync modes, policies, and membership churn.
+
+/// A random Session scenario on the fixed-duration mock backend.
+#[derive(Debug, Clone)]
+struct SchedScenario {
+    durs: Vec<f64>,
+    sync: SyncMode,
+    dynamic: bool,
+    steps: u64,
+    /// Optional (worker, revoke_t, rejoin_t) churn bounce.
+    churn: Option<(usize, f64, f64)>,
+}
+
+struct SchedStrategy;
+
+impl Strategy<SchedScenario> for SchedStrategy {
+    fn generate(&self, rng: &mut Rng) -> SchedScenario {
+        let k = rng.range_usize(2, 6);
+        let durs: Vec<f64> = (0..k).map(|_| rng.range_f64(0.5, 3.5)).collect();
+        let sync = match rng.range_usize(0, 3) {
+            0 => SyncMode::Bsp,
+            1 => SyncMode::Asp,
+            _ => SyncMode::Ssp {
+                bound: rng.range_usize(0, 3) as u64,
+            },
+        };
+        let dynamic = rng.range_usize(0, 2) == 1;
+        let steps = rng.range_usize(8, 30) as u64;
+        let churn = (rng.range_usize(0, 3) > 0).then(|| {
+            let w = rng.range_usize(0, k);
+            let t1 = rng.range_f64(1.0, 25.0);
+            (w, t1, t1 + rng.range_f64(1.0, 20.0))
+        });
+        SchedScenario { durs, sync, dynamic, steps, churn }
+    }
+
+    fn shrink(&self, s: &SchedScenario) -> Vec<SchedScenario> {
+        let mut out = Vec::new();
+        if s.churn.is_some() {
+            let mut t = s.clone();
+            t.churn = None;
+            out.push(t);
+        }
+        if s.steps > 8 {
+            let mut t = s.clone();
+            t.steps = 8;
+            out.push(t);
+        }
+        out
+    }
+}
+
+fn run_sched(s: &SchedScenario, scheduler: Scheduler) -> RunReport {
+    let mut b = Session::builder()
+        .policy(if s.dynamic { Policy::Dynamic } else { Policy::Uniform })
+        .sync(s.sync)
+        .steps(s.steps)
+        .scheduler(scheduler);
+    if let Some((w, t1, t2)) = s.churn {
+        b = b.membership(MembershipPlan::new(vec![
+            MembershipEvent { time: t1, worker: w, kind: MembershipKind::Revoke },
+            MembershipEvent { time: t2, worker: w, kind: MembershipKind::Join },
+        ]));
+    }
+    b.build_with(FixedScheduleBackend {
+        durs: s.durs.clone(),
+        real_shaped: false,
+    })
+    .unwrap()
+    .run()
+    .unwrap()
+}
+
+/// Bitwise report equality — any divergence in event ordering shows up
+/// as a differing start/duration/iter somewhere.
+fn reports_identical(a: &RunReport, b: &RunReport) -> bool {
+    a.total_time == b.total_time
+        && a.total_iters == b.total_iters
+        && a.reached_target == b.reached_target
+        && a.losses == b.losses
+        && a.iters.len() == b.iters.len()
+        && a.iters.iter().zip(&b.iters).all(|(x, y)| {
+            x.worker == y.worker
+                && x.iter == y.iter
+                && x.start == y.start
+                && x.duration == y.duration
+                && x.batch == y.batch
+                && x.wait == y.wait
+        })
+        && a.adjustments.len() == b.adjustments.len()
+        && a.adjustments
+            .iter()
+            .zip(&b.adjustments)
+            .all(|(x, y)| x.time == y.time && x.iter == y.iter && x.batches == y.batches)
+        && a.epochs.len() == b.epochs.len()
+        && a.epochs.iter().zip(&b.epochs).all(|(x, y)| {
+            x.time == y.time
+                && x.epoch == y.epoch
+                && x.worker == y.worker
+                && x.kind == y.kind
+                && x.live == y.live
+                && x.batches == y.batches
+        })
+}
+
+#[test]
+fn prop_heap_and_scan_schedulers_produce_identical_reports() {
+    check("heap == scan", 120, SchedStrategy, |s| {
+        let heap = run_sched(s, Scheduler::Heap);
+        let scan = run_sched(s, Scheduler::Scan);
+        reports_identical(&heap, &scan)
+    });
+}
+
+// ---------------------------------------------------------------------
+// SyncState incremental aggregates: the O(1)/O(log k) gates must match a
+// from-scratch shadow scan after every operation of a random legal
+// schedule that includes churn (retire/admit interleaved with pulls and
+// pushes) — this is the cross-check the in-library debug_asserts run,
+// promoted to an explicit property over churned schedules.
+
+#[test]
+fn prop_sync_incremental_gates_match_shadow_scan_under_churn() {
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(2, 7);
+        let mode = match rng.range_usize(0, 3) {
+            0 => SyncMode::Bsp,
+            1 => SyncMode::Asp,
+            _ => SyncMode::Ssp {
+                bound: rng.range_usize(0, 4) as u64,
+            },
+        };
+        (k, mode, rng.next_u64())
+    });
+    check("incremental == shadow scan", 120, strat, |&(k, mode, seed)| {
+        let mut s = SyncState::new(mode, k);
+        let mut rng = Rng::new(seed);
+        // Shadow model: plain vectors, aggregates recomputed by scan.
+        let mut clocks = vec![0u64; k];
+        let mut live = vec![true; k];
+        let mut in_flight = vec![false; k];
+        let mut ok = true;
+        for _ in 0..250 {
+            let live_ws: Vec<usize> = (0..k).filter(|&w| live[w]).collect();
+            let dead_ws: Vec<usize> = (0..k).filter(|&w| !live[w]).collect();
+            let churn = rng.range_usize(0, 5) == 0;
+            if churn && !dead_ws.is_empty() {
+                let w = dead_ws[rng.range_usize(0, dead_ws.len())];
+                s.admit(w);
+                // Shadow admit: seed at the live minimum (if any).
+                if let Some(m) = live_ws.iter().map(|&v| clocks[v]).min() {
+                    clocks[w] = m;
+                }
+                live[w] = true;
+            } else if churn && live_ws.len() > 1 {
+                let w = live_ws[rng.range_usize(0, live_ws.len())];
+                s.retire(w);
+                live[w] = false;
+                in_flight[w] = false; // its in-flight work dies with it
+            } else {
+                let legal: Vec<usize> = live_ws
+                    .iter()
+                    .copied()
+                    .filter(|&w| in_flight[w] || s.may_proceed(w))
+                    .collect();
+                if legal.is_empty() {
+                    continue;
+                }
+                let w = legal[rng.range_usize(0, legal.len())];
+                if in_flight[w] {
+                    s.push_update(w);
+                    clocks[w] += 1;
+                    in_flight[w] = false;
+                } else {
+                    s.pull(w);
+                    in_flight[w] = true;
+                }
+            }
+            // Cross-check every aggregate against the shadow scan.
+            let lc: Vec<u64> = (0..k).filter(|&w| live[w]).map(|w| clocks[w]).collect();
+            let smin = lc.iter().min().copied().unwrap_or(0);
+            let smax = lc.iter().max().copied().unwrap_or(0);
+            ok &= s.min_clock() == smin
+                && s.max_clock() == smax
+                && s.live_count() == lc.len()
+                && s.at_barrier() == (smin == smax);
+            for w in 0..k {
+                let expect = live[w]
+                    && match mode {
+                        SyncMode::Bsp => clocks[w] == smin,
+                        SyncMode::Asp => true,
+                        SyncMode::Ssp { bound } => clocks[w] < smin + bound + 1,
+                    };
+                ok &= s.may_proceed(w) == expect;
+            }
+        }
+        ok
+    });
 }
 
 #[test]

@@ -7,7 +7,10 @@
 # HBATCH_BENCH_QUICK=1 (short measurement windows); partial/quick runs
 # write BENCH_hotpath_quick.json so they never clobber the canonical
 # BENCH_hotpath.json, which only a full `cargo bench --bench hotpath`
-# (no flags) refreshes.
+# (no flags) refreshes.  The session-loop suite gets the same treatment:
+# the smoke runs it truncated to k <= 64 (BENCH_session_quick.json); the
+# canonical BENCH_session.json comes from a full `cargo bench --bench
+# session`.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -25,5 +28,11 @@ cargo test -q
 
 echo "== tier1: hotpath bench smoke (agg only, quick) =="
 HBATCH_BENCH_QUICK=1 cargo bench --bench hotpath -- --agg-only
+
+echo "== tier1: session bench smoke (k <= 64, quick) =="
+# Truncated grid + quick windows => writes BENCH_session_quick.json,
+# never the canonical BENCH_session.json (full `cargo bench --bench
+# session` only).  Also self-checks heap vs scan report identity.
+HBATCH_BENCH_QUICK=1 cargo bench --bench session -- --max-k 64
 
 echo "tier1: OK"
