@@ -8,8 +8,9 @@
 //!
 //! Results are also written machine-readably to `BENCH_hotpath.json` at
 //! the repo root (the ROADMAP perf trajectory artifact), including the
-//! `fused_mt{2,4,8}` and `pool_vs_spawn` series plus derived speedup
-//! ratios.
+//! `fused_mt{2,4,8}`, `pool_vs_spawn`, and `tree_vs_flat` series plus
+//! derived speedup ratios and the `peak_live_gradient_bytes` record
+//! (eager reduction tree vs the flat k-buffer arena, §Perf it. 6).
 //!
 //! Flags: `--agg-only` limits the run to the aggregation + optimizer
 //! groups (no PJRT artifacts needed) — used by `scripts/tier1.sh` as a
@@ -19,7 +20,7 @@ use hetero_batch::controller::{ControllerCfg, DynamicBatcher};
 use hetero_batch::data::{self};
 use hetero_batch::ps::{
     self, aggregate_into, aggregate_into_mt, aggregate_into_spawn,
-    lambdas_from_batches, Optimizer,
+    aggregate_tree_into, lambdas_from_batches, Optimizer, ReduceTree, RetainPolicy,
 };
 use hetero_batch::runtime::Runtime;
 use hetero_batch::util::bench::{find_mean_ns, suite_json, Bench};
@@ -62,6 +63,97 @@ fn bench_aggregation() -> Bench {
     }
     b.report();
     b
+}
+
+/// §Perf iteration 6 — `tree_vs_flat` series: the eager reduction tree
+/// against the flat sequential sweep it replaced, k ∈ {4, 16, 64, 256}
+/// × small (400k) / transformer (12.6M) parameter counts.  The timed
+/// unit is one full round (k pushes + finalize + reset); note the tree's
+/// headline win is *placement* — combines land in the straggler window
+/// and the barrier-critical path drops from O(d·k) to O(d·log k) — so
+/// the end-to-end ratio here is the conservative total-throughput view.
+/// Also records `peak_live_gradient_bytes`: RetainPolicy::Free holds
+/// ⌈log₂k⌉+1 partial buffers (asserted) vs the flat arena's k.
+///
+/// The flat arm materializes k full gradient vectors — infeasible at
+/// k = 256 × 12.6M (12.9 GB) — so that cell runs tree-only over a
+/// rotating 8-buffer source set (memory record, no ratio); quick smoke
+/// runs (`scripts/tier1.sh`) restrict to the small model.
+fn bench_tree_vs_flat() -> (Bench, Json) {
+    let mut b = Bench::new("agg_tree");
+    let mut peaks = Json::obj();
+    let quick = std::env::var("HBATCH_BENCH_QUICK").is_ok();
+    let small = 400_000usize;
+    let xf = 12_600_000usize;
+    let mut cells: Vec<(usize, usize, &str, bool)> = vec![
+        (4, small, "400k", true),
+        (16, small, "400k", true),
+        (64, small, "400k", true),
+        (256, small, "400k", true),
+    ];
+    if !quick {
+        cells.extend([
+            (4, xf, "12.6M", true),
+            (16, xf, "12.6M", true),
+            (64, xf, "12.6M", true),
+            (256, xf, "12.6M", false),
+        ]);
+    }
+    let mut rng = Rng::new(7);
+    for (k, d, tag, flat_arm) in cells {
+        let n_src = if flat_arm { k } else { 8 };
+        let srcs: Vec<Vec<f32>> = (0..n_src).map(|_| rng.normal_vec_f32(d)).collect();
+        let batches: Vec<f64> = (0..k).map(|i| 16.0 + i as f64).collect();
+        let lambdas = lambdas_from_batches(&batches);
+        // Both arms run at the same 4-shard pool request, so the
+        // derived ratio isolates the reduction *scheme* — a sharded
+        // tree against a single-threaded sweep would just measure
+        // thread count.
+        let mut tree = ReduceTree::new(k, d, RetainPolicy::Free, 4);
+        if flat_arm {
+            let refs: Vec<&[f32]> = srcs.iter().map(|g| g.as_slice()).collect();
+            let mut flat = vec![0.0f32; d];
+            b.run(&format!("flat/k{k}/{tag}"), || {
+                aggregate_into_mt(&mut flat, &refs, &lambdas, 4);
+                flat[0]
+            });
+            // Self-check before timing the candidate: the tree must
+            // agree with the flat oracle.
+            let mut out = vec![0.0f32; d];
+            aggregate_tree_into(&mut out, &refs, &lambdas, 4);
+            for (i, (&a, &o)) in flat.iter().zip(&out).enumerate() {
+                assert!(
+                    (a - o).abs() <= 1e-5,
+                    "tree/flat divergence at k={k} {tag} idx {i}: {a} vs {o}"
+                );
+            }
+        }
+        b.run(&format!("tree/k{k}/{tag}"), || {
+            for i in 0..k {
+                tree.push(i, &srcs[i % n_src], lambdas[i] as f32);
+            }
+            tree.finalize();
+            let x = tree.root()[0];
+            tree.reset();
+            x
+        });
+        assert!(
+            tree.peak_buffers() <= tree.depth() + 1,
+            "RetainPolicy::Free peak {} exceeded ⌈log₂{k}⌉+1 = {}",
+            tree.peak_buffers(),
+            tree.depth() + 1
+        );
+        peaks.set(
+            &format!("tree_free/k{k}/{tag}"),
+            Json::Num(tree.peak_live_bytes() as f64),
+        );
+        peaks.set(
+            &format!("flat_arena/k{k}/{tag}"),
+            Json::Num((k * d * std::mem::size_of::<f32>()) as f64),
+        );
+    }
+    b.report();
+    (b, peaks)
 }
 
 fn bench_agg_xla_vs_rust() -> Option<Bench> {
@@ -261,6 +353,18 @@ fn derived_ratios(groups: &[&Bench]) -> Json {
         "optimizer/fused_agg+sgd/3x12.6M",
         "optimizer/fused_mt4_agg+sgd/3x12.6M",
     );
+    // §Perf iteration 6: eager reduction tree vs the flat sequential
+    // sweep (ratio > 1 = tree faster end-to-end; the barrier-critical-
+    // path win is structural and not captured by this total).
+    for k in [4, 16, 64, 256] {
+        for tag in ["400k", "12.6M"] {
+            ratio(
+                &format!("tree_vs_flat/k{k}/{tag}"),
+                &format!("agg_tree/flat/k{k}/{tag}"),
+                &format!("agg_tree/tree/k{k}/{tag}"),
+            );
+        }
+    }
     o
 }
 
@@ -272,6 +376,8 @@ fn main() {
     // is *partial* and must not masquerade as the canonical record.
     let mut skipped_artifact_groups = false;
     groups.push(bench_aggregation());
+    let (tree_bench, tree_peaks) = bench_tree_vs_flat();
+    groups.push(tree_bench);
     groups.push(bench_optimizers());
     if !agg_only {
         match bench_agg_xla_vs_rust() {
@@ -293,7 +399,9 @@ fn main() {
         );
     }
     let refs: Vec<&Bench> = groups.iter().collect();
-    let json = suite_json("hotpath", &refs, derived_ratios(&refs));
+    let mut derived = derived_ratios(&refs);
+    derived.set("peak_live_gradient_bytes", tree_peaks);
+    let json = suite_json("hotpath", &refs, derived);
     // Quick/partial runs must not clobber the canonical perf-trajectory
     // artifact (full windows, all groups) with 8-sample smoke data.
     let partial =

@@ -317,15 +317,35 @@ impl DynamicBatcher {
 
     /// Full-length batch vector; retired workers hold 0.
     pub fn batches(&self) -> Vec<f64> {
-        self.workers.iter().map(|w| w.batch).collect()
+        let mut out = Vec::with_capacity(self.workers.len());
+        self.batches_into(&mut out);
+        out
+    }
+
+    /// [`DynamicBatcher::batches`] into a caller-owned buffer (cleared
+    /// first) — per-round callers (the Session's membership rebalance,
+    /// the figure harness control loops) reuse one allocation across
+    /// the whole run, like `ps::lambdas_into` already does.
+    pub fn batches_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.workers.iter().map(|w| w.batch));
     }
 
     /// λ_k = b_k / Σ b_i — the gradient weights (Eq. 2), normalized over
     /// the live cohort (retired workers get λ = 0).
     pub fn lambdas(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.workers.len());
+        self.lambdas_into(&mut out);
+        out
+    }
+
+    /// [`DynamicBatcher::lambdas`] into a caller-owned buffer (cleared
+    /// first).
+    pub fn lambdas_into(&self, out: &mut Vec<f64>) {
         let total: f64 = self.workers.iter().map(|w| w.batch).sum();
         assert!(total > 0.0, "lambdas of an empty cohort");
-        self.workers.iter().map(|w| w.batch / total).collect()
+        out.clear();
+        out.extend(self.workers.iter().map(|w| w.batch / total));
     }
 
     pub fn global_batch(&self) -> f64 {
@@ -889,6 +909,16 @@ mod tests {
         let l = ctl.lambdas();
         assert!((l.iter().sum::<f64>() - 1.0).abs() < EPS);
         assert!((l[2] / l[0] - 3.0).abs() < EPS);
+    }
+
+    #[test]
+    fn into_variants_match_and_clear_scratch() {
+        let ctl = DynamicBatcher::new(ControllerCfg::default(), &[30.0, 60.0, 90.0]);
+        let mut scratch = vec![999.0; 7]; // stale content must be cleared
+        ctl.batches_into(&mut scratch);
+        assert_eq!(scratch, ctl.batches());
+        ctl.lambdas_into(&mut scratch);
+        assert_eq!(scratch, ctl.lambdas());
     }
 
     #[test]

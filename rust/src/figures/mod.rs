@@ -181,11 +181,15 @@ pub fn fig4(deadband_on: bool, seed: u64) -> Table {
     // Uniform (sub-optimal) start, as in the paper's Fig. 4a.
     let mut ctl = DynamicBatcher::new(cfg, &[64.0, 64.0, 64.0]);
     let mut rng = crate::util::rng::Rng::new(seed);
-    let b = ctl.batches();
+    // Per-iteration batch reads reuse one scratch allocation
+    // (DynamicBatcher::batches_into) — this loop runs every simulated
+    // round.
+    let mut b = Vec::new();
+    ctl.batches_into(&mut b);
     t.rowf(&[&0, &fmt(b[0]), &fmt(b[1]), &fmt(b[2])]);
     let mut n_adj = 0;
     for _iter in 0..120 {
-        let b = ctl.batches();
+        ctl.batches_into(&mut b);
         for (k, d) in devices.iter().enumerate() {
             ctl.observe(k, model.iter_time(d, b[k].max(1.0), 1.0, &mut rng));
         }

@@ -53,6 +53,6 @@ pub mod util;
 
 pub use config::Policy;
 pub use session::{
-    Backend, RealBackend, Scheduler, Session, SessionBuilder, SimBackend, Slowdowns,
-    WorkerOutcome,
+    Backend, BspAgg, RealBackend, Scheduler, Session, SessionBuilder, SimBackend,
+    Slowdowns, WorkerOutcome,
 };

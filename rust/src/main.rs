@@ -163,6 +163,7 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .opt("eval-every", "0", "run an eval step every N global steps (0 = never)")
         .opt("pool-threads", "4", "PS hot-path shards on the worker pool (1 = single-threaded)")
         .flag("no-prefetch", "disable batch-generation/train-step overlap")
+        .flag("collect-agg", "BSP: collect gradients and aggregate at the barrier (baseline; default is the eager reduction tree)")
         .opt("scheduler", "heap", "event scheduling: heap (O(log k)) | scan (O(k) baseline)")
         .opt("report-sample", "1", "keep every n-th round/update record (bounds report memory at large k)")
         .opt("report", "", "write full JSON report to this path")
@@ -188,6 +189,7 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .seed(a.get_u64("seed"))
         .pool_threads(a.get_usize("pool-threads"))
         .prefetch(!a.get_flag("no-prefetch"))
+        .eager_agg(!a.get_flag("collect-agg"))
         .loss_target(a.get_f64("loss-target"))
         .report_sample(a.get_u64("report-sample"))
         .scheduler(Scheduler::parse(&a.get("scheduler")).ok_or("bad --scheduler")?)

@@ -335,12 +335,10 @@ impl FusedOptimizer {
     }
 }
 
+/// Argument validation, shared with every other aggregation entry point
+/// ([`crate::ps::validate_agg`] — the params vector is the length target).
 fn validate(params: &[f32], grads: &[&[f32]], lambdas: &[f64]) {
-    assert_eq!(grads.len(), lambdas.len());
-    assert!(!grads.is_empty());
-    for g in grads {
-        assert_eq!(g.len(), params.len());
-    }
+    crate::ps::validate_agg(params, grads, lambdas);
 }
 
 #[cfg(test)]

@@ -16,14 +16,35 @@
 //! flattened parameter vector, optionally multi-threaded); the same
 //! computation also exists as an AOT Pallas kernel (`grad_agg_k*.hlo.txt`)
 //! — `benches/agg.rs` compares the two.
+//!
+//! §Perf iteration 6: BSP rounds no longer realize Eq. 2 as one flat
+//! O(k·d) barrier sweep — [`reduce::ReduceTree`] combines each worker's
+//! gradient into a fixed rank-indexed binary tree the moment it
+//! completes (DESIGN.md §11).  The flat paths below remain the async
+//! update path, the bench baseline, and the tree's numeric oracle.
 
 pub mod fused;
 pub mod optimizer;
+pub mod reduce;
 pub mod store;
 
 pub use fused::FusedOptimizer;
 pub use optimizer::{Adam, LrSchedule, Momentum, Optimizer, Sgd};
+pub use reduce::{aggregate_tree_into, ReduceTree, RetainPolicy};
 pub use store::ParamStore;
+
+/// Shared argument validation for every aggregation entry point (flat,
+/// pool-sharded, the spawn baseline, the fused kernels, the reduction
+/// tree): one gradient per λ, at least one gradient, every gradient the
+/// target's length.  (Previously triplicated across
+/// `aggregate_into{,_mt,_spawn}` and duplicated again in `fused`.)
+pub(crate) fn validate_agg(target: &[f32], grads: &[&[f32]], lambdas: &[f64]) {
+    assert_eq!(grads.len(), lambdas.len());
+    assert!(!grads.is_empty(), "no gradients");
+    for g in grads {
+        assert_eq!(g.len(), target.len(), "gradient length mismatch");
+    }
+}
 
 /// λ_k = b_k / Σ b_i (Eq. 2's weights).
 pub fn lambdas_from_batches(batches: &[f64]) -> Vec<f64> {
@@ -42,13 +63,14 @@ pub fn lambdas_into(out: &mut Vec<f64>, batches: &[f64]) {
     out.extend(batches.iter().map(|&b| b / total));
 }
 
-/// out[j] = Σ_k λ[k]·grads[k][j] — single-threaded reference.
+/// out[j] = Σ_k λ[k]·grads[k][j] — single-threaded reference, summing
+/// workers *sequentially* (k−1 dependent adds per element).  The BSP
+/// hot path now aggregates through the eager reduction tree instead
+/// ([`reduce`]); this flat sweep remains the async single-update path,
+/// the `tree_vs_flat` bench baseline, and the ≤1e-6 numeric oracle the
+/// tree is property-tested against.
 pub fn aggregate_into(out: &mut [f32], grads: &[&[f32]], lambdas: &[f64]) {
-    assert_eq!(grads.len(), lambdas.len());
-    assert!(!grads.is_empty(), "no gradients");
-    for g in grads {
-        assert_eq!(g.len(), out.len(), "gradient length mismatch");
-    }
+    validate_agg(out, grads, lambdas);
     // First worker writes, the rest accumulate — avoids a zero-fill pass.
     let l0 = lambdas[0] as f32;
     for (o, &g) in out.iter_mut().zip(grads[0]) {
@@ -93,11 +115,7 @@ pub fn aggregate_into_mt(
     lambdas: &[f64],
     threads: usize,
 ) {
-    assert_eq!(grads.len(), lambdas.len());
-    assert!(!grads.is_empty(), "no gradients");
-    for g in grads {
-        assert_eq!(g.len(), out.len());
-    }
+    validate_agg(out, grads, lambdas);
     let threads = effective_threads(threads, out.len());
     if threads == 1 {
         return aggregate_into(out, grads, lambdas);
@@ -118,11 +136,7 @@ pub fn aggregate_into_spawn(
     lambdas: &[f64],
     threads: usize,
 ) {
-    assert_eq!(grads.len(), lambdas.len());
-    assert!(!grads.is_empty(), "no gradients");
-    for g in grads {
-        assert_eq!(g.len(), out.len());
-    }
+    validate_agg(out, grads, lambdas);
     let threads = effective_threads(threads, out.len());
     if threads == 1 {
         return aggregate_into(out, grads, lambdas);

@@ -1,0 +1,754 @@
+//! Eager binary reduction-tree aggregation (§Perf iteration 6,
+//! DESIGN.md §11).
+//!
+//! The flat λ-weighted aggregation (`super::aggregate_into`) realizes
+//! paper Eq. 2 as one O(k·d) sweep over every worker's full-model
+//! gradient *at the BSP barrier* — the last O(k) hot-path scan left
+//! after the O(log k) event-loop rework, and the reason the real
+//! backend pinned k parameter-sized gradient buffers per round.  This
+//! module replaces it with a **rank-indexed binary reduction tree**:
+//!
+//! - The tree *shape* is a pure function of the worker-rank leaf slots
+//!   (leaf `w` sits at position `w`; internal node `(l, i)` covers the
+//!   leaf range `[i·2^l, (i+1)·2^l)`), so the summation order — and
+//!   therefore every f32 rounding — is **bit-identical under any
+//!   arrival-order permutation** of the leaves.  Eager and
+//!   collect-at-the-barrier schedules produce the same bits.
+//! - Leaves are pushed **pre-weighted by the λ numerator** (the batch
+//!   size b_k; [`aggregate_tree_into`] pushes λ_k itself).  Under
+//!   elastic membership Σb is only known once the round closes, so the
+//!   common 1/Σb normalization is applied **once at the root** (fed to
+//!   the fused optimizer as its λ weight) — which is exactly what makes
+//!   a mid-round revocation a pure ancestor-path rebuild instead of a
+//!   reweighting of every surviving leaf.
+//! - Internal nodes combine **eagerly**: a node reduces the moment both
+//!   children are ready, so combine work lands inside the straggler
+//!   slack the paper says heterogeneity creates, not at the barrier.
+//!   The barrier-critical path is the last arrival's root walk —
+//!   O(d·log k) worst case, O(d) typical — instead of the flat O(d·k).
+//! - Combines are cache-blocked ([`COMBINE_TILE`] = 32 KiB per child
+//!   tile, both children accumulated per tile so a node combine stays
+//!   in L2) and pool-sharded over [`crate::util::pool`] for parameter
+//!   vectors past [`crate::ps::MT_MIN_LEN`].
+//!
+//! Buffer lifetime is governed by [`RetainPolicy`]:
+//!
+//! - [`RetainPolicy::Free`] (static membership): combining moves the
+//!   left child's buffer into the parent and recycles the right child's
+//!   onto a freelist.  With leaves arriving in ascending rank order —
+//!   the real backend's wave order — at most one partial per tree level
+//!   is ever pending, so peak live gradient memory is **⌈log₂k⌉+1
+//!   buffers** (asserted by a unit test) instead of the arena's k.
+//! - [`RetainPolicy::Retain`] (elastic runs): every node keeps its
+//!   buffer, trading memory (≤ 2k−1 buffers) for churn speed — a
+//!   revocation invalidates only the revoked leaf's ancestor path, and
+//!   the surviving *sibling partials* rebuild it in O(d·log k).
+//!
+//! The flat `aggregate_into` survives as the bench baseline
+//! (`benches/hotpath.rs` `tree_vs_flat` series) and as the ≤1e-6
+//! cross-check oracle (`rust/tests/property.rs`).
+
+use crate::ps::{effective_threads, validate_agg};
+use crate::util::pool;
+
+/// Combine-kernel tile: 8 K f32 = 32 KiB per child stream, so the two
+/// child tiles plus the destination stay L2-resident while a node
+/// reduces (same blocking constant as the fused optimizer kernels).
+const COMBINE_TILE: usize = 8192;
+
+/// What happens to child buffers once a node has combined them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetainPolicy {
+    /// Recycle aggressively: the left child's buffer *becomes* the
+    /// parent's, the right child's returns to the freelist.  Peak live
+    /// memory with in-rank-order arrival is ⌈log₂k⌉+1 buffers.  A
+    /// leaf that has already been absorbed cannot be revoked — use
+    /// [`RetainPolicy::Retain`] for sessions with a `MembershipPlan`.
+    Free,
+    /// Keep every node's buffer so a mid-round revocation rebuilds only
+    /// the revoked leaf's ancestor path from the surviving sibling
+    /// partials (O(d·log k) per revocation, ≤ 2k−1 live buffers).
+    Retain,
+}
+
+/// One tree node.  `buf` is `None` for pending nodes, for passthrough
+/// nodes (single present child — resolved via [`ReduceTree::effective_idx`]
+/// under `Retain`; under `Free` the buffer migrates up instead), and
+/// for nodes whose subtree holds no pushed leaf.
+struct Node {
+    buf: Option<Vec<f32>>,
+    /// Pushed (and not revoked) leaves currently under this node.
+    arrived: u32,
+    /// Content reflects the current state of the node's children.
+    combined: bool,
+}
+
+impl Node {
+    fn new() -> Self {
+        Node { buf: None, arrived: 0, combined: false }
+    }
+}
+
+/// Rank-indexed eager binary reduction tree over `k` gradient leaves of
+/// dimension `d`.  See the module docs for shape, weighting, and the
+/// arrival-order-invariance guarantee.
+pub struct ReduceTree {
+    d: usize,
+    policy: RetainPolicy,
+    /// Shard-count *request* for pool-dispatched combines (clamped like
+    /// every other PS path: single-threaded below `MT_MIN_LEN`).
+    shards: usize,
+    /// `levels[0]` = the k leaf slots; `levels[l+1].len() =
+    /// ⌈levels[l].len()/2⌉`; the last level is the root.
+    levels: Vec<Vec<Node>>,
+    pushed: Vec<bool>,
+    free: Vec<Vec<f32>>,
+    /// Buffers currently held by nodes or leased out (not on the freelist).
+    in_use: usize,
+    peak: usize,
+}
+
+impl ReduceTree {
+    pub fn new(k: usize, d: usize, policy: RetainPolicy, shards: usize) -> Self {
+        assert!(k >= 1, "reduction tree needs at least one leaf");
+        let mut levels = vec![(0..k).map(|_| Node::new()).collect::<Vec<_>>()];
+        let mut n = k;
+        while n > 1 {
+            n = (n + 1) / 2;
+            levels.push((0..n).map(|_| Node::new()).collect());
+        }
+        ReduceTree {
+            d,
+            policy,
+            shards,
+            levels,
+            pushed: vec![false; k],
+            free: Vec::new(),
+            in_use: 0,
+            peak: 0,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.pushed.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn policy(&self) -> RetainPolicy {
+        self.policy
+    }
+
+    /// Tree depth ⌈log₂k⌉ — the `Free`-mode peak-buffer bound is
+    /// `depth() + 1`.
+    pub fn depth(&self) -> usize {
+        self.levels.len() - 1
+    }
+
+    pub fn is_pushed(&self, leaf: usize) -> bool {
+        self.pushed[leaf]
+    }
+
+    pub fn pushed_count(&self) -> usize {
+        self.pushed.iter().filter(|&&p| p).count()
+    }
+
+    /// Buffers currently held (nodes + leased out).
+    pub fn live_buffers(&self) -> usize {
+        self.in_use
+    }
+
+    /// High-water mark of live buffers over the tree's lifetime.
+    pub fn peak_buffers(&self) -> usize {
+        self.peak
+    }
+
+    /// Peak live gradient memory in bytes — the `benches/hotpath.rs`
+    /// `peak_live_gradient_bytes` series.
+    pub fn peak_live_bytes(&self) -> usize {
+        self.peak * self.d * std::mem::size_of::<f32>()
+    }
+
+    /// Number of leaf slots under node `(l, i)`.
+    fn span(&self, l: usize, i: usize) -> usize {
+        (1usize << l).min(self.k() - (i << l))
+    }
+
+    fn eff_shards(&self) -> usize {
+        effective_threads(self.shards, self.d)
+    }
+
+    /// Borrow a d-sized buffer from the freelist (or allocate one).
+    /// Hand it back through [`ReduceTree::push_owned`] — the real
+    /// backend's train step writes gradients straight into a leased
+    /// buffer, so no per-worker arena exists between step and combine.
+    pub fn lease(&mut self) -> Vec<f32> {
+        self.in_use += 1;
+        self.peak = self.peak.max(self.in_use);
+        self.free.pop().unwrap_or_else(|| vec![0.0; self.d])
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        debug_assert_eq!(buf.len(), self.d);
+        self.in_use -= 1;
+        self.free.push(buf);
+    }
+
+    /// Return a [`ReduceTree::lease`]d buffer *without* pushing it (the
+    /// producing step failed) — keeps the live/peak buffer accounting
+    /// honest on error paths.
+    pub fn unlease(&mut self, buf: Vec<f32>) {
+        assert_eq!(buf.len(), self.d, "unlease of a foreign buffer");
+        self.recycle(buf);
+    }
+
+    /// Install `weight · grad` at leaf slot `leaf` and eagerly combine
+    /// every ancestor whose subtree just became complete.
+    pub fn push(&mut self, leaf: usize, grad: &[f32], weight: f32) {
+        assert_eq!(grad.len(), self.d, "gradient length mismatch");
+        let mut buf = self.lease();
+        let shards = self.eff_shards();
+        scale_from_sharded(&mut buf, grad, weight, shards);
+        self.install(leaf, buf);
+    }
+
+    /// [`ReduceTree::push`] for a buffer obtained from
+    /// [`ReduceTree::lease`] and already holding the raw gradient:
+    /// scales it in place (no copy) and installs it.
+    pub fn push_owned(&mut self, leaf: usize, mut buf: Vec<f32>, weight: f32) {
+        assert_eq!(buf.len(), self.d, "gradient length mismatch");
+        if weight != 1.0 {
+            let shards = self.eff_shards();
+            scale_sharded(&mut buf, weight, shards);
+        }
+        self.install(leaf, buf);
+    }
+
+    fn install(&mut self, leaf: usize, buf: Vec<f32>) {
+        assert!(leaf < self.k(), "leaf {leaf} out of range");
+        assert!(!self.pushed[leaf], "leaf {leaf} already pushed");
+        self.pushed[leaf] = true;
+        let n = &mut self.levels[0][leaf];
+        n.buf = Some(buf);
+        n.arrived = 1;
+        n.combined = true;
+        // Bubble up: every ancestor's arrival count grows; a full one
+        // combines (its children are complete by induction — the
+        // on-path child was handled earlier in this walk, the sibling
+        // at its own completion).
+        let mut i = leaf;
+        for l in 1..self.levels.len() {
+            i /= 2;
+            self.levels[l][i].arrived += 1;
+            debug_assert!(self.levels[l][i].arrived as usize <= self.span(l, i));
+            if self.levels[l][i].arrived as usize == self.span(l, i)
+                && !self.levels[l][i].combined
+            {
+                self.combine(l, i);
+            }
+        }
+    }
+
+    /// Drop leaf `leaf`'s contribution (spot revocation; no-op when the
+    /// leaf was never pushed).  Under `Retain` this invalidates exactly
+    /// the ancestor path — the surviving sibling partials recombine it
+    /// on the next push or at [`ReduceTree::finalize`].
+    pub fn revoke(&mut self, leaf: usize) {
+        if leaf >= self.k() || !self.pushed[leaf] {
+            return;
+        }
+        assert!(
+            self.policy == RetainPolicy::Retain || self.levels[0][leaf].buf.is_some(),
+            "RetainPolicy::Free cannot revoke an already-combined leaf — \
+             elastic sessions must build the tree with RetainPolicy::Retain"
+        );
+        self.pushed[leaf] = false;
+        let n = &mut self.levels[0][leaf];
+        n.arrived = 0;
+        n.combined = false;
+        let b = n.buf.take();
+        if let Some(b) = b {
+            self.recycle(b);
+        }
+        let mut i = leaf;
+        for l in 1..self.levels.len() {
+            i /= 2;
+            self.levels[l][i].arrived -= 1;
+            if self.levels[l][i].combined {
+                self.levels[l][i].combined = false;
+                let b = self.levels[l][i].buf.take();
+                if let Some(b) = b {
+                    self.recycle(b);
+                }
+            }
+        }
+    }
+
+    /// Combine node `(l, i)` from its (complete) children.
+    fn combine(&mut self, l: usize, i: usize) {
+        let (c0, c1) = (2 * i, 2 * i + 1);
+        let has_r = c1 < self.levels[l - 1].len();
+        debug_assert!(self.levels[l - 1][c0].combined || self.levels[l - 1][c0].arrived == 0);
+        debug_assert!(
+            !has_r || self.levels[l - 1][c1].combined || self.levels[l - 1][c1].arrived == 0
+        );
+        self.levels[l][i].combined = true;
+        let shards = self.eff_shards();
+        match self.policy {
+            RetainPolicy::Free => {
+                // Buffers migrate upward: the left child's becomes the
+                // parent's, the right child's is accumulated in and
+                // recycled.  (At a finalize over absent leaves either
+                // side may be empty.)
+                let lb = self.levels[l - 1][c0].buf.take();
+                let rb = if has_r { self.levels[l - 1][c1].buf.take() } else { None };
+                let merged = match (lb, rb) {
+                    (Some(mut a), Some(b)) => {
+                        accumulate_tiled(&mut a, &b, shards);
+                        self.recycle(b);
+                        Some(a)
+                    }
+                    (Some(a), None) => Some(a),
+                    (None, Some(b)) => Some(b),
+                    (None, None) => None,
+                };
+                self.levels[l][i].buf = merged;
+            }
+            RetainPolicy::Retain => {
+                // Children keep their buffers (future revocations
+                // rebuild from them).  Two present children sum into a
+                // fresh buffer; a single present child makes this a
+                // passthrough node resolved lazily via effective_idx.
+                let li = self.effective_idx(l - 1, c0);
+                let ri = if has_r { self.effective_idx(l - 1, c1) } else { None };
+                if let (Some(a), Some(b)) = (li, ri) {
+                    let mut buf = self.lease();
+                    {
+                        let av = self.levels[a.0][a.1].buf.as_deref().expect("effective");
+                        let bv = self.levels[b.0][b.1].buf.as_deref().expect("effective");
+                        sum_tiled(&mut buf, av, bv, shards);
+                    }
+                    self.levels[l][i].buf = Some(buf);
+                }
+            }
+        }
+    }
+
+    /// Node actually holding `(l, i)`'s content — itself, or (for
+    /// passthrough chains) the single descendant that owns a buffer;
+    /// `None` when the subtree holds no pushed leaf.
+    fn effective_idx(&self, l: usize, i: usize) -> Option<(usize, usize)> {
+        if self.levels[l][i].arrived == 0 {
+            return None;
+        }
+        if self.levels[l][i].buf.is_some() {
+            return Some((l, i));
+        }
+        if l == 0 {
+            return None;
+        }
+        let c0 = self.effective_idx(l - 1, 2 * i);
+        if c0.is_some() {
+            return c0;
+        }
+        if 2 * i + 1 < self.levels[l - 1].len() {
+            return self.effective_idx(l - 1, 2 * i + 1);
+        }
+        None
+    }
+
+    /// Combine whatever the eager cascade could not (absent leaves,
+    /// revocation-invalidated paths) and return the root aggregate.
+    /// With every leaf pushed this is O(1) — the cascade already
+    /// finished at the last arrival.  Finalize is terminal for the
+    /// round: call [`ReduceTree::reset`] before pushing again.
+    pub fn finalize(&mut self) -> &[f32] {
+        assert!(
+            self.pushed.iter().any(|&p| p),
+            "finalize of an empty reduction tree"
+        );
+        // Fast path: a combined root means the eager cascade already
+        // finished (combines only fire over consistent children, and a
+        // revocation un-combines the whole ancestor path up to the
+        // root), so there is nothing left to sweep.
+        let top = self.levels.len() - 1;
+        if self.levels[top][0].combined {
+            return self.root();
+        }
+        for l in 1..self.levels.len() {
+            for i in 0..self.levels[l].len() {
+                if !self.levels[l][i].combined {
+                    self.combine(l, i);
+                }
+            }
+        }
+        self.root()
+    }
+
+    /// The finalized root aggregate (call [`ReduceTree::finalize`] first).
+    pub fn root(&self) -> &[f32] {
+        let top = self.levels.len() - 1;
+        let (l, i) = self
+            .effective_idx(top, 0)
+            .expect("root of a finalized non-empty tree");
+        self.levels[l][i].buf.as_deref().expect("effective root buffer")
+    }
+
+    /// Clear for the next round; all buffers return to the freelist, so
+    /// steady-state rounds allocate nothing.
+    pub fn reset(&mut self) {
+        for l in 0..self.levels.len() {
+            for i in 0..self.levels[l].len() {
+                self.levels[l][i].arrived = 0;
+                self.levels[l][i].combined = false;
+                if let Some(b) = self.levels[l][i].buf.take() {
+                    debug_assert_eq!(b.len(), self.d);
+                    self.in_use -= 1;
+                    self.free.push(b);
+                }
+            }
+        }
+        for p in &mut self.pushed {
+            *p = false;
+        }
+    }
+}
+
+/// Flat-equivalent entry point: aggregate λ-weighted gradients through
+/// a [`RetainPolicy::Free`] reduction tree into `out`.  Numerically
+/// within 1e-6 of [`crate::ps::aggregate_into`] (property-tested); the
+/// tree's pairwise order is the one that is arrival-order invariant.
+pub fn aggregate_tree_into(out: &mut [f32], grads: &[&[f32]], lambdas: &[f64], shards: usize) {
+    validate_agg(out, grads, lambdas);
+    let mut tree = ReduceTree::new(grads.len(), out.len(), RetainPolicy::Free, shards);
+    for (i, (g, &l)) in grads.iter().zip(lambdas).enumerate() {
+        tree.push(i, g, l as f32);
+    }
+    out.copy_from_slice(tree.finalize());
+}
+
+// ------------------------------------------------------------ kernels
+//
+// All three are cache-blocked over COMBINE_TILE elements (child tiles +
+// destination tile stay L2-resident) and pool-sharded when the caller
+// requests shards > 1 — same dispatch discipline as the fused
+// optimizer kernels.
+
+/// out[j] += src[j]
+fn accumulate_tiled(out: &mut [f32], src: &[f32], shards: usize) {
+    debug_assert_eq!(out.len(), src.len());
+    if shards <= 1 {
+        return accumulate_chunk(out, src, 0);
+    }
+    pool::global().run_sharded(out, shards, |_, start, chunk| {
+        accumulate_chunk(chunk, src, start);
+    });
+}
+
+fn accumulate_chunk(out: &mut [f32], src: &[f32], base: usize) {
+    let mut start = 0;
+    while start < out.len() {
+        let len = COMBINE_TILE.min(out.len() - start);
+        let s = &src[base + start..base + start + len];
+        for (o, &x) in out[start..start + len].iter_mut().zip(s) {
+            *o += x;
+        }
+        start += len;
+    }
+}
+
+/// out[j] = a[j] + b[j] (both children accumulated per tile)
+fn sum_tiled(out: &mut [f32], a: &[f32], b: &[f32], shards: usize) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    if shards <= 1 {
+        return sum_chunk(out, a, b, 0);
+    }
+    pool::global().run_sharded(out, shards, |_, start, chunk| {
+        sum_chunk(chunk, a, b, start);
+    });
+}
+
+fn sum_chunk(out: &mut [f32], a: &[f32], b: &[f32], base: usize) {
+    let mut start = 0;
+    while start < out.len() {
+        let len = COMBINE_TILE.min(out.len() - start);
+        let at = &a[base + start..base + start + len];
+        let bt = &b[base + start..base + start + len];
+        for ((o, &x), &y) in out[start..start + len].iter_mut().zip(at).zip(bt) {
+            *o = x + y;
+        }
+        start += len;
+    }
+}
+
+/// out[j] = w · src[j] (a 2-stream copy — sharded but not tiled; there
+/// is no reuse for blocking to exploit)
+fn scale_from_sharded(out: &mut [f32], src: &[f32], w: f32, shards: usize) {
+    debug_assert_eq!(out.len(), src.len());
+    if shards <= 1 {
+        for (o, &x) in out.iter_mut().zip(src) {
+            *o = w * x;
+        }
+        return;
+    }
+    pool::global().run_sharded(out, shards, |_, start, chunk| {
+        for (o, &x) in chunk.iter_mut().zip(&src[start..start + chunk.len()]) {
+            *o = w * x;
+        }
+    });
+}
+
+/// buf[j] *= w
+fn scale_sharded(buf: &mut [f32], w: f32, shards: usize) {
+    if shards <= 1 {
+        for x in buf.iter_mut() {
+            *x *= w;
+        }
+        return;
+    }
+    pool::global().run_sharded(buf, shards, |_, _, chunk| {
+        for x in chunk.iter_mut() {
+            *x *= w;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::{aggregate_into, lambdas_from_batches};
+    use crate::util::rng::Rng;
+
+    fn problem(k: usize, d: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let grads: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec_f32(d)).collect();
+        let batches: Vec<f64> = (0..k).map(|_| rng.range_f64(1.0, 256.0)).collect();
+        (grads, lambdas_from_batches(&batches))
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn tree_matches_flat_across_shapes() {
+        // Odd / non-power-of-two shapes included (passthrough chains).
+        for &k in &[1usize, 2, 3, 5, 7, 8, 13, 64] {
+            let (grads, lambdas) = problem(k, 3001, k as u64);
+            let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            let mut flat = vec![0.0f32; 3001];
+            aggregate_into(&mut flat, &refs, &lambdas);
+            let mut tree = vec![0.0f32; 3001];
+            aggregate_tree_into(&mut tree, &refs, &lambdas, 1);
+            assert_close(&flat, &tree, 1e-6);
+        }
+    }
+
+    #[test]
+    fn sharded_combines_are_bit_identical_to_single_threaded() {
+        // Shard boundaries cut only between disjoint elementwise ranges,
+        // so the pool-dispatched combines must match exactly.
+        let d = 3 * COMBINE_TILE + 137;
+        let (grads, lambdas) = problem(6, d, 9);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mut st = vec![0.0f32; d];
+        aggregate_tree_into(&mut st, &refs, &lambdas, 1);
+        for shards in [2usize, 3, 8] {
+            let mut mt = vec![0.0f32; d];
+            aggregate_tree_into(&mut mt, &refs, &lambdas, shards);
+            assert!(
+                st.iter().zip(&mt).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "sharded combine diverged at shards={shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn arrival_order_is_bitwise_invariant() {
+        for policy in [RetainPolicy::Free, RetainPolicy::Retain] {
+            let (grads, lambdas) = problem(11, 500, 3);
+            let run = |order: &[usize]| -> Vec<u32> {
+                let mut t = ReduceTree::new(11, 500, policy, 1);
+                for &i in order {
+                    t.push(i, &grads[i], lambdas[i] as f32);
+                }
+                t.finalize().iter().map(|x| x.to_bits()).collect()
+            };
+            let asc: Vec<usize> = (0..11).collect();
+            let desc: Vec<usize> = (0..11).rev().collect();
+            let shuffled = vec![4usize, 9, 0, 7, 2, 10, 5, 1, 8, 3, 6];
+            let base = run(&asc);
+            assert_eq!(base, run(&desc), "{policy:?}");
+            assert_eq!(base, run(&shuffled), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn free_peak_buffers_bounded_by_depth_plus_one() {
+        // The RetainPolicy::Free memory guarantee: with leaves arriving
+        // in ascending rank order (the real backend's wave order) the
+        // live-buffer high-water mark is ⌈log₂k⌉ + 1.
+        for k in 1usize..=64 {
+            let mut t = ReduceTree::new(k, 64, RetainPolicy::Free, 1);
+            let g = vec![1.0f32; 64];
+            for round in 0..2 {
+                for i in 0..k {
+                    t.push(i, &g, 0.5);
+                }
+                let root0 = t.finalize()[0];
+                assert!((root0 - 0.5 * k as f32).abs() < 1e-3);
+                assert!(
+                    t.peak_buffers() <= t.depth() + 1,
+                    "k={k} round={round}: peak {} > ⌈log₂k⌉+1 = {}",
+                    t.peak_buffers(),
+                    t.depth() + 1
+                );
+                t.reset();
+                assert_eq!(t.live_buffers(), 0, "k={k}: buffers leaked past reset");
+            }
+            assert_eq!(
+                t.peak_live_bytes(),
+                t.peak_buffers() * 64 * 4,
+                "byte accounting"
+            );
+        }
+    }
+
+    #[test]
+    fn retain_revoke_rebuilds_to_match_fresh_tree_bitwise() {
+        let k = 13;
+        let (grads, lambdas) = problem(k, 700, 17);
+        for victim in [0usize, 5, 12] {
+            let mut t = ReduceTree::new(k, 700, RetainPolicy::Retain, 1);
+            for i in 0..k {
+                t.push(i, &grads[i], lambdas[i] as f32);
+            }
+            t.revoke(victim);
+            let rebuilt: Vec<u32> = t.finalize().iter().map(|x| x.to_bits()).collect();
+            let mut fresh = ReduceTree::new(k, 700, RetainPolicy::Retain, 1);
+            for i in 0..k {
+                if i != victim {
+                    fresh.push(i, &grads[i], lambdas[i] as f32);
+                }
+            }
+            let want: Vec<u32> = fresh.finalize().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(rebuilt, want, "victim {victim}");
+        }
+    }
+
+    #[test]
+    fn revoke_then_repush_rejoins_the_round() {
+        let k = 6;
+        let (grads, lambdas) = problem(k, 300, 23);
+        let mut t = ReduceTree::new(k, 300, RetainPolicy::Retain, 1);
+        for i in 0..k {
+            t.push(i, &grads[i], lambdas[i] as f32);
+        }
+        t.revoke(2);
+        assert!(!t.is_pushed(2));
+        t.push(2, &grads[2], lambdas[2] as f32);
+        let got: Vec<u32> = t.finalize().iter().map(|x| x.to_bits()).collect();
+        let mut fresh = ReduceTree::new(k, 300, RetainPolicy::Retain, 1);
+        for i in 0..k {
+            fresh.push(i, &grads[i], lambdas[i] as f32);
+        }
+        let want: Vec<u32> = fresh.finalize().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn revoke_of_unpushed_leaf_is_noop() {
+        let mut t = ReduceTree::new(4, 10, RetainPolicy::Retain, 1);
+        t.revoke(3); // nothing pushed yet
+        t.push(0, &[1.0; 10], 1.0);
+        t.revoke(2);
+        assert_eq!(t.pushed_count(), 1);
+        assert_eq!(t.finalize()[0], 1.0);
+    }
+
+    #[test]
+    fn partial_round_finalizes_over_present_leaves_only() {
+        // Absent ranks (never-arriving members) resolve as empty
+        // passthroughs — the root covers exactly the pushed set.
+        let (grads, lambdas) = problem(8, 200, 31);
+        let refs: Vec<&[f32]> = [1usize, 4, 6]
+            .iter()
+            .map(|&i| grads[i].as_slice())
+            .collect();
+        let lam: Vec<f64> = vec![lambdas[1], lambdas[4], lambdas[6]];
+        let mut t = ReduceTree::new(8, 200, RetainPolicy::Free, 1);
+        for (j, &i) in [1usize, 4, 6].iter().enumerate() {
+            t.push(i, refs[j], lam[j] as f32);
+        }
+        let root = t.finalize().to_vec();
+        // Oracle: same three gradients through a compact 3-leaf tree.
+        let mut want = vec![0.0f32; 200];
+        aggregate_tree_into(&mut want, &refs, &lam, 1);
+        // Shapes differ (slots 1/4/6 of 8 vs 0/1/2 of 3), so compare to
+        // the flat oracle at 1e-6 rather than bitwise.
+        assert_close(&root, &want, 1e-6);
+    }
+
+    #[test]
+    fn push_owned_skips_the_copy_and_matches_push() {
+        let (grads, lambdas) = problem(3, 400, 41);
+        let mut a = ReduceTree::new(3, 400, RetainPolicy::Free, 1);
+        let mut b = ReduceTree::new(3, 400, RetainPolicy::Free, 1);
+        for i in 0..3 {
+            a.push(i, &grads[i], lambdas[i] as f32);
+            let mut buf = b.lease();
+            buf.copy_from_slice(&grads[i]);
+            b.push_owned(i, buf, lambdas[i] as f32);
+        }
+        let av: Vec<u32> = a.finalize().iter().map(|x| x.to_bits()).collect();
+        let bv: Vec<u32> = b.finalize().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(av, bv);
+    }
+
+    #[test]
+    fn unlease_keeps_buffer_accounting_honest() {
+        // A leased buffer whose producing step fails goes back via
+        // unlease — live count returns to zero and the buffer is reused
+        // by the next lease instead of counting against the peak.
+        let mut t = ReduceTree::new(4, 16, RetainPolicy::Free, 1);
+        let buf = t.lease();
+        assert_eq!(t.live_buffers(), 1);
+        t.unlease(buf);
+        assert_eq!(t.live_buffers(), 0);
+        for i in 0..4 {
+            t.push(i, &[1.0; 16], 0.25);
+        }
+        assert_eq!(t.finalize()[0], 1.0);
+        assert!(t.peak_buffers() <= t.depth() + 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_finalize_panics() {
+        let mut t = ReduceTree::new(4, 8, RetainPolicy::Free, 1);
+        t.finalize();
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_push_panics() {
+        let mut t = ReduceTree::new(2, 8, RetainPolicy::Free, 1);
+        t.push(0, &[1.0; 8], 1.0);
+        t.push(0, &[1.0; 8], 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn free_cannot_revoke_absorbed_leaf() {
+        let mut t = ReduceTree::new(2, 8, RetainPolicy::Free, 1);
+        t.push(0, &[1.0; 8], 1.0);
+        t.push(1, &[1.0; 8], 1.0); // leaf 0's buffer migrated to the root
+        t.revoke(0);
+    }
+}

@@ -28,7 +28,11 @@
 //! earliest completion, and the completed update is pushed through
 //! [`SyncState`].  BSP falls out as the lockstep special case (waves of
 //! K, one λ-weighted aggregate update per barrier); ASP/SSP apply each
-//! worker's update individually with genuine staleness.
+//! worker's update individually with genuine staleness.  Each BSP
+//! member's contribution is handed to the backend at its *completion
+//! event* ([`Backend::stage_update`]) — the real backend combines it
+//! into an eager reduction tree inside the straggler window (DESIGN.md
+//! §11), so the barrier itself no longer pays a flat O(k·d) pass.
 //!
 //! Event selection is O(log k) per event ([`Scheduler::Heap`], the
 //! default): a min-heap of completion times with lazy deletion plus a
@@ -58,7 +62,7 @@ use crate::trace::{
 };
 use crate::util::json::Json;
 
-pub use real::RealBackend;
+pub use real::{BspAgg, RealBackend};
 pub use sim::SimBackend;
 
 /// Result of one executed worker iteration, as the backend sees it.
@@ -123,6 +127,19 @@ pub trait Backend {
     /// buffer without per-round copies).  Returns the resulting global
     /// loss when the backend trains for real.
     fn apply_update(&mut self, workers: &[usize], batches: &[f64]) -> Result<Option<f64>>;
+
+    /// BSP eager-aggregation hook: the session hands worker `w`'s round
+    /// contribution over at its *completion event*, instead of
+    /// collecting everything for one barrier pass.  Backends that
+    /// aggregate incrementally (the real backend's reduction tree,
+    /// DESIGN.md §11) finalize the contribution here; a revocation
+    /// between execution and the barrier arrives via
+    /// [`Backend::retire_worker`] and must drop it again.  As with
+    /// `apply_update`, only `batches[w]` is meaningful.  Default: no-op
+    /// (the simulator models updates, it does not hold gradients).
+    fn stage_update(&mut self, _w: usize, _batches: &[f64]) -> Result<()> {
+        Ok(())
+    }
 
     /// Fresh-equivalent progress retained by an update of the given
     /// staleness (simulation convergence model; real backends return 1.0
@@ -254,6 +271,7 @@ pub struct SessionBuilder {
     loss_target: f64,
     scheduler: Scheduler,
     report_sample: u64,
+    eager_agg: bool,
 }
 
 impl Default for SessionBuilder {
@@ -280,6 +298,7 @@ impl Default for SessionBuilder {
             loss_target: 0.0,
             scheduler: Scheduler::Heap,
             report_sample: 1,
+            eager_agg: true,
         }
     }
 }
@@ -443,6 +462,20 @@ impl SessionBuilder {
         self
     }
 
+    /// BSP gradient aggregation on the real backend (default true):
+    /// eager reduction tree — each completed gradient combines into a
+    /// fixed rank-indexed binary tree inside the straggler window, and
+    /// live gradient memory is ⌈log₂k⌉+1 buffers instead of k
+    /// (DESIGN.md §11).  `false` selects the collect-then-aggregate
+    /// baseline (per-worker arena, same tree built at the barrier) —
+    /// reports are bit-identical either way (the tree shape, not the
+    /// schedule, fixes the summation order); the knob exists for the
+    /// parity lock and as a debugging fallback (CLI `--collect-agg`).
+    pub fn eager_agg(mut self, on: bool) -> Self {
+        self.eager_agg = on;
+        self
+    }
+
     /// Keep every n-th BSP round (all of its member records) / every
     /// n-th async update and loss sample in the [`RunReport`] (default
     /// 1 = keep everything).  At fleet scale a full-fidelity report is
@@ -527,6 +560,9 @@ impl SessionBuilder {
         }
         if let Some(n) = j.get("report_sample").as_usize() {
             b.report_sample = n as u64;
+        }
+        if let Some(v) = j.get("eager_agg").as_bool() {
+            b.eager_agg = v;
         }
         let c = j.get("controller");
         if !c.is_null() {
@@ -666,6 +702,29 @@ impl SessionBuilder {
             .iter()
             .map(|w| w.device.flops_estimate())
             .collect();
+        // BSP barrier aggregation scheme (DESIGN.md §11): the eager
+        // reduction tree by default, with buffers recycled (`Free`)
+        // unless the session is elastic — a membership plan (explicit
+        // or spot-derived) means mid-round revocations, which need the
+        // retained sibling partials to rebuild from.
+        let bsp_agg = if matches!(self.sync, SyncMode::Bsp) {
+            if self.eager_agg {
+                let elastic = self.spot.is_some()
+                    || self
+                        .membership
+                        .as_ref()
+                        .map_or(false, |p| !p.events().is_empty());
+                Some(real::BspAgg::Eager(if elastic {
+                    crate::ps::RetainPolicy::Retain
+                } else {
+                    crate::ps::RetainPolicy::Free
+                }))
+            } else {
+                Some(real::BspAgg::Collect)
+            }
+        } else {
+            None
+        };
         let backend = RealBackend::new(
             runtime,
             &self.model,
@@ -677,6 +736,7 @@ impl SessionBuilder {
             self.b0,
             self.pool_threads,
             self.prefetch,
+            bsp_agg,
         )?;
         let mut session = self.assemble(backend, 0.0)?;
         if self.slowdowns.is_none() {
@@ -936,6 +996,7 @@ impl<B: Backend> Session<B> {
             gen: vec![0; k],
             wave_buf: Vec::with_capacity(k),
             members_buf: Vec::with_capacity(k),
+            alloc_buf: Vec::with_capacity(k),
             report_sample: self.report_sample.max(1),
             iter_seen: 0,
             loss_seen: 0,
@@ -1063,6 +1124,11 @@ impl<B: Backend> Session<B> {
 
             if st.is_bsp {
                 st.round.push((w, st.started_at[w], dur));
+                // Hand the member's contribution to the backend now —
+                // eager backends combine it into the round's reduction
+                // tree inside the straggler window; the barrier below
+                // only closes the round.
+                self.backend.stage_update(w, &st.exec_batch)?;
                 if st.sync.at_barrier() {
                     self.close_bsp_round(&mut st, &mut report, false)?;
                     if st.stopped_early {
@@ -1152,7 +1218,10 @@ impl<B: Backend> Session<B> {
     }
 
     /// Close the open BSP round: barrier accounting, one λ-weighted
-    /// aggregate update over the round's members, controller
+    /// aggregate update over the round's members (the contributions
+    /// themselves were staged at each completion event — eager backends
+    /// have already combined them, so the barrier applies the reduction
+    /// root rather than sweeping k gradients), controller
     /// observe/adjust.  Called on a normal barrier and — with
     /// `membership_forced` — when a mid-round revocation leaves every
     /// survivor already at the barrier.
@@ -1328,27 +1397,38 @@ impl<B: Backend> Session<B> {
     /// warm-starts (join); open-loop policies recompute their allocation
     /// over the live cohort.  Bucketed backends snap the result.
     fn rebalance_membership(&mut self, st: &mut LoopState, kind: MembershipKind, worker: usize) {
-        let proposal: Vec<f64> = match st.controller.as_mut() {
+        // The proposal lands in a reusable scratch buffer
+        // (`DynamicBatcher::batches_into`) rather than a fresh Vec per
+        // transition.
+        match st.controller.as_mut() {
             Some(ctl) => {
                 match kind {
                     MembershipKind::Revoke => ctl.retire(worker),
                     MembershipKind::Join => ctl.admit(worker),
                 }
-                ctl.batches()
+                ctl.batches_into(&mut st.alloc_buf);
             }
-            None => self.policy_alloc(&st.live, st.global_batch),
-        };
+            None => {
+                let p = self.policy_alloc(&st.live, st.global_batch);
+                st.alloc_buf.clear();
+                st.alloc_buf.extend_from_slice(&p);
+            }
+        }
         match &st.buckets {
             Some(grid) => {
                 let cur = st.cur_buckets.as_mut().expect("bucketed session state");
-                let (snapped, _) = quantize_alloc_live(&proposal, grid, cur, &st.live);
-                st.batches = snapped.iter().map(|&b| b as f64).collect();
+                let (snapped, _) = quantize_alloc_live(&st.alloc_buf, grid, cur, &st.live);
+                st.batches.clear();
+                st.batches.extend(snapped.iter().map(|&b| b as f64));
                 *cur = snapped;
                 if let Some(ctl) = st.controller.as_mut() {
                     ctl.set_batches(&st.batches);
                 }
             }
-            None => st.batches = proposal,
+            None => {
+                st.batches.clear();
+                st.batches.extend_from_slice(&st.alloc_buf);
+            }
         }
     }
 }
@@ -1438,6 +1518,8 @@ struct LoopState {
     // ----- reusable hot-loop buffers (no per-event allocations)
     wave_buf: Vec<usize>,
     members_buf: Vec<usize>,
+    /// Membership-rebalance proposal scratch (`DynamicBatcher::batches_into`).
+    alloc_buf: Vec<f64>,
 
     // ----- report sampling (`SessionBuilder::report_sample`)
     report_sample: u64,
@@ -1841,6 +1923,15 @@ mod tests {
         assert!(SessionBuilder::from_json_str(r#"{"scheduler": "x"}"#).is_err());
         // Default is the heap.
         assert_eq!(SessionBuilder::default().scheduler, Scheduler::Heap);
+    }
+
+    #[test]
+    fn eager_agg_defaults_on_and_parses_from_json() {
+        assert!(SessionBuilder::default().eager_agg);
+        let b = SessionBuilder::from_json_str(r#"{"eager_agg": false}"#).unwrap();
+        assert!(!b.eager_agg);
+        let b = SessionBuilder::from_json_str(r#"{"eager_agg": true}"#).unwrap();
+        assert!(b.eager_agg);
     }
 
     #[test]

@@ -20,6 +20,20 @@
 //! computed against the parameters it pulled when its iteration started,
 //! and other workers' updates land (bumping the parameter version)
 //! before its own update is applied.
+//!
+//! BSP aggregation (§Perf iteration 6, DESIGN.md §11) runs through the
+//! eager reduction tree ([`crate::ps::ReduceTree`]): each train step
+//! writes its gradients straight into a tree-leased buffer and the
+//! gradient combines into the round's fixed rank-indexed tree the
+//! moment the step completes — the former k-buffer `grads` arena is
+//! gone for BSP runs, replaced by a [`RetainPolicy`] (`Free`:
+//! ⌈log₂k⌉+1 live buffers; `Retain` for elastic sessions, where a
+//! revocation rebuilds only the revoked leaf's ancestor path).  At the
+//! barrier the tree root feeds [`FusedOptimizer::step_mt`] directly,
+//! carrying the 1/Σb normalization as its λ weight.  The
+//! collect-then-aggregate baseline ([`BspAgg::Collect`]) keeps the
+//! arena and builds the *same* tree at the barrier — bit-identical
+//! reports, property- and integration-tested.
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -28,10 +42,58 @@ use anyhow::{bail, Result};
 
 use crate::controller::bucket::quantize;
 use crate::data::{self, Batch, Dataset, ShardRouter};
-use crate::ps::{lambdas_into, FusedOptimizer};
+use crate::ps::{lambdas_into, FusedOptimizer, ReduceTree, RetainPolicy};
 use crate::runtime::{ModelManifest, Runtime, StepKind};
 use crate::session::{Backend, WorkerOutcome};
 use crate::util::pool;
+
+/// How a BSP session computes the barrier aggregate (async sessions
+/// always use the per-worker arena — their updates are single-gradient).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BspAgg {
+    /// Eager reduction tree (the default): gradients combine at
+    /// completion, no per-worker arena.  The policy picks the buffer
+    /// lifetime — `Free` for static membership, `Retain` under churn.
+    Eager(RetainPolicy),
+    /// Collect-then-aggregate baseline: the k-buffer arena survives and
+    /// the same rank-indexed tree is built at the barrier.  Exists for
+    /// the eager-vs-collect bit-identity lock
+    /// (`tests/engine_integration.rs`) and as a debugging fallback
+    /// (CLI `--collect-agg`).
+    Collect,
+}
+
+/// Where gradients live between the train step and the optimizer.
+enum GradStore {
+    /// Per-worker buffers (async sync, and the `Collect` baseline —
+    /// which additionally carries the barrier-time tree).
+    Arena {
+        bufs: Vec<Vec<f32>>,
+        barrier_tree: Option<ReduceTree>,
+    },
+    /// Eager BSP reduction tree: train steps write into leased buffers
+    /// that the tree absorbs at completion.
+    Tree(ReduceTree),
+}
+
+/// One barrier application of a reduction tree: finalize, feed the root
+/// to the fused optimizer — with the deferred 1/Σb normalization riding
+/// its λ slot (leaves carry the raw batch b_w) — and reset for the next
+/// round.  Shared by the eager and collect arms of `apply_update`: the
+/// eager-vs-collect bit-identity contract lives in this one place.
+fn apply_tree_barrier(
+    tree: &mut ReduceTree,
+    optimizer: &mut FusedOptimizer,
+    params: &mut [f32],
+    lam_batches: &[f64],
+    pool_threads: usize,
+) {
+    let total: f64 = lam_batches.iter().sum();
+    tree.finalize();
+    let root = tree.root();
+    optimizer.step_mt(params, &[root], &[1.0 / total], pool_threads);
+    tree.reset();
+}
 
 /// PJRT-backed execution substrate over an opened [`Runtime`].
 pub struct RealBackend<'rt> {
@@ -45,8 +107,13 @@ pub struct RealBackend<'rt> {
     router: ShardRouter,
     params: Vec<f32>,
     optimizer: FusedOptimizer,
-    /// Per-worker gradient buffers, reused across waves (§Perf it. 2).
-    grads: Vec<Vec<f32>>,
+    /// Gradient storage (§Perf it. 2 buffer reuse; §Perf it. 6 eager
+    /// reduction tree for BSP).
+    grads: GradStore,
+    /// Per-worker completion bookkeeping: the session's BSP flow marks a
+    /// member staged at its completion event; the barrier asserts every
+    /// member it applies was staged.
+    staged: Vec<bool>,
     /// Last observed per-worker loss (consumed by `apply_update`).
     losses: Vec<f64>,
     /// Reusable per-update scratch: member batch sizes and their λ
@@ -82,6 +149,7 @@ impl<'rt> RealBackend<'rt> {
         b0_hint: usize,
         pool_threads: usize,
         prefetch: bool,
+        bsp_agg: Option<BspAgg>,
     ) -> Result<Self> {
         if k == 0 {
             bail!("no workers");
@@ -112,7 +180,24 @@ impl<'rt> RealBackend<'rt> {
         // curves.
         let shards = k + usize::from(eval_every > 0);
         let dataset = data::for_model(model_name, shards, seed);
-        let grads = (0..k).map(|_| vec![0.0f32; model.param_total]).collect();
+        let grads = match bsp_agg {
+            Some(BspAgg::Eager(policy)) => {
+                GradStore::Tree(ReduceTree::new(k, model.param_total, policy, pool_threads))
+            }
+            Some(BspAgg::Collect) => GradStore::Arena {
+                bufs: (0..k).map(|_| vec![0.0f32; model.param_total]).collect(),
+                barrier_tree: Some(ReduceTree::new(
+                    k,
+                    model.param_total,
+                    RetainPolicy::Free,
+                    pool_threads,
+                )),
+            },
+            None => GradStore::Arena {
+                bufs: (0..k).map(|_| vec![0.0f32; model.param_total]).collect(),
+                barrier_tree: None,
+            },
+        };
         Ok(RealBackend {
             runtime,
             model_name: model_name.to_string(),
@@ -122,6 +207,7 @@ impl<'rt> RealBackend<'rt> {
             params,
             optimizer,
             grads,
+            staged: vec![false; k],
             losses: vec![0.0; k],
             lam_batches: Vec::with_capacity(k),
             lambdas: Vec::with_capacity(k),
@@ -222,15 +308,54 @@ impl Backend for RealBackend<'_> {
             } else {
                 None
             };
+            // Eager BSP mode writes the step's gradients into a
+            // tree-leased buffer; the arena modes into the worker's own.
+            let mut leased: Option<Vec<f32>> = match &mut self.grads {
+                GradStore::Tree(t) => Some(t.lease()),
+                GradStore::Arena { .. } => None,
+            };
             let t0 = Instant::now();
-            let loss = self.runtime.train_step_prepared(
-                &self.model_name,
-                b,
-                &self.prepared.as_ref().expect("prepared params").1,
-                &batch,
-                &mut self.grads[w],
-            )?;
+            let step = {
+                let gout: &mut [f32] = match (&mut leased, &mut self.grads) {
+                    (Some(buf), _) => buf,
+                    (None, GradStore::Arena { bufs, .. }) => &mut bufs[w],
+                    _ => unreachable!("leased buffer without a tree store"),
+                };
+                self.runtime.train_step_prepared(
+                    &self.model_name,
+                    b,
+                    &self.prepared.as_ref().expect("prepared params").1,
+                    &batch,
+                    gout,
+                )
+            };
+            let loss = match step {
+                Ok(l) => l,
+                Err(e) => {
+                    // Hand the leased buffer back unused so the tree's
+                    // live/peak accounting stays honest; the prefetch
+                    // handle (if any) joins via Drop on this return.
+                    if let (Some(buf), GradStore::Tree(t)) =
+                        (leased.take(), &mut self.grads)
+                    {
+                        t.unlease(buf);
+                    }
+                    return Err(e);
+                }
+            };
             let compute = t0.elapsed().as_secs_f64();
+            if let Some(buf) = leased.take() {
+                // Combine at completion: the gradient enters the round's
+                // reduction tree — pre-weighted by its λ numerator b_w —
+                // the moment its step finishes, so the combine work
+                // lands inside the wave instead of at the barrier, and
+                // the buffer count stays at ⌈log₂k⌉+1 (ascending rank
+                // order is the streaming order of the Free bound).
+                match &mut self.grads {
+                    GradStore::Tree(t) => t.push_owned(w, buf, batches[w] as f32),
+                    _ => unreachable!("leased buffer without a tree store"),
+                }
+            }
             if let Some(h) = handle {
                 h.wait(); // batch generation ran under the PJRT step
             }
@@ -248,16 +373,60 @@ impl Backend for RealBackend<'_> {
         if workers.is_empty() {
             bail!("apply_update needs at least one worker");
         }
-        // λ-weighted fused aggregation + optimizer (Eq. 2–3), sharded
-        // across the persistent pool (§Perf iteration 4).  λ scratch
-        // buffers are reused across updates (§Perf iteration 5).
+        // λ scratch buffers are reused across updates (§Perf it. 5);
+        // the λ vector weights the global loss below, and the gradients
+        // on the async arena path.
         self.lam_batches.clear();
         self.lam_batches.extend(workers.iter().map(|&w| batches[w]));
         lambdas_into(&mut self.lambdas, &self.lam_batches);
-        let grad_refs: Vec<&[f32]> =
-            workers.iter().map(|&w| self.grads[w].as_slice()).collect();
-        self.optimizer
-            .step_mt(&mut self.params, &grad_refs, &self.lambdas, self.pool_threads);
+        match &mut self.grads {
+            GradStore::Tree(tree) => {
+                // Eager BSP (§Perf it. 6): the members' gradients are
+                // already combined; the barrier pays only the residual
+                // cascade — O(d·log k) worst case, O(d) typical — and
+                // one fused optimizer pass over the root, whose λ slot
+                // carries the deferred 1/Σb normalization (leaves were
+                // weighted by the raw batch b_w).
+                debug_assert_eq!(tree.pushed_count(), workers.len());
+                debug_assert!(workers.iter().all(|&w| tree.is_pushed(w)));
+                debug_assert!(workers.iter().all(|&w| self.staged[w]));
+                apply_tree_barrier(
+                    tree,
+                    &mut self.optimizer,
+                    &mut self.params,
+                    &self.lam_batches,
+                    self.pool_threads,
+                );
+            }
+            GradStore::Arena { bufs, barrier_tree: Some(tree) } => {
+                // Collect-then-aggregate baseline: the same rank-indexed
+                // tree, built at the barrier in ascending member order —
+                // bit-identical to the eager path by the tree's
+                // arrival-order invariance.
+                for &w in workers {
+                    tree.push(w, &bufs[w], batches[w] as f32);
+                }
+                apply_tree_barrier(
+                    tree,
+                    &mut self.optimizer,
+                    &mut self.params,
+                    &self.lam_batches,
+                    self.pool_threads,
+                );
+            }
+            GradStore::Arena { bufs, barrier_tree: None } => {
+                // Async single-gradient update: λ-weighted fused
+                // aggregation + optimizer (Eq. 2–3), sharded across the
+                // persistent pool (§Perf iteration 4).
+                let grad_refs: Vec<&[f32]> =
+                    workers.iter().map(|&w| bufs[w].as_slice()).collect();
+                self.optimizer
+                    .step_mt(&mut self.params, &grad_refs, &self.lambdas, self.pool_threads);
+            }
+        }
+        for &w in workers {
+            self.staged[w] = false;
+        }
         self.version += 1;
         // Global loss = λ-weighted worker losses.
         let loss: f64 = workers
@@ -268,12 +437,38 @@ impl Backend for RealBackend<'_> {
         Ok(Some(loss))
     }
 
+    fn stage_update(&mut self, w: usize, _batches: &[f64]) -> Result<()> {
+        // The session's BSP round flow hands each member over at its
+        // completion event.  The gradient itself entered the tree when
+        // its train step finished (execute_wave); this marks the
+        // contribution *final* for round accounting — the barrier
+        // asserts every member it applies was staged, and a revocation
+        // between execution and completion instead routes through
+        // retire_worker → ReduceTree::revoke.
+        if let GradStore::Tree(tree) = &self.grads {
+            debug_assert!(
+                tree.is_pushed(w),
+                "completion event for worker {w} before its gradient was staged"
+            );
+        }
+        self.staged[w] = true;
+        Ok(())
+    }
+
     fn staleness_discount(&self, _staleness: u64) -> f64 {
         1.0 // convergence is real here, not modeled
     }
 
     fn retire_worker(&mut self, w: usize) -> Result<()> {
         self.router.revoke(w);
+        self.staged[w] = false;
+        if let GradStore::Tree(tree) = &mut self.grads {
+            // Drop the rank's round contribution (in-flight or staged):
+            // under RetainPolicy::Retain only its ancestor path is
+            // invalidated and the sibling partials rebuild it.  A rank
+            // that never pushed (absent from the start) is a no-op.
+            tree.revoke(w);
+        }
         Ok(())
     }
 

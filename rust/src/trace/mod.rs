@@ -40,9 +40,13 @@ impl AvailTrace {
 
     /// Capacity multiplier at time `t`.
     pub fn at(&self, t: f64) -> f64 {
+        // total_cmp: segment starts are finite by construction, but `t`
+        // arrives from virtual-time arithmetic — a NaN must land on the
+        // deterministic total order (clamping to an end), not panic the
+        // session mid-run (finishes PR 4's comparator sweep).
         match self
             .segments
-            .binary_search_by(|&(s, _)| s.partial_cmp(&t).unwrap())
+            .binary_search_by(|&(s, _)| s.total_cmp(&t))
         {
             Ok(i) => self.segments[i].1,
             Err(0) => self.segments[0].1, // t before 0: clamp
@@ -123,10 +127,11 @@ impl AvailTrace {
         assert!(work >= 0.0 && t0 >= 0.0);
         let mut remaining = work;
         let mut t = t0;
-        // Find the segment containing t0.
+        // Find the segment containing t0 (total_cmp, as in `at`: a NaN
+        // query must not panic the comparator).
         let mut idx = match self
             .segments
-            .binary_search_by(|&(s, _)| s.partial_cmp(&t0).unwrap())
+            .binary_search_by(|&(s, _)| s.total_cmp(&t0))
         {
             Ok(i) => i,
             Err(0) => 0,

@@ -122,6 +122,25 @@ fn train_exercises_pool_eval_and_prefetch_flags() {
 }
 
 #[test]
+fn train_collect_agg_flag_runs_the_barrier_baseline() {
+    // --collect-agg selects the collect-then-aggregate BSP baseline
+    // (per-worker arena + barrier-built tree).  Bit-identity with the
+    // default eager path is locked in engine_integration; here we just
+    // exercise the flag end to end.
+    let out = run_ok(&[
+        "train",
+        "--model",
+        "mlp",
+        "--steps",
+        "4",
+        "--cores",
+        "4,8",
+        "--collect-agg",
+    ]);
+    assert!(out.contains("steps: 4"), "missing step count in: {out}");
+}
+
+#[test]
 fn train_runs_asp_sync_end_to_end() {
     // ASP on the real runtime: a 4-step budget on 2 workers applies 8
     // individual (stale-capable) updates.

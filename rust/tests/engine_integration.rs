@@ -7,8 +7,9 @@
 use hetero_batch::config::Policy;
 use hetero_batch::controller::ControllerCfg;
 use hetero_batch::metrics::RunReport;
+use hetero_batch::ps::RetainPolicy;
 use hetero_batch::runtime::Runtime;
-use hetero_batch::session::{Session, SessionBuilder, Slowdowns};
+use hetero_batch::session::{Backend, BspAgg, RealBackend, Session, SessionBuilder, Slowdowns};
 use hetero_batch::sync::SyncMode;
 use hetero_batch::trace::{
     AvailTrace, ClusterTraces, MembershipEvent, MembershipKind, MembershipPlan,
@@ -358,6 +359,159 @@ fn trace_capacity_loss_triggers_dynamic_readjustment_in_real_run() {
         final_b[0] < final_b[1],
         "worker 0 batch {final_b:?} not reduced after capacity loss"
     );
+}
+
+// ---------------------------------------------------------------------
+// Eager reduction-tree aggregation (§Perf iteration 6, DESIGN.md §11):
+// the eager path must leave runs bit-identical to the
+// collect-then-aggregate baseline — the tree's fixed rank-indexed shape
+// makes the summation order independent of when combines happen.
+
+#[test]
+fn eager_and_collect_backends_bit_identical_under_scripted_churn() {
+    // Backend-level script, free of wall-clock noise (virtual time
+    // never enters the numerics here): two BSP rounds over 3 workers;
+    // in round 2 worker 1's gradient is produced and then revoked
+    // before the barrier, so the eager tree must rebuild the revoked
+    // leaf's ancestor path from the surviving sibling partials —
+    // landing on exactly the bits the collect path computes over the
+    // survivors at the barrier.
+    let run = |agg: BspAgg| -> Vec<u32> {
+        let mut rt = Runtime::open(artifacts_dir()).unwrap();
+        let mut be = RealBackend::new(
+            &mut rt,
+            "mlp",
+            3,
+            vec![1.0; 3],
+            1,    // seed
+            4,    // steps (optimizer schedule horizon)
+            0,    // eval_every
+            0,    // b0 hint
+            4,    // pool shards
+            true, // prefetch
+            Some(agg),
+        )
+        .unwrap();
+        let batches = vec![64.0, 64.0, 64.0];
+        // Round 1: full cohort.
+        be.execute_wave(&[0, 1, 2], &batches, 0.0).unwrap();
+        for w in 0..3 {
+            be.stage_update(w, &batches).unwrap();
+        }
+        be.apply_update(&[0, 1, 2], &batches).unwrap();
+        // Round 2: worker 1 executes, then its instance is revoked
+        // before the barrier; the round closes over the survivors.
+        be.execute_wave(&[0, 1, 2], &batches, 1.0).unwrap();
+        be.stage_update(0, &batches).unwrap();
+        be.retire_worker(1).unwrap();
+        be.stage_update(2, &batches).unwrap();
+        be.apply_update(&[0, 2], &batches).unwrap();
+        be.params().iter().map(|p| p.to_bits()).collect()
+    };
+    let eager = run(BspAgg::Eager(RetainPolicy::Retain));
+    let collect = run(BspAgg::Collect);
+    assert_eq!(eager, collect, "eager/collect parameters diverged");
+}
+
+#[test]
+fn eager_and_collect_sessions_bit_identical() {
+    // Full BSP sessions (uniform policy, so the trajectory carries no
+    // wall-noise-dependent controller decisions): the loss curves must
+    // match bitwise between the eager tree and the collect baseline.
+    let mk = |eager: bool| {
+        real_run(
+            Session::builder()
+                .model("mlp")
+                .cores(&[4, 16])
+                .policy(Policy::Uniform)
+                .steps(12)
+                .seed(1)
+                .eager_agg(eager),
+        )
+    };
+    let e = mk(true);
+    let c = mk(false);
+    assert_eq!(e.total_iters, c.total_iters);
+    assert_eq!(e.losses.len(), c.losses.len());
+    for (a, b) in e.losses.iter().zip(&c.losses) {
+        assert_eq!(a.1, b.1);
+        assert_eq!(
+            a.2.to_bits(),
+            b.2.to_bits(),
+            "eager/collect loss diverged at step {}",
+            a.1
+        );
+    }
+}
+
+#[test]
+fn eager_and_collect_sessions_agree_under_churned_run() {
+    // End-to-end churn: worker 0 is revoked mid-run (probe-calibrated,
+    // as in the sim-vs-real parity test).  Epoch structure must match;
+    // the full-cohort prefix — rounds both runs completed before their
+    // revocation landed — must be bitwise identical, and when the
+    // revocation lands in the same round on both sides (the common
+    // case; wall drift can shift it by one) the entire curve must.
+    let probe = real_run(
+        Session::builder()
+            .model("mlp")
+            .cores(&[4, 16])
+            .policy(Policy::Uniform)
+            .steps(6)
+            .seed(1),
+    );
+    let plan = MembershipPlan::new(vec![MembershipEvent {
+        time: 3.5 * probe.total_time / 6.0,
+        worker: 0,
+        kind: MembershipKind::Revoke,
+    }]);
+    let mk = |eager: bool| {
+        real_run(
+            Session::builder()
+                .model("mlp")
+                .cores(&[4, 16])
+                .policy(Policy::Uniform)
+                .steps(8)
+                .seed(1)
+                .membership(plan.clone())
+                .eager_agg(eager),
+        )
+    };
+    let e = mk(true);
+    let c = mk(false);
+    let epochs = |r: &RunReport| -> Vec<(u64, usize, &'static str, usize)> {
+        r.epochs
+            .iter()
+            .map(|ev| (ev.epoch, ev.worker, ev.kind.label(), ev.live))
+            .collect()
+    };
+    assert_eq!(epochs(&e), epochs(&c), "epoch sequences diverged");
+    assert_eq!(epochs(&e), vec![(1, 0, "revoke", 1)]);
+    let pre = |r: &RunReport| r.iters.iter().filter(|i| i.worker == 0).count();
+    let (pre_e, pre_c) = (pre(&e), pre(&c));
+    let shared = pre_e.min(pre_c);
+    assert!(shared >= 1, "revocation landed before any full round");
+    for (a, b) in e.losses.iter().zip(&c.losses).take(shared) {
+        assert_eq!(
+            a.2.to_bits(),
+            b.2.to_bits(),
+            "full-cohort prefix diverged at round {}",
+            a.1
+        );
+    }
+    if pre_e == pre_c {
+        assert_eq!(e.losses.len(), c.losses.len());
+        for (a, b) in e.losses.iter().zip(&c.losses) {
+            assert_eq!(
+                a.2.to_bits(),
+                b.2.to_bits(),
+                "post-revocation curve diverged at round {}",
+                a.1
+            );
+        }
+    }
+    assert_eq!(e.total_iters, 8);
+    assert_eq!(c.total_iters, 8);
 }
 
 #[test]

@@ -18,8 +18,8 @@ use hetero_batch::ps::fused::{
     fused_agg_sgd, fused_agg_sgd_mt,
 };
 use hetero_batch::ps::{
-    aggregate_into, aggregate_into_mt, lambdas_from_batches, Adam, LrSchedule,
-    Momentum, Sgd,
+    aggregate_into, aggregate_into_mt, aggregate_tree_into, lambdas_from_batches,
+    Adam, LrSchedule, Momentum, ReduceTree, RetainPolicy, Sgd,
 };
 use hetero_batch::util::proptest::{check, FnStrategy, Strategy, UsizeRange, VecOf};
 use hetero_batch::util::rng::Rng;
@@ -565,6 +565,129 @@ fn sharded_fused_adam_exact_at_tile_and_shard_boundaries() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Eager reduction-tree aggregation (ps/reduce.rs, DESIGN.md §11): the
+// tree's summation order is fixed by its rank-indexed shape, so the
+// result must be *bitwise* invariant under any completion-order
+// permutation — and, numerically, within 1e-6 of the flat sequential
+// sweep it replaced (the retained oracle).  Shapes deliberately include
+// k = 1, odd, and non-power-of-two leaf counts (passthrough chains).
+
+const TREE_ORACLE_KS: [usize; 6] = [1, 2, 3, 7, 8, 64];
+
+/// Random (k, d, seed) with k drawn from the oracle shape set half the
+/// time and uniformly otherwise.
+fn tree_strategy() -> FnStrategy<impl Fn(&mut Rng) -> (usize, usize, u64)> {
+    FnStrategy(|rng: &mut Rng| {
+        let k = if rng.range_usize(0, 2) == 0 {
+            TREE_ORACLE_KS[rng.range_usize(0, TREE_ORACLE_KS.len())]
+        } else {
+            rng.range_usize(1, 40)
+        };
+        (k, rng.range_usize(1, 5000), rng.next_u64())
+    })
+}
+
+fn shuffled(n: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    order
+}
+
+#[test]
+fn prop_tree_aggregation_is_bitwise_arrival_order_invariant() {
+    check("tree arrival-order invariance", 80, tree_strategy(), |c| {
+        let &(k, d, seed) = c;
+        let (_, grads, lambdas) = random_problem(d, k, seed);
+        let mut rng = Rng::new(seed ^ 0x7EE);
+        let run = |policy: RetainPolicy, order: &[usize]| -> Vec<u32> {
+            let mut t = ReduceTree::new(k, d, policy, 1);
+            for &i in order {
+                t.push(i, &grads[i], lambdas[i] as f32);
+            }
+            t.finalize().iter().map(|x| x.to_bits()).collect()
+        };
+        let asc: Vec<usize> = (0..k).collect();
+        let base = run(RetainPolicy::Free, &asc);
+        let perm_a = shuffled(k, &mut rng);
+        let perm_b = shuffled(k, &mut rng);
+        base == run(RetainPolicy::Free, &perm_a)
+            && base == run(RetainPolicy::Retain, &perm_b)
+            && base == run(RetainPolicy::Retain, &asc)
+    });
+}
+
+#[test]
+fn prop_tree_matches_flat_oracle_within_1e6() {
+    check("tree == flat (1e-6)", 80, tree_strategy(), |c| {
+        let &(k, d, seed) = c;
+        let (_, grads, lambdas) = random_problem(d, k, seed);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mut flat = vec![0.0f32; d];
+        aggregate_into(&mut flat, &refs, &lambdas);
+        let mut tree = vec![0.0f32; d];
+        aggregate_tree_into(&mut tree, &refs, &lambdas, 1);
+        close(&flat, &tree)
+    });
+}
+
+#[test]
+fn prop_tree_b_weighted_leaves_with_root_scale_match_flat() {
+    // The real backend's scheme: leaves carry the λ *numerator* (the
+    // batch b_w, known per worker even under churn) and the common 1/Σb
+    // normalization rides the fused optimizer's λ slot at the root.
+    // Must agree with the flat λ-weighted sweep to the oracle tolerance.
+    check("tree b-weight + root scale", 80, tree_strategy(), |c| {
+        let &(k, d, seed) = c;
+        let mut rng = Rng::new(seed);
+        let grads: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec_f32(d)).collect();
+        let batches: Vec<f64> = (0..k).map(|_| rng.range_f64(1.0, 256.0)).collect();
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let mut flat = vec![0.0f32; d];
+        aggregate_into(&mut flat, &refs, &lambdas_from_batches(&batches));
+        let mut t = ReduceTree::new(k, d, RetainPolicy::Free, 1);
+        for i in 0..k {
+            t.push(i, &grads[i], batches[i] as f32);
+        }
+        let inv = (1.0 / batches.iter().sum::<f64>()) as f32;
+        let scaled: Vec<f32> = t.finalize().iter().map(|&x| inv * x).collect();
+        close(&flat, &scaled)
+    });
+}
+
+#[test]
+fn prop_tree_retain_revoke_rebuild_is_bitwise_fresh() {
+    // A mid-round revocation under RetainPolicy::Retain rebuilds only
+    // the revoked leaf's ancestor path — and must land on exactly the
+    // bits a fresh tree over the survivors produces (this is what makes
+    // the eager and collect-then-aggregate session paths bit-identical
+    // under churn).
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(2, 20);
+        (k, rng.range_usize(1, 3000), rng.range_usize(0, k), rng.next_u64())
+    });
+    check("tree revoke == fresh", 80, strat, |c| {
+        let &(k, d, victim, seed) = c;
+        let (_, grads, lambdas) = random_problem(d, k, seed);
+        let mut rng = Rng::new(seed ^ 0xDEAD);
+        let order = shuffled(k, &mut rng);
+        let mut t = ReduceTree::new(k, d, RetainPolicy::Retain, 1);
+        for &i in &order {
+            t.push(i, &grads[i], lambdas[i] as f32);
+        }
+        t.revoke(victim);
+        let rebuilt: Vec<u32> = t.finalize().iter().map(|x| x.to_bits()).collect();
+        let mut fresh = ReduceTree::new(k, d, RetainPolicy::Retain, 1);
+        for i in 0..k {
+            if i != victim {
+                fresh.push(i, &grads[i], lambdas[i] as f32);
+            }
+        }
+        let want: Vec<u32> = fresh.finalize().iter().map(|x| x.to_bits()).collect();
+        rebuilt == want
+    });
 }
 
 #[test]

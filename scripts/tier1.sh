@@ -29,6 +29,15 @@ cargo test -q
 echo "== tier1: hotpath bench smoke (agg only, quick) =="
 HBATCH_BENCH_QUICK=1 cargo bench --bench hotpath -- --agg-only
 
+# The eager-reduction-tree series (PR 5) must be present in the smoke
+# artifact — a silent disappearance of the tree_vs_flat derived ratios
+# would mean the canonical bench regenerates without the acceptance
+# series.
+if ! grep -q 'tree_vs_flat' ../BENCH_hotpath_quick.json; then
+    echo "tier1: BENCH_hotpath_quick.json is missing the tree_vs_flat series" >&2
+    exit 1
+fi
+
 echo "== tier1: session bench smoke (k <= 64, quick) =="
 # Truncated grid + quick windows => writes BENCH_session_quick.json,
 # never the canonical BENCH_session.json (full `cargo bench --bench
