@@ -83,7 +83,7 @@ fn builder(k: usize, sync: SyncMode, variant: &str) -> SessionBuilder {
         // builder's own --spot path generates 100k-second traces —
         // far more segments than a bench window ever reaches).
         let traces = ClusterTraces::spot_cluster(k, 60.0, 20.0, 2.0, 11);
-        let plan = MembershipPlan::from_traces(&traces, 0.3);
+        let plan = MembershipPlan::from_traces(&traces, 0.3).unwrap();
         b = b.traces(traces).membership(plan);
     }
     b

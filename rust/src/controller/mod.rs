@@ -368,6 +368,13 @@ impl DynamicBatcher {
         self.workers.iter().map(|w| w.ewma.get()).collect()
     }
 
+    /// Smoothed iteration time of one worker — the O(1) per-rank
+    /// accessor behind [`Self::smoothed`], used by the failure
+    /// detector's per-dispatch deadline computation (DESIGN.md §12).
+    pub fn smoothed_iter_time(&self, k: usize) -> Option<f64> {
+        self.workers[k].ewma.get()
+    }
+
     // -------------------------------------------------- elastic membership
 
     /// Retire worker `k` (spot revocation): its batch mass is

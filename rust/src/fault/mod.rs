@@ -1,0 +1,860 @@
+//! Fault injection, failure detection, and autoscaled recovery
+//! (DESIGN.md §12).
+//!
+//! Every churn scenario before this module was *oracle-driven*: a
+//! [`crate::trace::MembershipPlan`] tells the session about revocations
+//! in advance.  Real spot fleets only learn a worker is gone when it
+//! stops making progress.  This module supplies the three pieces that
+//! close that gap:
+//!
+//! - [`FaultPlan`] — scripted failures injected into a run *without*
+//!   telling the membership machinery: unannounced crashes, mid-run
+//!   stalls, transient slowdown spikes.  Timing faults (stall, slow)
+//!   are applied by the backend via [`crate::session::Backend::set_fault_plan`];
+//!   a crash is the *absence* of an outcome, so the session enforces it
+//!   by suppressing the completion event — only the detector below can
+//!   reclaim the rank.
+//! - [`DetectorCfg`] — the progress-deadline failure detector the
+//!   session event loop arms at every dispatch: a worker that misses
+//!   `max(floor, grace × smoothed-iteration-time)` is *suspected* and
+//!   provisionally retired through the plan-revocation path.  A false
+//!   suspicion is survivable: under [`LatePolicy::Readmit`] the late
+//!   completion readmits the worker like a scheduled join.
+//! - [`Autoscaler`] / [`AutoscalerCfg`] — the recovery policy: watches
+//!   the live count (and optionally the smoothed fleet throughput)
+//!   and spawns replacements from a finite provisioning pool with a
+//!   cold-start delay, exponential backoff + jitter on failed spawn
+//!   attempts, and a ride-out option that records the degradation
+//!   instead of paying for capacity.
+//!
+//! All three are deterministic under the session seed: the only
+//! randomness is the autoscaler's spawn-failure/jitter stream, forked
+//! from the session seed with its own tag so it never perturbs the
+//! backend's iteration-noise stream.
+
+use crate::session::WorkerOutcome;
+use crate::util::rng::Rng;
+
+/// Seed perturbation for the autoscaler's spawn-failure/backoff-jitter
+/// stream (decorrelated from backend noise and spot traces, like
+/// `SPOT_SEED_TAG`).
+pub const AUTOSCALE_SEED_TAG: u64 = 0xA5CA_1E75;
+
+// ------------------------------------------------------------- faults
+
+/// One failure mode (the injection taxonomy, DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The instance dies unannounced: any iteration in flight at (or
+    /// dispatched after) the fault time never completes, and no
+    /// membership event warns the session.  Requires a configured
+    /// failure detector — nothing else can reclaim the rank.
+    Crash,
+    /// The first iteration dispatched at or after the fault time is
+    /// pinned for `stall_s` seconds mid-flight, then resumes and
+    /// completes (one-shot).  A generous detector rides it out; a tight
+    /// one falsely suspects the worker and must survive its return.
+    Stall { stall_s: f64 },
+    /// Transient slowdown spike: iterations dispatched inside
+    /// `[time, time + dur_s)` cost `factor ×` their normal work.
+    Slow { factor: f64, dur_s: f64 },
+}
+
+impl FaultKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Stall { .. } => "stall",
+            FaultKind::Slow { .. } => "slow",
+        }
+    }
+}
+
+/// One scripted fault: `kind` hits `worker` at virtual time `time`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub time: f64,
+    pub worker: usize,
+    pub kind: FaultKind,
+}
+
+/// A validated, time-sorted fault schedule (`--faults` /
+/// `"faults"` config key).
+///
+/// Spec shape, mirroring `--spot`/`--join`: a comma-separated list of
+/// `crash:W@T` | `stall:W@T:D` | `slow:W@T:F:D` items, e.g.
+/// `crash:1@40,stall:2@10:6,slow:0@5:2.5:30`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Build from explicit events (tests, scenario harnesses),
+    /// validated like the parsed shape.
+    pub fn new(mut events: Vec<FaultEvent>) -> Result<FaultPlan, String> {
+        for ev in &events {
+            validate_event(ev)?;
+        }
+        events.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.worker.cmp(&b.worker)));
+        Ok(FaultPlan { events })
+    }
+
+    /// Parse the CLI/config spec (see type docs for the shape).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for item in s.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            events.push(parse_item(item)?);
+        }
+        if events.is_empty() {
+            return Err("empty fault list".into());
+        }
+        FaultPlan::new(events)
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn has_crash(&self) -> bool {
+        self.events.iter().any(|e| matches!(e.kind, FaultKind::Crash))
+    }
+
+    pub fn max_worker(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.worker).max()
+    }
+
+    /// Earliest crash time of `worker`, if it is scripted to crash.
+    pub fn crash_time(&self, worker: usize) -> Option<f64> {
+        self.events
+            .iter()
+            .filter(|e| e.worker == worker && matches!(e.kind, FaultKind::Crash))
+            .map(|e| e.time)
+            .min_by(f64::total_cmp)
+    }
+
+    /// Per-run mutable applicator (tracks one-shot stall consumption).
+    pub fn state(&self) -> FaultState {
+        FaultState {
+            stall_done: vec![false; self.events.len()],
+            plan: self.clone(),
+        }
+    }
+}
+
+fn validate_event(ev: &FaultEvent) -> Result<(), String> {
+    if !ev.time.is_finite() || ev.time < 0.0 {
+        return Err(format!("fault time {} must be finite and non-negative", ev.time));
+    }
+    match ev.kind {
+        FaultKind::Crash => {}
+        FaultKind::Stall { stall_s } => {
+            if !stall_s.is_finite() || stall_s <= 0.0 {
+                return Err(format!("stall duration {stall_s} must be finite and positive"));
+            }
+        }
+        FaultKind::Slow { factor, dur_s } => {
+            if !factor.is_finite() || factor <= 0.0 {
+                return Err(format!("slowdown factor {factor} must be finite and positive"));
+            }
+            if !dur_s.is_finite() || dur_s <= 0.0 {
+                return Err(format!("slowdown duration {dur_s} must be finite and positive"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn parse_item(item: &str) -> Result<FaultEvent, String> {
+    let (kind, rest) = item
+        .split_once(':')
+        .ok_or_else(|| format!("bad fault {item:?}: want kind:worker@t[:...]"))?;
+    let (worker, tail) = rest
+        .split_once('@')
+        .ok_or_else(|| format!("bad fault {item:?}: want kind:worker@t[:...]"))?;
+    let worker: usize = worker
+        .parse()
+        .map_err(|_| format!("bad fault {item:?}: bad worker {worker:?}"))?;
+    let parts: Vec<&str> = tail.split(':').collect();
+    let num = |s: &str| -> Result<f64, String> {
+        s.parse::<f64>()
+            .map_err(|_| format!("bad fault {item:?}: bad number {s:?}"))
+    };
+    let time = num(parts[0])?;
+    let kind = match (kind, parts.len()) {
+        ("crash", 1) => FaultKind::Crash,
+        ("stall", 2) => FaultKind::Stall { stall_s: num(parts[1])? },
+        ("slow", 3) => FaultKind::Slow {
+            factor: num(parts[1])?,
+            dur_s: num(parts[2])?,
+        },
+        ("crash", _) => return Err(format!("bad fault {item:?}: crash takes no parameters")),
+        ("stall", _) => return Err(format!("bad fault {item:?}: want stall:W@T:D")),
+        ("slow", _) => return Err(format!("bad fault {item:?}: want slow:W@T:F:D")),
+        (other, _) => return Err(format!("bad fault {item:?}: unknown kind {other:?}")),
+    };
+    let ev = FaultEvent { time, worker, kind };
+    validate_event(&ev)?;
+    Ok(ev)
+}
+
+/// Per-run fault applicator: what a [`crate::session::Backend`] holds
+/// after [`crate::session::Backend::set_fault_plan`].  Timing faults
+/// perturb a wave outcome at *dispatch granularity* — a stall attaches
+/// to the first iteration dispatched at or after its onset, a slowdown
+/// to every iteration dispatched inside its window.  Crashes are
+/// deliberately not applied here (the session suppresses the completion
+/// event instead), so backends need no notion of "no outcome".
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    plan: FaultPlan,
+    /// One-shot stalls already consumed (parallel to `plan.events`).
+    stall_done: Vec<bool>,
+}
+
+impl FaultState {
+    /// Perturb the outcome of an iteration worker `w` starts at `now`.
+    pub fn perturb(&mut self, w: usize, now: f64, out: &mut WorkerOutcome) {
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if ev.worker != w {
+                continue;
+            }
+            match ev.kind {
+                FaultKind::Crash => {}
+                FaultKind::Stall { stall_s } => {
+                    if now >= ev.time && !self.stall_done[i] {
+                        self.stall_done[i] = true;
+                        out.fixed += stall_s;
+                    }
+                }
+                FaultKind::Slow { factor, dur_s } => {
+                    if now >= ev.time && now < ev.time + dur_s {
+                        out.work *= factor;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- detector
+
+/// What to do when a suspected worker's in-flight iteration completes
+/// after all — i.e. the suspicion was false.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LatePolicy {
+    /// Un-suspect and readmit the worker (its late work is still
+    /// discarded; it rejoins exactly like a scheduled join).  Default.
+    Readmit,
+    /// Ignore the late arrival; the worker stays retired.
+    Drop,
+}
+
+impl LatePolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LatePolicy::Readmit => "readmit",
+            LatePolicy::Drop => "drop",
+        }
+    }
+}
+
+/// Progress-deadline failure detector (`--detect` / `"detect"` key).
+///
+/// At every dispatch the session arms a deadline of
+/// `max(floor, grace × est)` where `est` is the worker's smoothed
+/// per-iteration time — the controller's estimate
+/// ([`crate::controller::DynamicBatcher::smoothed_iter_time`]) when a
+/// dynamic policy runs, else the loop's own cumulative mean; with no
+/// estimate yet (cold start) the deadline is just `floor`.  A worker
+/// still in flight past its deadline is suspected and provisionally
+/// retired.
+///
+/// Spec shape: comma-separated `key=value` pairs, e.g.
+/// `grace=4,floor=30,late=readmit`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DetectorCfg {
+    /// Deadline multiplier over the smoothed iteration-time estimate.
+    pub grace: f64,
+    /// Deadline floor in seconds — also the whole deadline while no
+    /// estimate exists, so it should comfortably exceed a cold-start
+    /// iteration.
+    pub floor_s: f64,
+    /// False-suspicion resolution policy.
+    pub late: LatePolicy,
+}
+
+impl Default for DetectorCfg {
+    fn default() -> Self {
+        DetectorCfg {
+            grace: 4.0,
+            floor_s: 30.0,
+            late: LatePolicy::Readmit,
+        }
+    }
+}
+
+impl DetectorCfg {
+    pub fn parse(s: &str) -> Result<DetectorCfg, String> {
+        let mut cfg = DetectorCfg::default();
+        for (key, val) in parse_kv(s)? {
+            match key {
+                "grace" => cfg.grace = parse_num(key, val)?,
+                "floor" => cfg.floor_s = parse_num(key, val)?,
+                "late" => {
+                    cfg.late = match val {
+                        "readmit" => LatePolicy::Readmit,
+                        "drop" => LatePolicy::Drop,
+                        other => return Err(format!("late={other:?} (want readmit|drop)")),
+                    }
+                }
+                other => return Err(format!("unknown detector key {other:?}")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.grace.is_finite() || self.grace <= 0.0 {
+            return Err(format!("detector grace {} must be finite and positive", self.grace));
+        }
+        if !self.floor_s.is_finite() || self.floor_s <= 0.0 {
+            return Err(format!(
+                "detector floor {} must be finite and positive",
+                self.floor_s
+            ));
+        }
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------- autoscaler
+
+/// Autoscaled-recovery policy (`--autoscale` / `"autoscale"` key).
+///
+/// Spec shape: comma-separated `key=value` pairs with a bare `ride`
+/// token for the flag, e.g.
+/// `pool=2,cold=30,floor=0,backoff=5,cap=300,jitter=0.2,fail=0.1,retries=8,tput=0.5`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalerCfg {
+    /// Replacement instances available in the provisioning pool.
+    pub pool: usize,
+    /// Cold-start delay: seconds between a successful spawn request and
+    /// the replacement joining the fleet.
+    pub cold_s: f64,
+    /// Capacity floor: spawn while `live + cold-starting < floor`.
+    /// 0 = the run's initially-live count.
+    pub floor: usize,
+    /// Base retry backoff after a failed spawn attempt.
+    pub backoff_s: f64,
+    /// Backoff cap (the exponential stops doubling here).
+    pub cap_s: f64,
+    /// ± jitter fraction applied to each backoff interval.
+    pub jitter: f64,
+    /// Per-attempt spawn failure probability (models provider stockouts;
+    /// drawn from the dedicated `AUTOSCALE_SEED_TAG` rng stream).
+    pub fail_p: f64,
+    /// Give up after this many *consecutive* failed attempts.
+    pub retries: u32,
+    /// Ride-out mode: never spawn; keep the autoscaler's accounting so
+    /// the degradation is measurable against the spawning variant.
+    pub ride_out: bool,
+    /// Optional throughput trigger: also spawn when the smoothed fleet
+    /// throughput falls below this fraction of the best seen (0 = off).
+    pub tput: f64,
+}
+
+impl Default for AutoscalerCfg {
+    fn default() -> Self {
+        AutoscalerCfg {
+            pool: 1,
+            cold_s: 30.0,
+            floor: 0,
+            backoff_s: 5.0,
+            cap_s: 300.0,
+            jitter: 0.0,
+            fail_p: 0.0,
+            retries: 8,
+            ride_out: false,
+            tput: 0.0,
+        }
+    }
+}
+
+impl AutoscalerCfg {
+    pub fn parse(s: &str) -> Result<AutoscalerCfg, String> {
+        let mut cfg = AutoscalerCfg::default();
+        for (key, val) in parse_kv(s)? {
+            match key {
+                "pool" => cfg.pool = parse_int(key, val)?,
+                "cold" => cfg.cold_s = parse_num(key, val)?,
+                "floor" => cfg.floor = parse_int(key, val)?,
+                "backoff" => cfg.backoff_s = parse_num(key, val)?,
+                "cap" => cfg.cap_s = parse_num(key, val)?,
+                "jitter" => cfg.jitter = parse_num(key, val)?,
+                "fail" => cfg.fail_p = parse_num(key, val)?,
+                "retries" => cfg.retries = parse_int(key, val)? as u32,
+                "ride" => {
+                    cfg.ride_out = match val {
+                        "" | "1" | "true" => true,
+                        "0" | "false" => false,
+                        other => return Err(format!("ride={other:?} (want a bare `ride` or 0/1)")),
+                    }
+                }
+                "tput" => cfg.tput = parse_num(key, val)?,
+                other => return Err(format!("unknown autoscaler key {other:?}")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.cold_s.is_finite() || self.cold_s < 0.0 {
+            return Err(format!("cold-start {} must be finite and non-negative", self.cold_s));
+        }
+        if !self.backoff_s.is_finite() || self.backoff_s < 0.0 {
+            return Err(format!("backoff {} must be finite and non-negative", self.backoff_s));
+        }
+        if !self.cap_s.is_finite() || self.cap_s < self.backoff_s {
+            return Err(format!(
+                "backoff cap {} must be finite and >= the base backoff {}",
+                self.cap_s, self.backoff_s
+            ));
+        }
+        if !self.jitter.is_finite() || self.jitter < 0.0 || self.jitter >= 1.0 {
+            return Err(format!("jitter {} out of [0, 1)", self.jitter));
+        }
+        if !self.fail_p.is_finite() || self.fail_p < 0.0 || self.fail_p > 1.0 {
+            return Err(format!("spawn failure probability {} out of [0, 1]", self.fail_p));
+        }
+        if !self.tput.is_finite() || self.tput < 0.0 || self.tput >= 1.0 {
+            return Err(format!("throughput trigger {} out of [0, 1)", self.tput));
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of one provisioning attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SpawnOutcome {
+    /// Request accepted; the replacement joins at `ready_at`.
+    Started { ready_at: f64 },
+    /// Attempt failed; the next one waits until `retry_at`.
+    Failed { retry_at: f64 },
+    /// Retry budget exhausted; the autoscaler stops trying.
+    GaveUp,
+}
+
+/// Runtime autoscaler state: the detection→degradation→recovery loop's
+/// actuator.  The session owns one per run (when configured), asks it
+/// for decisions, and applies the resulting joins itself so replacement
+/// admission shares the plan-join code path exactly.
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: AutoscalerCfg,
+    /// Resolved capacity floor (cfg.floor, or the initial live count).
+    floor: usize,
+    pool_left: usize,
+    /// Ready times of replacements still in cold start.
+    pending: Vec<f64>,
+    /// Consecutive failed spawn attempts.
+    attempts: u32,
+    /// Earliest time the next attempt may run (backoff gate).
+    retry_at: f64,
+    gave_up: bool,
+    /// Best smoothed fleet throughput seen (throughput-trigger baseline).
+    best_tput: f64,
+    rng: Rng,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerCfg, initial_live: usize, seed: u64) -> Autoscaler {
+        let floor = if cfg.floor == 0 { initial_live } else { cfg.floor };
+        Autoscaler {
+            pool_left: cfg.pool,
+            floor,
+            cfg,
+            pending: Vec::new(),
+            attempts: 0,
+            retry_at: 0.0,
+            gave_up: false,
+            best_tput: 0.0,
+            rng: Rng::new(seed ^ AUTOSCALE_SEED_TAG),
+        }
+    }
+
+    pub fn cfg(&self) -> &AutoscalerCfg {
+        &self.cfg
+    }
+
+    pub fn floor(&self) -> usize {
+        self.floor
+    }
+
+    pub fn pool_left(&self) -> usize {
+        self.pool_left
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Consecutive failed attempts so far (for event records).
+    pub fn attempts(&self) -> u32 {
+        self.attempts
+    }
+
+    /// Track the smoothed fleet throughput (the trigger baseline is the
+    /// best value seen, so a post-crash dip reads as a deficit).
+    pub fn observe_throughput(&mut self, tput: f64) {
+        if tput > self.best_tput {
+            self.best_tput = tput;
+        }
+    }
+
+    /// Is the fleet below the autoscaler's target, counting replacements
+    /// already cold-starting?
+    fn below_target(&self, live: usize, tput: Option<f64>) -> bool {
+        if live + self.pending.len() < self.floor {
+            return true;
+        }
+        if self.cfg.tput > 0.0 && self.pending.is_empty() {
+            if let Some(t) = tput {
+                if self.best_tput > 0.0 && t < self.cfg.tput * self.best_tput {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Should a spawn attempt run now?
+    pub fn wants_spawn(&self, live: usize, now: f64, tput: Option<f64>) -> bool {
+        !self.cfg.ride_out
+            && !self.gave_up
+            && self.pool_left > 0
+            && now >= self.retry_at
+            && self.below_target(live, tput)
+    }
+
+    /// One provisioning attempt at `now`.  Only call when
+    /// [`Self::wants_spawn`] holds.
+    pub fn try_spawn(&mut self, now: f64) -> SpawnOutcome {
+        debug_assert!(self.pool_left > 0 && !self.gave_up);
+        if self.cfg.fail_p > 0.0 && self.rng.bool(self.cfg.fail_p) {
+            self.attempts += 1;
+            if self.attempts > self.cfg.retries {
+                self.gave_up = true;
+                return SpawnOutcome::GaveUp;
+            }
+            // Exponential backoff with ± jitter, capped.
+            let exp = (self.attempts - 1).min(30);
+            let base = (self.cfg.backoff_s * f64::powi(2.0, exp as i32)).min(self.cfg.cap_s);
+            let jit = if self.cfg.jitter > 0.0 {
+                1.0 + self.cfg.jitter * (2.0 * self.rng.f64() - 1.0)
+            } else {
+                1.0
+            };
+            self.retry_at = now + (base * jit).max(0.0);
+            SpawnOutcome::Failed {
+                retry_at: self.retry_at,
+            }
+        } else {
+            self.attempts = 0;
+            self.pool_left -= 1;
+            let ready_at = now + self.cfg.cold_s;
+            self.pending.push(ready_at);
+            SpawnOutcome::Started { ready_at }
+        }
+    }
+
+    /// Remove and return the earliest replacement whose cold start has
+    /// finished by `now`.
+    pub fn take_ready(&mut self, now: f64) -> Option<f64> {
+        let mut best: Option<usize> = None;
+        for (i, &t) in self.pending.iter().enumerate() {
+            if t <= now && best.map_or(true, |b| t < self.pending[b]) {
+                best = Some(i);
+            }
+        }
+        best.map(|i| self.pending.swap_remove(i))
+    }
+
+    /// Next time the autoscaler needs the event loop's attention: a
+    /// pending replacement finishing cold start, or a backed-off retry
+    /// while the fleet is below target.  None = nothing scheduled.
+    pub fn next_event(&self, live: usize, tput: Option<f64>) -> Option<f64> {
+        let mut next: Option<f64> = None;
+        for &p in &self.pending {
+            next = Some(next.map_or(p, |x: f64| x.min(p)));
+        }
+        if !self.cfg.ride_out
+            && !self.gave_up
+            && self.pool_left > 0
+            && self.below_target(live, tput)
+        {
+            next = Some(next.map_or(self.retry_at, |x| x.min(self.retry_at)));
+        }
+        next
+    }
+}
+
+// ------------------------------------------------------------ parsing
+
+/// Split a `k1=v1,k2=v2,flag` spec into (key, value) pairs (a bare
+/// token yields an empty value).
+fn parse_kv(s: &str) -> Result<Vec<(&str, &str)>, String> {
+    let mut out = Vec::new();
+    for item in s.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        match item.split_once('=') {
+            Some((k, v)) => out.push((k.trim(), v.trim())),
+            None => out.push((item, "")),
+        }
+    }
+    if out.is_empty() {
+        return Err("empty spec".into());
+    }
+    Ok(out)
+}
+
+fn parse_num(key: &str, val: &str) -> Result<f64, String> {
+    val.parse::<f64>()
+        .map_err(|_| format!("{key}={val:?} is not a number"))
+}
+
+fn parse_int(key: &str, val: &str) -> Result<usize, String> {
+    val.parse::<usize>()
+        .map_err(|_| format!("{key}={val:?} is not an integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_parses_all_kinds_and_sorts() {
+        let p = FaultPlan::parse("stall:2@10:6,crash:1@40,slow:0@5:2.5:30").unwrap();
+        assert_eq!(p.events().len(), 3);
+        // Sorted by time.
+        assert_eq!(p.events()[0].worker, 0);
+        assert!(matches!(p.events()[0].kind, FaultKind::Slow { .. }));
+        assert_eq!(p.events()[1].worker, 2);
+        assert_eq!(p.events()[2].worker, 1);
+        assert!(p.has_crash());
+        assert_eq!(p.crash_time(1), Some(40.0));
+        assert_eq!(p.crash_time(0), None);
+        assert_eq!(p.max_worker(), Some(2));
+    }
+
+    #[test]
+    fn fault_plan_rejects_bad_shapes() {
+        for bad in [
+            "",
+            "crash:1",
+            "crash:1@",
+            "crash:x@5",
+            "crash:1@-3",
+            "crash:1@nan",
+            "crash:1@5:9",
+            "stall:1@5",
+            "stall:1@5:0",
+            "stall:1@5:-2",
+            "slow:1@5:2",
+            "slow:1@5:0:10",
+            "slow:1@5:2:0",
+            "melt:1@5",
+            "1@5",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn stall_is_one_shot_and_slow_is_windowed() {
+        let p = FaultPlan::parse("stall:0@10:5,slow:1@10:2:10").unwrap();
+        let mut st = p.state();
+        let mut out = WorkerOutcome { work: 1.0, fixed: 0.5 };
+        // Before onset: untouched.
+        st.perturb(0, 9.0, &mut out);
+        assert_eq!(out.fixed, 0.5);
+        // First dispatch at/after onset: stalled once.
+        st.perturb(0, 12.0, &mut out);
+        assert_eq!(out.fixed, 5.5);
+        st.perturb(0, 13.0, &mut out);
+        assert_eq!(out.fixed, 5.5); // consumed
+        // Slowdown applies inside the window only, to the right worker.
+        let mut o1 = WorkerOutcome { work: 2.0, fixed: 0.0 };
+        st.perturb(1, 15.0, &mut o1);
+        assert_eq!(o1.work, 4.0);
+        st.perturb(1, 20.0, &mut o1); // window [10, 20) closed
+        assert_eq!(o1.work, 4.0);
+        let mut o0 = WorkerOutcome { work: 2.0, fixed: 0.0 };
+        st.perturb(0, 15.0, &mut o0); // other worker: no slowdown
+        assert_eq!(o0.work, 2.0);
+    }
+
+    #[test]
+    fn crash_does_not_perturb_outcomes() {
+        let p = FaultPlan::parse("crash:0@10").unwrap();
+        let mut st = p.state();
+        let mut out = WorkerOutcome { work: 1.0, fixed: 0.0 };
+        st.perturb(0, 20.0, &mut out);
+        assert_eq!(out.work, 1.0);
+        assert_eq!(out.fixed, 0.0);
+    }
+
+    #[test]
+    fn detector_cfg_parses_and_validates() {
+        let d = DetectorCfg::parse("grace=6,floor=12,late=drop").unwrap();
+        assert_eq!(d.grace, 6.0);
+        assert_eq!(d.floor_s, 12.0);
+        assert_eq!(d.late, LatePolicy::Drop);
+        // Defaults fill missing keys.
+        let d = DetectorCfg::parse("grace=2").unwrap();
+        assert_eq!(d.floor_s, DetectorCfg::default().floor_s);
+        assert_eq!(d.late, LatePolicy::Readmit);
+        for bad in ["", "grace=0", "grace=-1", "floor=0", "late=maybe", "bogus=1"] {
+            assert!(DetectorCfg::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn autoscaler_cfg_parses_and_validates() {
+        let a = AutoscalerCfg::parse("pool=2,cold=12,floor=3,backoff=4,cap=64,jitter=0.2,fail=0.1,retries=5,tput=0.5").unwrap();
+        assert_eq!(a.pool, 2);
+        assert_eq!(a.cold_s, 12.0);
+        assert_eq!(a.floor, 3);
+        assert_eq!(a.backoff_s, 4.0);
+        assert_eq!(a.cap_s, 64.0);
+        assert_eq!(a.jitter, 0.2);
+        assert_eq!(a.fail_p, 0.1);
+        assert_eq!(a.retries, 5);
+        assert!(!a.ride_out);
+        assert_eq!(a.tput, 0.5);
+        let a = AutoscalerCfg::parse("pool=1,cold=5,ride").unwrap();
+        assert!(a.ride_out);
+        for bad in [
+            "",
+            "pool=x",
+            "cold=-1",
+            "jitter=1.5",
+            "fail=2",
+            "tput=1",
+            "cap=1,backoff=5",
+            "nonsense=3",
+        ] {
+            assert!(AutoscalerCfg::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn autoscaler_spawns_to_the_floor_with_cold_start() {
+        let cfg = AutoscalerCfg::parse("pool=2,cold=10").unwrap();
+        let mut a = Autoscaler::new(cfg, 3, 42);
+        assert_eq!(a.floor(), 3); // floor=0 resolves to the initial live count
+        // Fleet healthy: nothing to do.
+        assert!(!a.wants_spawn(3, 0.0, None));
+        assert_eq!(a.next_event(3, None), None);
+        // One worker gone: spawn, cold start 10s.
+        assert!(a.wants_spawn(2, 5.0, None));
+        match a.try_spawn(5.0) {
+            SpawnOutcome::Started { ready_at } => assert_eq!(ready_at, 15.0),
+            other => panic!("expected Started, got {other:?}"),
+        }
+        assert_eq!(a.pool_left(), 1);
+        // The cold-starting replacement counts toward the target.
+        assert!(!a.wants_spawn(2, 6.0, None));
+        assert_eq!(a.next_event(2, None), Some(15.0));
+        // Not ready early; ready at its time.
+        assert_eq!(a.take_ready(14.9), None);
+        assert_eq!(a.take_ready(15.0), Some(15.0));
+        assert_eq!(a.pending_count(), 0);
+    }
+
+    #[test]
+    fn autoscaler_backs_off_exponentially_and_gives_up() {
+        let cfg = AutoscalerCfg::parse("pool=1,cold=1,backoff=4,cap=16,fail=1,retries=3").unwrap();
+        let mut a = Autoscaler::new(cfg, 2, 7);
+        let mut now = 0.0;
+        let mut gaps = Vec::new();
+        loop {
+            assert!(a.wants_spawn(1, now, None) || a.attempts() > 0);
+            match a.try_spawn(now) {
+                SpawnOutcome::Failed { retry_at } => {
+                    gaps.push(retry_at - now);
+                    now = retry_at;
+                }
+                SpawnOutcome::GaveUp => break,
+                SpawnOutcome::Started { .. } => panic!("fail=1 cannot succeed"),
+            }
+        }
+        // 4, 8, 16 (capped) then give-up on the 4th attempt.
+        assert_eq!(gaps, vec![4.0, 8.0, 16.0]);
+        assert!(!a.wants_spawn(1, now, None));
+        assert_eq!(a.next_event(1, None), None);
+    }
+
+    #[test]
+    fn autoscaler_jitter_stays_within_bounds_and_is_seeded() {
+        let cfg = AutoscalerCfg::parse("pool=1,cold=1,backoff=10,cap=10,fail=1,retries=6,jitter=0.5").unwrap();
+        let gaps = |seed: u64| -> Vec<f64> {
+            let mut a = Autoscaler::new(cfg.clone(), 2, seed);
+            let mut now = 0.0;
+            let mut out = Vec::new();
+            loop {
+                match a.try_spawn(now) {
+                    SpawnOutcome::Failed { retry_at } => {
+                        out.push(retry_at - now);
+                        now = retry_at;
+                    }
+                    SpawnOutcome::GaveUp => break,
+                    SpawnOutcome::Started { .. } => unreachable!(),
+                }
+            }
+            out
+        };
+        let a = gaps(1);
+        for &g in &a {
+            assert!(g >= 5.0 && g <= 15.0, "jittered gap {g} outside ±50%");
+        }
+        // Deterministic under the seed; decorrelated across seeds.
+        assert_eq!(a, gaps(1));
+        assert_ne!(a, gaps(2));
+    }
+
+    #[test]
+    fn autoscaler_ride_out_never_spawns() {
+        let cfg = AutoscalerCfg::parse("pool=4,cold=1,ride").unwrap();
+        let a = Autoscaler::new(cfg, 3, 0);
+        assert!(!a.wants_spawn(0, 100.0, None));
+        assert_eq!(a.next_event(0, None), None);
+    }
+
+    #[test]
+    fn throughput_trigger_fires_on_dip_below_best() {
+        let cfg = AutoscalerCfg::parse("pool=1,cold=1,floor=1,tput=0.5").unwrap();
+        let mut a = Autoscaler::new(cfg, 2, 0);
+        a.observe_throughput(100.0);
+        // Live count satisfies the floor, throughput fine: no spawn.
+        assert!(!a.wants_spawn(2, 0.0, Some(80.0)));
+        // Throughput collapses below 50% of best: spawn even above floor.
+        assert!(a.wants_spawn(2, 0.0, Some(40.0)));
+        let _ = a.try_spawn(0.0);
+        // With a replacement pending the trigger quiesces.
+        assert!(!a.wants_spawn(2, 0.5, Some(40.0)));
+    }
+}

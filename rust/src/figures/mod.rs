@@ -465,7 +465,7 @@ pub fn fig_revocation(seed: u64) -> Table {
             AvailTrace::constant(),
         ],
     };
-    let plan = MembershipPlan::from_traces(&traces, 20.0);
+    let plan = MembershipPlan::from_traces(&traces, 20.0).unwrap();
     let r = run(sim("resnet", &[9, 12, 18], Policy::Dynamic, 200, seed)
         .adjust_cost(5.0)
         .traces(traces)

@@ -28,6 +28,10 @@
 //!   (Amdahl scaling, throughput-vs-batch curves — paper Fig. 5) and
 //!   time-varying availability traces (interference, spot preemptions)
 //!   that drive simulated *and* real runs.
+//! - [`fault`]: fault injection (crash / stall / slowdown), the
+//!   progress-deadline failure detector config, and the autoscaled
+//!   recovery policy that together close the unannounced-churn loop
+//!   (DESIGN.md §12).
 //! - [`data`], [`metrics`], [`config`], [`figures`], [`util`]:
 //!   synthetic datasets, measurement, policy selection, figure
 //!   harnesses, and std-only substrates (JSON, RNG, CLI, stats, bench,
@@ -42,6 +46,7 @@ pub mod cluster;
 pub mod config;
 pub mod controller;
 pub mod data;
+pub mod fault;
 pub mod figures;
 pub mod metrics;
 pub mod ps;
@@ -52,6 +57,7 @@ pub mod trace;
 pub mod util;
 
 pub use config::Policy;
+pub use fault::{Autoscaler, AutoscalerCfg, DetectorCfg, FaultPlan, LatePolicy};
 pub use session::{
     Backend, BspAgg, RealBackend, Scheduler, Session, SessionBuilder, SimBackend,
     Slowdowns, WorkerOutcome,

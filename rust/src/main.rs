@@ -14,6 +14,7 @@
 
 use hetero_batch::cluster::{cpu_cluster, hlevel_split};
 use hetero_batch::config::Policy;
+use hetero_batch::fault::{AutoscalerCfg, DetectorCfg, FaultPlan};
 use hetero_batch::figures;
 use hetero_batch::runtime::Runtime;
 use hetero_batch::session::{Scheduler, Session, SessionBuilder, Slowdowns};
@@ -39,6 +40,31 @@ fn apply_membership_flags(
     if !join.is_empty() {
         let joins = JoinSpec::parse_list(&join).ok_or("bad --join")?;
         builder = builder.joins(&joins);
+    }
+    Ok(builder)
+}
+
+/// Parse the shared fault-tolerance flags (`--faults`, `--detect`,
+/// `--autoscale`; DESIGN.md §12) and fold them into the builder.  Like
+/// the membership flags, both subcommands validate these before any
+/// artifact is opened, with matching error text.
+fn apply_fault_flags(builder: SessionBuilder, a: &Args) -> Result<SessionBuilder, String> {
+    let mut builder = builder;
+    let faults = a.get("faults");
+    if !faults.is_empty() {
+        let plan = FaultPlan::parse(&faults).map_err(|e| format!("bad --faults: {e}"))?;
+        builder = builder.faults(plan);
+    }
+    let detect = a.get("detect");
+    if !detect.is_empty() {
+        let cfg = DetectorCfg::parse(&detect).map_err(|e| format!("bad --detect: {e}"))?;
+        builder = builder.detector(cfg);
+    }
+    let autoscale = a.get("autoscale");
+    if !autoscale.is_empty() {
+        let cfg =
+            AutoscalerCfg::parse(&autoscale).map_err(|e| format!("bad --autoscale: {e}"))?;
+        builder = builder.autoscale(cfg);
     }
     Ok(builder)
 }
@@ -96,6 +122,9 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         .opt("seed", "0", "rng seed")
         .opt("spot", "", "spot churn mttf:down[:grace] (s): revoke/rejoin workers")
         .opt("join", "", "scheduled joins k@t[,k@t..]: worker k first appears at t")
+        .opt("faults", "", "fault schedule crash:W@T | stall:W@T:D | slow:W@T:F:D, comma-joined")
+        .opt("detect", "", "failure detector grace=G,floor=S,late=readmit|drop")
+        .opt("autoscale", "", "autoscaler pool=N,cold=S[,floor=K,backoff=S,cap=S,jitter=J,fail=P,retries=N,ride,tput=F]")
         .opt("scheduler", "heap", "event scheduling: heap (O(log k)) | scan (O(k) baseline)")
         .opt("report-sample", "1", "keep every n-th round/update record (bounds report memory at large k)")
         .opt("config", "", "JSON config file (explicit CLI flags override)")
@@ -137,6 +166,7 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         builder = builder.report_sample(a.get_u64("report-sample"));
     }
     let builder = apply_membership_flags(builder, &a)?;
+    let builder = apply_fault_flags(builder, &a)?;
     builder.validate()?;
 
     let r = builder
@@ -158,6 +188,9 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .opt("seed", "0", "rng seed")
         .opt("spot", "", "spot churn mttf:down[:grace] (s): revoke/rejoin workers")
         .opt("join", "", "scheduled joins k@t[,k@t..]: worker k first appears at t")
+        .opt("faults", "", "fault schedule crash:W@T | stall:W@T:D | slow:W@T:F:D, comma-joined")
+        .opt("detect", "", "failure detector grace=G,floor=S,late=readmit|drop")
+        .opt("autoscale", "", "autoscaler pool=N,cold=S[,floor=K,backoff=S,cap=S,jitter=J,fail=P,retries=N,ride,tput=F]")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("loss-target", "0", "stop early at this train loss (0 = off)")
         .opt("eval-every", "0", "run an eval step every N global steps (0 = never)")
@@ -195,6 +228,7 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .scheduler(Scheduler::parse(&a.get("scheduler")).ok_or("bad --scheduler")?)
         .slowdowns(Slowdowns::from_cores(&cores));
     let builder = apply_membership_flags(builder, &a)?;
+    let builder = apply_fault_flags(builder, &a)?;
     builder.validate()?;
 
     let mut runtime = Runtime::open(a.get("artifacts")).map_err(|e| e.to_string())?;

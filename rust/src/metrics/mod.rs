@@ -56,6 +56,73 @@ pub struct EpochEvent {
     pub batches: Vec<f64>,
 }
 
+/// What the failure detector decided about a worker (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DetectorAction {
+    /// Missed its progress deadline: provisionally retired.
+    Suspect,
+    /// Late completion arrived under `late=readmit`: rejoined.
+    Readmit,
+}
+
+impl DetectorAction {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DetectorAction::Suspect => "suspect",
+            DetectorAction::Readmit => "readmit",
+        }
+    }
+}
+
+/// One failure-detector decision.
+#[derive(Debug, Clone)]
+pub struct DetectorEvent {
+    pub time: f64,
+    pub worker: usize,
+    pub action: DetectorAction,
+}
+
+/// One autoscaler provisioning step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpawnAction {
+    /// Spawn request accepted; cold start begins.
+    Request,
+    /// Spawn attempt failed; backoff scheduled.
+    Fail,
+    /// Cold start finished; replacement joined the fleet.
+    Ready,
+    /// Retry budget exhausted; autoscaler stopped trying.
+    GaveUp,
+    /// Replacement became ready but no rank needed it (e.g. the
+    /// suspected worker was readmitted first): capacity paid for
+    /// nothing — the cost-vs-time curves count these.
+    Wasted,
+}
+
+impl SpawnAction {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpawnAction::Request => "request",
+            SpawnAction::Fail => "fail",
+            SpawnAction::Ready => "ready",
+            SpawnAction::GaveUp => "gave_up",
+            SpawnAction::Wasted => "wasted",
+        }
+    }
+}
+
+/// One autoscaler event (provisioning requests, failures, joins).
+#[derive(Debug, Clone)]
+pub struct SpawnEvent {
+    pub time: f64,
+    /// Rank the event concerns (None for pool-level events like a
+    /// failed attempt or give-up).
+    pub worker: Option<usize>,
+    pub action: SpawnAction,
+    /// Consecutive failed attempts at the time of the event.
+    pub attempt: u32,
+}
+
 /// Complete record of one training run.
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
@@ -64,6 +131,10 @@ pub struct RunReport {
     pub adjustments: Vec<AdjustEvent>,
     /// Membership-epoch transitions (spot revocations / mid-run joins).
     pub epochs: Vec<EpochEvent>,
+    /// Failure-detector decisions (suspicions and readmissions).
+    pub suspicions: Vec<DetectorEvent>,
+    /// Autoscaler provisioning events.
+    pub spawns: Vec<SpawnEvent>,
     /// (time, global_iter, loss) samples — real-execution runs only.
     pub losses: Vec<(f64, u64, f64)>,
     /// Periodic eval results (`SessionBuilder::eval_every`) — real runs only.
@@ -181,6 +252,37 @@ impl RunReport {
                 })
                 .collect();
             o.set("epochs", Json::Arr(evs));
+        }
+        if !self.suspicions.is_empty() {
+            let evs: Vec<Json> = self
+                .suspicions
+                .iter()
+                .map(|e| {
+                    let mut eo = Json::obj();
+                    eo.set("time_s", Json::Num(e.time));
+                    eo.set("worker", Json::Num(e.worker as f64));
+                    eo.set("action", Json::Str(e.action.label().into()));
+                    eo
+                })
+                .collect();
+            o.set("suspicions", Json::Arr(evs));
+        }
+        if !self.spawns.is_empty() {
+            let evs: Vec<Json> = self
+                .spawns
+                .iter()
+                .map(|e| {
+                    let mut eo = Json::obj();
+                    eo.set("time_s", Json::Num(e.time));
+                    if let Some(w) = e.worker {
+                        eo.set("worker", Json::Num(w as f64));
+                    }
+                    eo.set("action", Json::Str(e.action.label().into()));
+                    eo.set("attempt", Json::Num(e.attempt as f64));
+                    eo
+                })
+                .collect();
+            o.set("spawns", Json::Arr(evs));
         }
         let stats = self.worker_time_stats(k);
         let mut workers = Vec::new();
@@ -325,6 +427,40 @@ mod tests {
         assert_eq!(e.get("worker").as_i64(), Some(2));
         assert_eq!(e.get("live").as_i64(), Some(3));
         assert_eq!(e.get("batches").idx(1).as_f64(), Some(32.0));
+    }
+
+    #[test]
+    fn detector_and_spawn_events_serialize_to_json() {
+        let mut r = RunReport::new("t");
+        let j = r.to_json(1);
+        assert!(j.get("suspicions").is_null());
+        assert!(j.get("spawns").is_null());
+        r.suspicions.push(DetectorEvent {
+            time: 3.0,
+            worker: 1,
+            action: DetectorAction::Suspect,
+        });
+        r.spawns.push(SpawnEvent {
+            time: 4.0,
+            worker: None,
+            action: SpawnAction::Fail,
+            attempt: 2,
+        });
+        r.spawns.push(SpawnEvent {
+            time: 9.0,
+            worker: Some(1),
+            action: SpawnAction::Ready,
+            attempt: 0,
+        });
+        let j = Json::parse(&r.to_json(2).to_string()).unwrap();
+        let s = j.get("suspicions").idx(0);
+        assert_eq!(s.get("action").as_str(), Some("suspect"));
+        assert_eq!(s.get("worker").as_i64(), Some(1));
+        let f = j.get("spawns").idx(0);
+        assert_eq!(f.get("action").as_str(), Some("fail"));
+        assert!(f.get("worker").is_null());
+        assert_eq!(f.get("attempt").as_i64(), Some(2));
+        assert_eq!(j.get("spawns").idx(1).get("action").as_str(), Some("ready"));
     }
 
     #[test]

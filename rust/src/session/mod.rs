@@ -53,7 +53,13 @@ use crate::cluster::{cpu_cluster, GpuModel, WorkerSpec};
 use crate::config::Policy;
 use crate::controller::bucket::quantize_alloc;
 use crate::controller::{Adjustment, ControllerCfg, DynamicBatcher};
-use crate::metrics::{AdjustEvent, EpochEvent, EvalRecord, IterRecord, RunReport};
+use crate::fault::{
+    Autoscaler, AutoscalerCfg, DetectorCfg, FaultPlan, LatePolicy, SpawnOutcome,
+};
+use crate::metrics::{
+    AdjustEvent, DetectorAction, DetectorEvent, EpochEvent, EvalRecord, IterRecord,
+    RunReport, SpawnAction, SpawnEvent,
+};
 use crate::runtime::Runtime;
 use crate::sync::{SyncMode, SyncState};
 use crate::trace::{
@@ -164,6 +170,15 @@ pub trait Backend {
     fn admit_worker(&mut self, _w: usize) -> Result<()> {
         Ok(())
     }
+
+    /// Fault-injection hook (DESIGN.md §12): the session hands the run's
+    /// [`FaultPlan`] over before the first wave.  Backends that honour it
+    /// keep a [`crate::fault::FaultState`] and perturb each outcome at
+    /// dispatch (stall/slow); crashes never reach the backend — the
+    /// session suppresses the completion event itself.  Default: no-op
+    /// (faults silently don't fire — the builder rejects fault plans the
+    /// session can't enforce, so this only matters for custom backends).
+    fn set_fault_plan(&mut self, _plan: &FaultPlan) {}
 }
 
 /// Event-scheduling implementation of the [`Session::run`] loop
@@ -265,6 +280,9 @@ pub struct SessionBuilder {
     slowdowns: Option<Slowdowns>,
     membership: Option<MembershipPlan>,
     spot: Option<SpotSpec>,
+    faults: Option<FaultPlan>,
+    detector: Option<DetectorCfg>,
+    autoscale: Option<AutoscalerCfg>,
     eval_every: u64,
     pool_threads: usize,
     prefetch: bool,
@@ -292,6 +310,9 @@ impl Default for SessionBuilder {
             slowdowns: None,
             membership: None,
             spot: None,
+            faults: None,
+            detector: None,
+            autoscale: None,
             eval_every: 0,
             pool_threads: 4,
             prefetch: true,
@@ -427,6 +448,34 @@ impl SessionBuilder {
         }
         let plan = MembershipPlan::default().with_joins(joins);
         self.membership(plan)
+    }
+
+    /// Fault-injection schedule (`--faults crash:W@T,stall:W@T:D,...`):
+    /// unannounced crashes, mid-run stalls, slowdown spikes — none of
+    /// which the membership plan knows about (DESIGN.md §12).  Crash
+    /// faults require a failure [`Self::detector`]; nothing else can
+    /// reclaim the crashed rank.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Progress-deadline failure detector (`--detect
+    /// grace=4,floor=30,late=readmit`): suspect any worker in flight
+    /// past `max(floor, grace × smoothed-iteration-time)` and
+    /// provisionally retire it through the revocation path.
+    pub fn detector(mut self, cfg: DetectorCfg) -> Self {
+        self.detector = Some(cfg);
+        self
+    }
+
+    /// Autoscaled recovery (`--autoscale pool=2,cold=30,...`): spawn
+    /// replacements from a provisioning pool when the live count falls
+    /// below the capacity floor (with cold start, backoff + jitter on
+    /// failed spawns, and a ride-out option).
+    pub fn autoscale(mut self, cfg: AutoscalerCfg) -> Self {
+        self.autoscale = Some(cfg);
+        self
     }
 
     /// Evaluate every N global steps (real backend; 0 = never).
@@ -599,6 +648,23 @@ impl SessionBuilder {
                 JoinSpec::parse_list(s).ok_or(format!("bad join {s:?}"))?;
             b = b.joins(&joins);
         }
+        // Robustness keys (DESIGN.md §12), same string shapes as the
+        // CLI flags.
+        if let Some(s) = j.get("faults").as_str() {
+            let plan =
+                FaultPlan::parse(s).map_err(|e| format!("bad faults {s:?}: {e}"))?;
+            b = b.faults(plan);
+        }
+        if let Some(s) = j.get("detect").as_str() {
+            let cfg =
+                DetectorCfg::parse(s).map_err(|e| format!("bad detect {s:?}: {e}"))?;
+            b = b.detector(cfg);
+        }
+        if let Some(s) = j.get("autoscale").as_str() {
+            let cfg = AutoscalerCfg::parse(s)
+                .map_err(|e| format!("bad autoscale {s:?}: {e}"))?;
+            b = b.autoscale(cfg);
+        }
         b.validate()?;
         Ok(b)
     }
@@ -671,6 +737,37 @@ impl SessionBuilder {
                 return Err("no initially-live workers (every rank is join_at)".into());
             }
         }
+        if let Some(plan) = &self.faults {
+            if let Some(mw) = plan.max_worker() {
+                if mw >= k {
+                    return Err(format!(
+                        "fault event for worker {mw} but only {k} workers"
+                    ));
+                }
+            }
+            // An unannounced crash makes its rank's iteration never
+            // complete; without a detector nothing can reclaim it and a
+            // BSP run hangs at the barrier until the update cap.
+            if plan.has_crash() && self.detector.is_none() {
+                return Err(
+                    "crash faults need a failure detector (--detect); \
+                     nothing else can reclaim the crashed rank"
+                        .into(),
+                );
+            }
+        }
+        if let Some(d) = &self.detector {
+            d.validate()?;
+        }
+        if let Some(a) = &self.autoscale {
+            a.validate()?;
+            if a.floor > k {
+                return Err(format!(
+                    "autoscaler floor {} exceeds the cluster size {k}",
+                    a.floor
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -709,11 +806,18 @@ impl SessionBuilder {
         // retained sibling partials to rebuild from.
         let bsp_agg = if matches!(self.sync, SyncMode::Bsp) {
             if self.eager_agg {
+                // Detector suspicions and autoscaled joins are
+                // membership transitions too — a faulted/detected run
+                // needs the retained sibling partials just like a spot
+                // run does.
                 let elastic = self.spot.is_some()
                     || self
                         .membership
                         .as_ref()
-                        .map_or(false, |p| !p.events().is_empty());
+                        .map_or(false, |p| !p.events().is_empty())
+                    || self.faults.is_some()
+                    || self.detector.is_some()
+                    || self.autoscale.is_some();
                 Some(real::BspAgg::Eager(if elastic {
                     crate::ps::RetainPolicy::Retain
                 } else {
@@ -780,7 +884,8 @@ impl SessionBuilder {
                     spec.down_s,
                     self.seed ^ SPOT_SEED_TAG,
                 );
-                let derived = MembershipPlan::from_traces(&traces, spec.grace_s);
+                let derived = MembershipPlan::from_traces(&traces, spec.grace_s)
+                    .map_err(|e| anyhow!("bad spot grace: {e}"))?;
                 let membership = match &self.membership {
                     Some(p) => p.clone().merged(&derived),
                     None => derived,
@@ -812,6 +917,10 @@ impl SessionBuilder {
                 .unwrap_or_else(|| Slowdowns::none(k)),
             traces,
             membership,
+            seed: self.seed,
+            faults: self.faults.clone(),
+            detector: self.detector.clone(),
+            autoscale: self.autoscale.clone(),
         })
     }
 }
@@ -832,6 +941,10 @@ pub struct Session<B: Backend> {
     slowdowns: Slowdowns,
     traces: ClusterTraces,
     membership: MembershipPlan,
+    seed: u64,
+    faults: Option<FaultPlan>,
+    detector: Option<DetectorCfg>,
+    autoscale: Option<AutoscalerCfg>,
 }
 
 impl Session<SimBackend> {
@@ -915,6 +1028,12 @@ impl<B: Backend> Session<B> {
             if !live[w] {
                 self.backend.retire_worker(w)?;
             }
+        }
+        // Hand the fault schedule to the backend: stall/slow faults
+        // perturb outcomes at dispatch; crash faults are enforced
+        // loop-side by suppressing the completion event (DESIGN.md §12).
+        if let Some(plan) = &self.faults {
+            self.backend.set_fault_plan(plan);
         }
         let is_bsp = matches!(self.sync, SyncMode::Bsp);
         let buckets = self.backend.buckets();
@@ -1001,6 +1120,21 @@ impl<B: Backend> Session<B> {
             iter_seen: 0,
             loss_seen: 0,
             discount_cache: vec![f64::NAN; DISCOUNT_MEMO],
+            deadline: vec![f64::INFINITY; k],
+            deadline_heap: BinaryHeap::new(),
+            suspected: vec![false; k],
+            pending_arrival: vec![f64::INFINITY; k],
+            arrivals: Vec::new(),
+            obs_sum: vec![0.0; k],
+            obs_n: vec![0; k],
+            track_obs: self.detector.is_some()
+                || self.autoscale.as_ref().map_or(false, |a| a.tput > 0.0),
+            n_plan_revoked: 0,
+            n_suspected: 0,
+            ascaler: self
+                .autoscale
+                .as_ref()
+                .map(|cfg| Autoscaler::new(cfg.clone(), n_live, self.seed)),
         };
         if st.heap_mode {
             // Every initially-live worker is idle at clock 0 = the live
@@ -1017,14 +1151,39 @@ impl<B: Backend> Session<B> {
             // timestamps — the plan is pre-sorted).
             while events.front().map_or(false, |e| e.time <= st.t) {
                 let ev = events.pop_front().unwrap();
+                if ev.kind == MembershipKind::Revoke && st.live[ev.worker] {
+                    st.n_plan_revoked += 1;
+                }
                 self.apply_membership(ev, &mut st, &mut report)?;
                 if st.stopped_early {
                     // A revocation-forced barrier can hit the loss target.
                     break 'training;
                 }
             }
+            // Autoscaler actuation: admit replacements whose cold start
+            // finished, then run any due spawn attempts (DESIGN.md §12).
+            self.autoscale_step(&mut st, &mut report)?;
             if st.sync.live_count() == 0 && events.is_empty() {
-                bail!("all workers revoked and no rejoin scheduled");
+                // Autoscaler-aware bail: a pending replacement (cold
+                // start in progress / retry scheduled) or a readmittable
+                // late arrival can still rescue an empty fleet — wait
+                // them out instead of erroring.
+                let rescue = st
+                    .arrivals
+                    .iter()
+                    .any(|&w| st.pending_arrival[w].is_finite())
+                    || st
+                        .ascaler
+                        .as_ref()
+                        .map_or(false, |a| a.next_event(0, None).is_some());
+                if !rescue {
+                    bail!(
+                        "all workers are gone ({} plan-revoked, {} detector-suspected) \
+                         and no rejoin, late arrival, or autoscaled replacement is pending",
+                        st.n_plan_revoked,
+                        st.n_suspected
+                    );
+                }
             }
 
             // Start every idle live worker the sync gate admits, as one
@@ -1062,6 +1221,15 @@ impl<B: Backend> Session<B> {
                         + out.fixed;
                     st.started_at[w] = st.t;
                     st.next_done[w] = st.t + dur;
+                    // Unannounced crash: an iteration in flight at (or
+                    // dispatched after) the crash instant never
+                    // completes.  Only the failure detector below can
+                    // reclaim the rank.
+                    if let Some(faults) = &self.faults {
+                        if faults.crash_time(w).map_or(false, |ct| ct < st.next_done[w]) {
+                            st.next_done[w] = f64::INFINITY;
+                        }
+                    }
                     st.busy[w] = true;
                     // The batch this iteration actually runs with — a
                     // mid-flight membership rebalance must not relabel it.
@@ -1073,6 +1241,23 @@ impl<B: Backend> Session<B> {
                             worker: w,
                             gen: st.gen[w],
                         });
+                    }
+                    // Arm the progress deadline: miss
+                    // max(floor, grace × smoothed-iteration-time) and the
+                    // detector suspects the worker.  With no estimate yet
+                    // (cold start) the floor is the whole budget.
+                    if let Some(det) = &self.detector {
+                        let budget = st
+                            .est_iter_time(w)
+                            .map_or(det.floor_s, |e| (det.grace * e).max(det.floor_s));
+                        st.deadline[w] = st.t + budget;
+                        if st.heap_mode {
+                            st.deadline_heap.push(DoneEntry {
+                                time: st.deadline[w],
+                                worker: w,
+                                gen: st.gen[w],
+                            });
+                        }
                     }
                 }
             }
@@ -1089,8 +1274,48 @@ impl<B: Backend> Session<B> {
                 (0..k)
                     .filter(|&w| st.busy[w])
                     .min_by(|&a, &b| st.next_done[a].total_cmp(&st.next_done[b]))
-            };
+            }
+            // A crash-suppressed iteration never completes — it must not
+            // drag virtual time to infinity.  (The min-first orderings
+            // guarantee a finite completion is preferred when one
+            // exists, so filtering the winner is enough.)
+            .filter(|&w| st.next_done[w].is_finite());
             let next_event_t = events.front().map(|e| e.time);
+            // Detector deadlines, late arrivals, and autoscaler timers
+            // are a third event source.  An aux event pre-empts only
+            // when *strictly* earlier than both the next completion and
+            // the next membership event: a worker completing exactly at
+            // its deadline survives, and plan-driven transitions outrank
+            // synthesized ones at equal timestamps (the bitwise lock of
+            // detector-retire == plan-revoke depends on this).
+            if let Some((ta, aux)) = st.next_aux() {
+                let beats_completion =
+                    next_completion.map_or(true, |w| ta < st.next_done[w]);
+                let beats_event = next_event_t.map_or(true, |te| ta < te);
+                if beats_completion && beats_event {
+                    st.t = st.t.max(ta);
+                    match aux {
+                        AuxEvent::Deadline(w) => {
+                            if st.heap_mode {
+                                st.deadline_heap.pop(); // `w`'s validated entry
+                            }
+                            self.suspect(w, &mut st, &mut report)?;
+                            if st.stopped_early {
+                                // A suspicion-forced barrier can hit the
+                                // loss target.
+                                break 'training;
+                            }
+                        }
+                        AuxEvent::Arrival(w) => {
+                            self.late_arrival(w, &mut st, &mut report)?;
+                        }
+                        // Provisioning timer: the loop-top autoscale
+                        // step acts at the new time.
+                        AuxEvent::Spawn => {}
+                    }
+                    continue 'training;
+                }
+            }
             let w = match (next_completion, next_event_t) {
                 (Some(w), Some(te)) if te < st.next_done[w] => {
                     st.t = st.t.max(te);
@@ -1111,6 +1336,15 @@ impl<B: Backend> Session<B> {
             let dur = st.next_done[w] - st.started_at[w];
             st.t = st.t.max(st.next_done[w]);
             st.busy[w] = false;
+            st.deadline[w] = f64::INFINITY;
+            if st.track_obs {
+                // Loop-side cumulative mean of observed durations: the
+                // deadline/throughput estimate for runs without a
+                // dynamic controller (whose smoothed estimate is
+                // preferred when present).
+                st.obs_sum[w] += dur;
+                st.obs_n[w] += 1;
+            }
             let clock = st.sync.clock(w);
             let staleness = st.sync.push_update(w);
             st.updates += 1;
@@ -1366,6 +1600,18 @@ impl<B: Backend> Session<B> {
                 self.rebalance_membership(st, MembershipKind::Revoke, w);
             }
             MembershipKind::Join => {
+                // Any (re)admission clears suspicion state — whether it
+                // is the detector's own readmit, a plan-scheduled
+                // rejoin, or an autoscaled replacement taking the rank.
+                // Centralized here (before the idempotence early-return)
+                // so a pending late arrival can never fire for a rank
+                // that is already live again.
+                if st.suspected[w] {
+                    st.suspected[w] = false;
+                    st.pending_arrival[w] = f64::INFINITY;
+                    st.arrivals.retain(|&x| x != w);
+                    st.n_suspected = st.n_suspected.saturating_sub(1);
+                }
                 if st.live[w] {
                     return Ok(());
                 }
@@ -1430,6 +1676,174 @@ impl<B: Backend> Session<B> {
                 st.batches.extend_from_slice(&st.alloc_buf);
             }
         }
+    }
+
+    /// Detector suspicion (DESIGN.md §12): worker `w` missed its
+    /// progress deadline while in flight.  Provisionally retire it
+    /// through the same path a plan revocation takes — same epoch
+    /// accounting, same forced-barrier handling, same rebalance — so a
+    /// detector-driven retire is bitwise identical to a plan-driven
+    /// revoke at the same event time.  Under `late=readmit`, the
+    /// in-flight completion (when one is still coming — crashes never
+    /// complete) is remembered as a pending late arrival that reverses
+    /// the suspicion.
+    fn suspect(
+        &mut self,
+        w: usize,
+        st: &mut LoopState,
+        report: &mut RunReport,
+    ) -> Result<()> {
+        debug_assert!(st.live[w] && st.busy[w], "suspicion of a non-running worker");
+        st.deadline[w] = f64::INFINITY;
+        st.suspected[w] = true;
+        st.n_suspected += 1;
+        let readmit = self
+            .detector
+            .as_ref()
+            .map_or(false, |d| d.late == LatePolicy::Readmit);
+        if readmit && st.next_done[w].is_finite() {
+            st.pending_arrival[w] = st.next_done[w];
+            st.arrivals.push(w);
+        }
+        report.suspicions.push(DetectorEvent {
+            time: st.t,
+            worker: w,
+            action: DetectorAction::Suspect,
+        });
+        self.apply_membership(
+            MembershipEvent {
+                time: st.t,
+                worker: w,
+                kind: MembershipKind::Revoke,
+            },
+            st,
+            report,
+        )
+    }
+
+    /// A suspected worker's in-flight iteration completed after all —
+    /// the suspicion was false.  Under `late=readmit` the worker rejoins
+    /// through the plan-join path (its late work is still discarded:
+    /// the round moved on without it).  The suspicion bookkeeping is
+    /// cleared inside `apply_membership`'s join arm.
+    fn late_arrival(
+        &mut self,
+        w: usize,
+        st: &mut LoopState,
+        report: &mut RunReport,
+    ) -> Result<()> {
+        debug_assert!(
+            st.suspected[w] && !st.live[w],
+            "late arrival for a non-suspected worker"
+        );
+        report.suspicions.push(DetectorEvent {
+            time: st.t,
+            worker: w,
+            action: DetectorAction::Readmit,
+        });
+        self.apply_membership(
+            MembershipEvent {
+                time: st.t,
+                worker: w,
+                kind: MembershipKind::Join,
+            },
+            st,
+            report,
+        )
+    }
+
+    /// Autoscaler actuation, run at the top of every loop iteration:
+    /// (1) admit replacements whose cold start has finished — each takes
+    /// the lowest vacant rank (never one still owed a late arrival) and
+    /// joins through the plan-join path; (2) run spawn attempts that are
+    /// due (fleet below the capacity floor, or smoothed throughput below
+    /// the trigger), with exponential backoff + jitter on failures.
+    fn autoscale_step(&mut self, st: &mut LoopState, report: &mut RunReport) -> Result<()> {
+        if st.ascaler.is_none() {
+            return Ok(());
+        }
+        let k = st.live.len();
+        // 1. Materialize finished cold starts as joins.
+        while let Some(_ready_at) = st.ascaler.as_mut().unwrap().take_ready(st.t) {
+            let rank = (0..k).find(|&w| {
+                !st.live[w] && !(st.suspected[w] && st.pending_arrival[w].is_finite())
+            });
+            match rank {
+                Some(w) => {
+                    report.spawns.push(SpawnEvent {
+                        time: st.t,
+                        worker: Some(w),
+                        action: SpawnAction::Ready,
+                        attempt: 0,
+                    });
+                    self.apply_membership(
+                        MembershipEvent {
+                            time: st.t,
+                            worker: w,
+                            kind: MembershipKind::Join,
+                        },
+                        st,
+                        report,
+                    )?;
+                }
+                None => {
+                    // Capacity arrived but every rank is live again (or
+                    // owed a late arrival): paid-for but unused — the
+                    // cost-vs-time curves count these.
+                    report.spawns.push(SpawnEvent {
+                        time: st.t,
+                        worker: None,
+                        action: SpawnAction::Wasted,
+                        attempt: 0,
+                    });
+                }
+            }
+        }
+        // 2. Run due spawn attempts.  The smoothed fleet throughput is
+        // only computed when the trigger is enabled.
+        let tput = if st.ascaler.as_ref().unwrap().cfg().tput > 0.0 {
+            st.fleet_tput()
+        } else {
+            None
+        };
+        if let Some(tp) = tput {
+            st.ascaler.as_mut().unwrap().observe_throughput(tp);
+        }
+        loop {
+            let live = st.sync.live_count();
+            let a = st.ascaler.as_mut().unwrap();
+            if !a.wants_spawn(live, st.t, tput) {
+                break;
+            }
+            let attempt = a.attempts();
+            match a.try_spawn(st.t) {
+                SpawnOutcome::Started { .. } => {
+                    report.spawns.push(SpawnEvent {
+                        time: st.t,
+                        worker: None,
+                        action: SpawnAction::Request,
+                        attempt,
+                    });
+                }
+                SpawnOutcome::Failed { .. } => {
+                    report.spawns.push(SpawnEvent {
+                        time: st.t,
+                        worker: None,
+                        action: SpawnAction::Fail,
+                        attempt: attempt + 1,
+                    });
+                }
+                SpawnOutcome::GaveUp => {
+                    report.spawns.push(SpawnEvent {
+                        time: st.t,
+                        worker: None,
+                        action: SpawnAction::GaveUp,
+                        attempt: attempt + 1,
+                    });
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -1528,6 +1942,53 @@ struct LoopState {
 
     /// Memoized staleness discounts (NaN = not yet computed).
     discount_cache: Vec<f64>,
+
+    // ----- failure detection & autoscaled recovery (DESIGN.md §12)
+    /// Per-worker progress deadline (INF = not armed / not in flight).
+    deadline: Vec<f64>,
+    /// Min-heap of armed deadlines (heap mode; lazy deletion shares the
+    /// completion heap's `gen` discipline — scan mode scans `deadline`).
+    deadline_heap: BinaryHeap<DoneEntry>,
+    /// Currently-suspected workers (provisionally retired, not yet
+    /// readmitted or replaced).
+    suspected: Vec<bool>,
+    /// Pending late-arrival time per suspected worker (INF = none).
+    pending_arrival: Vec<f64>,
+    /// Workers with a pending late arrival (small; scanned linearly).
+    arrivals: Vec<usize>,
+    /// Loop-side cumulative duration stats — the deadline estimate for
+    /// runs without a dynamic controller.
+    obs_sum: Vec<f64>,
+    obs_n: Vec<u64>,
+    track_obs: bool,
+    /// Plan-driven revocations applied (for the empty-fleet error).
+    n_plan_revoked: u64,
+    /// Workers currently suspected (readmits decrement).
+    n_suspected: u64,
+    ascaler: Option<Autoscaler>,
+}
+
+/// The third event source of the run loop (besides completions and
+/// plan-membership events): detector deadlines, late arrivals, and
+/// autoscaler timers.  Selection order at equal timestamps is
+/// Arrival < Deadline < Spawn, then lowest worker — fixed so both
+/// scheduler modes agree bitwise.
+enum AuxEvent {
+    Arrival(usize),
+    Deadline(usize),
+    Spawn,
+}
+
+/// Strict (time, kind-rank, worker) ordering for aux-event selection.
+fn aux_better(t: f64, rank: u8, w: usize, cur: &Option<(f64, u8, usize, AuxEvent)>) -> bool {
+    match cur {
+        None => true,
+        Some((ct, cr, cw, _)) => match t.total_cmp(ct) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => (rank, w) < (*cr, *cw),
+        },
+    }
 }
 
 impl LoopState {
@@ -1610,6 +2071,101 @@ impl LoopState {
         let keep = self.loss_seen % self.report_sample == 0;
         self.loss_seen += 1;
         keep
+    }
+
+    /// Earliest valid armed deadline (heap mode), mirroring
+    /// [`Self::peek_completion`]'s lazy-deletion discipline: an entry is
+    /// stale once its worker completed (`busy` false), was revoked
+    /// (`live` false), or was redispatched (generation mismatch).
+    /// Leaves the valid entry on the heap — the caller pops it only when
+    /// the deadline actually fires.
+    fn peek_deadline(&mut self) -> Option<usize> {
+        while let Some(top) = self.deadline_heap.peek() {
+            let w = top.worker;
+            if self.live[w] && self.busy[w] && self.gen[w] == top.gen {
+                return Some(w);
+            }
+            self.deadline_heap.pop();
+        }
+        None
+    }
+
+    /// Cumulative mean observed iteration time (None until observed).
+    fn obs_mean(&self, w: usize) -> Option<f64> {
+        if self.obs_n[w] > 0 {
+            Some(self.obs_sum[w] / self.obs_n[w] as f64)
+        } else {
+            None
+        }
+    }
+
+    /// Best available iteration-time estimate for worker `w`: the
+    /// controller's smoothed estimate when a dynamic policy runs
+    /// (already maintained for joins), else the loop's cumulative mean.
+    fn est_iter_time(&self, w: usize) -> Option<f64> {
+        self.controller
+            .as_ref()
+            .and_then(|c| c.smoothed_iter_time(w))
+            .or_else(|| self.obs_mean(w))
+    }
+
+    /// Smoothed fleet throughput (examples/s): Σ over live workers of
+    /// batch / estimated iteration time.  None until any estimate exists.
+    fn fleet_tput(&self) -> Option<f64> {
+        let mut sum = 0.0;
+        let mut any = false;
+        for w in 0..self.live.len() {
+            if !self.live[w] {
+                continue;
+            }
+            if let Some(e) = self.est_iter_time(w) {
+                if e > 0.0 {
+                    sum += self.batches[w] / e;
+                    any = true;
+                }
+            }
+        }
+        if any {
+            Some(sum)
+        } else {
+            None
+        }
+    }
+
+    /// Earliest pending aux event: (time, event), or None when the
+    /// detector/autoscaler machinery is idle (fault-free runs without a
+    /// detector or autoscaler take this path every iteration — it must
+    /// stay O(1) there: no arrivals, empty deadline state, no
+    /// autoscaler).
+    fn next_aux(&mut self) -> Option<(f64, AuxEvent)> {
+        let mut best: Option<(f64, u8, usize, AuxEvent)> = None;
+        for &w in &self.arrivals {
+            let t = self.pending_arrival[w];
+            if t.is_finite() && aux_better(t, 0, w, &best) {
+                best = Some((t, 0, w, AuxEvent::Arrival(w)));
+            }
+        }
+        let dl = if self.heap_mode {
+            self.peek_deadline()
+        } else {
+            (0..self.live.len())
+                .filter(|&w| self.live[w] && self.busy[w] && self.deadline[w].is_finite())
+                .min_by(|&a, &b| self.deadline[a].total_cmp(&self.deadline[b]))
+        };
+        if let Some(w) = dl {
+            let t = self.deadline[w];
+            if t.is_finite() && aux_better(t, 1, w, &best) {
+                best = Some((t, 1, w, AuxEvent::Deadline(w)));
+            }
+        }
+        if let Some(a) = &self.ascaler {
+            if let Some(t) = a.next_event(self.sync.live_count(), None) {
+                if aux_better(t, 2, 0, &best) {
+                    best = Some((t, 2, 0, AuxEvent::Spawn));
+                }
+            }
+        }
+        best.map(|(t, _, _, ev)| (t, ev))
     }
 
     /// Staleness discount, memoized for small staleness values.  Sound
@@ -2046,5 +2602,163 @@ mod tests {
             .unwrap();
         assert_eq!(r.label, "mnist/uniform/ssp:2");
         assert!(r.total_iters > 0);
+    }
+
+    #[test]
+    fn builder_parses_fault_keys() {
+        let b = SessionBuilder::from_json_str(
+            r#"{
+                "workload": "mnist",
+                "faults": "stall:1@40:30,slow:2@10:1.5:20",
+                "detect": "grace=3,floor=10,late=drop",
+                "autoscale": "pool=2,cold=15,ride"
+            }"#,
+        )
+        .unwrap();
+        let plan = b.faults.as_ref().unwrap();
+        assert_eq!(plan.events().len(), 2);
+        let d = b.detector.as_ref().unwrap();
+        assert_eq!(d.grace, 3.0);
+        assert_eq!(d.floor_s, 10.0);
+        assert_eq!(d.late, LatePolicy::Drop);
+        let a = b.autoscale.as_ref().unwrap();
+        assert_eq!(a.pool, 2);
+        assert_eq!(a.cold_s, 15.0);
+        assert!(a.ride_out);
+        // Malformed specs fail at parse time, like --spot/--join.
+        assert!(SessionBuilder::from_json_str(r#"{"faults": "bogus"}"#).is_err());
+        assert!(SessionBuilder::from_json_str(r#"{"faults": "crash:x@3"}"#).is_err());
+        assert!(SessionBuilder::from_json_str(r#"{"detect": "grace=abc"}"#).is_err());
+        assert!(SessionBuilder::from_json_str(r#"{"autoscale": "pool=x"}"#).is_err());
+    }
+
+    #[test]
+    fn builder_rejects_bad_fault_configs() {
+        let crash = || FaultPlan::parse("crash:1@50").unwrap();
+        // A crash with no detector would hang the BSP barrier forever.
+        let b = SessionBuilder::default().cores(&[4, 8]).faults(crash());
+        assert!(b.validate().unwrap_err().contains("detector"));
+        // With a detector it is legal.
+        let b = SessionBuilder::default()
+            .cores(&[4, 8])
+            .faults(crash())
+            .detector(DetectorCfg::default());
+        assert!(b.validate().is_ok());
+        // Fault worker outside the cluster.
+        let b = SessionBuilder::default()
+            .cores(&[4, 8])
+            .faults(FaultPlan::parse("stall:5@10:30").unwrap());
+        assert!(b.validate().is_err());
+        // Detector / autoscaler parameter validation runs at build time
+        // (parse() already rejects grace=0, so construct directly).
+        let b = SessionBuilder::default().cores(&[4, 8]).detector(DetectorCfg {
+            grace: 0.0,
+            ..DetectorCfg::default()
+        });
+        assert!(b.validate().is_err());
+        let b = SessionBuilder::default()
+            .cores(&[4, 8])
+            .autoscale(AutoscalerCfg::parse("pool=1,floor=9").unwrap());
+        assert!(b.validate().unwrap_err().contains("floor"));
+    }
+
+    /// The ISSUE's acceptance scenario: a worker crashes unannounced
+    /// mid-BSP; the progress-deadline detector suspects it, retires it
+    /// through the revocation path, and the autoscaler's replacement
+    /// takes over the vacated rank — the run completes.
+    #[test]
+    fn crash_is_detected_and_autoscaled_replacement_recovers() {
+        let r = SessionBuilder::default()
+            .model("mnist")
+            .cores(&[4, 4, 8])
+            .policy(Policy::Dynamic)
+            .steps(60)
+            .adjust_cost(1.0)
+            .seed(2)
+            .faults(FaultPlan::parse("crash:1@1").unwrap())
+            .detector(DetectorCfg::parse("grace=4,floor=5").unwrap())
+            .autoscale(AutoscalerCfg::parse("pool=1,cold=1").unwrap())
+            .build_sim()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(r.total_iters >= 60, "run did not complete: {}", r.total_iters);
+        // Exactly one suspicion, for the crashed rank, and no readmission
+        // (a crashed worker never produces a late arrival).
+        assert_eq!(r.suspicions.len(), 1);
+        assert_eq!(r.suspicions[0].worker, 1);
+        assert_eq!(r.suspicions[0].action, DetectorAction::Suspect);
+        // The pool VM came up and took the vacated rank.
+        assert!(r.spawns.iter().any(|s| s.action == SpawnAction::Request));
+        assert!(r
+            .spawns
+            .iter()
+            .any(|s| s.action == SpawnAction::Ready && s.worker == Some(1)));
+        // Revocation + rejoin both flowed through the epoch machinery.
+        assert!(r.epochs.iter().any(|e| e.worker == 1
+            && e.kind == MembershipKind::Revoke));
+        assert!(r.epochs.iter().any(|e| e.worker == 1
+            && e.kind == MembershipKind::Join));
+    }
+
+    /// False suspicion is reversible: a long stall trips the deadline,
+    /// the rank is provisionally retired, and when its iteration finally
+    /// lands the late-arrival readmit path brings it back.
+    #[test]
+    fn stalled_worker_is_suspected_then_readmitted() {
+        let r = SessionBuilder::default()
+            .model("mnist")
+            .cores(&[4, 4, 8])
+            .policy(Policy::Dynamic)
+            .steps(80)
+            .adjust_cost(1.0)
+            .seed(3)
+            .faults(FaultPlan::parse("stall:2@20:400").unwrap())
+            .detector(DetectorCfg::parse("grace=4,floor=5").unwrap())
+            .build_sim()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(r.total_iters >= 80);
+        let acts: Vec<(usize, DetectorAction)> =
+            r.suspicions.iter().map(|s| (s.worker, s.action)).collect();
+        assert!(acts.contains(&(2, DetectorAction::Suspect)), "{acts:?}");
+        assert!(acts.contains(&(2, DetectorAction::Readmit)), "{acts:?}");
+        // Readmission is a Join epoch; the cluster ends at full strength.
+        assert!(r.epochs.iter().any(|e| e.worker == 2
+            && e.kind == MembershipKind::Join));
+        assert_eq!(r.epochs.last().unwrap().live, 3);
+    }
+
+    /// A detector that never fires must not perturb the run: armed
+    /// deadlines only act when *strictly earlier* than every completion
+    /// and membership event, so a generous detector is bitwise free.
+    #[test]
+    fn idle_detector_is_bitwise_invisible() {
+        let mk = |detect: bool| {
+            let mut b = SessionBuilder::default()
+                .model("mnist")
+                .cores(&[4, 8, 27])
+                .policy(Policy::Dynamic)
+                .steps(150)
+                .adjust_cost(1.0)
+                .seed(5)
+                .spot(SpotSpec { mttf_s: 8.0, down_s: 2.0, grace_s: 0.3 });
+            if detect {
+                b = b.detector(DetectorCfg::parse("grace=1e6,floor=1e7").unwrap());
+            }
+            b.build_sim().unwrap().run().unwrap()
+        };
+        let (on, off) = (mk(true), mk(false));
+        assert!(on.suspicions.is_empty());
+        assert_eq!(on.total_time, off.total_time);
+        assert_eq!(on.total_iters, off.total_iters);
+        assert_eq!(on.iters.len(), off.iters.len());
+        for (a, b) in on.iters.iter().zip(&off.iters) {
+            assert_eq!(
+                (a.worker, a.iter, a.start, a.duration, a.batch, a.wait),
+                (b.worker, b.iter, b.start, b.duration, b.batch, b.wait)
+            );
+        }
     }
 }

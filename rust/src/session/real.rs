@@ -42,6 +42,7 @@ use anyhow::{bail, Result};
 
 use crate::controller::bucket::quantize;
 use crate::data::{self, Batch, Dataset, ShardRouter};
+use crate::fault::{FaultPlan, FaultState};
 use crate::ps::{lambdas_into, FusedOptimizer, ReduceTree, RetainPolicy};
 use crate::runtime::{ModelManifest, Runtime, StepKind};
 use crate::session::{Backend, WorkerOutcome};
@@ -134,6 +135,11 @@ pub struct RealBackend<'rt> {
     pool_threads: usize,
     prefetch: bool,
     steps: u64,
+    /// Injected fault schedule (DESIGN.md §12): stall/slow faults
+    /// perturb the *accounted* outcome the same way capacity traces do
+    /// — the measured PJRT compute stays real, the virtual duration
+    /// carries the fault.
+    faults: Option<FaultState>,
 }
 
 impl<'rt> RealBackend<'rt> {
@@ -221,6 +227,7 @@ impl<'rt> RealBackend<'rt> {
             pool_threads,
             prefetch,
             steps,
+            faults: None,
         })
     }
 
@@ -255,11 +262,15 @@ impl Backend for RealBackend<'_> {
         self.steps.max(1)
     }
 
+    fn set_fault_plan(&mut self, plan: &FaultPlan) {
+        self.faults = Some(plan.state());
+    }
+
     fn execute_wave(
         &mut self,
         wave: &[usize],
         batches: &[f64],
-        _now: f64,
+        now: f64,
     ) -> Result<Vec<WorkerOutcome>> {
         // Marshal parameters once per version; a BSP wave of K workers
         // shares one prepared set.
@@ -361,10 +372,14 @@ impl Backend for RealBackend<'_> {
             }
             // Stashed for apply_update's λ-weighted global loss.
             self.losses[w] = loss as f64;
-            outs.push(WorkerOutcome {
+            let mut out = WorkerOutcome {
                 work: compute,
                 fixed: 0.0,
-            });
+            };
+            if let Some(f) = self.faults.as_mut() {
+                f.perturb(w, now, &mut out);
+            }
+            outs.push(out);
         }
         Ok(outs)
     }

@@ -20,6 +20,7 @@
 use anyhow::Result;
 
 use crate::cluster::{CapacityModel, WorkerSpec, WorkloadProfile};
+use crate::fault::{FaultPlan, FaultState};
 use crate::session::{Backend, WorkerOutcome};
 use crate::sync::staleness_discount;
 use crate::util::rng::Rng;
@@ -35,6 +36,7 @@ pub struct SimBackend {
     workload: String,
     workers: Vec<WorkerSpec>,
     rng: Rng,
+    faults: Option<FaultState>,
 }
 
 impl SimBackend {
@@ -56,6 +58,7 @@ impl SimBackend {
             workload: workload.to_string(),
             workers,
             rng: Rng::new(seed),
+            faults: None,
         })
     }
 }
@@ -92,19 +95,31 @@ impl Backend for SimBackend {
         &mut self,
         wave: &[usize],
         batches: &[f64],
-        _now: f64,
+        now: f64,
     ) -> Result<Vec<WorkerOutcome>> {
         Ok(wave
             .iter()
-            .map(|&w| WorkerOutcome {
-                work: self.model.compute_work(
-                    &self.workers[w].device,
-                    batches[w].max(1.0),
-                    &mut self.rng,
-                ),
-                fixed: self.model.fixed_time(),
+            .map(|&w| {
+                let mut out = WorkerOutcome {
+                    work: self.model.compute_work(
+                        &self.workers[w].device,
+                        batches[w].max(1.0),
+                        &mut self.rng,
+                    ),
+                    fixed: self.model.fixed_time(),
+                };
+                // Injected timing faults (stall/slow) perturb the
+                // outcome at dispatch; crashes are session-side.
+                if let Some(f) = self.faults.as_mut() {
+                    f.perturb(w, now, &mut out);
+                }
+                out
             })
             .collect())
+    }
+
+    fn set_fault_plan(&mut self, plan: &FaultPlan) {
+        self.faults = Some(plan.state());
     }
 
     fn apply_update(&mut self, _workers: &[usize], _batches: &[f64]) -> Result<Option<f64>> {
@@ -257,7 +272,7 @@ mod tests {
                 AvailTrace::constant(),
             ],
         };
-        let plan = MembershipPlan::from_traces(&traces, 15.0);
+        let plan = MembershipPlan::from_traces(&traces, 15.0).unwrap();
         (traces, plan)
     }
 

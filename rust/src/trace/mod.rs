@@ -318,9 +318,12 @@ impl MembershipPlan {
     /// Derive revocation/rejoin events from availability traces: every
     /// down period (multiplier ≤ [`DOWN_EPS`]) longer than `grace_s`
     /// revokes the worker at `down_start + grace_s` and rejoins it when
-    /// the trace recovers.
-    pub fn from_traces(traces: &ClusterTraces, grace_s: f64) -> Self {
-        assert!(grace_s >= 0.0, "grace must be non-negative");
+    /// the trace recovers.  A bad grace is a config-shaped input
+    /// (`--spot grace`), so it is a parse-style error, not a panic.
+    pub fn from_traces(traces: &ClusterTraces, grace_s: f64) -> Result<Self, String> {
+        if !grace_s.is_finite() || grace_s < 0.0 {
+            return Err(format!("grace {grace_s} must be finite and non-negative"));
+        }
         let mut events = Vec::new();
         for (w, tr) in traces.traces.iter().enumerate() {
             let segs = tr.segments();
@@ -354,7 +357,7 @@ impl MembershipPlan {
                 i = j;
             }
         }
-        MembershipPlan::new(events)
+        Ok(MembershipPlan::new(events))
     }
 
     /// Add scheduled joins (`k@t`): each worker listed starts absent and
@@ -578,7 +581,7 @@ mod tests {
                 AvailTrace::from_segments(vec![(0.0, 1.0), (50.0, DOWN_EPS), (70.0, 1.0)]),
             ],
         };
-        let plan = MembershipPlan::from_traces(&traces, 30.0);
+        let plan = MembershipPlan::from_traces(&traces, 30.0).unwrap();
         // The blip is shorter than the grace period: ridden out.
         let evs = plan.events();
         assert_eq!(evs.len(), 2, "{evs:?}");
@@ -592,6 +595,17 @@ mod tests {
         );
         // Everyone starts live (first events are revokes or nothing).
         assert_eq!(plan.initial_live(2), vec![true, true]);
+    }
+
+    #[test]
+    fn membership_from_traces_rejects_bad_grace() {
+        let traces = ClusterTraces {
+            traces: vec![AvailTrace::from_segments(vec![(0.0, 1.0)])],
+        };
+        for bad in [-1.0, f64::NAN, f64::INFINITY] {
+            let err = MembershipPlan::from_traces(&traces, bad);
+            assert!(err.is_err(), "grace {bad} should be rejected");
+        }
     }
 
     #[test]

@@ -235,7 +235,18 @@ fn train_and_simulate_reject_bad_spot_and_join_identically() {
         assert!(!out.status.success(), "{args:?} should fail");
         String::from_utf8_lossy(&out.stderr).into_owned()
     };
-    for (flag, bad) in [("--spot", "100"), ("--spot", "a:b"), ("--join", "1@")] {
+    for (flag, bad) in [
+        ("--spot", "100"),
+        ("--spot", "a:b"),
+        ("--join", "1@"),
+        ("--faults", "bogus"),
+        ("--faults", "crash:x@3"),
+        ("--faults", "stall:1@5"),
+        ("--detect", "grace=0"),
+        ("--detect", "late=sometimes"),
+        ("--autoscale", "jitter=2"),
+        ("--autoscale", "pool=x"),
+    ] {
         let from_train = stderr_of(&["train", flag, bad]);
         let from_sim = stderr_of(&["simulate", flag, bad]);
         assert!(
@@ -247,6 +258,47 @@ fn train_and_simulate_reject_bad_spot_and_join_identically() {
             "error text diverged between subcommands for {flag} {bad}"
         );
     }
+}
+
+#[test]
+fn simulate_crash_with_detector_and_autoscaler_recovers_end_to_end() {
+    // The ISSUE acceptance scenario from the CLI: an unannounced crash
+    // mid-BSP, a progress-deadline detector, and a one-VM pool.  The
+    // run must complete and the JSON report must carry the suspicion,
+    // the spawn trail, and the revoke/join epochs.
+    let out = run_ok(&[
+        "simulate", "--workload", "mnist", "--cores", "4,4,8", "--policy", "dynamic",
+        "--iters", "60", "--seed", "2", "--faults", "crash:1@1",
+        "--detect", "grace=4,floor=5", "--autoscale", "pool=1,cold=1",
+    ]);
+    let j = hetero_batch::util::json::Json::parse(&out).expect("valid json");
+    assert_eq!(j.get("total_iters").as_i64(), Some(60));
+    let sus = j.get("suspicions");
+    assert_eq!(sus.idx(0).get("worker").as_i64(), Some(1));
+    assert_eq!(sus.idx(0).get("action").as_str(), Some("suspect"));
+    let spawns = j.get("spawns").as_arr().expect("spawns array").clone();
+    assert!(spawns.iter().any(|s| s.get("action").as_str() == Some("ready")));
+    assert_eq!(j.get("n_epochs").as_i64(), Some(2));
+}
+
+#[test]
+fn simulate_rejects_crash_without_detector() {
+    // A crash fault with no detector can never be reclaimed — the
+    // builder must refuse it up front rather than hang the barrier.
+    let out = hbatch()
+        .args([
+            "simulate", "--workload", "mnist", "--cores", "4,8", "--faults",
+            "crash:1@10",
+        ])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("detector"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
 }
 
 #[test]
@@ -339,6 +391,10 @@ fn bad_flag_values_fail_cleanly() {
         vec!["train", "--spot", "0:5"],
         vec!["train", "--join", "bogus"],
         vec!["train", "--cores", "4,8", "--join", "7@10"],
+        // Fault for a worker outside the cluster fails validation.
+        vec!["simulate", "--cores", "4,8", "--faults", "stall:7@10:5"],
+        // Autoscaler floor above the cluster size fails validation.
+        vec!["simulate", "--cores", "4,8", "--autoscale", "pool=1,floor=9"],
         vec!["figure", "99"],
         vec!["throughput-scan", "--device", "quantum:1"],
     ] {

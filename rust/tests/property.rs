@@ -9,6 +9,9 @@
 use hetero_batch::config::Policy;
 use hetero_batch::controller::bucket::{quantize, quantize_alloc};
 use hetero_batch::controller::{static_alloc, ControllerCfg, DynamicBatcher};
+use hetero_batch::fault::{
+    AutoscalerCfg, DetectorCfg, FaultEvent, FaultKind, FaultPlan, FaultState,
+};
 use hetero_batch::metrics::RunReport;
 use hetero_batch::session::{Backend, Scheduler, Session, WorkerOutcome};
 use hetero_batch::sync::{SyncMode, SyncState};
@@ -825,6 +828,9 @@ struct FixedScheduleBackend {
     durs: Vec<f64>,
     /// Mimic the real backend's report surface (losses) or the sim's.
     real_shaped: bool,
+    /// Injected fault schedule (stall/slow perturb the fixed durations;
+    /// crash is handled session-side, like every backend).
+    faults: Option<FaultState>,
 }
 
 impl Backend for FixedScheduleBackend {
@@ -852,17 +858,27 @@ impl Backend for FixedScheduleBackend {
         50
     }
 
+    fn set_fault_plan(&mut self, plan: &FaultPlan) {
+        self.faults = Some(plan.state());
+    }
+
     fn execute_wave(
         &mut self,
         wave: &[usize],
         _batches: &[f64],
-        _now: f64,
+        now: f64,
     ) -> anyhow::Result<Vec<WorkerOutcome>> {
         Ok(wave
             .iter()
-            .map(|&w| WorkerOutcome {
-                work: self.durs[w],
-                fixed: 0.0,
+            .map(|&w| {
+                let mut out = WorkerOutcome {
+                    work: self.durs[w],
+                    fixed: 0.0,
+                };
+                if let Some(f) = self.faults.as_mut() {
+                    f.perturb(w, now, &mut out);
+                }
+                out
             })
             .collect())
     }
@@ -896,6 +912,7 @@ fn sim_and_real_shaped_backends_gate_identically() {
                 .build_with(FixedScheduleBackend {
                     durs: durs.clone(),
                     real_shaped,
+                    faults: None,
                 })
                 .unwrap()
                 .run()
@@ -942,6 +959,7 @@ fn membership_epochs_identical_across_backend_shapes() {
                 .build_with(FixedScheduleBackend {
                     durs: durs.clone(),
                     real_shaped,
+                    faults: None,
                 })
                 .unwrap()
                 .run()
@@ -1065,6 +1083,7 @@ fn run_sched(s: &SchedScenario, scheduler: Scheduler) -> RunReport {
     b.build_with(FixedScheduleBackend {
         durs: s.durs.clone(),
         real_shaped: false,
+        faults: None,
     })
     .unwrap()
     .run()
@@ -1101,6 +1120,17 @@ fn reports_identical(a: &RunReport, b: &RunReport) -> bool {
                 && x.live == y.live
                 && x.batches == y.batches
         })
+        && a.suspicions.len() == b.suspicions.len()
+        && a.suspicions.iter().zip(&b.suspicions).all(|(x, y)| {
+            x.time == y.time && x.worker == y.worker && x.action == y.action
+        })
+        && a.spawns.len() == b.spawns.len()
+        && a.spawns.iter().zip(&b.spawns).all(|(x, y)| {
+            x.time == y.time
+                && x.worker == y.worker
+                && x.action == y.action
+                && x.attempt == y.attempt
+        })
 }
 
 #[test]
@@ -1109,6 +1139,178 @@ fn prop_heap_and_scan_schedulers_produce_identical_reports() {
         let heap = run_sched(s, Scheduler::Heap);
         let scan = run_sched(s, Scheduler::Scan);
         reports_identical(&heap, &scan)
+    });
+}
+
+// ---------------------------------------------------------------------
+// Fault tolerance (DESIGN.md §12): injected crashes/stalls must never
+// break the allocation invariants, a detector that never fires must be
+// bitwise invisible, and a detector-initiated retire must be
+// indistinguishable from a plan-scheduled revocation at the same time.
+
+#[test]
+fn prop_crashes_preserve_batch_conservation() {
+    // Random crash (+ optional autoscaled replacement): the run must
+    // terminate, and every epoch transition — detector retire,
+    // autoscaled join — must conserve Σb exactly like plan churn does.
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(2, 6);
+        let durs: Vec<f64> = (0..k).map(|_| rng.range_f64(0.5, 3.5)).collect();
+        let w = rng.range_usize(0, k);
+        let t = rng.range_f64(0.5, 30.0);
+        let auto = rng.range_usize(0, 2) == 1;
+        let dynamic = rng.range_usize(0, 2) == 1;
+        (durs, w, t, auto, dynamic)
+    });
+    check("crash conserves Σb", 60, strat, |s| {
+        let (durs, w, t, auto, dynamic) = s;
+        let k = durs.len();
+        let plan = FaultPlan::new(vec![FaultEvent {
+            time: *t,
+            worker: *w,
+            kind: FaultKind::Crash,
+        }])
+        .unwrap();
+        let mut b = Session::builder()
+            .policy(if *dynamic { Policy::Dynamic } else { Policy::Uniform })
+            .sync(SyncMode::Bsp)
+            .steps(25)
+            .faults(plan)
+            .detector(DetectorCfg::parse("grace=4,floor=8").unwrap());
+        if *auto {
+            b = b.autoscale(AutoscalerCfg::parse("pool=1,cold=2").unwrap());
+        }
+        let r = b
+            .build_with(FixedScheduleBackend {
+                durs: durs.clone(),
+                real_shaped: false,
+                faults: None,
+            })
+            .unwrap()
+            .run()
+            .unwrap();
+        let total = 32.0 * k as f64;
+        r.total_iters >= 25
+            && r.epochs.iter().all(|e| {
+                let sum: f64 = e.batches.iter().sum();
+                (sum - total).abs() < 1e-6 && e.batches.iter().all(|&b| b >= 0.0)
+            })
+    });
+}
+
+#[test]
+fn prop_generous_detector_is_bitwise_invisible_under_stalls() {
+    // Stall-only faults with a deadline far beyond any stall: the
+    // detector arms and disarms but never fires, so the report must be
+    // bitwise identical to the same faulted run with no detector at all.
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(2, 6);
+        let durs: Vec<f64> = (0..k).map(|_| rng.range_f64(0.5, 3.5)).collect();
+        let w = rng.range_usize(0, k);
+        let t = rng.range_f64(0.5, 20.0);
+        let stall = rng.range_f64(0.5, 5.0);
+        let sync = match rng.range_usize(0, 3) {
+            0 => SyncMode::Bsp,
+            1 => SyncMode::Asp,
+            _ => SyncMode::Ssp { bound: rng.range_usize(0, 3) as u64 },
+        };
+        (durs, w, t, stall, sync)
+    });
+    check("generous detector == none", 60, strat, |s| {
+        let (durs, w, t, stall, sync) = s;
+        let run = |detect: bool| {
+            let mut b = Session::builder()
+                .policy(Policy::Dynamic)
+                .sync(*sync)
+                .steps(20)
+                .faults(
+                    FaultPlan::new(vec![FaultEvent {
+                        time: *t,
+                        worker: *w,
+                        kind: FaultKind::Stall { stall_s: *stall },
+                    }])
+                    .unwrap(),
+                );
+            if detect {
+                b = b.detector(DetectorCfg::parse("grace=1e5,floor=1e6").unwrap());
+            }
+            b.build_with(FixedScheduleBackend {
+                durs: durs.clone(),
+                real_shaped: false,
+                faults: None,
+            })
+            .unwrap()
+            .run()
+            .unwrap()
+        };
+        let (on, off) = (run(true), run(false));
+        on.suspicions.is_empty() && reports_identical(&on, &off)
+    });
+}
+
+#[test]
+fn prop_detector_retire_matches_plan_revoke_bitwise() {
+    // A huge stall trips the detector at some time t_s; replaying the
+    // same scenario with a *plan-scheduled* revocation at exactly t_s
+    // (and no detector) must yield a bitwise-identical report — the
+    // suspicion path is the revocation path, not a parallel mechanism.
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(2, 6);
+        let durs: Vec<f64> = (0..k).map(|_| rng.range_f64(0.5, 3.5)).collect();
+        let w = rng.range_usize(0, k);
+        let t = rng.range_f64(0.5, 15.0);
+        let dynamic = rng.range_usize(0, 2) == 1;
+        (durs, w, t, dynamic)
+    });
+    check("detector retire == plan revoke", 60, strat, |s| {
+        let (durs, w, t, dynamic) = s;
+        let policy = if *dynamic { Policy::Dynamic } else { Policy::Uniform };
+        let stall_plan = || {
+            FaultPlan::new(vec![FaultEvent {
+                time: *t,
+                worker: *w,
+                kind: FaultKind::Stall { stall_s: 1e6 },
+            }])
+            .unwrap()
+        };
+        let mock = || FixedScheduleBackend {
+            durs: durs.clone(),
+            real_shaped: false,
+            faults: None,
+        };
+        let detected = Session::builder()
+            .policy(policy)
+            .sync(SyncMode::Bsp)
+            .steps(20)
+            .faults(stall_plan())
+            .detector(DetectorCfg::parse("grace=4,floor=10,late=drop").unwrap())
+            .build_with(mock())
+            .unwrap()
+            .run()
+            .unwrap();
+        if detected.suspicions.is_empty() {
+            // Stall landed after the run finished — nothing to compare.
+            return true;
+        }
+        let t_s = detected.suspicions[0].time;
+        let planned = Session::builder()
+            .policy(policy)
+            .sync(SyncMode::Bsp)
+            .steps(20)
+            .faults(stall_plan())
+            .membership(MembershipPlan::new(vec![MembershipEvent {
+                time: t_s,
+                worker: *w,
+                kind: MembershipKind::Revoke,
+            }]))
+            .build_with(mock())
+            .unwrap()
+            .run()
+            .unwrap();
+        // The detector run's only extra surface is the suspicion record.
+        let mut scrubbed = detected.clone();
+        scrubbed.suspicions.clear();
+        reports_identical(&scrubbed, &planned)
     });
 }
 

@@ -27,7 +27,10 @@
 //! absolute virtual-time constants.
 
 use hetero_batch::config::Policy;
-use hetero_batch::metrics::RunReport;
+use hetero_batch::fault::{
+    AutoscalerCfg, DetectorCfg, FaultEvent, FaultKind, FaultPlan, LatePolicy,
+};
+use hetero_batch::metrics::{DetectorAction, RunReport, SpawnAction};
 use hetero_batch::session::{Session, SessionBuilder};
 use hetero_batch::sync::SyncMode;
 use hetero_batch::trace::{
@@ -82,8 +85,42 @@ fn outage(round_s: f64) -> (ClusterTraces, MembershipPlan) {
             AvailTrace::constant(),
         ],
     };
-    let plan = MembershipPlan::from_traces(&traces, 2.0 * round_s);
+    let plan = MembershipPlan::from_traces(&traces, 2.0 * round_s).unwrap();
     (traces, plan)
+}
+
+/// The deterministic fault fixtures (DESIGN.md §12), denominated in
+/// probed rounds like the outage: an unannounced crash of worker 1, a
+/// long stall of worker 2 (suspected then readmitted), and the crash
+/// again with a one-VM autoscaler pool covering the loss.
+fn fault_crash(round_s: f64) -> (FaultPlan, DetectorCfg) {
+    let plan = FaultPlan::new(vec![FaultEvent {
+        time: 12.3 * round_s,
+        worker: 1,
+        kind: FaultKind::Crash,
+    }])
+    .unwrap();
+    let det = DetectorCfg {
+        grace: 4.0,
+        floor_s: 3.0 * round_s,
+        late: LatePolicy::Readmit,
+    };
+    (plan, det)
+}
+
+fn fault_stall(round_s: f64) -> (FaultPlan, DetectorCfg) {
+    let plan = FaultPlan::new(vec![FaultEvent {
+        time: 9.7 * round_s,
+        worker: 2,
+        kind: FaultKind::Stall { stall_s: 20.0 * round_s },
+    }])
+    .unwrap();
+    let det = DetectorCfg {
+        grace: 2.0,
+        floor_s: 3.0 * round_s,
+        late: LatePolicy::Readmit,
+    };
+    (plan, det)
 }
 
 fn base(policy: Policy, sync: SyncMode) -> SessionBuilder {
@@ -136,6 +173,28 @@ fn scenarios() -> Vec<(&'static str, SessionBuilder)> {
         ),
         // No-churn baseline: pins the static-membership trajectory too.
         ("bsp_dynamic_baseline", base(Policy::Dynamic, SyncMode::Bsp)),
+        // Fault family (DESIGN.md §12): unannounced crash detected and
+        // retired; false suspicion on a stall, readmitted on return;
+        // crash recovered by an autoscaled replacement.
+        ("fault_crash", {
+            let (plan, det) = fault_crash(round_s);
+            base(Policy::Dynamic, SyncMode::Bsp).faults(plan).detector(det)
+        }),
+        ("fault_stall_readmit", {
+            let (plan, det) = fault_stall(round_s);
+            base(Policy::Dynamic, SyncMode::Bsp).faults(plan).detector(det)
+        }),
+        ("fault_crash_autoscale", {
+            let (plan, det) = fault_crash(round_s);
+            base(Policy::Dynamic, SyncMode::Bsp)
+                .faults(plan)
+                .detector(det)
+                .autoscale(AutoscalerCfg {
+                    pool: 1,
+                    cold_s: 5.0 * round_s,
+                    ..AutoscalerCfg::default()
+                })
+        }),
     ]
 }
 
@@ -179,6 +238,31 @@ fn summarize(name: &str, r: &RunReport) -> Json {
         })
         .collect();
     o.set("epochs", Json::Arr(epochs));
+    // Detector / autoscaler trajectory (empty arrays for fault-free
+    // scenarios, so the fault goldens pin detection times too).
+    let suspicions: Vec<Json> = r
+        .suspicions
+        .iter()
+        .map(|s| {
+            let mut so = Json::obj();
+            so.set("time_s", Json::Num(s.time));
+            so.set("worker", Json::Num(s.worker as f64));
+            so.set("action", Json::Str(s.action.label().into()));
+            so
+        })
+        .collect();
+    o.set("suspicions", Json::Arr(suspicions));
+    let spawns: Vec<Json> = r
+        .spawns
+        .iter()
+        .map(|s| {
+            let mut so = Json::obj();
+            so.set("time_s", Json::Num(s.time));
+            so.set("action", Json::Str(s.action.label().into()));
+            so
+        })
+        .collect();
+    o.set("spawns", Json::Arr(spawns));
     o
 }
 
@@ -350,4 +434,66 @@ fn churn_scenarios_actually_churn() {
             assert!(r.epochs.iter().all(|e| e.worker == 0));
         }
     }
+}
+
+#[test]
+fn fault_scenarios_actually_fault() {
+    // Mirror of `churn_scenarios_actually_churn` for the fault family:
+    // each fixture must exercise the machinery it exists to pin —
+    // otherwise the goldens would silently lock a fault-free run.
+    let round_s = probe_round_s();
+    let run = |b: SessionBuilder| b.build_sim().unwrap().run().unwrap();
+
+    // Crash: exactly one suspicion of worker 1, one revoke epoch, no
+    // readmission (a crashed rank never returns), run completes.
+    let (plan, det) = fault_crash(round_s);
+    let r = run(base(Policy::Dynamic, SyncMode::Bsp).faults(plan).detector(det));
+    assert!(r.total_iters >= STEPS, "crash run stalled: {}", r.total_iters);
+    assert_eq!(r.suspicions.len(), 1, "{:?}", r.suspicions);
+    assert_eq!(r.suspicions[0].worker, 1);
+    assert_eq!(r.suspicions[0].action, DetectorAction::Suspect);
+    let kinds: Vec<&str> = r.epochs.iter().map(|e| e.kind.label()).collect();
+    assert_eq!(kinds, vec!["revoke"], "crash epochs {kinds:?}");
+
+    // Stall: suspicion then readmission of worker 2; epochs revoke+join;
+    // the detection must land while the stall is still in flight.
+    let (plan, det) = fault_stall(round_s);
+    let stall_t = plan.events()[0].time;
+    let r = run(base(Policy::Dynamic, SyncMode::Bsp).faults(plan).detector(det));
+    assert!(r.total_iters >= STEPS);
+    let acts: Vec<(usize, DetectorAction)> =
+        r.suspicions.iter().map(|s| (s.worker, s.action)).collect();
+    assert_eq!(
+        acts,
+        vec![(2, DetectorAction::Suspect), (2, DetectorAction::Readmit)],
+        "stall detector trail {acts:?}"
+    );
+    assert!(r.suspicions[0].time > stall_t);
+    let kinds: Vec<&str> = r.epochs.iter().map(|e| e.kind.label()).collect();
+    assert_eq!(kinds, vec!["revoke", "join"], "stall epochs {kinds:?}");
+
+    // Crash + autoscaler: the pool VM must be requested, come up after
+    // the cold start, and rejoin at the vacated rank.
+    let (plan, det) = fault_crash(round_s);
+    let r = run(base(Policy::Dynamic, SyncMode::Bsp)
+        .faults(plan)
+        .detector(det)
+        .autoscale(AutoscalerCfg {
+            pool: 1,
+            cold_s: 5.0 * round_s,
+            ..AutoscalerCfg::default()
+        }));
+    assert!(r.total_iters >= STEPS);
+    assert_eq!(r.suspicions.len(), 1);
+    let ready: Vec<&hetero_batch::metrics::SpawnEvent> = r
+        .spawns
+        .iter()
+        .filter(|s| s.action == SpawnAction::Ready)
+        .collect();
+    assert_eq!(ready.len(), 1, "spawns {:?}", r.spawns);
+    assert_eq!(ready[0].worker, Some(1));
+    assert!(ready[0].time > r.suspicions[0].time);
+    let kinds: Vec<&str> = r.epochs.iter().map(|e| e.kind.label()).collect();
+    assert_eq!(kinds, vec!["revoke", "join"], "autoscale epochs {kinds:?}");
+    assert_eq!(r.epochs.last().unwrap().live, CORES.len());
 }

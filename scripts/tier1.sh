@@ -44,4 +44,18 @@ echo "== tier1: session bench smoke (k <= 64, quick) =="
 # session` only).  Also self-checks heap vs scan report identity.
 HBATCH_BENCH_QUICK=1 cargo bench --bench session -- --max-k 64
 
+echo "== tier1: fault-recovery smoke (crash -> detect -> autoscale) =="
+# End-to-end DESIGN.md §12 loop from the CLI: an unannounced crash
+# mid-BSP can only finish via detection + the autoscaled replacement,
+# so the grep below doubles as a liveness check on the recovery path.
+fault_out=$(./target/release/hbatch simulate --workload mnist --cores 4,4,8 \
+    --policy dynamic --sync bsp --iters 60 --seed 2 \
+    --faults crash:1@1 --detect 'grace=4,floor=5' --autoscale 'pool=1,cold=1')
+for needle in '"suspect"' '"ready"' '"join"'; do
+    if ! grep -q -- "$needle" <<<"$fault_out"; then
+        echo "tier1: fault smoke output is missing $needle" >&2
+        exit 1
+    fi
+done
+
 echo "tier1: OK"
