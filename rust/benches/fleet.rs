@@ -1,0 +1,210 @@
+//! Multi-tenant fleet scheduler benches (util::bench; DESIGN.md §13).
+//!
+//! Measures what the fleet layer *adds* per job: the interleaved
+//! scheduler runs fleets of 10 / 100 / 1000 concurrent k=8 simulations
+//! (capped by `--jobs`) plus a few k=512 fleets (skipped under
+//! `--max-k` below 512), and the derived `overhead_per_job/...` series
+//! divides each fleet's mean wall-clock by its job count and subtracts
+//! the `standalone/job` baseline.  The fleet's merge heap is O(log n)
+//! per event, so per-job cost must stay flat as the fleet grows — the
+//! bench asserts the 10→1000 growth factor stays under 2× before it
+//! records anything.
+//!
+//! Before timing, the isolation invariant is self-asserted: a mixed
+//! fleet (plain, crash + detector, autoscaled recovery, spot churn)
+//! runs through the interleaved scheduler *and* the parallel fast path,
+//! and every per-job report must be **bitwise identical** to the same
+//! builder run standalone ([`RunReport::bitwise_eq`]).  A fleet that
+//! perturbs its tenants' results would make every number below
+//! meaningless.
+//!
+//! Results land in `BENCH_fleet.json` at the repo root; quick windows
+//! (`HBATCH_BENCH_QUICK=1`) or truncated grids (`--jobs n`, `--max-k n`
+//! — the `scripts/tier1.sh` smoke uses `--jobs 32 --max-k 8`) write
+//! `BENCH_fleet_quick.json` instead, same convention as the session
+//! suite.
+
+use hetero_batch::config::Policy;
+use hetero_batch::fault::{AutoscalerCfg, DetectorCfg, FaultPlan};
+use hetero_batch::fleet::{FleetBuilder, JobSpec};
+use hetero_batch::metrics::RunReport;
+use hetero_batch::session::{Session, SessionBuilder};
+use hetero_batch::trace::SpotSpec;
+use hetero_batch::util::bench::{find_mean_ns, suite_json, Bench};
+use hetero_batch::util::json::Json;
+
+/// Fleet sizes of the k=8 overhead series.
+const SIZES: [usize; 3] = [10, 100, 1000];
+
+/// Heterogeneous cores, cycled to any k.
+fn cores_for(k: usize) -> Vec<usize> {
+    (0..k).map(|i| [4usize, 8, 16][i % 3]).collect()
+}
+
+fn plain_job(seed: u64, k: usize, steps: u64) -> SessionBuilder {
+    Session::builder()
+        .model("mnist")
+        .cores(&cores_for(k))
+        .policy(Policy::Dynamic)
+        .steps(steps)
+        .adjust_cost(1.0)
+        .report_sample(if k > 64 { 16 } else { 1 })
+        .seed(seed)
+}
+
+/// Mixed-shape jobs for the isolation self-check: every event source
+/// the fleet could plausibly disturb (faults + detector retirement,
+/// autoscaled spawns drawing on the shared pool, spot churn) cycles
+/// through the fleet.
+fn mixed_job(i: usize) -> SessionBuilder {
+    let b = plain_job(100 + i as u64, 8, 16);
+    match i % 4 {
+        1 => b
+            .faults(FaultPlan::parse("crash:1@3").unwrap())
+            .detector(DetectorCfg::parse("grace=4,floor=2").unwrap()),
+        2 => b
+            .faults(FaultPlan::parse("crash:2@2,slow:0@4:3:6").unwrap())
+            .detector(DetectorCfg::parse("grace=4,floor=2").unwrap())
+            .autoscale(AutoscalerCfg::parse("pool=2,cold=3").unwrap()),
+        3 => b.spot(SpotSpec::parse("30:8:1").unwrap()),
+        _ => b,
+    }
+}
+
+/// Uncontended fleet over `builders` with the scheduling mode forced.
+fn fleet_of(builders: &[SessionBuilder], interleave: bool) -> Vec<RunReport> {
+    let specs = builders
+        .iter()
+        .enumerate()
+        .map(|(i, b)| JobSpec::new(&format!("job{i}"), b.clone()))
+        .collect();
+    FleetBuilder::new()
+        .jobs(specs)
+        .interleave(interleave)
+        .build()
+        .expect("fleet config")
+        .run()
+        .expect("fleet run")
+        .into_reports()
+}
+
+fn standalone(b: &SessionBuilder) -> RunReport {
+    b.clone().build_sim().expect("bench scenario").run().expect("bench run")
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let flag = |name: &str, default: usize| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(default)
+    };
+    let jobs_cap = flag("--jobs", *SIZES.last().unwrap()).max(1);
+    let max_k = flag("--max-k", 512);
+
+    // Isolation self-check: the fleet must not perturb its tenants.
+    let n_iso = jobs_cap.clamp(4, 12);
+    let builders: Vec<SessionBuilder> = (0..n_iso).map(mixed_job).collect();
+    let solo: Vec<RunReport> = builders.iter().map(standalone).collect();
+    let inter = fleet_of(&builders, true);
+    let par = fleet_of(&builders, false);
+    for (j, s) in solo.iter().enumerate() {
+        assert!(
+            s.bitwise_eq(&inter[j]),
+            "isolation violation: interleaved fleet perturbed job {j}"
+        );
+        assert!(
+            s.bitwise_eq(&par[j]),
+            "isolation violation: parallel fast path perturbed job {j}"
+        );
+    }
+    println!("isolation invariant holds for {n_iso} mixed jobs (interleaved + parallel)");
+
+    let mut b = Bench::new("fleet");
+
+    // Per-job baseline: the same simulation the fleets below multiplex,
+    // run alone (one build + one event loop, no merge heap).
+    let base = plain_job(7, 8, 10);
+    b.run("standalone/job", || standalone(&base).total_time);
+
+    for &n in SIZES.iter().filter(|&&n| n <= jobs_cap) {
+        let builders: Vec<SessionBuilder> =
+            (0..n).map(|i| plain_job(7 + i as u64, 8, 10)).collect();
+        b.run(&format!("interleaved/jobs{n}"), || {
+            fleet_of(&builders, true)
+                .iter()
+                .map(|r| r.total_time)
+                .sum::<f64>()
+        });
+    }
+
+    // A few fleet-scale tenants: the merge heap's n is small but every
+    // per-job event pays the k=512 session machinery.
+    if max_k >= 512 {
+        let builders: Vec<SessionBuilder> =
+            (0..4).map(|i| plain_job(50 + i as u64, 512, 4)).collect();
+        b.run("interleaved/k512/jobs4", || {
+            fleet_of(&builders, true)
+                .iter()
+                .map(|r| r.total_time)
+                .sum::<f64>()
+        });
+    }
+    b.report();
+
+    // Derived per-job overhead series — the ISSUE acceptance reads
+    // `overhead_per_job/...` and expects sublinear growth 10 → 1000.
+    let groups = [&b];
+    let mut derived = Json::obj();
+    let t1 = find_mean_ns(&groups, "fleet/standalone/job");
+    let mut per_job: Vec<(usize, f64)> = Vec::new();
+    for &n in SIZES.iter().filter(|&&n| n <= jobs_cap) {
+        if let Some(m) = find_mean_ns(&groups, &format!("fleet/interleaved/jobs{n}")) {
+            per_job.push((n, m / n as f64));
+        }
+    }
+    for &(n, p) in &per_job {
+        derived.set(&format!("overhead_per_job/jobs{n}/per_job_ns"), Json::Num(p));
+        if let Some(t1) = t1 {
+            derived.set(
+                &format!("overhead_per_job/jobs{n}/overhead_ns"),
+                Json::Num(p - t1),
+            );
+        }
+        derived.set(
+            &format!("overhead_per_job/jobs{n}/growth_vs_smallest"),
+            Json::Num(p / per_job[0].1),
+        );
+    }
+    if per_job.len() >= 2 {
+        let (n0, p0) = per_job[0];
+        let (n1, p1) = *per_job.last().unwrap();
+        // O(log n) merge heap on top of constant per-job work: the
+        // per-job cost must stay essentially flat.  2× is a generous
+        // ceiling covering allocator noise on shared hardware.
+        assert!(
+            p1 / p0 < 2.0,
+            "fleet overhead grew superlinearly: {p0:.0} ns/job at {n0} jobs vs {p1:.0} ns/job at {n1} jobs"
+        );
+        println!(
+            "sublinear check: per-job cost x{:.2} from {n0} to {n1} jobs",
+            p1 / p0
+        );
+    }
+
+    let json = suite_json("fleet", &groups, derived);
+    // Quick windows or a truncated grid must not clobber the canonical
+    // perf-trajectory artifact.
+    let partial = b.is_quick() || jobs_cap < *SIZES.last().unwrap() || max_k < 512;
+    let fname = if partial {
+        "BENCH_fleet_quick.json"
+    } else {
+        "BENCH_fleet.json"
+    };
+    let path = format!("{}/../{fname}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::write(&path, json.to_pretty()).expect("write bench json");
+    println!("\nwrote {path}");
+    println!("all fleet benches complete");
+}

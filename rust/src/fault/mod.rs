@@ -505,6 +505,16 @@ impl Autoscaler {
         self.pool_left
     }
 
+    /// Arbiter-client hook (fleet runs, DESIGN.md §13): cap the
+    /// remaining private spawn pool at the shared-capacity `spare` the
+    /// fleet can lend right now.  Capping only ever shrinks — the
+    /// arbiter lends headroom, it never refills a drained pool — so an
+    /// uncontended fleet (spare always ≥ pool) leaves the autoscaler
+    /// bit-identical to a standalone run.
+    pub fn cap_pool(&mut self, spare: usize) {
+        self.pool_left = self.pool_left.min(spare);
+    }
+
     pub fn pending_count(&self) -> usize {
         self.pending.len()
     }
@@ -783,6 +793,26 @@ mod tests {
         assert_eq!(a.take_ready(14.9), None);
         assert_eq!(a.take_ready(15.0), Some(15.0));
         assert_eq!(a.pending_count(), 0);
+    }
+
+    #[test]
+    fn autoscaler_cap_pool_is_an_arbiter_clamp() {
+        let cfg = AutoscalerCfg::parse("pool=4,cold=10").unwrap();
+        let mut a = Autoscaler::new(cfg, 3, 42);
+        assert_eq!(a.pool_left(), 4);
+        // A generous spare is a no-op (uncontended fleets stay bitwise
+        // identical to standalone runs).
+        a.cap_pool(9);
+        assert_eq!(a.pool_left(), 4);
+        // A tight spare clamps; a later looser spare never refills.
+        a.cap_pool(1);
+        assert_eq!(a.pool_left(), 1);
+        a.cap_pool(3);
+        assert_eq!(a.pool_left(), 1);
+        // A clamped-out pool can no longer spawn.
+        a.cap_pool(0);
+        assert_eq!(a.pool_left(), 0);
+        assert!(!a.wants_spawn(2, 5.0, None));
     }
 
     #[test]

@@ -38,22 +38,21 @@ fn run(builder: SessionBuilder) -> RunReport {
     builder.build_sim().expect("figure config").run().expect("figure run")
 }
 
-/// Run many independent seeded simulations concurrently on the
-/// process-wide worker pool ([`crate::util::pool::global`]), returning
+/// Run many independent seeded simulations concurrently, returning
 /// reports in input order.
 ///
 /// Every figure sweep is embarrassingly parallel — each builder carries
 /// its own seed and the simulator holds no shared state — so results
 /// are identical to a sequential loop no matter how the pool interleaves
-/// them; only the wall-clock drops.  Each task writes its own
-/// preallocated slot, so gathering is deterministic by construction.
+/// them; only the wall-clock drops.  Dispatches through
+/// [`crate::fleet::run_uncontended`]: an uncontended fleet whose
+/// capacity equals total demand, so the arbiter never intervenes and
+/// the jobs fan out on the process-wide worker pool
+/// ([`crate::util::pool::global`]) with a slot-ordered gather — each
+/// task writes its own preallocated slot, so gathering is
+/// deterministic by construction.
 pub fn run_batch(builders: Vec<SessionBuilder>) -> Vec<RunReport> {
-    crate::util::pool::global().run_collect(
-        builders
-            .into_iter()
-            .map(|b| Box::new(move || run(b)) as Box<dyn FnOnce() -> RunReport + Send>)
-            .collect(),
-    )
+    crate::fleet::run_uncontended(builders)
 }
 
 /// Figures that measure *time-to-accuracy* run to each workload's full

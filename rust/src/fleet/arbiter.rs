@@ -1,0 +1,280 @@
+//! Capacity arbitration between fleet jobs (DESIGN.md §13).
+//!
+//! The arbiter is a *pure function* from a demand vector to a grant
+//! vector under a fixed total capacity: no internal state, no clock,
+//! no rng.  Fleet decisions therefore replay bit-identically — the
+//! scheduler calls [`CapacityArbiter::grants`] at its two decision
+//! points (job admission, job completion) and actuates the diff
+//! against the previous grants through the membership join/revoke
+//! paths.
+
+/// Capacity-arbitration policy between jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArbiterPolicy {
+    /// Weighted max-min fair share: water-fill capacity in proportion
+    /// to job weights, capping each job at its demand.
+    #[default]
+    FairShare,
+    /// Strict priority: higher priority fills to its full demand
+    /// first; ties admit in job-id order.  Running jobs keep their
+    /// floor (the fleet degrades, it never kills).
+    Priority,
+}
+
+impl ArbiterPolicy {
+    pub fn parse(s: &str) -> Option<ArbiterPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fair" | "fairshare" | "fair-share" | "fair_share" => {
+                Some(ArbiterPolicy::FairShare)
+            }
+            "priority" | "strict" | "strict-priority" => Some(ArbiterPolicy::Priority),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArbiterPolicy::FairShare => "fair",
+            ArbiterPolicy::Priority => "priority",
+        }
+    }
+}
+
+/// One job's standing with the arbiter.
+#[derive(Debug, Clone, Copy)]
+pub struct JobDemand {
+    /// Fair-share weight (> 0).
+    pub weight: f64,
+    /// Strict-priority rank (higher wins).
+    pub priority: i64,
+    /// Worker slots the job can use (its session's k).
+    pub ranks: usize,
+    /// Slots the arbiter must not cut below: 1 for admitted jobs — a
+    /// session with an empty cohort and nothing pending errors out —
+    /// and 0 for a candidate still waiting at the door.
+    pub floor: usize,
+}
+
+/// Grants worker slots to jobs under a fixed total capacity.
+#[derive(Debug, Clone)]
+pub struct CapacityArbiter {
+    capacity: usize,
+    policy: ArbiterPolicy,
+}
+
+impl CapacityArbiter {
+    pub fn new(capacity: usize, policy: ArbiterPolicy) -> CapacityArbiter {
+        CapacityArbiter { capacity, policy }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn policy(&self) -> ArbiterPolicy {
+        self.policy
+    }
+
+    /// Slot grants for the demand set, deterministically.
+    ///
+    /// Floors are satisfied first (shedding from the highest job id if
+    /// they alone exceed capacity — admission control is supposed to
+    /// prevent that, but the arbiter never over-grants).  Remaining
+    /// capacity goes out by policy; the uncontended case (total demand
+    /// ≤ capacity) short-circuits to full grants in O(n).
+    pub fn grants(&self, demands: &[JobDemand]) -> Vec<usize> {
+        let want: usize = demands.iter().map(|d| d.ranks).sum();
+        if want <= self.capacity {
+            return demands.iter().map(|d| d.ranks).collect();
+        }
+        let mut grant: Vec<usize> =
+            demands.iter().map(|d| d.floor.min(d.ranks)).collect();
+        let floors: usize = grant.iter().sum();
+        if floors >= self.capacity {
+            let mut over = floors - self.capacity;
+            for g in grant.iter_mut().rev() {
+                let cut = (*g).min(over);
+                *g -= cut;
+                over -= cut;
+                if over == 0 {
+                    break;
+                }
+            }
+            return grant;
+        }
+        let left = self.capacity - floors;
+        match self.policy {
+            ArbiterPolicy::Priority => self.fill_priority(demands, &mut grant, left),
+            ArbiterPolicy::FairShare => self.water_fill(demands, &mut grant, left),
+        }
+        grant
+    }
+
+    /// Top jobs up to their demand in (priority desc, id asc) order.
+    fn fill_priority(&self, demands: &[JobDemand], grant: &mut [usize], mut left: usize) {
+        let mut order: Vec<usize> = (0..demands.len()).collect();
+        order.sort_by(|&a, &b| {
+            demands[b].priority.cmp(&demands[a].priority).then(a.cmp(&b))
+        });
+        for i in order {
+            let top = demands[i].ranks.saturating_sub(grant[i]).min(left);
+            grant[i] += top;
+            left -= top;
+            if left == 0 {
+                break;
+            }
+        }
+    }
+
+    /// Weighted max-min water-fill of `left` slots above the floors:
+    /// find the level λ with Σ min(headroomᵢ, λ·wᵢ) = left (sort jobs
+    /// by saturation level, sweep — O(n log n)), floor the continuous
+    /// shares, then hand out the rounding remainder one slot at a time
+    /// by (fractional part desc, id asc).
+    fn water_fill(&self, demands: &[JobDemand], grant: &mut [usize], left: usize) {
+        let n = demands.len();
+        let head: Vec<usize> = (0..n).map(|i| demands[i].ranks - grant[i]).collect();
+        let mut active: Vec<usize> = (0..n)
+            .filter(|&i| head[i] > 0 && demands[i].weight > 0.0)
+            .collect();
+        if active.is_empty() {
+            return;
+        }
+        // Ascending saturation level: job i soaks up headᵢ once the
+        // level reaches headᵢ/wᵢ.
+        active.sort_by(|&a, &b| {
+            (head[a] as f64 / demands[a].weight)
+                .total_cmp(&(head[b] as f64 / demands[b].weight))
+                .then(a.cmp(&b))
+        });
+        let mut wsum: f64 = active.iter().map(|&i| demands[i].weight).sum();
+        let mut remaining = left as f64;
+        let mut level = 0.0_f64;
+        let mut share = vec![0.0_f64; n];
+        for (pos, &i) in active.iter().enumerate() {
+            let sat = head[i] as f64 / demands[i].weight;
+            let cost = (sat - level) * wsum;
+            if cost < remaining {
+                remaining -= cost;
+                level = sat;
+                wsum -= demands[i].weight;
+                share[i] = head[i] as f64;
+            } else {
+                level += remaining / wsum;
+                for &j in &active[pos..] {
+                    share[j] = (level * demands[j].weight).min(head[j] as f64);
+                }
+                break;
+            }
+        }
+        let mut handed = 0usize;
+        for i in 0..n {
+            let g = (share[i].floor() as usize).min(head[i]);
+            grant[i] += g;
+            handed += g;
+        }
+        // Rounding remainder: < #active slots by construction, so one
+        // deterministic pass suffices (guarded loop for float dust).
+        let mut spare = left - handed.min(left);
+        while spare > 0 {
+            let mut order: Vec<usize> = (0..n)
+                .filter(|&i| grant[i] < demands[i].ranks)
+                .collect();
+            if order.is_empty() {
+                break;
+            }
+            order.sort_by(|&a, &b| {
+                let fa = share[a] - share[a].floor();
+                let fb = share[b] - share[b].floor();
+                fb.total_cmp(&fa).then(a.cmp(&b))
+            });
+            for i in order {
+                if spare == 0 {
+                    break;
+                }
+                grant[i] += 1;
+                spare -= 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(weight: f64, priority: i64, ranks: usize, floor: usize) -> JobDemand {
+        JobDemand {
+            weight,
+            priority,
+            ranks,
+            floor,
+        }
+    }
+
+    #[test]
+    fn uncontended_grants_full_demand() {
+        let a = CapacityArbiter::new(32, ArbiterPolicy::FairShare);
+        let g = a.grants(&[d(1.0, 0, 8, 1), d(1.0, 0, 8, 1), d(2.0, 0, 16, 1)]);
+        assert_eq!(g, vec![8, 8, 16]);
+    }
+
+    #[test]
+    fn fair_share_splits_by_weight() {
+        // 12 slots, weights 2:1, both want 12: continuous shares are
+        // 8 and 4 (floors included in the share).
+        let a = CapacityArbiter::new(12, ArbiterPolicy::FairShare);
+        let g = a.grants(&[d(2.0, 0, 12, 1), d(1.0, 0, 12, 1)]);
+        assert_eq!(g.iter().sum::<usize>(), 12);
+        assert_eq!(g, vec![8, 4]);
+    }
+
+    #[test]
+    fn fair_share_caps_at_demand_and_redistributes() {
+        // Job 0 saturates at 2 ranks; the rest of its share spills to
+        // the others.
+        let a = CapacityArbiter::new(12, ArbiterPolicy::FairShare);
+        let g = a.grants(&[d(1.0, 0, 2, 1), d(1.0, 0, 12, 1), d(1.0, 0, 12, 1)]);
+        assert_eq!(g.iter().sum::<usize>(), 12);
+        assert_eq!(g[0], 2);
+        assert_eq!(g[1] + g[2], 10);
+        assert!(g[1].abs_diff(g[2]) <= 1, "equal weights stay within 1: {g:?}");
+    }
+
+    #[test]
+    fn priority_preempts_to_the_floor() {
+        // Capacity 8: the high-priority job takes its full 6; the two
+        // low-priority running jobs keep only their floors.
+        let a = CapacityArbiter::new(8, ArbiterPolicy::Priority);
+        let g = a.grants(&[d(1.0, 0, 4, 1), d(1.0, 0, 4, 1), d(1.0, 5, 6, 0)]);
+        assert_eq!(g, vec![1, 1, 6]);
+    }
+
+    #[test]
+    fn priority_ties_break_by_job_id() {
+        let a = CapacityArbiter::new(6, ArbiterPolicy::Priority);
+        let g = a.grants(&[d(1.0, 1, 5, 1), d(1.0, 1, 5, 1)]);
+        assert_eq!(g, vec![5, 1]);
+    }
+
+    #[test]
+    fn floors_over_capacity_shed_from_the_back() {
+        let a = CapacityArbiter::new(2, ArbiterPolicy::FairShare);
+        let g = a.grants(&[d(1.0, 0, 4, 1), d(1.0, 0, 4, 1), d(1.0, 0, 4, 1)]);
+        assert_eq!(g, vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn grants_are_deterministic() {
+        let a = CapacityArbiter::new(17, ArbiterPolicy::FairShare);
+        let ds = [d(1.5, 0, 9, 1), d(0.5, 0, 7, 1), d(3.0, 0, 30, 1), d(1.0, 0, 2, 0)];
+        let g1 = a.grants(&ds);
+        let g2 = a.grants(&ds);
+        assert_eq!(g1, g2);
+        assert_eq!(g1.iter().sum::<usize>(), 17);
+        for (g, dm) in g1.iter().zip(&ds) {
+            assert!(*g <= dm.ranks);
+            assert!(*g >= dm.floor.min(dm.ranks));
+        }
+    }
+}

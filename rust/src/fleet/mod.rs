@@ -1,0 +1,878 @@
+//! Multi-tenant fleet scheduler: N independent [`Session`]s multiplexed
+//! over one shared, elastic worker pool (DESIGN.md §13).
+//!
+//! The paper's dynamic batcher equalizes iteration times *within* one
+//! job; this layer arbitrates capacity *between* jobs.  A
+//! [`FleetScheduler`] owns a global virtual clock and interleaves
+//! per-job event loops — each job is a [`Session`] driven through the
+//! resumable [`Session::start`]/[`Session::step`] form, and a min-heap
+//! over (per-job next-event time, job id) merges job A's completions,
+//! deadlines, and autoscaler timers deterministically with job B's.  A
+//! [`CapacityArbiter`] grants/reclaims worker slots under fair-share or
+//! strict-priority policy; grant diffs are actuated through the
+//! membership join/revoke paths ([`RunState::inject_membership`]), and
+//! each job's [`crate::fault::Autoscaler`] becomes an arbiter client:
+//! its private spawn pool is capped at the fleet's spare capacity
+//! before every step ([`RunState::cap_spawn_pool`]).
+//!
+//! Two invariants anchor the design:
+//!
+//! 1. **Isolation**: with no contention (capacity ≥ total demand) the
+//!    fleet never touches a job's event or rng streams, so every
+//!    per-job [`RunReport`] is *bitwise identical* to the same job run
+//!    standalone.  `benches/fleet.rs` self-asserts this before timing.
+//! 2. **Determinism under interleaving**: every per-job rng (backend
+//!    noise, spot traces, autoscaler backoff jitter) derives from the
+//!    job's own seed — fleet configs that don't pin one get
+//!    [`job_seed`]`(fleet_seed, job_id)` — so job outcomes are a
+//!    function of (fleet config, seeds), never of scheduling order.
+//!
+//! Uncontended fleets take a parallel fast path (the jobs can't
+//! interact, so they fan out across the process-wide thread pool with
+//! a slot-ordered gather — this is what [`crate::figures::run_batch`]
+//! dispatches through); contended fleets run single-threaded
+//! interleaved so arbiter decisions happen at well-defined points on
+//! the merged clock.
+
+mod arbiter;
+
+pub use arbiter::{ArbiterPolicy, CapacityArbiter, JobDemand};
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::RunReport;
+use crate::session::{RunState, Session, SessionBuilder, SimBackend};
+use crate::trace::{MembershipEvent, MembershipKind};
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::percentile;
+
+/// Tag folded into per-job seed derivation (cf.
+/// [`crate::fault::AUTOSCALE_SEED_TAG`] one layer down).
+pub const FLEET_JOB_SEED_TAG: u64 = 0xF1EE_70B5;
+
+/// Deterministic per-job seed stream: fleet jobs that don't pin a seed
+/// run with `job_seed(fleet_seed, job_id)`, so every downstream rng —
+/// backend noise, spot traces, and the autoscaler's backoff-jitter
+/// stream (which forks off the session seed) — is a function of the
+/// (fleet_seed, job_id) pair and never of scheduling order.
+pub fn job_seed(fleet_seed: u64, job_id: u64) -> u64 {
+    // SplitMix64 finalizer over the pair: adjacent job ids land in
+    // decorrelated streams (a bare XOR would differ in one bit).
+    let mut sm = SplitMix64(
+        fleet_seed
+            ^ FLEET_JOB_SEED_TAG
+            ^ job_id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    sm.next()
+}
+
+/// One fleet job: a session config plus its standing with the arbiter.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    /// Fair-share weight (> 0).
+    pub weight: f64,
+    /// Strict-priority rank (higher wins).
+    pub priority: i64,
+    /// Fleet time the job is submitted.  Its own virtual clock still
+    /// starts at 0; completion on the fleet clock = admission + run
+    /// time (admission ≥ arrival when the job queues for capacity).
+    pub arrival: f64,
+    pub builder: SessionBuilder,
+}
+
+impl JobSpec {
+    pub fn new(name: &str, builder: SessionBuilder) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            weight: 1.0,
+            priority: 0,
+            arrival: 0.0,
+            builder,
+        }
+    }
+}
+
+// ------------------------------------------------------------- builder
+
+/// Builds a [`FleetScheduler`] from code or a JSON `jobs: [...]`
+/// config (`hbatch fleet`).
+#[derive(Debug, Clone, Default)]
+pub struct FleetBuilder {
+    capacity: Option<usize>,
+    policy: ArbiterPolicy,
+    seed: u64,
+    interleave: Option<bool>,
+    jobs: Vec<JobSpec>,
+}
+
+impl FleetBuilder {
+    pub fn new() -> FleetBuilder {
+        FleetBuilder::default()
+    }
+
+    /// Shared worker capacity.  Unset = uncontended: the sum of every
+    /// job's ranks + spawn pool, i.e. the arbiter never has to say no.
+    pub fn capacity(mut self, capacity: usize) -> Self {
+        self.capacity = Some(capacity);
+        self
+    }
+
+    pub fn policy(mut self, policy: ArbiterPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Fleet seed: jobs added via JSON without their own `seed` key
+    /// derive theirs as [`job_seed`]`(fleet_seed, job_id)`.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Force the scheduling mode: `true` = single-threaded
+    /// deterministic interleave, `false` = parallel fan-out (valid
+    /// only for uncontended fleets).  Unset = interleave exactly when
+    /// contended.
+    pub fn interleave(mut self, interleave: bool) -> Self {
+        self.interleave = Some(interleave);
+        self
+    }
+
+    pub fn job(mut self, spec: JobSpec) -> Self {
+        self.jobs.push(spec);
+        self
+    }
+
+    pub fn jobs(mut self, specs: Vec<JobSpec>) -> Self {
+        self.jobs.extend(specs);
+        self
+    }
+
+    /// Parse `{capacity?, policy?, seed?, jobs: [{name?, weight?,
+    /// priority?, arrival?, <session keys>}, ..]}`.  Job objects take
+    /// the same keys as `hbatch simulate --config` session configs.
+    pub fn from_json(j: &Json) -> Result<FleetBuilder, String> {
+        let mut f = FleetBuilder::new();
+        if let Some(c) = j.get("capacity").as_usize() {
+            f.capacity = Some(c);
+        }
+        if let Some(p) = j.get("policy").as_str() {
+            f.policy = ArbiterPolicy::parse(p).ok_or(format!("bad policy {p:?}"))?;
+        }
+        if let Some(s) = j.get("seed").as_usize() {
+            f.seed = s as u64;
+        }
+        let jobs = j
+            .get("jobs")
+            .as_arr()
+            .ok_or("fleet config needs a jobs: [...] array")?;
+        for (i, job) in jobs.iter().enumerate() {
+            let mut b =
+                SessionBuilder::from_json(job).map_err(|e| format!("jobs[{i}]: {e}"))?;
+            if job.get("seed").is_null() {
+                b = b.seed(job_seed(f.seed, i as u64));
+            }
+            let name = job
+                .get("name")
+                .as_str()
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("job{i}"));
+            let mut spec = JobSpec::new(&name, b);
+            if let Some(w) = job.get("weight").as_f64() {
+                spec.weight = w;
+            }
+            if let Some(p) = job.get("priority").as_f64() {
+                spec.priority = p as i64;
+            }
+            if let Some(a) = job.get("arrival").as_f64() {
+                spec.arrival = a;
+            }
+            f.jobs.push(spec);
+        }
+        Ok(f)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<FleetBuilder, String> {
+        let j = Json::parse(s).map_err(|e| e.to_string())?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_file(path: &str) -> Result<FleetBuilder, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn build(self) -> Result<FleetScheduler, String> {
+        if self.jobs.is_empty() {
+            return Err("fleet has no jobs".into());
+        }
+        let mut demand = 0usize;
+        for (i, spec) in self.jobs.iter().enumerate() {
+            if !(spec.weight > 0.0 && spec.weight.is_finite()) {
+                return Err(format!("jobs[{i}]: weight {} must be > 0", spec.weight));
+            }
+            if !(spec.arrival >= 0.0 && spec.arrival.is_finite()) {
+                return Err(format!("jobs[{i}]: arrival {} must be ≥ 0", spec.arrival));
+            }
+            spec.builder
+                .validate()
+                .map_err(|e| format!("jobs[{i}] ({}): {e}", spec.name))?;
+            demand += spec.builder.planned_workers() + spec.builder.planned_spawn_pool();
+        }
+        let capacity = self.capacity.unwrap_or(demand);
+        if capacity == 0 {
+            return Err("fleet capacity must be ≥ 1".into());
+        }
+        if capacity < demand && self.interleave == Some(false) {
+            return Err(format!(
+                "contended fleet (capacity {capacity} < demand {demand}) requires the \
+                 interleaved scheduler"
+            ));
+        }
+        Ok(FleetScheduler {
+            arbiter: CapacityArbiter::new(capacity, self.policy),
+            seed: self.seed,
+            interleave: self.interleave,
+            demand,
+            jobs: self.jobs,
+        })
+    }
+}
+
+// ----------------------------------------------------------- scheduler
+
+/// N concurrent jobs on one shared elastic pool.  Build via
+/// [`FleetBuilder`]; [`Self::run`] returns a [`FleetReport`].
+pub struct FleetScheduler {
+    arbiter: CapacityArbiter,
+    seed: u64,
+    interleave: Option<bool>,
+    /// Total demand (ranks + spawn pools) across jobs.
+    demand: usize,
+    jobs: Vec<JobSpec>,
+}
+
+/// Min-first heap key: (fleet time of the job's next activity, job id).
+/// Ties pop the lowest job id — the fleet's merge order is total.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Key {
+    t: f64,
+    job: usize,
+}
+
+impl Eq for Key {}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, the fleet wants min-first.
+        other.t.total_cmp(&self.t).then(other.job.cmp(&self.job))
+    }
+}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A job currently running under the interleaved scheduler.
+struct Active {
+    session: Session<SimBackend>,
+    rs: Option<RunState>,
+    /// Fleet time of admission (job-local t = 0).
+    offset: f64,
+    /// Capacity slots currently charged to the job.
+    granted: usize,
+    /// Ranks the fleet revoked and may later re-grant (ascending).
+    held: Vec<usize>,
+    /// Spawn-pool slots drawn from shared capacity so far.
+    pool_drawn: usize,
+    preemptions: u64,
+    regrants: u64,
+}
+
+enum JobPhase {
+    /// Submitted, not yet at the arbiter (its arrival key is queued).
+    Waiting,
+    /// Admission refused (grant would be 0); retried at every
+    /// completion.
+    Parked,
+    Running(Box<Active>),
+    Done(Box<JobOutcome>),
+}
+
+impl FleetScheduler {
+    pub fn capacity(&self) -> usize {
+        self.arbiter.capacity()
+    }
+
+    /// Run every job to completion and aggregate.  Uncontended fleets
+    /// fan out in parallel (slot-ordered gather — per-job results
+    /// can't depend on pool interleaving because nothing is shared);
+    /// contended fleets interleave deterministically on the merged
+    /// virtual clock.  The two paths agree bitwise per job whenever
+    /// both are legal.
+    pub fn run(&mut self) -> Result<FleetReport> {
+        let uncontended = self.arbiter.capacity() >= self.demand;
+        let interleaved = self.interleave.unwrap_or(!uncontended);
+        if !uncontended && !interleaved {
+            bail!("contended fleet requires the interleaved scheduler");
+        }
+        if interleaved {
+            self.run_interleaved()
+        } else {
+            self.run_parallel()
+        }
+    }
+
+    // ---------------------------------------------- parallel fast path
+
+    fn run_parallel(&self) -> Result<FleetReport> {
+        let tasks: Vec<Box<dyn FnOnce() -> Result<RunReport> + Send>> = self
+            .jobs
+            .iter()
+            .map(|spec| {
+                let b = spec.builder.clone();
+                Box::new(move || -> Result<RunReport> { b.build_sim()?.run() })
+                    as Box<dyn FnOnce() -> Result<RunReport> + Send>
+            })
+            .collect();
+        let results = crate::util::pool::global().run_collect(tasks);
+        let mut outcomes = Vec::with_capacity(self.jobs.len());
+        let mut timeline = Vec::with_capacity(2 * self.jobs.len());
+        for (i, (spec, res)) in self.jobs.iter().zip(results).enumerate() {
+            let report =
+                res.with_context(|| format!("fleet job {i} ({})", spec.name))?;
+            let ranks = spec.builder.planned_workers();
+            let completion = spec.arrival + report.total_time;
+            timeline.push((spec.arrival, ranks as i64));
+            timeline.push((completion, -(ranks as i64)));
+            outcomes.push(JobOutcome {
+                name: spec.name.clone(),
+                arrival: spec.arrival,
+                admission: spec.arrival,
+                completion,
+                granted_final: ranks,
+                fleet_preemptions: 0,
+                fleet_regrants: 0,
+                report,
+            });
+        }
+        Ok(self.aggregate(false, outcomes, timeline))
+    }
+
+    // --------------------------------------------- interleaved scheduler
+
+    fn run_interleaved(&self) -> Result<FleetReport> {
+        let n = self.jobs.len();
+        let ranks: Vec<usize> =
+            self.jobs.iter().map(|s| s.builder.planned_workers()).collect();
+        let mut phase: Vec<JobPhase> = (0..n).map(|_| JobPhase::Waiting).collect();
+        let mut heap: BinaryHeap<Key> = (0..n)
+            .map(|j| Key {
+                t: self.jobs[j].arrival,
+                job: j,
+            })
+            .collect();
+        let mut parked: Vec<usize> = Vec::new();
+        let mut committed = 0usize;
+        let mut fleet_now = 0.0_f64;
+        let mut timeline: Vec<(f64, i64)> = Vec::new();
+
+        while let Some(key) = heap.pop() {
+            fleet_now = fleet_now.max(key.t);
+            let j = key.job;
+            if matches!(phase[j], JobPhase::Waiting) {
+                // Arrival: one reconcile over the running set, the
+                // backlog, and the newcomer.  Under strict priority
+                // this is where a high-priority arrival preempts.
+                // Reconcile at the *arrival* time, not fleet_now: a
+                // completion whose final event overshot this arrival
+                // may have advanced fleet_now past it, but admission
+                // semantics (and parallel-path equality) pin an
+                // uncontended job's offset to its arrival.
+                parked.push(j);
+                phase[j] = JobPhase::Parked;
+                let admitted = self.reconcile(
+                    key.t,
+                    &ranks,
+                    &mut phase,
+                    &mut parked,
+                    &mut committed,
+                    &mut timeline,
+                )?;
+                for a in admitted {
+                    heap.push(Key { t: key.t, job: a });
+                }
+            } else if matches!(phase[j], JobPhase::Running(_)) {
+                let done = self.step_job(j, &mut phase, &mut committed)?;
+                if done {
+                    let completion =
+                        self.complete(j, &mut phase, &mut committed, &mut timeline)?;
+                    fleet_now = fleet_now.max(completion);
+                    let admitted = self.reconcile(
+                        fleet_now,
+                        &ranks,
+                        &mut phase,
+                        &mut parked,
+                        &mut committed,
+                        &mut timeline,
+                    )?;
+                    for a in admitted {
+                        heap.push(Key {
+                            t: fleet_now,
+                            job: a,
+                        });
+                    }
+                } else if let JobPhase::Running(active) = &phase[j] {
+                    heap.push(Key {
+                        t: active.offset + active.rs.as_ref().expect("running").now(),
+                        job: j,
+                    });
+                }
+            } else {
+                // Parked jobs have no heap key (reconcile re-queues
+                // them); Done jobs are never re-pushed.
+                unreachable!("stale fleet key for job {j}");
+            }
+        }
+
+        let mut outcomes = Vec::with_capacity(n);
+        for (j, ph) in phase.into_iter().enumerate() {
+            match ph {
+                JobPhase::Done(out) => outcomes.push(*out),
+                _ => bail!(
+                    "fleet job {j} ({}) never completed (capacity {} can't admit it)",
+                    self.jobs[j].name,
+                    self.arbiter.capacity()
+                ),
+            }
+        }
+        Ok(self.aggregate(true, outcomes, timeline))
+    }
+
+    /// One arbiter pass at fleet time `now`: recompute grants over the
+    /// running set plus the admission backlog, actuate shrinks first
+    /// (freeing slots) then grows, then admit every backlog job whose
+    /// grant came back ≥ 1.  Returns the newly admitted job ids.
+    fn reconcile(
+        &self,
+        now: f64,
+        ranks: &[usize],
+        phase: &mut [JobPhase],
+        parked: &mut Vec<usize>,
+        committed: &mut usize,
+        timeline: &mut Vec<(f64, i64)>,
+    ) -> Result<Vec<usize>> {
+        parked.sort_unstable();
+        let running: Vec<usize> = (0..phase.len())
+            .filter(|&i| matches!(phase[i], JobPhase::Running(_)))
+            .collect();
+        let mut ids = running.clone();
+        ids.extend(parked.iter().copied());
+        let demands: Vec<JobDemand> = ids
+            .iter()
+            .enumerate()
+            .map(|(pos, &i)| JobDemand {
+                weight: self.jobs[i].weight,
+                priority: self.jobs[i].priority,
+                ranks: ranks[i],
+                floor: if pos < running.len() { 1 } else { 0 },
+            })
+            .collect();
+        // Spawn draws hold real slots until their job completes, so
+        // the arbiter only gets to place what's left of the fleet —
+        // Σ grants + Σ draws never exceeds capacity.
+        let drawn: usize = running
+            .iter()
+            .map(|&i| match &phase[i] {
+                JobPhase::Running(a) => a.pool_drawn,
+                _ => 0,
+            })
+            .sum();
+        let effective = self.arbiter.capacity().saturating_sub(drawn);
+        let grants =
+            CapacityArbiter::new(effective, self.arbiter.policy()).grants(&demands);
+
+        // Shrinks before grows: slots freed here fund the grows and
+        // admissions below, so `committed` never overshoots capacity.
+        for (pos, &i) in running.iter().enumerate() {
+            if grants[pos] < self.granted(phase, i) {
+                self.set_grant(i, grants[pos], now, phase, committed, timeline);
+            }
+        }
+        for (pos, &i) in running.iter().enumerate() {
+            if grants[pos] > self.granted(phase, i) {
+                self.set_grant(i, grants[pos], now, phase, committed, timeline);
+            }
+        }
+        let mut admitted = Vec::new();
+        for (pos, &i) in ids.iter().enumerate().skip(running.len()) {
+            if grants[pos] == 0 {
+                continue;
+            }
+            self.admit(i, grants[pos], now, phase, committed, timeline)?;
+            admitted.push(i);
+        }
+        parked.retain(|p| !admitted.contains(p));
+        Ok(admitted)
+    }
+
+    fn granted(&self, phase: &[JobPhase], j: usize) -> usize {
+        match &phase[j] {
+            JobPhase::Running(a) => a.granted,
+            _ => 0,
+        }
+    }
+
+    /// Build + start job `j` with `grant` slots at fleet time `now`.
+    /// Under-grants are actuated as revocations of the highest live
+    /// ranks at job-local t = 0 — the job opens already degraded,
+    /// through the same plan-revoke path mid-run preemption uses.
+    fn admit(
+        &self,
+        j: usize,
+        grant: usize,
+        now: f64,
+        phase: &mut [JobPhase],
+        committed: &mut usize,
+        timeline: &mut Vec<(f64, i64)>,
+    ) -> Result<()> {
+        let spec = &self.jobs[j];
+        let mut session = spec
+            .builder
+            .build_sim()
+            .with_context(|| format!("fleet job {j} ({})", spec.name))?;
+        let rs = session
+            .start()
+            .with_context(|| format!("fleet job {j} ({})", spec.name))?;
+        let mut active = Active {
+            session,
+            rs: Some(rs),
+            offset: now,
+            granted: self.jobs[j].builder.planned_workers(),
+            held: Vec::new(),
+            pool_drawn: 0,
+            preemptions: 0,
+            regrants: 0,
+        };
+        let full = active.granted;
+        if grant < full {
+            shrink_to(&mut active, full, grant, 0.0);
+        }
+        *committed += grant;
+        timeline.push((now, grant as i64));
+        phase[j] = JobPhase::Running(Box::new(active));
+        Ok(())
+    }
+
+    /// Actuate a grant change for running job `j` at fleet time `now`.
+    fn set_grant(
+        &self,
+        j: usize,
+        new: usize,
+        now: f64,
+        phase: &mut [JobPhase],
+        committed: &mut usize,
+        timeline: &mut Vec<(f64, i64)>,
+    ) {
+        let ranks = self.jobs[j].builder.planned_workers();
+        let JobPhase::Running(active) = &mut phase[j] else {
+            return;
+        };
+        let old = active.granted;
+        if new == old {
+            return;
+        }
+        let local_t = {
+            let rs = active.rs.as_ref().expect("running");
+            (now - active.offset).max(rs.now())
+        };
+        if new < old {
+            shrink_to(active, ranks, new, local_t);
+            *committed -= old - new;
+            timeline.push((now, -((old - new) as i64)));
+        } else {
+            grow_to(active, new, local_t);
+            *committed += new - old;
+            timeline.push((now, (new - old) as i64));
+        }
+    }
+
+    /// Drive job `j` one event forward.  The autoscaler's pool is
+    /// capped at the fleet's spare capacity first (arbiter-client
+    /// contract), and any spawn draw during the step is charged to the
+    /// shared pool after.
+    fn step_job(
+        &self,
+        j: usize,
+        phase: &mut [JobPhase],
+        committed: &mut usize,
+    ) -> Result<bool> {
+        let spare = self.arbiter.capacity().saturating_sub(*committed);
+        let JobPhase::Running(active) = &mut phase[j] else {
+            unreachable!("stepping a non-running job");
+        };
+        let rs = active.rs.as_mut().expect("running");
+        rs.cap_spawn_pool(spare);
+        let before = rs.spawn_pool_left().unwrap_or(0);
+        let alive = active
+            .session
+            .step(rs)
+            .with_context(|| format!("fleet job {j} ({})", self.jobs[j].name))?;
+        let drawn = before.saturating_sub(rs.spawn_pool_left().unwrap_or(0));
+        active.pool_drawn += drawn;
+        *committed += drawn;
+        Ok(!alive)
+    }
+
+    /// Finish job `j`, release every slot it held (grant + spawn
+    /// draws), and record the outcome.  Returns the completion time on
+    /// the fleet clock.
+    fn complete(
+        &self,
+        j: usize,
+        phase: &mut [JobPhase],
+        committed: &mut usize,
+        timeline: &mut Vec<(f64, i64)>,
+    ) -> Result<f64> {
+        let JobPhase::Running(active) = std::mem::replace(&mut phase[j], JobPhase::Waiting)
+        else {
+            unreachable!("completing a non-running job");
+        };
+        let mut active = *active;
+        let report = active.session.finish(active.rs.take().expect("running"));
+        let completion = active.offset + report.total_time;
+        *committed -= active.granted + active.pool_drawn;
+        timeline.push((completion, -(active.granted as i64)));
+        phase[j] = JobPhase::Done(Box::new(JobOutcome {
+            name: self.jobs[j].name.clone(),
+            arrival: self.jobs[j].arrival,
+            admission: active.offset,
+            completion,
+            granted_final: active.granted,
+            fleet_preemptions: active.preemptions,
+            fleet_regrants: active.regrants,
+            report,
+        }));
+        Ok(completion)
+    }
+
+    // -------------------------------------------------------- aggregate
+
+    fn aggregate(
+        &self,
+        interleaved: bool,
+        outcomes: Vec<JobOutcome>,
+        mut timeline: Vec<(f64, i64)>,
+    ) -> FleetReport {
+        let mut completions: Vec<f64> =
+            outcomes.iter().map(|o| o.completion).collect();
+        let makespan = completions.iter().cloned().fold(0.0, f64::max);
+        let completion_p50 = percentile(&mut completions, 0.50);
+        let completion_p99 = percentile(&mut completions, 0.99);
+        // Slot-seconds granted, integrated over the fleet timeline,
+        // over capacity × makespan.  Spawn-pool draws are accounted as
+        // spare-capacity pressure during the run but not counted here:
+        // utilization measures how much of the fleet the arbiter kept
+        // *assigned*.
+        timeline.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut area = 0.0;
+        let mut level = 0i64;
+        let mut last_t = 0.0;
+        for (t, delta) in timeline {
+            area += level as f64 * (t - last_t);
+            level += delta;
+            last_t = t;
+        }
+        let utilization = if makespan > 0.0 {
+            area / (self.arbiter.capacity() as f64 * makespan)
+        } else {
+            0.0
+        };
+        let total_wasted_spawns =
+            outcomes.iter().map(|o| o.report.wasted_spawns()).sum();
+        FleetReport {
+            policy: self.arbiter.policy(),
+            capacity: self.arbiter.capacity(),
+            seed: self.seed,
+            interleaved,
+            makespan,
+            completion_p50,
+            completion_p99,
+            utilization,
+            total_wasted_spawns,
+            jobs: outcomes,
+        }
+    }
+}
+
+/// Revoke `old_granted − new` slots from a running job: the highest
+/// currently-live ranks go first, injected as plan-style revocations at
+/// job-local time `local_t`.  Slots whose ranks are already dead
+/// (detector-retired, crashed) free without actuation.
+fn shrink_to(active: &mut Active, ranks: usize, new: usize, local_t: f64) {
+    let rs = active.rs.as_mut().expect("running");
+    let mut cut = active.granted - new;
+    for w in (0..ranks).rev() {
+        if cut == 0 {
+            break;
+        }
+        if active.held.contains(&w) {
+            continue;
+        }
+        if rs.is_live(w) {
+            rs.inject_membership(MembershipEvent {
+                time: local_t,
+                worker: w,
+                kind: MembershipKind::Revoke,
+            });
+            active.held.push(w);
+            active.preemptions += 1;
+        }
+        // Live → revoked above; dead (detector-retired, crashed,
+        // trace-revoked) → the slot frees without an event and the
+        // rank is not eligible for fleet regrant.
+        cut -= 1;
+    }
+    active.granted = new;
+    active.held.sort_unstable();
+}
+
+/// Re-grant up to `new − granted` previously revoked ranks (lowest
+/// first), injected as plan-style joins at job-local time `local_t`.
+fn grow_to(active: &mut Active, new: usize, local_t: f64) {
+    let rs = active.rs.as_mut().expect("running");
+    let mut add = new - active.granted;
+    while add > 0 && !active.held.is_empty() {
+        let w = active.held.remove(0);
+        rs.inject_membership(MembershipEvent {
+            time: local_t,
+            worker: w,
+            kind: MembershipKind::Join,
+        });
+        active.regrants += 1;
+        add -= 1;
+    }
+    active.granted = new;
+}
+
+// -------------------------------------------------------------- report
+
+/// One job's fate under the fleet.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub name: String,
+    /// Submission time (fleet clock).
+    pub arrival: f64,
+    /// Admission time (≥ arrival when the job queued for capacity).
+    pub admission: f64,
+    /// Completion time (fleet clock).
+    pub completion: f64,
+    /// Slots held at completion.
+    pub granted_final: usize,
+    /// Ranks the fleet revoked over the job's lifetime (including an
+    /// under-granted admission).
+    pub fleet_preemptions: u64,
+    /// Ranks the fleet re-granted after capacity freed up.
+    pub fleet_regrants: u64,
+    pub report: RunReport,
+}
+
+/// Aggregate result of a fleet run (`hbatch fleet` prints its JSON).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub policy: ArbiterPolicy,
+    pub capacity: usize,
+    pub seed: u64,
+    /// Whether the deterministic interleaved scheduler ran (vs the
+    /// uncontended parallel fast path).
+    pub interleaved: bool,
+    pub jobs: Vec<JobOutcome>,
+    /// Latest completion on the fleet clock.
+    pub makespan: f64,
+    pub completion_p50: f64,
+    pub completion_p99: f64,
+    /// Granted slot-seconds / (capacity × makespan).
+    pub utilization: f64,
+    /// Σ per-job wasted autoscaler spawns (`RunReport::spawns`).
+    pub total_wasted_spawns: u64,
+}
+
+impl FleetReport {
+    /// Per-job reports in job-id (input) order — the slot-ordered
+    /// gather figure sweeps rely on.
+    pub fn into_reports(self) -> Vec<RunReport> {
+        self.jobs.into_iter().map(|j| j.report).collect()
+    }
+
+    /// Summary JSON (per-job scalars, no per-iteration records).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("policy", Json::Str(self.policy.label().into()));
+        j.set("capacity", Json::Num(self.capacity as f64));
+        j.set("seed", Json::Num(self.seed as f64));
+        j.set("interleaved", Json::Bool(self.interleaved));
+        j.set("n_jobs", Json::Num(self.jobs.len() as f64));
+        j.set("makespan", Json::Num(self.makespan));
+        j.set("completion_p50", Json::Num(self.completion_p50));
+        j.set("completion_p99", Json::Num(self.completion_p99));
+        j.set("utilization", Json::Num(self.utilization));
+        j.set(
+            "total_wasted_spawns",
+            Json::Num(self.total_wasted_spawns as f64),
+        );
+        let jobs = self
+            .jobs
+            .iter()
+            .map(|o| {
+                let mut jj = Json::obj();
+                jj.set("name", Json::Str(o.name.clone()));
+                jj.set("arrival", Json::Num(o.arrival));
+                jj.set("admission", Json::Num(o.admission));
+                jj.set("completion", Json::Num(o.completion));
+                jj.set("total_time", Json::Num(o.report.total_time));
+                jj.set("total_iters", Json::Num(o.report.total_iters as f64));
+                jj.set("reached_target", Json::Bool(o.report.reached_target));
+                jj.set("granted_final", Json::Num(o.granted_final as f64));
+                jj.set("fleet_preemptions", Json::Num(o.fleet_preemptions as f64));
+                jj.set("fleet_regrants", Json::Num(o.fleet_regrants as f64));
+                jj.set(
+                    "spawn_requests",
+                    Json::Num(o.report.spawn_requests() as f64),
+                );
+                jj.set("wasted_spawns", Json::Num(o.report.wasted_spawns() as f64));
+                jj
+            })
+            .collect();
+        j.set("jobs", Json::Arr(jobs));
+        j
+    }
+}
+
+/// Thin adapter for embarrassingly-parallel sweeps
+/// ([`crate::figures::run_batch`]): an uncontended fleet over
+/// `builders` — capacity = total demand, so the arbiter never
+/// intervenes and every report is bitwise the standalone run's —
+/// returning reports in input (slot) order.  Builders keep their own
+/// seeds; no fleet reseeding happens on this path.
+pub fn run_uncontended(builders: Vec<SessionBuilder>) -> Vec<RunReport> {
+    let specs = builders
+        .into_iter()
+        .enumerate()
+        .map(|(i, b)| JobSpec::new(&format!("job{i}"), b))
+        .collect();
+    FleetBuilder::new()
+        .jobs(specs)
+        .build()
+        .expect("fleet config")
+        .run()
+        .expect("fleet run")
+        .into_reports()
+}

@@ -32,6 +32,11 @@
 //!   progress-deadline failure detector config, and the autoscaled
 //!   recovery policy that together close the unannounced-churn loop
 //!   (DESIGN.md §12).
+//! - [`fleet`]: the multi-tenant layer — N concurrent [`Session`]s on
+//!   one shared elastic pool, deterministically interleaved on a merged
+//!   virtual clock, with a [`fleet::CapacityArbiter`] granting and
+//!   reclaiming slots under fair-share or strict-priority policy
+//!   (DESIGN.md §13).
 //! - [`data`], [`metrics`], [`config`], [`figures`], [`util`]:
 //!   synthetic datasets, measurement, policy selection, figure
 //!   harnesses, and std-only substrates (JSON, RNG, CLI, stats, bench,
@@ -48,6 +53,7 @@ pub mod controller;
 pub mod data;
 pub mod fault;
 pub mod figures;
+pub mod fleet;
 pub mod metrics;
 pub mod ps;
 pub mod runtime;
@@ -58,7 +64,11 @@ pub mod util;
 
 pub use config::Policy;
 pub use fault::{Autoscaler, AutoscalerCfg, DetectorCfg, FaultPlan, LatePolicy};
+pub use fleet::{
+    job_seed, ArbiterPolicy, CapacityArbiter, FleetBuilder, FleetReport,
+    FleetScheduler, JobSpec,
+};
 pub use session::{
-    Backend, BspAgg, RealBackend, Scheduler, Session, SessionBuilder, SimBackend,
-    Slowdowns, WorkerOutcome,
+    Backend, BspAgg, RealBackend, RunState, Scheduler, Session, SessionBuilder,
+    SimBackend, Slowdowns, WorkerOutcome,
 };

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   simulate          virtual-time experiment (policy × cluster × workload)
 //!   train             real-execution training over the PJRT runtime
+//!   fleet             N concurrent jobs on one shared elastic worker pool
 //!   figure <id>       regenerate a paper figure (1|2|3|4a|4b|5|6|7a|7cloud|asp|buckets|revocation)
 //!   throughput-scan   print the Fig. 5 curve for a device
 //!   info              artifact/manifest inventory
@@ -16,6 +17,7 @@ use hetero_batch::cluster::{cpu_cluster, hlevel_split};
 use hetero_batch::config::Policy;
 use hetero_batch::fault::{AutoscalerCfg, DetectorCfg, FaultPlan};
 use hetero_batch::figures;
+use hetero_batch::fleet::{job_seed, ArbiterPolicy, FleetBuilder, JobSpec};
 use hetero_batch::runtime::Runtime;
 use hetero_batch::session::{Scheduler, Session, SessionBuilder, Slowdowns};
 use hetero_batch::sync::SyncMode;
@@ -81,6 +83,7 @@ fn main() {
     let result = match cmd {
         "simulate" => cmd_simulate(&rest),
         "train" => cmd_train(&rest),
+        "fleet" => cmd_fleet(&rest),
         "figure" => cmd_figure(&rest),
         "throughput-scan" => cmd_scan(&rest),
         "info" => cmd_info(&rest),
@@ -101,6 +104,7 @@ fn usage() -> String {
      commands:\n\
      \x20 simulate          virtual-time experiment (fast, reproduces paper figures)\n\
      \x20 train             real training over AOT-compiled XLA artifacts\n\
+     \x20 fleet             N concurrent jobs on one shared elastic worker pool\n\
      \x20 figure <id>       regenerate a paper figure: 1 2 3 4a 4b 5 6 7a 7cloud asp buckets revocation all\n\
      \x20 throughput-scan   throughput-vs-batch curve for a device\n\
      \x20 info              show artifact manifest\n\
@@ -175,6 +179,60 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         .run()
         .map_err(|e| e.to_string())?;
     println!("{}", r.to_json(k).to_pretty());
+    Ok(())
+}
+
+fn cmd_fleet(rest: &[String]) -> Result<(), String> {
+    let a = Args::new(
+        "hbatch fleet",
+        "N concurrent training jobs arbitrated over one shared elastic worker pool",
+    )
+    .opt("config", "", "fleet JSON {capacity?, policy?, seed?, jobs: [{<session keys>, name?, weight?, priority?, arrival?}, ..]}")
+    .opt("jobs", "4", "synthetic fleet: number of jobs (ignored with --config)")
+    .opt("workload", "mnist", "synthetic fleet: workload per job")
+    .opt("cores", "4,8", "synthetic fleet: per-worker cores per job")
+    .opt("iters", "60", "synthetic fleet: iterations per job")
+    .opt("arrival-gap", "0", "synthetic fleet: seconds between consecutive arrivals")
+    .opt("capacity", "0", "shared worker capacity (0 = uncontended: total demand)")
+    .opt("policy", "fair", "capacity arbitration: fair|priority")
+    .opt("seed", "0", "fleet seed: jobs without their own get job_seed(seed, id)")
+    .flag("interleave", "force the deterministic interleaved scheduler even when uncontended")
+    .parse(rest)?;
+
+    let mut f = if a.get("config").is_empty() {
+        let n = a.get_usize("jobs").max(1);
+        let cores = a.get_usize_list("cores");
+        if cores.is_empty() {
+            return Err("--cores must list at least one worker".into());
+        }
+        let seed = a.get_u64("seed");
+        let gap = a.get_f64("arrival-gap");
+        let mut f = FleetBuilder::new().seed(seed);
+        for i in 0..n {
+            let b = Session::builder()
+                .model(&a.get("workload"))
+                .workers(cpu_cluster(&cores))
+                .steps(a.get_u64("iters"))
+                .seed(job_seed(seed, i as u64));
+            let mut spec = JobSpec::new(&format!("job{i}"), b);
+            spec.arrival = gap * i as f64;
+            f = f.job(spec);
+        }
+        f
+    } else {
+        FleetBuilder::from_file(&a.get("config"))?
+    };
+    if a.get_usize("capacity") > 0 {
+        f = f.capacity(a.get_usize("capacity"));
+    }
+    if a.provided("policy") {
+        f = f.policy(ArbiterPolicy::parse(&a.get("policy")).ok_or("bad --policy")?);
+    }
+    if a.get_flag("interleave") {
+        f = f.interleave(true);
+    }
+    let report = f.build()?.run().map_err(|e| e.to_string())?;
+    println!("{}", report.to_json().to_pretty());
     Ok(())
 }
 

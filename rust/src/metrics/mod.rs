@@ -6,7 +6,7 @@ use crate::util::json::Json;
 use crate::util::stats::{percentile, Running};
 
 /// One completed worker iteration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct IterRecord {
     pub worker: usize,
     pub iter: u64,
@@ -19,7 +19,7 @@ pub struct IterRecord {
 }
 
 /// One periodic evaluation (`StepKind::Eval`) during a real run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EvalRecord {
     /// Wall time of the eval (seconds since run start).
     pub time: f64,
@@ -31,7 +31,7 @@ pub struct EvalRecord {
 }
 
 /// A batch readjustment event.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AdjustEvent {
     pub time: f64,
     pub iter: u64,
@@ -41,7 +41,7 @@ pub struct AdjustEvent {
 }
 
 /// One membership-epoch transition (a worker revoked or (re)joined).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EpochEvent {
     /// Virtual/wall time of the transition.
     pub time: f64,
@@ -75,7 +75,7 @@ impl DetectorAction {
 }
 
 /// One failure-detector decision.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DetectorEvent {
     pub time: f64,
     pub worker: usize,
@@ -112,7 +112,7 @@ impl SpawnAction {
 }
 
 /// One autoscaler event (provisioning requests, failures, joins).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SpawnEvent {
     pub time: f64,
     /// Rank the event concerns (None for pool-level events like a
@@ -124,7 +124,7 @@ pub struct SpawnEvent {
 }
 
 /// Complete record of one training run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunReport {
     pub label: String,
     pub iters: Vec<IterRecord>,
@@ -153,6 +153,33 @@ impl RunReport {
             label: label.to_string(),
             ..Default::default()
         }
+    }
+
+    /// Field-by-field bitwise equality — the fleet isolation
+    /// invariant's comparator (a fleet-run job must match the same job
+    /// run standalone *exactly*, not approximately).  Plain `==` over
+    /// every record; f64 fields compare by value, and no report field
+    /// is ever NaN.
+    pub fn bitwise_eq(&self, other: &RunReport) -> bool {
+        self == other
+    }
+
+    /// Autoscaler spawn requests accepted over the run (cold starts
+    /// begun) — the fleet's per-job provisioning-demand accounting.
+    pub fn spawn_requests(&self) -> u64 {
+        self.spawns
+            .iter()
+            .filter(|s| s.action == SpawnAction::Request)
+            .count() as u64
+    }
+
+    /// Replacements that became ready but were never needed: capacity
+    /// paid for nothing.  Summed fleet-wide in the `FleetReport`.
+    pub fn wasted_spawns(&self) -> u64 {
+        self.spawns
+            .iter()
+            .filter(|s| s.action == SpawnAction::Wasted)
+            .count() as u64
     }
 
     /// Per-worker iteration-time statistics.

@@ -680,6 +680,19 @@ impl SessionBuilder {
         Self::from_json_str(&text)
     }
 
+    /// Ranks this config will run with — the fleet arbiter's demand.
+    pub fn planned_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Autoscaler spawn-pool size (0 without an autoscaler).  The
+    /// fleet counts these as reservable capacity beyond the ranks, so
+    /// an "uncontended" fleet stays uncontended even when every job
+    /// drains its pool.
+    pub fn planned_spawn_pool(&self) -> usize {
+        self.autoscale.as_ref().map_or(0, |a| a.pool)
+    }
+
     // ------------------------------------------------------- validation
 
     pub fn validate(&self) -> Result<(), String> {
@@ -1008,7 +1021,23 @@ impl<B: Backend> Session<B> {
     }
 
     /// Run to the step budget / convergence target and report.
+    ///
+    /// Equivalent to driving [`Self::start`] / [`Self::step`] /
+    /// [`Self::finish`] to completion — the fleet layer
+    /// ([`crate::fleet`]) uses that decomposed form to interleave many
+    /// sessions on one merged virtual clock.  The two paths are
+    /// bit-identical by construction: the step body *is* the loop body.
     pub fn run(&mut self) -> Result<RunReport> {
+        let mut rs = self.start()?;
+        while self.step(&mut rs)? {}
+        Ok(self.finish(rs))
+    }
+
+    /// Validate the configuration and set up a run: initial cohort,
+    /// allocation, controller, sync state, and event queues.  Advance
+    /// the returned [`RunState`] with [`Self::step`]; consume it with
+    /// [`Self::finish`].
+    pub fn start(&mut self) -> Result<RunState> {
         let k = self.backend.k();
         if self.slowdowns.0.len() != k {
             bail!("slowdowns/workers length mismatch");
@@ -1146,7 +1175,33 @@ impl<B: Backend> Session<B> {
             }
         }
 
-        'training: while st.progress < target as f64 && st.updates < hard_updates {
+        Ok(RunState {
+            st,
+            events,
+            report,
+            target,
+            hard_updates,
+            done: false,
+        })
+    }
+
+    /// Process one event-loop iteration: membership transitions due
+    /// now, autoscaler actuation, wave dispatch, then the next
+    /// completion / membership / aux event.  Returns `false` once the
+    /// run is over (budget met, loss target hit, or early stop);
+    /// further calls are no-ops.
+    pub fn step(&mut self, rs: &mut RunState) -> Result<bool> {
+        if rs.done
+            || !(rs.st.progress < rs.target as f64 && rs.st.updates < rs.hard_updates)
+        {
+            rs.done = true;
+            return Ok(false);
+        }
+        let k = self.backend.k();
+        let RunState {
+            st, events, report, done, ..
+        } = rs;
+        {
             // Membership transitions due now (revocations first at equal
             // timestamps — the plan is pre-sorted).
             while events.front().map_or(false, |e| e.time <= st.t) {
@@ -1154,15 +1209,16 @@ impl<B: Backend> Session<B> {
                 if ev.kind == MembershipKind::Revoke && st.live[ev.worker] {
                     st.n_plan_revoked += 1;
                 }
-                self.apply_membership(ev, &mut st, &mut report)?;
+                self.apply_membership(ev, st, report)?;
                 if st.stopped_early {
                     // A revocation-forced barrier can hit the loss target.
-                    break 'training;
+                    *done = true;
+                    return Ok(false);
                 }
             }
             // Autoscaler actuation: admit replacements whose cold start
             // finished, then run any due spawn attempts (DESIGN.md §12).
-            self.autoscale_step(&mut st, &mut report)?;
+            self.autoscale_step(st, report)?;
             if st.sync.live_count() == 0 && events.is_empty() {
                 // Autoscaler-aware bail: a pending replacement (cold
                 // start in progress / retry scheduled) or a readmittable
@@ -1299,34 +1355,35 @@ impl<B: Backend> Session<B> {
                             if st.heap_mode {
                                 st.deadline_heap.pop(); // `w`'s validated entry
                             }
-                            self.suspect(w, &mut st, &mut report)?;
+                            self.suspect(w, st, report)?;
                             if st.stopped_early {
                                 // A suspicion-forced barrier can hit the
                                 // loss target.
-                                break 'training;
+                                *done = true;
+                                return Ok(false);
                             }
                         }
                         AuxEvent::Arrival(w) => {
-                            self.late_arrival(w, &mut st, &mut report)?;
+                            self.late_arrival(w, st, report)?;
                         }
                         // Provisioning timer: the loop-top autoscale
                         // step acts at the new time.
                         AuxEvent::Spawn => {}
                     }
-                    continue 'training;
+                    return Ok(true);
                 }
             }
             let w = match (next_completion, next_event_t) {
                 (Some(w), Some(te)) if te < st.next_done[w] => {
                     st.t = st.t.max(te);
-                    continue 'training;
+                    return Ok(true);
                 }
                 (Some(w), _) => w,
                 (None, Some(te)) => {
                     // Nobody is live/running: fast-forward to the next
                     // scheduled join.
                     st.t = st.t.max(te);
-                    continue 'training;
+                    return Ok(true);
                 }
                 (None, None) => bail!("session deadlock: no runnable workers"),
             };
@@ -1364,9 +1421,10 @@ impl<B: Backend> Session<B> {
                 // only closes the round.
                 self.backend.stage_update(w, &st.exec_batch)?;
                 if st.sync.at_barrier() {
-                    self.close_bsp_round(&mut st, &mut report, false)?;
+                    self.close_bsp_round(st, report, false)?;
                     if st.stopped_early {
-                        break 'training;
+                        *done = true;
+                        return Ok(false);
                     }
                 }
             } else {
@@ -1396,13 +1454,14 @@ impl<B: Backend> Session<B> {
                 }
                 if hit_loss_target(loss, self.loss_target) {
                     report.reached_target = true;
-                    break 'training;
+                    *done = true;
+                    return Ok(false);
                 }
                 if st.updates % k as u64 == 0 {
                     st.global_steps += 1;
                     record_eval(
                         &mut self.backend,
-                        &mut report,
+                        report,
                         self.eval_every,
                         st.global_steps,
                         st.t,
@@ -1422,7 +1481,7 @@ impl<B: Backend> Session<B> {
                                 &mut st.batches,
                                 &st.live,
                                 ctl,
-                                &mut report,
+                                report,
                                 &mut st.t,
                                 st.updates,
                                 self.adjust_cost_s,
@@ -1432,11 +1491,20 @@ impl<B: Backend> Session<B> {
                 }
             }
         }
+        Ok(true)
+    }
 
-        report.total_time = st.t;
-        report.total_iters = if is_bsp { st.global_steps } else { st.updates };
-        if !report.reached_target {
-            report.reached_target = if self.loss_target > 0.0 {
+    /// Assemble the final [`RunReport`] (total time/iterations and the
+    /// budget-consumed convergence verdict).
+    pub fn finish(&self, mut rs: RunState) -> RunReport {
+        rs.report.total_time = rs.st.t;
+        rs.report.total_iters = if rs.st.is_bsp {
+            rs.st.global_steps
+        } else {
+            rs.st.updates
+        };
+        if !rs.report.reached_target {
+            rs.report.reached_target = if self.loss_target > 0.0 {
                 false
             } else {
                 // An explicit budget fully consumed counts as reached:
@@ -1444,11 +1512,11 @@ impl<B: Backend> Session<B> {
                 // batch sum (and thus per-update progress) slightly
                 // short, and a normally completed run must not report
                 // failure.
-                st.progress >= target as f64
-                    || (self.steps > 0 && st.updates >= hard_updates)
+                rs.st.progress >= rs.target as f64
+                    || (self.steps > 0 && rs.st.updates >= rs.hard_updates)
             };
         }
-        Ok(report)
+        rs.report
     }
 
     /// Close the open BSP round: barrier accounting, one λ-weighted
@@ -1885,6 +1953,85 @@ impl Ord for DoneEntry {
             .time
             .total_cmp(&self.time)
             .then_with(|| other.worker.cmp(&self.worker))
+    }
+}
+
+/// Resumable state of one [`Session::run`]: everything the event loop
+/// carries between iterations.  Produced by [`Session::start`],
+/// advanced one event at a time by [`Session::step`], consumed by
+/// [`Session::finish`].  The fleet layer ([`crate::fleet`]) drives many
+/// of these on one merged virtual clock; the accessors below are its
+/// whole control surface, and none of them perturbs the job's own
+/// event or rng streams unless invoked — an undisturbed `RunState` is
+/// bit-identical to a plain `run()`.
+pub struct RunState {
+    st: LoopState,
+    events: VecDeque<MembershipEvent>,
+    report: RunReport,
+    target: u64,
+    hard_updates: u64,
+    done: bool,
+}
+
+impl RunState {
+    /// Current virtual time (seconds since this job's own t = 0).
+    pub fn now(&self) -> f64 {
+        self.st.t
+    }
+
+    /// Has the run finished?  ([`Session::step`] returned `false`.)
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Live-cohort size right now.
+    pub fn live_count(&self) -> usize {
+        self.st.sync.live_count()
+    }
+
+    /// Is rank `w` currently a cohort member?
+    pub fn is_live(&self, w: usize) -> bool {
+        self.st.live.get(w).copied().unwrap_or(false)
+    }
+
+    /// The report accumulated so far (totals are filled by
+    /// [`Session::finish`]).
+    pub fn report(&self) -> &RunReport {
+        &self.report
+    }
+
+    /// Inject a membership event (fleet grant/reclaim actuation) into
+    /// the pending queue, preserving the plan's deterministic
+    /// (time, worker, revoke-before-join) order.  Events dated at or
+    /// before the current clock fire at the next [`Session::step`];
+    /// they share the plan-event code path (idempotent
+    /// revoke/join), so fleet preemption *is* the PR 3 revocation path.
+    pub fn inject_membership(&mut self, ev: MembershipEvent) {
+        let at = self
+            .events
+            .iter()
+            .position(|e| crate::trace::cmp_events(e, &ev) == std::cmp::Ordering::Greater)
+            .unwrap_or(self.events.len());
+        self.events.insert(at, ev);
+    }
+
+    /// Arbiter-client hook: cap the autoscaler's remaining private
+    /// spawn pool at the shared-capacity `spare` the fleet can lend
+    /// right now.  Capping only ever shrinks the pool (the fleet lends
+    /// headroom, it never refills), so an uncontended fleet — spare
+    /// always ≥ pool — leaves the autoscaler untouched.  No-op for
+    /// sessions without an autoscaler.
+    pub fn cap_spawn_pool(&mut self, spare: usize) {
+        if let Some(a) = self.st.ascaler.as_mut() {
+            a.cap_pool(spare);
+        }
+    }
+
+    /// Spawn-pool slots still unspent (`None` without an autoscaler).
+    /// The fleet samples this around each step to charge provisioning
+    /// draws against the shared capacity.
+    pub fn spawn_pool_left(&self) -> Option<usize> {
+        self.st.ascaler.as_ref().map(|a| a.pool_left())
     }
 }
 

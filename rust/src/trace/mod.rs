@@ -408,16 +408,22 @@ impl MembershipPlan {
     }
 }
 
+/// Deterministic processing order for membership events:
+/// (time, worker, revoke-before-join).  Public so out-of-plan
+/// injections (the fleet arbiter's grant/reclaim actuations) slot into
+/// a running session's queue exactly like plan events would.
+pub fn cmp_events(a: &MembershipEvent, b: &MembershipEvent) -> std::cmp::Ordering {
+    a.time
+        .partial_cmp(&b.time)
+        .expect("membership event times must be comparable")
+        .then(a.worker.cmp(&b.worker))
+        // Same worker, same instant: process the revoke first so a
+        // revoke+join pair is a bounce, not a no-op.
+        .then((a.kind == MembershipKind::Join).cmp(&(b.kind == MembershipKind::Join)))
+}
+
 fn sort_events(events: &mut [MembershipEvent]) {
-    events.sort_by(|a, b| {
-        a.time
-            .partial_cmp(&b.time)
-            .expect("membership event times must be comparable")
-            .then(a.worker.cmp(&b.worker))
-            // Same worker, same instant: process the revoke first so a
-            // revoke+join pair is a bounce, not a no-op.
-            .then((a.kind == MembershipKind::Join).cmp(&(b.kind == MembershipKind::Join)))
-    });
+    events.sort_by(cmp_events);
 }
 
 #[cfg(test)]

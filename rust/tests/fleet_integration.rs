@@ -1,0 +1,203 @@
+//! Fleet scheduler integration tests (DESIGN.md §13): contention
+//! actuated through the membership revocation path, seed derivation
+//! from the fleet config, and interleaved/parallel path agreement.
+
+use hetero_batch::config::Policy;
+use hetero_batch::fleet::{job_seed, ArbiterPolicy, FleetBuilder, JobSpec};
+use hetero_batch::metrics::RunReport;
+use hetero_batch::session::{Session, SessionBuilder};
+use hetero_batch::trace::MembershipKind;
+
+fn job(seed: u64, cores: &[usize], steps: u64) -> SessionBuilder {
+    Session::builder()
+        .model("mnist")
+        .cores(cores)
+        .policy(Policy::Dynamic)
+        .steps(steps)
+        .adjust_cost(1.0)
+        .seed(seed)
+}
+
+/// Strict-priority contention: two long low-priority jobs saturate the
+/// fleet; a short high-priority arrival preempts them down to their
+/// floors *through the PR'd membership revocation path* (the same
+/// plan-revoke machinery spot churn uses), and its completion re-grants
+/// the revoked ranks as plan joins.  Everyone still finishes.
+#[test]
+fn priority_preemption_retires_and_regrants_through_membership_path() {
+    let mut f = FleetBuilder::new()
+        .capacity(8)
+        .policy(ArbiterPolicy::Priority)
+        .interleave(true);
+    for i in 0..2 {
+        let mut spec = JobSpec::new(&format!("low{i}"), job(10 + i, &[4, 8, 4, 8], 400));
+        spec.priority = 0;
+        f = f.job(spec);
+    }
+    let mut hi = JobSpec::new("high", job(99, &[8, 8, 8, 8, 8, 8], 20));
+    hi.priority = 5;
+    hi.arrival = 5.0;
+    f = f.job(hi);
+
+    let report = f.build().unwrap().run().unwrap();
+    assert!(report.interleaved);
+    assert_eq!(report.jobs.len(), 3);
+    assert!(report.makespan > 0.0);
+
+    let high = &report.jobs[2];
+    assert_eq!(high.name, "high");
+    assert_eq!(high.fleet_preemptions, 0, "highest priority is never preempted");
+    // Admitted at its arrival: floors (1+1) + its 6 ranks fit in 8.
+    assert_eq!(high.admission, 5.0);
+    assert_eq!(high.granted_final, 6);
+
+    for low in &report.jobs[..2] {
+        // 4 ranks → floor 1: three ranks revoked at the arrival, three
+        // re-granted after the high job completes.
+        assert_eq!(low.fleet_preemptions, 3, "{}: {low:?}", low.name);
+        assert_eq!(low.fleet_regrants, 3, "{}", low.name);
+        assert_eq!(low.granted_final, 4, "{}", low.name);
+        let revokes: Vec<f64> = low
+            .report
+            .epochs
+            .iter()
+            .filter(|e| e.kind == MembershipKind::Revoke)
+            .map(|e| e.time)
+            .collect();
+        let joins: Vec<f64> = low
+            .report
+            .epochs
+            .iter()
+            .filter(|e| e.kind == MembershipKind::Join)
+            .map(|e| e.time)
+            .collect();
+        assert_eq!(revokes.len(), 3, "{}", low.name);
+        assert_eq!(joins.len(), 3, "{}", low.name);
+        // Preemption lands at (or after) the high job's arrival on the
+        // job-local clock (offset 0 here) and the regrants strictly
+        // after its completion began.
+        assert!(revokes.iter().all(|&t| t >= 5.0), "{}: {revokes:?}", low.name);
+        let first_join = joins.iter().cloned().fold(f64::INFINITY, f64::min);
+        let last_revoke = revokes.iter().cloned().fold(0.0, f64::max);
+        assert!(first_join > last_revoke, "{}", low.name);
+    }
+    // Low jobs kept running at their floor: they produced iterations
+    // between preemption and regrant.
+    assert!(report.jobs[0].report.total_iters > 0);
+    assert!(report.utilization > 0.0 && report.utilization <= 1.0);
+}
+
+/// Satellite 1: fleet-config jobs without a pinned seed derive
+/// `job_seed(fleet_seed, job_id)` — bitwise equal to standalone runs
+/// seeded the same way, and distinct across job ids.
+#[test]
+fn fleet_json_derives_per_job_seed_stream() {
+    let cfg = r#"{
+        "seed": 42,
+        "jobs": [
+            {"name": "a", "model": "mnist", "workers": [{"cpu": 4}, {"cpu": 8}], "steps": 12},
+            {"model": "mnist", "workers": [{"cpu": 4}, {"cpu": 8}], "steps": 12},
+            {"name": "pinned", "model": "mnist", "workers": [{"cpu": 4}, {"cpu": 8}], "steps": 12, "seed": 7}
+        ]
+    }"#;
+    let reports = FleetBuilder::from_json_str(cfg)
+        .unwrap()
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+        .into_reports();
+
+    let solo = |seed: u64| -> RunReport {
+        job(seed, &[4, 8], 12).build_sim().unwrap().run().unwrap()
+    };
+    assert!(reports[0].bitwise_eq(&solo(job_seed(42, 0))));
+    assert!(reports[1].bitwise_eq(&solo(job_seed(42, 1))));
+    // A pinned seed wins over the derived stream.
+    assert!(reports[2].bitwise_eq(&solo(7)));
+    // Identical configs, different job ids ⇒ decorrelated runs.
+    assert_ne!(job_seed(42, 0), job_seed(42, 1));
+    assert!(!reports[0].bitwise_eq(&reports[1]));
+}
+
+/// The interleaved scheduler and the parallel fast path agree bitwise
+/// on uncontended fleets, staggered arrivals included.
+#[test]
+fn interleaved_matches_parallel_fast_path() {
+    let build = || {
+        let mut f = FleetBuilder::new();
+        for i in 0..5u64 {
+            let mut spec =
+                JobSpec::new(&format!("j{i}"), job(i, &[4, 8, 16], 10 + i));
+            spec.arrival = 3.0 * i as f64;
+            f = f.job(spec);
+        }
+        f
+    };
+    let inter = build().interleave(true).build().unwrap().run().unwrap();
+    let par = build().interleave(false).build().unwrap().run().unwrap();
+    assert!(inter.interleaved);
+    assert!(!par.interleaved);
+    assert_eq!(inter.jobs.len(), par.jobs.len());
+    for (a, b) in inter.jobs.iter().zip(&par.jobs) {
+        assert!(a.report.bitwise_eq(&b.report), "{} diverged", a.name);
+        assert_eq!(a.completion, b.completion, "{}", a.name);
+    }
+}
+
+/// Forcing the parallel path on a contended fleet is a config error.
+#[test]
+fn contended_fleet_rejects_parallel_mode() {
+    let f = FleetBuilder::new()
+        .capacity(2)
+        .interleave(false)
+        .job(JobSpec::new("a", job(0, &[4, 8], 5)))
+        .job(JobSpec::new("b", job(1, &[4, 8], 5)));
+    assert!(f.build().is_err());
+}
+
+/// FleetReport::to_json carries the fleet-level aggregates and per-job
+/// wasted-spawn accounting the EXPERIMENTS harness reads.
+#[test]
+fn fleet_report_json_schema() {
+    let report = FleetBuilder::new()
+        .seed(3)
+        .job(JobSpec::new("a", job(1, &[4, 8], 6)))
+        .job(JobSpec::new("b", job(2, &[4, 8], 6)))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let j = report.to_json();
+    for key in [
+        "policy",
+        "capacity",
+        "seed",
+        "interleaved",
+        "n_jobs",
+        "makespan",
+        "completion_p50",
+        "completion_p99",
+        "utilization",
+        "total_wasted_spawns",
+    ] {
+        assert!(!j.get(key).is_null(), "missing {key}");
+    }
+    let jobs = j.get("jobs").as_arr().unwrap();
+    assert_eq!(jobs.len(), 2);
+    for jj in jobs {
+        for key in [
+            "name",
+            "arrival",
+            "admission",
+            "completion",
+            "total_iters",
+            "granted_final",
+            "fleet_preemptions",
+            "spawn_requests",
+            "wasted_spawns",
+        ] {
+            assert!(!jj.get(key).is_null(), "missing job key {key}");
+        }
+    }
+}

@@ -13,9 +13,10 @@ use hetero_batch::fault::{
     AutoscalerCfg, DetectorCfg, FaultEvent, FaultKind, FaultPlan, FaultState,
 };
 use hetero_batch::metrics::RunReport;
-use hetero_batch::session::{Backend, Scheduler, Session, WorkerOutcome};
+use hetero_batch::fleet::{FleetBuilder, JobSpec};
+use hetero_batch::session::{Backend, Scheduler, Session, SessionBuilder, WorkerOutcome};
 use hetero_batch::sync::{SyncMode, SyncState};
-use hetero_batch::trace::{MembershipEvent, MembershipKind, MembershipPlan};
+use hetero_batch::trace::{MembershipEvent, MembershipKind, MembershipPlan, SpotSpec};
 use hetero_batch::ps::fused::{
     fused_agg_adam, fused_agg_adam_mt, fused_agg_momentum, fused_agg_momentum_mt,
     fused_agg_sgd, fused_agg_sgd_mt,
@@ -1410,5 +1411,118 @@ fn prop_vecof_strategy_smoke() {
     };
     check("vecof in bounds", 200, strat, |v| {
         (1..=8).contains(&v.len()) && v.iter().all(|&x| x <= 100)
+    });
+}
+
+// =====================================================================
+// Fleet isolation (DESIGN.md §13)
+
+/// A random multi-job fleet: mixed cluster shapes, sync-free mnist sims
+/// with every event source the fleet could plausibly disturb (faults +
+/// detector, autoscaled spawns, spot churn) cycling through the jobs.
+#[derive(Debug, Clone)]
+struct FleetJob {
+    cores: Vec<usize>,
+    dynamic: bool,
+    steps: u64,
+    seed: u64,
+    arrival: f64,
+    /// 0 plain | 1 crash+detector | 2 autoscaled recovery | 3 spot churn.
+    shape: usize,
+}
+
+#[derive(Debug, Clone)]
+struct FleetScenario {
+    jobs: Vec<FleetJob>,
+}
+
+struct FleetStrategy;
+
+impl Strategy<FleetScenario> for FleetStrategy {
+    fn generate(&self, rng: &mut Rng) -> FleetScenario {
+        let n = rng.range_usize(2, 6);
+        let jobs = (0..n)
+            .map(|_| FleetJob {
+                cores: (0..rng.range_usize(2, 5))
+                    .map(|_| [4, 8, 16][rng.range_usize(0, 3)])
+                    .collect(),
+                dynamic: rng.range_usize(0, 2) == 1,
+                steps: rng.range_usize(6, 20) as u64,
+                seed: rng.next_u64(),
+                arrival: rng.range_f64(0.0, 30.0),
+                shape: rng.range_usize(0, 4),
+            })
+            .collect();
+        FleetScenario { jobs }
+    }
+
+    fn shrink(&self, s: &FleetScenario) -> Vec<FleetScenario> {
+        let mut out = Vec::new();
+        if s.jobs.len() > 2 {
+            let mut t = s.clone();
+            t.jobs.pop();
+            out.push(t);
+        }
+        if s.jobs.iter().any(|j| j.shape != 0) {
+            let mut t = s.clone();
+            for j in &mut t.jobs {
+                j.shape = 0;
+            }
+            out.push(t);
+        }
+        if s.jobs.iter().any(|j| j.arrival != 0.0) {
+            let mut t = s.clone();
+            for j in &mut t.jobs {
+                j.arrival = 0.0;
+            }
+            out.push(t);
+        }
+        out
+    }
+}
+
+fn fleet_job_builder(j: &FleetJob) -> SessionBuilder {
+    let b = Session::builder()
+        .model("mnist")
+        .cores(&j.cores)
+        .policy(if j.dynamic { Policy::Dynamic } else { Policy::Uniform })
+        .steps(j.steps)
+        .adjust_cost(1.0)
+        .seed(j.seed);
+    match j.shape {
+        1 => b
+            .faults(FaultPlan::parse("crash:0@3").unwrap())
+            .detector(DetectorCfg::parse("grace=4,floor=2").unwrap()),
+        2 => b
+            .faults(FaultPlan::parse("crash:1@2").unwrap())
+            .detector(DetectorCfg::parse("grace=3,floor=2").unwrap())
+            .autoscale(AutoscalerCfg::parse("pool=1,cold=2").unwrap()),
+        3 => b.spot(SpotSpec::parse("25:6:1").unwrap()),
+        _ => b,
+    }
+}
+
+/// Isolation invariant: an uncontended fleet (capacity = total demand)
+/// never touches its tenants' event or rng streams, so every per-job
+/// report is *bitwise identical* to the same builder run standalone —
+/// across any mix of arrivals, shapes, and interleavings the merged
+/// clock produces.
+#[test]
+fn prop_fleet_isolation_uncontended_bitwise() {
+    check("fleet isolation", 40, FleetStrategy, |s| {
+        let builders: Vec<SessionBuilder> = s.jobs.iter().map(fleet_job_builder).collect();
+        let solo: Vec<RunReport> = builders
+            .iter()
+            .map(|b| b.clone().build_sim().unwrap().run().unwrap())
+            .collect();
+        let mut f = FleetBuilder::new().interleave(true);
+        for (i, (j, b)) in s.jobs.iter().zip(&builders).enumerate() {
+            let mut spec = JobSpec::new(&format!("job{i}"), b.clone());
+            spec.arrival = j.arrival;
+            f = f.job(spec);
+        }
+        let reports = f.build().unwrap().run().unwrap().into_reports();
+        reports.len() == solo.len()
+            && reports.iter().zip(&solo).all(|(a, b)| a.bitwise_eq(b))
     });
 }

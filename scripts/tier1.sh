@@ -10,7 +10,9 @@
 # (no flags) refreshes.  The session-loop suite gets the same treatment:
 # the smoke runs it truncated to k <= 64 (BENCH_session_quick.json); the
 # canonical BENCH_session.json comes from a full `cargo bench --bench
-# session`.
+# session`.  Likewise the fleet suite: the smoke runs 32 jobs at k <= 8
+# (BENCH_fleet_quick.json); the canonical BENCH_fleet.json comes from a
+# full `cargo bench --bench fleet` (1000 jobs + k = 512 fleets).
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -43,6 +45,21 @@ echo "== tier1: session bench smoke (k <= 64, quick) =="
 # never the canonical BENCH_session.json (full `cargo bench --bench
 # session` only).  Also self-checks heap vs scan report identity.
 HBATCH_BENCH_QUICK=1 cargo bench --bench session -- --max-k 64
+
+echo "== tier1: fleet bench smoke (32 jobs, k <= 8, quick) =="
+# Truncated fleet + quick windows => writes BENCH_fleet_quick.json,
+# never the canonical BENCH_fleet.json (full `cargo bench --bench
+# fleet` only).  The bench self-asserts the isolation invariant
+# (fleet-run reports bitwise-identical to standalone) before timing.
+HBATCH_BENCH_QUICK=1 cargo bench --bench fleet -- --jobs 32 --max-k 8
+
+# The per-job overhead series is the fleet acceptance artifact — its
+# silent disappearance would mean the canonical bench regenerates
+# without the sublinearity evidence.
+if ! grep -q 'overhead_per_job' ../BENCH_fleet_quick.json; then
+    echo "tier1: BENCH_fleet_quick.json is missing the overhead_per_job series" >&2
+    exit 1
+fi
 
 echo "== tier1: fault-recovery smoke (crash -> detect -> autoscale) =="
 # End-to-end DESIGN.md §12 loop from the CLI: an unannounced crash
