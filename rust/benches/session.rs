@@ -128,6 +128,26 @@ fn main() {
             }
         }
     }
+    // Policy head-to-head (DESIGN.md §14): PID reference vs one-shot
+    // optimal vs tabular RL on one churned mid-size cluster, all on the
+    // heap scheduler.  The timed unit is host time for a whole run; the
+    // *simulated* makespans and adjustment counts — the numbers the
+    // paper comparison actually cares about — land in the derived
+    // section below.
+    let hk = if max_k >= 64 { 64 } else { 8 };
+    let policies = [
+        ("pid", Policy::Dynamic),
+        ("optimal", Policy::Optimal),
+        ("rl", Policy::Rl),
+    ];
+    let mut sims: Vec<(&str, RunReport)> = Vec::new();
+    for (label, policy) in policies {
+        let bld = builder(hk, SyncMode::Bsp, "churn").policy(policy);
+        sims.push((label, run_once(&bld, Scheduler::Heap)));
+        b.run(&format!("policy_head2head/{label}/k{hk}/bsp/churn"), || {
+            run_once(&bld, Scheduler::Heap).total_time
+        });
+    }
     b.report();
 
     // Derived heap-vs-scan speedups (scan_mean / heap_mean; > 1 = the
@@ -135,6 +155,27 @@ fn main() {
     // k = 512+.
     let groups = [&b];
     let mut derived = Json::obj();
+    let pid_time = sims
+        .iter()
+        .find(|(l, _)| *l == "pid")
+        .map(|(_, r)| r.total_time)
+        .unwrap_or(0.0);
+    for (label, r) in &sims {
+        derived.set(
+            &format!("policy_head2head/{label}/sim_total_time_s"),
+            Json::Num(r.total_time),
+        );
+        derived.set(
+            &format!("policy_head2head/{label}/adjustments"),
+            Json::Num(r.adjustments.len() as f64),
+        );
+        if pid_time > 0.0 {
+            derived.set(
+                &format!("policy_head2head/{label}/time_vs_pid"),
+                Json::Num(r.total_time / pid_time),
+            );
+        }
+    }
     for &k in KS.iter().filter(|&&k| k <= max_k) {
         for (sname, _) in SYNCS {
             for variant in VARIANTS {

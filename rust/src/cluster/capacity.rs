@@ -360,7 +360,7 @@ mod tests {
         let mut v: Vec<f64> = (0..20_001)
             .map(|_| m.iter_time(&c, 32.0, 1.0, &mut rng))
             .collect();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         let med = v[v.len() / 2];
         assert!((med / det - 1.0).abs() < 0.02, "median drift {med} vs {det}");
     }

@@ -1,19 +1,31 @@
-//! Batching-policy selection (the paper's three contenders).
+//! Batching-policy selection (the paper's three contenders plus the
+//! learned controllers, DESIGN.md §14).
 //!
 //! Run configuration lives in [`crate::session::SessionBuilder`] — one
 //! builder for simulated and real sessions, JSON-loadable (see
 //! `SessionBuilder::from_json`); this module keeps only the policy enum
 //! it selects between.
 
-/// Which batch-allocation policy to run (the paper's three contenders).
+/// Which batch-allocation policy to run: the paper's three contenders
+/// plus the two learned controllers behind the `BatchPolicy` seam
+/// (DESIGN.md §14).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     /// Vanilla TF: same batch everywhere.
     Uniform,
     /// Open-loop FLOPs-proportional (§III-B).
     Static,
-    /// Closed-loop proportional controller (§III-C).
+    /// Closed-loop proportional controller (§III-C). `pid` is an
+    /// accepted spelling — the label (and therefore every report label
+    /// and golden) stays `dynamic`.
     Dynamic,
+    /// One-shot optimal allocator: fits per-worker linear iteration-time
+    /// models and jumps straight to the equalizing allocation
+    /// (Nie et al., PAPERS.md).
+    Optimal,
+    /// Tabular bandit/RL policy over slow→fast batch-mass moves
+    /// (DYNAMIX, PAPERS.md); the Q-table is JSON-serializable.
+    Rl,
 }
 
 impl Policy {
@@ -21,7 +33,11 @@ impl Policy {
         match s {
             "uniform" => Some(Policy::Uniform),
             "static" => Some(Policy::Static),
-            "dynamic" => Some(Policy::Dynamic),
+            // `pid` aliases the paper's controller: same implementation,
+            // same `dynamic` label, bitwise-identical trajectories.
+            "dynamic" | "pid" => Some(Policy::Dynamic),
+            "optimal" => Some(Policy::Optimal),
+            "rl" => Some(Policy::Rl),
             _ => None,
         }
     }
@@ -31,7 +47,20 @@ impl Policy {
             Policy::Uniform => "uniform",
             Policy::Static => "static",
             Policy::Dynamic => "dynamic",
+            Policy::Optimal => "optimal",
+            Policy::Rl => "rl",
         }
+    }
+}
+
+/// Split a CLI/JSON policy spec like `rl:table.json` into the policy
+/// name and an optional argument (the RL table path).  Only the first
+/// `:` splits, so paths containing `:` survive intact.
+pub fn split_policy_spec(spec: &str) -> (&str, Option<&str>) {
+    match spec.split_once(':') {
+        Some((name, arg)) if !arg.is_empty() => (name, Some(arg)),
+        Some((name, _)) => (name, None),
+        None => (spec, None),
     }
 }
 
@@ -40,15 +69,45 @@ mod tests {
     use super::*;
 
     #[test]
+    fn spec_splits_on_first_colon() {
+        assert_eq!(split_policy_spec("dynamic"), ("dynamic", None));
+        assert_eq!(
+            split_policy_spec("rl:t.json"),
+            ("rl", Some("t.json"))
+        );
+        assert_eq!(
+            split_policy_spec("rl:dir:with:colons.json"),
+            ("rl", Some("dir:with:colons.json"))
+        );
+        assert_eq!(split_policy_spec("rl:"), ("rl", None));
+    }
+
+    #[test]
     fn policy_parse() {
         assert_eq!(Policy::parse("uniform"), Some(Policy::Uniform));
         assert_eq!(Policy::parse("dynamic"), Some(Policy::Dynamic));
+        assert_eq!(Policy::parse("optimal"), Some(Policy::Optimal));
+        assert_eq!(Policy::parse("rl"), Some(Policy::Rl));
         assert_eq!(Policy::parse("x"), None);
     }
 
     #[test]
+    fn pid_aliases_dynamic_with_dynamic_label() {
+        // The alias must not mint a new label: report labels (and the
+        // scenario goldens keyed on them) stay `dynamic`.
+        assert_eq!(Policy::parse("pid"), Some(Policy::Dynamic));
+        assert_eq!(Policy::parse("pid").unwrap().label(), "dynamic");
+    }
+
+    #[test]
     fn labels_round_trip() {
-        for p in [Policy::Uniform, Policy::Static, Policy::Dynamic] {
+        for p in [
+            Policy::Uniform,
+            Policy::Static,
+            Policy::Dynamic,
+            Policy::Optimal,
+            Policy::Rl,
+        ] {
             assert_eq!(Policy::parse(p.label()), Some(p));
         }
     }

@@ -16,9 +16,7 @@ pub fn quantize(proposal: f64, buckets: &[usize]) -> usize {
         .min_by(|&&a, &&b| {
             let da = (a as f64 - proposal).abs();
             let db = (b as f64 - proposal).abs();
-            da.partial_cmp(&db)
-                .unwrap()
-                .then(a.cmp(&b)) // tie → smaller
+            da.total_cmp(&db).then(a.cmp(&b)) // tie → smaller
         })
         .unwrap()
 }

@@ -18,8 +18,18 @@
 //! [b_min, b_max_k], and a dead-band: apply only if some worker moves by
 //! more than `deadband` relative (default 5%, matching the paper's
 //! TF kill-restart overhead calculus).
+//!
+//! The Session consumes controllers through the [`BatchPolicy`] trait
+//! (DESIGN.md §14): [`DynamicBatcher`] is the reference implementation,
+//! [`OptimalBatcher`] the one-shot model-based allocator (Nie et al.),
+//! and [`RlBatcher`] the tabular bandit policy (DYNAMIX).
 
 pub mod bucket;
+pub mod policy;
+pub mod rl;
+
+pub use policy::{BatchPolicy, OptimalBatcher};
+pub use rl::{RlBatcher, RlTable};
 
 use crate::util::stats::Ewma;
 
@@ -36,6 +46,47 @@ pub fn static_alloc(b0: f64, estimates: &[f64]) -> Vec<f64> {
     let total: f64 = estimates.iter().sum();
     let k = estimates.len() as f64;
     estimates.iter().map(|&x| k * b0 * x / total).collect()
+}
+
+/// [`static_alloc`] against explicit controller bounds: skewed estimates
+/// (FLOPs ratios beyond b_max/b0) used to emit batches outside
+/// [b_min, b_max] and panic `DynamicBatcher::with_membership`'s bounds
+/// assert; this variant water-fills the proposal back into the box and
+/// returns a validated error when the mass itself is infeasible.
+///
+/// The water-fill runs *only* when some batch actually violates a bound:
+/// rescaling an in-bounds proposal by Σ/Σ ≈ 1±ε would shift every batch
+/// by an ulp and break bitwise reproducibility of committed goldens.
+pub fn static_alloc_bounded(
+    b0: f64,
+    estimates: &[f64],
+    b_min: f64,
+    b_max: f64,
+) -> Result<Vec<f64>, String> {
+    if estimates.is_empty() {
+        return Err("static allocation over an empty cohort".into());
+    }
+    if let Some(bad) = estimates.iter().find(|&&x| !(x > 0.0)) {
+        return Err(format!("throughput estimate {bad} must be > 0"));
+    }
+    let k = estimates.len() as f64;
+    let mass = k * b0;
+    if mass < k * b_min - 1e-9 {
+        return Err(format!(
+            "global batch {mass} cannot give {k} workers b_min {b_min} each"
+        ));
+    }
+    if mass > k * b_max + 1e-9 {
+        return Err(format!(
+            "global batch {mass} exceeds {k} workers at b_max {b_max}"
+        ));
+    }
+    let mut alloc = static_alloc(b0, estimates);
+    if alloc.iter().any(|&b| b < b_min || b > b_max) {
+        let bmaxes = vec![b_max; estimates.len()];
+        water_fill(&mut alloc, mass, b_min, &bmaxes);
+    }
+    Ok(alloc)
 }
 
 /// Configuration for the dynamic controller.
@@ -135,7 +186,7 @@ impl Smoother {
             return None;
         }
         let mut v = self.recent;
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         Some(v[2])
     }
 
@@ -156,11 +207,22 @@ impl Smoother {
             let long = self.get().unwrap();
             if let Some(med) = self.recent_median() {
                 if (med / long - 1.0).abs() > self.drift_reset {
+                    // Seed both smoothing modes as if the new regime had
+                    // already produced DRIFT_SEED_N observations at the
+                    // median level, so the post-drift warm-start weight
+                    // is the same whichever estimator is active: the
+                    // cumulative mean restarts at n = 3, sum = 3·med,
+                    // and the EWMA absorbs the same 3 pseudo-samples
+                    // (the first is a passthrough, so its value is med
+                    // either way — what the extra pushes equalize is the
+                    // seeded history both modes claim to have seen).
                     self.reset();
-                    self.n = 3;
+                    self.n = DRIFT_SEED_N;
                     self.recent_n = 0;
-                    self.sum = med * 3.0;
-                    self.ewma.push(med);
+                    self.sum = med * DRIFT_SEED_N as f64;
+                    for _ in 0..DRIFT_SEED_N {
+                        self.ewma.push(med);
+                    }
                     self.drifted = true;
                 }
             }
@@ -185,6 +247,12 @@ impl Smoother {
 
     fn count(&self) -> usize {
         self.n
+    }
+
+    /// True while the counter still includes drift-reset pseudo-samples.
+    #[cfg(test)]
+    fn seeded(&self) -> bool {
+        self.n == DRIFT_SEED_N && self.recent_n == 0
     }
 
     fn reset(&mut self) {
@@ -268,13 +336,38 @@ impl DynamicBatcher {
 
     /// Start with an explicit membership: absent workers (scheduled
     /// `join_at` ranks) carry no batch and no bounds check until
-    /// admitted.
+    /// admitted.  Panics on an out-of-bounds initial batch; builder
+    /// paths that want a validated error use
+    /// [`DynamicBatcher::try_with_membership`] instead.
     pub fn with_membership(cfg: ControllerCfg, initial: &[f64], live: &[bool]) -> Self {
-        assert!(!initial.is_empty());
-        assert_eq!(initial.len(), live.len());
-        for (&b, &l) in initial.iter().zip(live) {
-            if l {
-                assert!(b >= cfg.b_min && b <= cfg.b_max, "initial batch {b} out of bounds");
+        Self::try_with_membership(cfg, initial, live).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`DynamicBatcher::with_membership`] with validation instead of
+    /// asserts: a skewed open-loop allocation (satellite of DESIGN.md
+    /// §14) surfaces as an `Err` the Session builder can report, not a
+    /// panic inside the controller.
+    pub fn try_with_membership(
+        cfg: ControllerCfg,
+        initial: &[f64],
+        live: &[bool],
+    ) -> Result<Self, String> {
+        if initial.is_empty() {
+            return Err("controller needs at least one worker".into());
+        }
+        if initial.len() != live.len() {
+            return Err(format!(
+                "batch vector length {} != membership length {}",
+                initial.len(),
+                live.len()
+            ));
+        }
+        for (w, (&b, &l)) in initial.iter().zip(live).enumerate() {
+            if l && !(b >= cfg.b_min && b <= cfg.b_max) {
+                return Err(format!(
+                    "initial batch {b} for worker {w} out of bounds [{}, {}]",
+                    cfg.b_min, cfg.b_max
+                ));
             }
         }
         let global_batch = initial
@@ -283,7 +376,7 @@ impl DynamicBatcher {
             .filter(|(_, &l)| l)
             .map(|(&b, _)| b)
             .sum();
-        DynamicBatcher {
+        Ok(DynamicBatcher {
             workers: initial
                 .iter()
                 .zip(live)
@@ -300,7 +393,7 @@ impl DynamicBatcher {
             global_batch,
             adjustments: 0,
             backoff_mult: 1,
-        }
+        })
     }
 
     pub fn k(&self) -> usize {
@@ -313,6 +406,18 @@ impl DynamicBatcher {
 
     pub fn active_count(&self) -> usize {
         self.workers.iter().filter(|w| w.active).count()
+    }
+
+    /// Current batch of one worker (0 while retired) — the O(1)
+    /// accessor the wrapping policies (optimal/RL) use per observation.
+    pub fn batch(&self, k: usize) -> f64 {
+        self.workers[k].batch
+    }
+
+    /// The configuration this controller runs under (read-only; the
+    /// wrapping policies share its bounds and gating knobs).
+    pub fn cfg(&self) -> &ControllerCfg {
+        &self.cfg
     }
 
     /// Full-length batch vector; retired workers hold 0.
@@ -373,6 +478,20 @@ impl DynamicBatcher {
     /// detector's per-dispatch deadline computation (DESIGN.md §12).
     pub fn smoothed_iter_time(&self, k: usize) -> Option<f64> {
         self.workers[k].ewma.get()
+    }
+
+    /// Consume the live cohort's drift flags (true if any smoother
+    /// detected a capacity-regime change since the last take).  The
+    /// wrapping policies (optimal/RL, DESIGN.md §14) use this to
+    /// invalidate model state fitted under the old regime; callers of
+    /// [`Self::maybe_adjust`] must NOT also call this — the control
+    /// step consumes the same flags for its backoff override.
+    pub fn take_drifted(&mut self) -> bool {
+        self.workers
+            .iter_mut()
+            .filter(|w| w.active)
+            .map(|w| w.ewma.take_drifted())
+            .fold(false, |a, b| a | b)
     }
 
     // -------------------------------------------------- elastic membership
@@ -597,6 +716,10 @@ impl DynamicBatcher {
 /// Adjustments a knee cap survives before being re-probed.
 pub const KNEE_TTL: usize = 6;
 
+/// Pseudo-observations a drift reset seeds the smoothing window with
+/// (both modes: cumulative mean and EWMA — see `Smoother::push`).
+const DRIFT_SEED_N: usize = 3;
+
 /// Scale `proposal` to sum to `target` subject to per-worker bounds
 /// [b_min, b_max[i]]: proportional water-filling. Workers pinned at a
 /// bound are frozen and the remainder is rescaled over the free set.
@@ -726,7 +849,101 @@ mod tests {
         static_alloc(64.0, &[1.0, 0.0]);
     }
 
+    #[test]
+    fn static_alloc_bounded_clamps_skewed_estimates() {
+        // FLOPs ratio 100:1 would give the fast worker ~126.7 at b0=64
+        // with b_max=100 — the unbounded allocation used to panic the
+        // controller's construction-time bounds assert.
+        let b = static_alloc_bounded(64.0, &[1.0, 100.0], 1.0, 100.0).unwrap();
+        assert!((b.iter().sum::<f64>() - 128.0).abs() < 1e-9, "{b:?}");
+        assert!(b.iter().all(|&x| (1.0..=100.0).contains(&x)), "{b:?}");
+        // The clamped allocation must be constructible.
+        let cfg = ControllerCfg {
+            b_min: 1.0,
+            b_max: 100.0,
+            ..ControllerCfg::default()
+        };
+        assert!(DynamicBatcher::try_with_membership(cfg, &b, &[true, true]).is_ok());
+    }
+
+    #[test]
+    fn static_alloc_bounded_is_bitwise_identical_in_bounds() {
+        // In-bounds proposals must NOT round-trip through water_fill:
+        // the ≈1.0 rescale would move every batch by an ulp and break
+        // golden reproducibility.
+        let est = [3.0, 5.0, 12.0];
+        let plain = static_alloc(60.0, &est);
+        let bounded = static_alloc_bounded(60.0, &est, 1.0, 4096.0).unwrap();
+        assert_eq!(plain, bounded, "bitwise divergence on the in-bounds path");
+    }
+
+    #[test]
+    fn static_alloc_bounded_rejects_infeasible_mass() {
+        // 2 workers × b0=64 = 128 total, but b_max=50 caps the cohort at
+        // 100 — no valid allocation exists.
+        assert!(static_alloc_bounded(64.0, &[1.0, 1.0], 1.0, 50.0).is_err());
+        // Σ = 4 < 2×b_min.
+        assert!(static_alloc_bounded(2.0, &[1.0, 1.0], 8.0, 4096.0).is_err());
+        // Zero estimate: validated error, not a panic.
+        assert!(static_alloc_bounded(64.0, &[1.0, 0.0], 1.0, 4096.0).is_err());
+    }
+
+    #[test]
+    fn try_with_membership_reports_out_of_bounds_instead_of_panicking() {
+        let err = DynamicBatcher::try_with_membership(
+            ControllerCfg::default(),
+            &[0.5, 64.0],
+            &[true, true],
+        )
+        .unwrap_err();
+        assert!(err.contains("out of bounds"), "{err}");
+        // Absent ranks are exempt until admitted, as before.
+        assert!(DynamicBatcher::try_with_membership(
+            ControllerCfg::default(),
+            &[0.0, 64.0],
+            &[false, true],
+        )
+        .is_ok());
+    }
+
     // -------------------------------------------------------- controller
+
+    #[test]
+    fn drift_reset_seeds_both_smoothing_modes_equivalently() {
+        // Satellite of DESIGN.md §14: the cumulative-mean branch used to
+        // restart at n = 3 pseudo-observations while the EWMA branch got
+        // a single push — the two smoothing modes disagreed on the
+        // post-drift warm-start weight.  Both must now restart from an
+        // identical state: the same estimate, carried by the same
+        // DRIFT_SEED_N pseudo-observations.
+        for alpha in [0.0, 0.05] {
+            let mut s = Smoother::new(alpha, 0.15);
+            for _ in 0..8 {
+                s.push(1.0);
+            }
+            let mut fired = false;
+            for _ in 0..12 {
+                s.push(4.0);
+                if s.seeded() {
+                    fired = true;
+                    break;
+                }
+            }
+            assert!(fired, "alpha={alpha}: drift reset never fired");
+            let med = s.get().unwrap();
+            assert_eq!(s.count(), DRIFT_SEED_N, "alpha={alpha}");
+            assert_eq!(s.ewma.count(), DRIFT_SEED_N, "alpha={alpha}");
+            assert!(
+                (s.ewma.get().unwrap() - med).abs() < 1e-12,
+                "alpha={alpha}: EWMA warm start diverges from the estimate"
+            );
+            assert!(
+                (s.sum - med * DRIFT_SEED_N as f64).abs() < 1e-12,
+                "alpha={alpha}: cumulative warm start diverges from the estimate"
+            );
+            assert!(s.take_drifted());
+        }
+    }
 
     #[test]
     fn needs_min_obs_before_acting() {

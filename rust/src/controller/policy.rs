@@ -1,0 +1,443 @@
+//! The pluggable batch-policy seam (DESIGN.md §14).
+//!
+//! [`BatchPolicy`] is exactly the surface the Session event loop
+//! consumes: feed iteration-time observations, ask for an adjustment,
+//! and drive membership (`retire`/`admit`) plus the bucket-quantization
+//! round-trip (`set_batches`).  [`super::DynamicBatcher`] — the paper's
+//! Eq. 2/4 proportional controller — is the reference implementation;
+//! this module adds [`OptimalBatcher`], the throughput-model one-shot
+//! allocator (Nie et al., PAPERS.md): it fits a per-worker linear
+//! iteration-time model t_k(b) = a_k·b + c_k from the observations and
+//! jumps straight to the time-equalizing allocation instead of
+//! iterating proportional corrections.
+
+use super::{water_fill, Adjustment, ControllerCfg, DynamicBatcher};
+
+/// What the Session calls on a batch controller.  Implementations must
+/// conserve Σb over the live cohort across adjustments *and* membership
+/// transitions — the λ-weighted aggregation (Eq. 2) depends on it.
+pub trait BatchPolicy {
+    /// Feed one iteration-time observation for live worker `k`.
+    fn observe(&mut self, k: usize, iter_time: f64);
+
+    /// Run one control step; [`Adjustment::Apply`] carries the new
+    /// full-length batch vector (retired ranks at 0).
+    fn maybe_adjust(&mut self) -> Adjustment;
+
+    /// Remove worker `k` (revocation); its mass moves to the survivors.
+    fn retire(&mut self, k: usize);
+
+    /// (Re-)admit worker `k` with a warm-start batch.
+    fn admit(&mut self, k: usize);
+
+    /// Force-set batches (bucket quantization round-trips through this).
+    fn set_batches(&mut self, batches: &[f64]);
+
+    /// Current full-length batch vector into a caller-owned buffer.
+    fn batches_into(&self, out: &mut Vec<f64>);
+
+    /// λ_k = b_k / Σb into a caller-owned buffer.
+    fn lambdas_into(&self, out: &mut Vec<f64>);
+
+    /// Smoothed iteration-time estimate for worker `k` (the failure
+    /// detector's deadline input; None until observed).
+    fn smoothed_iter_time(&self, k: usize) -> Option<f64>;
+
+    /// Σb over the live cohort (invariant).
+    fn global_batch(&self) -> f64;
+
+    /// Adjustments applied so far.
+    fn adjustments(&self) -> usize;
+
+    /// Short policy name for logs/labels.
+    fn label(&self) -> &'static str;
+}
+
+impl BatchPolicy for DynamicBatcher {
+    fn observe(&mut self, k: usize, iter_time: f64) {
+        DynamicBatcher::observe(self, k, iter_time);
+    }
+    fn maybe_adjust(&mut self) -> Adjustment {
+        DynamicBatcher::maybe_adjust(self)
+    }
+    fn retire(&mut self, k: usize) {
+        DynamicBatcher::retire(self, k);
+    }
+    fn admit(&mut self, k: usize) {
+        DynamicBatcher::admit(self, k);
+    }
+    fn set_batches(&mut self, batches: &[f64]) {
+        DynamicBatcher::set_batches(self, batches);
+    }
+    fn batches_into(&self, out: &mut Vec<f64>) {
+        DynamicBatcher::batches_into(self, out);
+    }
+    fn lambdas_into(&self, out: &mut Vec<f64>) {
+        DynamicBatcher::lambdas_into(self, out);
+    }
+    fn smoothed_iter_time(&self, k: usize) -> Option<f64> {
+        DynamicBatcher::smoothed_iter_time(self, k)
+    }
+    fn global_batch(&self) -> f64 {
+        DynamicBatcher::global_batch(self)
+    }
+    fn adjustments(&self) -> usize {
+        DynamicBatcher::adjustments(self)
+    }
+    fn label(&self) -> &'static str {
+        "dynamic"
+    }
+}
+
+/// Per-worker running least squares over (batch, iteration-time) pairs.
+///
+/// While every observation shares one batch size the model degenerates
+/// to the through-origin fit a_k = t̄_k/b_k, c_k = 0 — exactly the
+/// FLOPs-proportional assumption, so the *first* one-shot jump equals
+/// the throughput-proportional allocation computed from measured (not
+/// estimated) speeds.  Once two distinct batch sizes have been observed
+/// the full affine fit kicks in and the second jump absorbs the fixed
+/// per-iteration overhead c_k the proportional law cannot see.
+#[derive(Debug, Clone, Default)]
+struct LinFit {
+    n: f64,
+    sum_b: f64,
+    sum_t: f64,
+    sum_bb: f64,
+    sum_bt: f64,
+    /// Observations in the current control interval (gates the jump).
+    interval: usize,
+}
+
+impl LinFit {
+    fn push(&mut self, b: f64, t: f64) {
+        self.n += 1.0;
+        self.sum_b += b;
+        self.sum_t += t;
+        self.sum_bb += b * b;
+        self.sum_bt += b * t;
+        self.interval += 1;
+    }
+
+    fn clear(&mut self) {
+        *self = LinFit::default();
+    }
+
+    /// (a, c) of t(b) = a·b + c.  Falls back to the through-origin
+    /// slope when the batch column has no spread or the affine slope
+    /// comes out non-positive (pure noise); None until any observation.
+    fn model(&self) -> Option<(f64, f64)> {
+        if self.n < 1.0 || self.sum_b <= 0.0 {
+            return None;
+        }
+        let denom = self.n * self.sum_bb - self.sum_b * self.sum_b;
+        if denom > 1e-9 * self.sum_bb.max(1.0) {
+            let a = (self.n * self.sum_bt - self.sum_b * self.sum_t) / denom;
+            let c = (self.sum_t - a * self.sum_b) / self.n;
+            if a > 0.0 {
+                return Some((a, c.max(0.0)));
+            }
+        }
+        Some((self.sum_t / self.sum_b, 0.0))
+    }
+}
+
+/// One-shot optimal allocator (Nie et al., PAPERS.md; DESIGN.md §14).
+///
+/// Wraps a [`DynamicBatcher`] for the shared bookkeeping — membership
+/// water-filling, warm starts, smoothed estimates for the failure
+/// detector — but replaces the proportional control law: after
+/// `min_obs` observations per live worker it solves for the allocation
+/// that *equalizes modeled iteration times*,
+///
+/// ```text
+/// t_k(b_k) = a_k·b_k + c_k = τ   with   Σ b_k = B
+/// ⇒  τ = (B + Σ c_k/a_k) / Σ 1/a_k,   b_k = (τ − c_k)/a_k
+/// ```
+///
+/// water-filled into [b_min, b_max], in a single adjustment.  The jump
+/// re-arms on membership epochs and capacity-regime drifts (which also
+/// invalidate the fitted models); within the dead-band it goes quiet.
+#[derive(Debug, Clone)]
+pub struct OptimalBatcher {
+    inner: DynamicBatcher,
+    fits: Vec<LinFit>,
+    adjustments: usize,
+}
+
+impl OptimalBatcher {
+    pub fn new(cfg: ControllerCfg, initial: &[f64]) -> Self {
+        let live = vec![true; initial.len()];
+        Self::try_with_membership(cfg, initial, &live).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn try_with_membership(
+        cfg: ControllerCfg,
+        initial: &[f64],
+        live: &[bool],
+    ) -> Result<Self, String> {
+        let inner = DynamicBatcher::try_with_membership(cfg, initial, live)?;
+        let fits = vec![LinFit::default(); initial.len()];
+        Ok(OptimalBatcher {
+            inner,
+            fits,
+            adjustments: 0,
+        })
+    }
+
+    /// Restart every worker's control interval (the fit history is
+    /// kept: the per-worker speed model survives an allocation change —
+    /// more distinct batch sizes only sharpen it).
+    fn reset_intervals(&mut self) {
+        for f in &mut self.fits {
+            f.interval = 0;
+        }
+    }
+}
+
+impl BatchPolicy for OptimalBatcher {
+    fn observe(&mut self, k: usize, iter_time: f64) {
+        self.fits[k].push(self.inner.batch(k), iter_time);
+        self.inner.observe(k, iter_time);
+    }
+
+    fn maybe_adjust(&mut self) -> Adjustment {
+        // A capacity-regime drift invalidates the fitted models: the
+        // (b, t) pairs describe the old regime's speeds.
+        if self.inner.take_drifted() {
+            for (i, f) in self.fits.iter_mut().enumerate() {
+                if self.inner.is_active(i) {
+                    f.clear();
+                }
+            }
+            return Adjustment::Hold;
+        }
+        let k = self.inner.k();
+        let active: Vec<usize> = (0..k).filter(|&i| self.inner.is_active(i)).collect();
+        if active.len() < 2 {
+            return Adjustment::Hold;
+        }
+        let (min_obs, deadband, b_min, b_max) = {
+            let cfg = self.inner.cfg();
+            (cfg.min_obs.max(1), cfg.deadband, cfg.b_min, cfg.b_max)
+        };
+        if active.iter().any(|&i| self.fits[i].interval < min_obs) {
+            return Adjustment::Hold;
+        }
+        let models: Vec<(f64, f64)> = match active
+            .iter()
+            .map(|&i| self.fits[i].model())
+            .collect::<Option<Vec<_>>>()
+        {
+            Some(m) => m,
+            None => return Adjustment::Hold,
+        };
+        // Equalize modeled iteration times at constant Σb.
+        let target = self.inner.global_batch();
+        let inv_a: f64 = models.iter().map(|&(a, _)| 1.0 / a).sum();
+        let c_over_a: f64 = models.iter().map(|&(a, c)| c / a).sum();
+        let tau = (target + c_over_a) / inv_a;
+        let mut proposal: Vec<f64> = models
+            .iter()
+            .map(|&(a, c)| (((tau - c) / a).max(b_min)).min(b_max))
+            .collect();
+        let bmaxes = vec![b_max; proposal.len()];
+        water_fill(&mut proposal, target, b_min, &bmaxes);
+
+        // Dead-band: already equalized (to model accuracy) — go quiet.
+        let max_rel = active
+            .iter()
+            .zip(&proposal)
+            .map(|(&i, &p)| {
+                let b = self.inner.batch(i);
+                ((p - b) / b).abs()
+            })
+            .fold(0.0, f64::max);
+        self.reset_intervals();
+        if max_rel <= deadband {
+            return Adjustment::Hold;
+        }
+        let mut full = vec![0.0; k];
+        for (&i, &p) in active.iter().zip(&proposal) {
+            full[i] = p;
+        }
+        // Mirrors DynamicBatcher's apply step: record the new batches
+        // (clamped + smoothing intervals reset) inside the controller.
+        self.inner.set_batches(&full);
+        self.adjustments += 1;
+        Adjustment::Apply(full)
+    }
+
+    fn retire(&mut self, k: usize) {
+        self.inner.retire(k);
+        // The instance is gone; a future admission at this rank may be
+        // a different machine (autoscaled replacement).
+        self.fits[k].clear();
+        self.reset_intervals();
+    }
+
+    fn admit(&mut self, k: usize) {
+        self.inner.admit(k);
+        self.fits[k].clear();
+        self.reset_intervals();
+    }
+
+    fn set_batches(&mut self, batches: &[f64]) {
+        self.inner.set_batches(batches);
+        self.reset_intervals();
+    }
+
+    fn batches_into(&self, out: &mut Vec<f64>) {
+        self.inner.batches_into(out);
+    }
+
+    fn lambdas_into(&self, out: &mut Vec<f64>) {
+        self.inner.lambdas_into(out);
+    }
+
+    fn smoothed_iter_time(&self, k: usize) -> Option<f64> {
+        self.inner.smoothed_iter_time(k)
+    }
+
+    fn global_batch(&self) -> f64 {
+        self.inner.global_batch()
+    }
+
+    fn adjustments(&self) -> usize {
+        self.adjustments
+    }
+
+    fn label(&self) -> &'static str {
+        "optimal"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Linear workers t_k(b) = b / x_k: the classic 1x/2x/4x static
+    /// heterogeneity.  The one-shot policy must reach the dead-band
+    /// steady state in ≤ 2 adjustments (ISSUE 8 acceptance: the PID
+    /// needs ≥ 2 for the same split).
+    #[test]
+    fn one_shot_reaches_steady_state_in_at_most_two_adjustments() {
+        let xs = [10.0, 20.0, 40.0];
+        let cfg = ControllerCfg {
+            min_obs: 1,
+            backoff: false,
+            ..ControllerCfg::default()
+        };
+        let mut ctl = OptimalBatcher::new(cfg, &[64.0, 64.0, 64.0]);
+        let mut b = Vec::new();
+        for _ in 0..40 {
+            ctl.batches_into(&mut b);
+            for (k, &x) in xs.iter().enumerate() {
+                ctl.observe(k, b[k] / x);
+            }
+            ctl.maybe_adjust();
+        }
+        assert!(
+            ctl.adjustments() <= 2,
+            "one-shot took {} adjustments",
+            ctl.adjustments()
+        );
+        // Steady state = throughput-proportional split of Σb = 192.
+        ctl.batches_into(&mut b);
+        let expect = [192.0 * 10.0 / 70.0, 192.0 * 20.0 / 70.0, 192.0 * 40.0 / 70.0];
+        for (got, want) in b.iter().zip(expect) {
+            assert!(
+                (got - want).abs() / want < 0.05,
+                "batches {b:?} != {expect:?}"
+            );
+        }
+        let sum: f64 = b.iter().sum();
+        assert!((sum - 192.0).abs() < 1e-6);
+    }
+
+    /// With a fixed per-iteration overhead the equalizing allocation is
+    /// NOT FLOPs-proportional — the affine fit must find it once two
+    /// distinct batch sizes per worker have been seen.
+    #[test]
+    fn affine_fit_beats_proportional_on_fixed_overhead() {
+        // t_k(b) = b/x_k + c: equal c, speeds 1x/3x.
+        let xs = [10.0, 30.0];
+        let c = 2.0;
+        let cfg = ControllerCfg {
+            min_obs: 2,
+            backoff: false,
+            deadband: 0.02,
+            ..ControllerCfg::default()
+        };
+        let mut ctl = OptimalBatcher::new(cfg, &[60.0, 60.0]);
+        let mut b = Vec::new();
+        for _ in 0..30 {
+            ctl.batches_into(&mut b);
+            for (k, &x) in xs.iter().enumerate() {
+                ctl.observe(k, b[k] / x + c);
+            }
+            ctl.maybe_adjust();
+        }
+        ctl.batches_into(&mut b);
+        // Equalize b1/10 + 2 = b2/30 + 2 with b1+b2 = 120 ⇒ 30/90.
+        assert!((b[0] - 30.0).abs() < 2.0, "batches {b:?}");
+        assert!((b[1] - 90.0).abs() < 2.0, "batches {b:?}");
+        let t0 = b[0] / 10.0 + c;
+        let t1 = b[1] / 30.0 + c;
+        assert!((t0 / t1 - 1.0).abs() < 0.05, "times not equalized: {t0} vs {t1}");
+    }
+
+    #[test]
+    fn conserves_mass_across_membership_churn() {
+        let cfg = ControllerCfg {
+            min_obs: 1,
+            ..ControllerCfg::default()
+        };
+        let mut ctl = OptimalBatcher::new(cfg, &[32.0, 32.0, 32.0, 32.0]);
+        let total = ctl.global_batch();
+        let xs = [5.0, 10.0, 20.0, 40.0];
+        let mut b = Vec::new();
+        for round in 0..30 {
+            if round == 7 {
+                BatchPolicy::retire(&mut ctl, 2);
+            }
+            if round == 15 {
+                BatchPolicy::admit(&mut ctl, 2);
+            }
+            ctl.batches_into(&mut b);
+            for (k, &x) in xs.iter().enumerate() {
+                if b[k] > 0.0 {
+                    ctl.observe(k, b[k] / x);
+                }
+            }
+            ctl.maybe_adjust();
+            ctl.batches_into(&mut b);
+            let sum: f64 = b.iter().sum();
+            assert!(
+                (sum - total).abs() < 1e-6 * total,
+                "round {round}: Σb {sum} != {total}"
+            );
+        }
+    }
+
+    #[test]
+    fn through_origin_fallback_on_single_batch_size() {
+        let mut f = LinFit::default();
+        f.push(64.0, 6.4);
+        f.push(64.0, 6.4);
+        let (a, c) = f.model().unwrap();
+        assert!((a - 0.1).abs() < 1e-12);
+        assert_eq!(c, 0.0);
+    }
+
+    #[test]
+    fn affine_fit_recovers_slope_and_intercept() {
+        let mut f = LinFit::default();
+        for b in [32.0, 64.0, 128.0] {
+            f.push(b, 0.05 * b + 1.5);
+        }
+        let (a, c) = f.model().unwrap();
+        assert!((a - 0.05).abs() < 1e-9);
+        assert!((c - 1.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,565 @@
+//! Tabular bandit/RL batch policy (DYNAMIX, PAPERS.md; DESIGN.md §14).
+//!
+//! The policy observes the cohort's *imbalance ratio* r = μ_slow/μ_fast
+//! (smoothed iteration times), quantizes it into [`N_STATES`] buckets,
+//! and picks one of [`N_ACTIONS`] grid moves: hold, or shift a fixed
+//! fraction (0.10/0.25/0.50) of the slowest worker's batch onto the
+//! fastest.  Every action conserves Σb by construction — mass only
+//! moves between two live ranks — so the λ-weighted aggregation (Eq. 2)
+//! stays valid without renormalization.
+//!
+//! The Q-table is trained *offline* over seeded [`crate::cluster::CapacityModel`]
+//! episodes ([`train`]) — the same capacity substrate `SimBackend`
+//! wraps, so the learned preferences transfer to full Session runs —
+//! and serialized as JSON ([`RlTable::to_json`]/[`RlTable::parse`]).
+//! The committed default table lives in `src/controller/rl_table.json`
+//! (regenerate with `UPDATE_RL_TABLE=1 cargo test -p hetero-batch
+//! rl_table_regen`); `--policy rl:<table.json>` loads a custom one.
+
+use super::{Adjustment, BatchPolicy, ControllerCfg, DynamicBatcher};
+use crate::cluster::{CapacityModel, DeviceKind, WorkloadProfile};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Imbalance-ratio buckets: [1, 1.05), [1.05, 1.2), [1.2, 1.5),
+/// [1.5, 2.5), [2.5, ∞).
+pub const N_STATES: usize = 5;
+const STATE_EDGES: [f64; N_STATES - 1] = [1.05, 1.2, 1.5, 2.5];
+
+/// hold + three move sizes (fraction of the slowest worker's batch).
+pub const N_ACTIONS: usize = 4;
+pub const MOVE_FRACTIONS: [f64; N_ACTIONS - 1] = [0.10, 0.25, 0.50];
+
+/// Committed default Q-table (see module docs for regeneration).
+pub const DEFAULT_TABLE: &str = include_str!("rl_table.json");
+
+/// Quantize an imbalance ratio μ_slow/μ_fast into its state bucket.
+pub fn imbalance_state(r: f64) -> usize {
+    STATE_EDGES
+        .iter()
+        .position(|&edge| r < edge)
+        .unwrap_or(N_STATES - 1)
+}
+
+/// (slowest, fastest) live worker by smoothed iteration time; ties
+/// break toward the lowest rank so the policy is deterministic.
+fn slow_fast(times: &[(usize, f64)]) -> Option<(usize, usize)> {
+    let slow = times
+        .iter()
+        .copied()
+        .reduce(|a, b| if b.1 > a.1 { b } else { a })?;
+    let fast = times
+        .iter()
+        .copied()
+        .reduce(|a, b| if b.1 < a.1 { b } else { a })?;
+    Some((slow.0, fast.0))
+}
+
+/// Largest admissible slow→fast move: the requested fraction of the
+/// slow batch, shrunk so neither endpoint leaves [b_min, b_max].
+fn bounded_move(b_slow: f64, b_fast: f64, frac: f64, b_min: f64, b_max: f64) -> f64 {
+    (frac * b_slow)
+        .min(b_slow - b_min)
+        .min(b_max - b_fast)
+        .max(0.0)
+}
+
+/// The learned action-value table, JSON-serializable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RlTable {
+    pub q: [[f64; N_ACTIONS]; N_STATES],
+}
+
+impl RlTable {
+    /// All-zero table (training start state).
+    pub fn zeros() -> Self {
+        RlTable {
+            q: [[0.0; N_ACTIONS]; N_STATES],
+        }
+    }
+
+    /// The committed default table.
+    pub fn builtin() -> Self {
+        Self::parse(DEFAULT_TABLE).expect("committed rl_table.json must parse")
+    }
+
+    /// Greedy action for a state; ties break toward the lowest action
+    /// index (hold first) so the policy is deterministic.
+    pub fn greedy(&self, state: usize) -> usize {
+        let row = &self.q[state];
+        let mut best = 0;
+        for (a, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = a;
+            }
+        }
+        best
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("format", Json::Str("hbatch-rl-table-v1".into()));
+        o.set(
+            "states",
+            Json::Arr(
+                (0..N_STATES)
+                    .map(|s| {
+                        let lo = if s == 0 { 1.0 } else { STATE_EDGES[s - 1] };
+                        let hi = STATE_EDGES
+                            .get(s)
+                            .map_or("inf".to_string(), |e| format!("{e}"));
+                        Json::Str(format!("ratio[{lo},{hi})"))
+                    })
+                    .collect(),
+            ),
+        );
+        let mut actions = vec![Json::Str("hold".into())];
+        actions.extend(
+            MOVE_FRACTIONS
+                .iter()
+                .map(|f| Json::Str(format!("move{f:.2}"))),
+        );
+        o.set("actions", Json::Arr(actions));
+        o.set(
+            "q",
+            Json::Arr(
+                self.q
+                    .iter()
+                    .map(|row| Json::from_f64_slice(row))
+                    .collect(),
+            ),
+        );
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let rows = j
+            .get("q")
+            .as_arr()
+            .ok_or("rl table: missing \"q\" array")?;
+        if rows.len() != N_STATES {
+            return Err(format!(
+                "rl table: {} state rows, expected {N_STATES}",
+                rows.len()
+            ));
+        }
+        let mut q = [[0.0; N_ACTIONS]; N_STATES];
+        for (s, row) in rows.iter().enumerate() {
+            let vals = row
+                .as_arr()
+                .ok_or(format!("rl table: q[{s}] is not an array"))?;
+            if vals.len() != N_ACTIONS {
+                return Err(format!(
+                    "rl table: q[{s}] has {} actions, expected {N_ACTIONS}",
+                    vals.len()
+                ));
+            }
+            for (a, v) in vals.iter().enumerate() {
+                q[s][a] = v
+                    .as_f64()
+                    .ok_or(format!("rl table: q[{s}][{a}] is not a number"))?;
+            }
+        }
+        Ok(RlTable { q })
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let j = Json::parse(text).map_err(|e| format!("rl table: {e:?}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("rl table {path}: {e}"))?;
+        Self::parse(&text)
+    }
+}
+
+/// Tabular bandit batch policy: greedy over the learned Q-table.
+///
+/// Wraps a [`DynamicBatcher`] for membership/warm-start bookkeeping
+/// and the smoothed estimates, like [`super::OptimalBatcher`]; only the
+/// decision rule differs.
+#[derive(Debug, Clone)]
+pub struct RlBatcher {
+    inner: DynamicBatcher,
+    table: RlTable,
+    /// Observations per worker in the current decision interval.
+    interval: Vec<usize>,
+    adjustments: usize,
+}
+
+impl RlBatcher {
+    pub fn new(cfg: ControllerCfg, initial: &[f64], table: RlTable) -> Self {
+        let live = vec![true; initial.len()];
+        Self::try_with_membership(cfg, initial, &live, table)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn try_with_membership(
+        cfg: ControllerCfg,
+        initial: &[f64],
+        live: &[bool],
+        table: RlTable,
+    ) -> Result<Self, String> {
+        let inner = DynamicBatcher::try_with_membership(cfg, initial, live)?;
+        let interval = vec![0; initial.len()];
+        Ok(RlBatcher {
+            inner,
+            table,
+            interval,
+            adjustments: 0,
+        })
+    }
+
+    fn reset_intervals(&mut self) {
+        for n in &mut self.interval {
+            *n = 0;
+        }
+    }
+}
+
+impl BatchPolicy for RlBatcher {
+    fn observe(&mut self, k: usize, iter_time: f64) {
+        self.interval[k] += 1;
+        self.inner.observe(k, iter_time);
+    }
+
+    fn maybe_adjust(&mut self) -> Adjustment {
+        // A capacity-regime drift restarts the decision interval: the
+        // smoothed times mix two regimes.
+        if self.inner.take_drifted() {
+            self.reset_intervals();
+            return Adjustment::Hold;
+        }
+        let k = self.inner.k();
+        let active: Vec<usize> = (0..k).filter(|&i| self.inner.is_active(i)).collect();
+        if active.len() < 2 {
+            return Adjustment::Hold;
+        }
+        let min_obs = self.inner.cfg().min_obs.max(1);
+        if active.iter().any(|&i| self.interval[i] < min_obs) {
+            return Adjustment::Hold;
+        }
+        let times: Vec<(usize, f64)> = match active
+            .iter()
+            .map(|&i| self.inner.smoothed_iter_time(i).map(|t| (i, t)))
+            .collect::<Option<Vec<_>>>()
+        {
+            Some(t) => t,
+            None => return Adjustment::Hold,
+        };
+        let (slow, fast) = match slow_fast(&times) {
+            Some(sf) => sf,
+            None => return Adjustment::Hold,
+        };
+        let t_slow = times.iter().find(|&&(i, _)| i == slow).unwrap().1;
+        let t_fast = times.iter().find(|&&(i, _)| i == fast).unwrap().1;
+        self.reset_intervals();
+        if slow == fast || t_fast <= 0.0 {
+            return Adjustment::Hold;
+        }
+        let action = self.table.greedy(imbalance_state(t_slow / t_fast));
+        if action == 0 {
+            return Adjustment::Hold;
+        }
+        let cfg = self.inner.cfg();
+        let moved = bounded_move(
+            self.inner.batch(slow),
+            self.inner.batch(fast),
+            MOVE_FRACTIONS[action - 1],
+            cfg.b_min,
+            cfg.b_max,
+        );
+        if moved <= 1e-9 {
+            return Adjustment::Hold;
+        }
+        let mut full = self.inner.batches();
+        full[slow] -= moved;
+        full[fast] += moved;
+        self.inner.set_batches(&full);
+        self.adjustments += 1;
+        Adjustment::Apply(full)
+    }
+
+    fn retire(&mut self, k: usize) {
+        self.inner.retire(k);
+        self.reset_intervals();
+    }
+
+    fn admit(&mut self, k: usize) {
+        self.inner.admit(k);
+        self.reset_intervals();
+    }
+
+    fn set_batches(&mut self, batches: &[f64]) {
+        self.inner.set_batches(batches);
+        self.reset_intervals();
+    }
+
+    fn batches_into(&self, out: &mut Vec<f64>) {
+        self.inner.batches_into(out);
+    }
+
+    fn lambdas_into(&self, out: &mut Vec<f64>) {
+        self.inner.lambdas_into(out);
+    }
+
+    fn smoothed_iter_time(&self, k: usize) -> Option<f64> {
+        self.inner.smoothed_iter_time(k)
+    }
+
+    fn global_batch(&self) -> f64 {
+        self.inner.global_batch()
+    }
+
+    fn adjustments(&self) -> usize {
+        self.adjustments
+    }
+
+    fn label(&self) -> &'static str {
+        "rl"
+    }
+}
+
+// ===================================================================
+// Offline training (seeded, deterministic)
+
+/// Q-learning hyperparameters for [`train`].
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    /// Independent seeded episodes (heterogeneous CPU clusters).
+    pub episodes: usize,
+    /// Decision steps per episode.
+    pub steps: usize,
+    /// Learning rate.
+    pub alpha: f64,
+    /// Discount factor.
+    pub gamma: f64,
+    /// Exploration rate (ε-greedy during training only).
+    pub epsilon: f64,
+    pub seed: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            episodes: 400,
+            steps: 25,
+            alpha: 0.1,
+            gamma: 0.9,
+            epsilon: 0.2,
+            seed: 7,
+        }
+    }
+}
+
+/// Mean of `n` sampled iteration times per worker, plus the round time
+/// (their max — BSP semantics).
+fn probe(
+    model: &CapacityModel,
+    devices: &[DeviceKind],
+    batches: &[f64],
+    n: usize,
+    rng: &mut Rng,
+) -> (Vec<f64>, f64) {
+    let times: Vec<f64> = devices
+        .iter()
+        .zip(batches)
+        .map(|(d, &b)| {
+            (0..n)
+                .map(|_| model.iter_time(d, b.max(1.0), 1.0, rng))
+                .sum::<f64>()
+                / n as f64
+        })
+        .collect();
+    let round = times.iter().copied().fold(0.0, f64::max);
+    (times, round)
+}
+
+/// Offline tabular Q-learning over seeded [`CapacityModel`] episodes —
+/// the same capacity substrate `SimBackend` wraps, so thousands of
+/// episodes cost milliseconds and the learned table transfers to full
+/// Session runs.  Deterministic in `cfg.seed` (episode RNG streams are
+/// forked per episode index).
+///
+/// Reward: relative BSP round-time improvement of the move, minus a
+/// small per-action cost (the readjustment overhead analogue) so the
+/// table learns to *hold* near balance.
+pub fn train(cfg: &TrainCfg) -> RlTable {
+    const CORE_CHOICES: [usize; 5] = [2, 4, 8, 12, 16];
+    const ACTION_COST: f64 = 0.02;
+    const PROBE_ITERS: usize = 3;
+    let mut table = RlTable::zeros();
+    let mut root = Rng::new(cfg.seed);
+    let ctl = ControllerCfg::default();
+    for ep in 0..cfg.episodes {
+        let mut rng = root.fork(ep as u64);
+        let k = 2 + rng.below(3) as usize;
+        let devices: Vec<DeviceKind> = (0..k)
+            .map(|_| DeviceKind::Cpu {
+                cores: CORE_CHOICES[rng.below(CORE_CHOICES.len() as u64) as usize],
+            })
+            .collect();
+        let model = CapacityModel::new(WorkloadProfile::resnet()).with_noise(0.04);
+        let mut batches = vec![64.0; k];
+        let (mut times, mut round) =
+            probe(&model, &devices, &batches, PROBE_ITERS, &mut rng);
+        for _step in 0..cfg.steps {
+            let indexed: Vec<(usize, f64)> =
+                times.iter().copied().enumerate().collect();
+            let (slow, fast) = slow_fast(&indexed).expect("non-empty episode");
+            if times[fast] <= 0.0 {
+                break;
+            }
+            let s = imbalance_state(times[slow] / times[fast]);
+            let a = if rng.f64() < cfg.epsilon {
+                rng.below(N_ACTIONS as u64) as usize
+            } else {
+                table.greedy(s)
+            };
+            if a > 0 && slow != fast {
+                let m = bounded_move(
+                    batches[slow],
+                    batches[fast],
+                    MOVE_FRACTIONS[a - 1],
+                    ctl.b_min,
+                    ctl.b_max,
+                );
+                batches[slow] -= m;
+                batches[fast] += m;
+            }
+            let (nt, nr) = probe(&model, &devices, &batches, PROBE_ITERS, &mut rng);
+            let reward =
+                (round - nr) / round - if a > 0 { ACTION_COST } else { 0.0 };
+            let indexed: Vec<(usize, f64)> = nt.iter().copied().enumerate().collect();
+            let (ns_slow, ns_fast) = slow_fast(&indexed).expect("non-empty episode");
+            let s_next = imbalance_state(nt[ns_slow] / nt[ns_fast]);
+            let best_next = table.q[s_next]
+                .iter()
+                .copied()
+                .fold(f64::NEG_INFINITY, f64::max);
+            table.q[s][a] +=
+                cfg.alpha * (reward + cfg.gamma * best_next - table.q[s][a]);
+            times = nt;
+            round = nr;
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_bucketing_covers_the_ratio_line() {
+        assert_eq!(imbalance_state(1.0), 0);
+        assert_eq!(imbalance_state(1.049), 0);
+        assert_eq!(imbalance_state(1.05), 1);
+        assert_eq!(imbalance_state(1.3), 2);
+        assert_eq!(imbalance_state(2.0), 3);
+        assert_eq!(imbalance_state(7.5), 4);
+    }
+
+    #[test]
+    fn committed_table_parses_and_round_trips() {
+        let t = RlTable::builtin();
+        let back = RlTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+        // The committed policy holds at balance and moves mass under
+        // imbalance — the minimum for steady state to exist.
+        assert_eq!(t.greedy(0), 0, "balanced state must hold");
+        for s in 1..N_STATES {
+            assert!(t.greedy(s) > 0, "imbalanced state {s} must act");
+        }
+    }
+
+    #[test]
+    fn greedy_ties_break_toward_hold() {
+        let t = RlTable::zeros();
+        for s in 0..N_STATES {
+            assert_eq!(t.greedy(s), 0);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_tables() {
+        assert!(RlTable::parse("{}").is_err());
+        assert!(RlTable::parse(r#"{"q": [[1,2],[3,4]]}"#).is_err());
+        assert!(RlTable::parse(r#"{"q": "nope"}"#).is_err());
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let cfg = TrainCfg {
+            episodes: 12,
+            steps: 8,
+            ..TrainCfg::default()
+        };
+        let a = train(&cfg);
+        let b = train(&cfg);
+        assert_eq!(a, b, "same seed must reproduce the table bitwise");
+    }
+
+    #[test]
+    fn rl_batcher_moves_mass_slow_to_fast_and_conserves() {
+        let cfg = ControllerCfg {
+            min_obs: 2,
+            ..ControllerCfg::default()
+        };
+        let mut ctl = RlBatcher::new(cfg, &[64.0, 64.0], RlTable::builtin());
+        // Worker 0 is 3x slower: ratio 3.0 → state 4 → a big move.
+        for _ in 0..3 {
+            ctl.observe(0, 9.0);
+            ctl.observe(1, 3.0);
+        }
+        let adj = ctl.maybe_adjust();
+        let b = match adj {
+            Adjustment::Apply(b) => b,
+            Adjustment::Hold => panic!("imbalance must trigger a move"),
+        };
+        assert!(b[0] < 64.0 && b[1] > 64.0, "mass must move slow→fast: {b:?}");
+        assert!((b[0] + b[1] - 128.0).abs() < 1e-9, "Σb broken: {b:?}");
+
+        // Balanced observations afterwards → hold (steady state).
+        for _ in 0..3 {
+            ctl.observe(0, 5.0);
+            ctl.observe(1, 5.0);
+        }
+        assert_eq!(ctl.maybe_adjust(), Adjustment::Hold);
+    }
+
+    #[test]
+    fn bounded_move_respects_bounds() {
+        // Full fraction admissible.
+        assert!((bounded_move(100.0, 50.0, 0.25, 1.0, 4096.0) - 25.0).abs() < 1e-12);
+        // Slow worker floor binds.
+        assert!((bounded_move(2.0, 50.0, 0.5, 1.5, 4096.0) - 0.5).abs() < 1e-12);
+        // Fast worker ceiling binds.
+        assert!((bounded_move(100.0, 4090.0, 0.5, 1.0, 4096.0) - 6.0).abs() < 1e-12);
+        // Nothing admissible.
+        assert_eq!(bounded_move(1.0, 4096.0, 0.5, 1.0, 4096.0), 0.0);
+    }
+
+    /// Bootstrap/regeneration hook for the committed table, mirroring
+    /// the scenario-golden workflow: `UPDATE_RL_TABLE=1 cargo test
+    /// rl_table_regen` retrains with the canonical config and rewrites
+    /// `src/controller/rl_table.json`; without the env var it only
+    /// asserts the committed file is loadable.
+    #[test]
+    fn rl_table_regen() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("src")
+            .join("controller")
+            .join("rl_table.json");
+        if std::env::var("UPDATE_RL_TABLE").map_or(false, |v| v == "1") {
+            let table = train(&TrainCfg::default());
+            std::fs::write(&path, table.to_json().to_pretty()).unwrap();
+            eprintln!("rl: rewrote {}", path.display());
+        } else {
+            let text = std::fs::read_to_string(&path).unwrap();
+            RlTable::parse(&text).unwrap();
+        }
+    }
+}

@@ -498,7 +498,7 @@ pub fn fig_revocation(seed: u64) -> Table {
             a.batches.clone(),
         ));
     }
-    rows.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+    rows.sort_by(|x, y| x.0.total_cmp(&y.0));
     for (time, event, worker, live, b) in rows {
         t.rowf(&[
             &format!("{time:.1}"),
@@ -509,6 +509,60 @@ pub fn fig_revocation(seed: u64) -> Table {
             &format!("{:.1}", b[1]),
             &format!("{:.1}", b[2]),
         ]);
+    }
+    t
+}
+
+// =====================================================================
+// Policy head-to-head — PID vs one-shot optimal vs tabular RL (§14)
+
+/// Convergence time and adjustment count for the three closed-loop
+/// policies across static heterogeneity levels and a spot-churn
+/// scenario.  The one-shot optimal policy should reach the equalizing
+/// allocation with fewer adjustments than the PID controller's
+/// geometric approach; the RL policy trades a few extra moves for
+/// model-free operation.
+pub fn fig_policies(seed: u64) -> Table {
+    use crate::trace::SpotSpec;
+    const POLICIES: [Policy; 3] = [Policy::Dynamic, Policy::Optimal, Policy::Rl];
+    const STATIC: [(&str, [usize; 3]); 3] =
+        [("1x", [12, 12, 12]), ("2x", [8, 12, 16]), ("4x", [4, 8, 16])];
+    let mut builders = Vec::new();
+    for (_, cores) in STATIC {
+        for policy in POLICIES {
+            builders.push(sim("resnet", &cores, policy, TO_TARGET, seed));
+        }
+    }
+    // Churn: spot revocations force mid-run rebalances on every policy.
+    for policy in POLICIES {
+        builders.push(
+            sim("resnet", &[9, 12, 18], policy, 400, seed).spot(SpotSpec {
+                mttf_s: 4_000.0,
+                down_s: 200.0,
+                grace_s: 20.0,
+            }),
+        );
+    }
+    let mut reports = run_batch(builders).into_iter();
+    let mut t = Table::new(&[
+        "scenario", "policy", "total_time_s", "adjustments", "time_vs_dynamic",
+    ]);
+    let names: [&str; 4] = [STATIC[0].0, STATIC[1].0, STATIC[2].0, "churn"];
+    for scenario in names {
+        let rs: Vec<RunReport> = POLICIES
+            .iter()
+            .map(|_| reports.next().expect("policy run"))
+            .collect();
+        let base = rs[0].total_time;
+        for (policy, r) in POLICIES.iter().zip(&rs) {
+            t.rowf(&[
+                &scenario,
+                &policy.label(),
+                &format!("{:.0}", r.total_time),
+                &r.adjustments.len(),
+                &format!("{:.3}", r.total_time / base),
+            ]);
+        }
     }
     t
 }
@@ -536,6 +590,21 @@ mod tests {
             .map(|r| (r.total_time, r.total_iters, r.adjustments.len()))
             .collect();
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn fig_policies_covers_all_policies_and_scenarios() {
+        let t = fig_policies(3);
+        assert_eq!(t.len(), 12); // (3 static + churn) × 3 policies
+        let text = t.to_string();
+        for needle in ["dynamic", "optimal", "rl", "churn,"] {
+            assert!(text.contains(needle), "missing {needle}");
+        }
+        // The dynamic baseline rows normalize to exactly 1.000.
+        assert!(text
+            .lines()
+            .filter(|l| l.contains(",dynamic,"))
+            .all(|l| l.ends_with("1.000")));
     }
 
     #[test]

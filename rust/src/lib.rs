@@ -63,6 +63,7 @@ pub mod trace;
 pub mod util;
 
 pub use config::Policy;
+pub use controller::{BatchPolicy, DynamicBatcher, OptimalBatcher, RlBatcher, RlTable};
 pub use fault::{Autoscaler, AutoscalerCfg, DetectorCfg, FaultPlan, LatePolicy};
 pub use fleet::{
     job_seed, ArbiterPolicy, CapacityArbiter, FleetBuilder, FleetReport,

@@ -4,7 +4,7 @@
 //!   simulate          virtual-time experiment (policy × cluster × workload)
 //!   train             real-execution training over the PJRT runtime
 //!   fleet             N concurrent jobs on one shared elastic worker pool
-//!   figure <id>       regenerate a paper figure (1|2|3|4a|4b|5|6|7a|7cloud|asp|buckets|revocation)
+//!   figure <id>       regenerate a paper figure (1|2|3|4a|4b|5|6|7a|7cloud|asp|buckets|revocation|policies)
 //!   throughput-scan   print the Fig. 5 curve for a device
 //!   info              artifact/manifest inventory
 //!
@@ -14,7 +14,7 @@
 //! — means the same thing in both worlds.
 
 use hetero_batch::cluster::{cpu_cluster, hlevel_split};
-use hetero_batch::config::Policy;
+use hetero_batch::config::{split_policy_spec, Policy};
 use hetero_batch::fault::{AutoscalerCfg, DetectorCfg, FaultPlan};
 use hetero_batch::figures;
 use hetero_batch::fleet::{job_seed, ArbiterPolicy, FleetBuilder, JobSpec};
@@ -71,6 +71,23 @@ fn apply_fault_flags(builder: SessionBuilder, a: &Args) -> Result<SessionBuilder
     Ok(builder)
 }
 
+/// Parse the shared `--policy` flag, including the `rl:<table.json>`
+/// form, and fold policy + table path into the builder.  Both
+/// subcommands validate the spec (and, via `validate()`, the table
+/// file) before any artifact is opened.
+fn apply_policy_flag(
+    builder: SessionBuilder,
+    spec: &str,
+) -> Result<SessionBuilder, String> {
+    let (name, table) = split_policy_spec(spec);
+    let policy = Policy::parse(name).ok_or("bad --policy")?;
+    let mut builder = builder.policy(policy);
+    if let Some(t) = table {
+        builder = builder.rl_table(t);
+    }
+    Ok(builder)
+}
+
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match raw.split_first() {
@@ -105,7 +122,7 @@ fn usage() -> String {
      \x20 simulate          virtual-time experiment (fast, reproduces paper figures)\n\
      \x20 train             real training over AOT-compiled XLA artifacts\n\
      \x20 fleet             N concurrent jobs on one shared elastic worker pool\n\
-     \x20 figure <id>       regenerate a paper figure: 1 2 3 4a 4b 5 6 7a 7cloud asp buckets revocation all\n\
+     \x20 figure <id>       regenerate a paper figure: 1 2 3 4a 4b 5 6 7a 7cloud asp buckets revocation policies all\n\
      \x20 throughput-scan   throughput-vs-batch curve for a device\n\
      \x20 info              show artifact manifest\n\
      run `hbatch <cmd> --help` for options"
@@ -117,7 +134,7 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         .opt("workload", "resnet", "resnet|mnist|linreg|transformer")
         .opt("cores", "9,12,18", "per-worker CPU cores")
         .opt("hlevel", "0", "generate cores from H-level (overrides --cores)")
-        .opt("policy", "dynamic", "uniform|static|dynamic")
+        .opt("policy", "dynamic", "uniform|static|dynamic|pid|optimal|rl[:table.json]")
         .opt("sync", "bsp", "bsp|asp|ssp:<bound>")
         .opt("iters", "600", "global iterations (0 = run to target)")
         .opt("b0", "0", "reference per-worker batch (0 = workload default)")
@@ -152,13 +169,13 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     let builder = builder
         .model(&a.get("workload"))
         .workers(cpu_cluster(&cores))
-        .policy(Policy::parse(&a.get("policy")).ok_or("bad --policy")?)
         .sync(SyncMode::parse(&a.get("sync")).ok_or("bad --sync")?)
         .steps(a.get_u64("iters"))
         .b0(a.get_usize("b0"))
         .adjust_cost(a.get_f64("adjust-cost"))
         .noise(a.get_f64("noise"))
         .seed(a.get_u64("seed"));
+    let builder = apply_policy_flag(builder, &a.get("policy"))?;
     // Applied only when explicitly passed, so the declared defaults
     // never clobber a --config file's `scheduler`/`report_sample` keys.
     let mut builder = builder;
@@ -239,7 +256,7 @@ fn cmd_fleet(rest: &[String]) -> Result<(), String> {
 fn cmd_train(rest: &[String]) -> Result<(), String> {
     let a = Args::new("hbatch train", "real-execution training (PJRT runtime)")
         .opt("model", "mlp", "manifest model: linreg|mlp|cnn|transformer")
-        .opt("policy", "dynamic", "uniform|static|dynamic")
+        .opt("policy", "dynamic", "uniform|static|dynamic|pid|optimal|rl[:table.json]")
         .opt("sync", "bsp", "bsp|asp|ssp:<bound>")
         .opt("steps", "50", "global training steps")
         .opt("cores", "4,8,16", "simulated worker core counts (heterogeneity)")
@@ -263,17 +280,16 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
     // Parse and validate every flag before opening the runtime, so a bad
     // `--sync`/`--policy` fails fast with the same error text as
     // `simulate` — even without built artifacts.
-    let policy = Policy::parse(&a.get("policy")).ok_or("bad --policy")?;
     let sync = SyncMode::parse(&a.get("sync")).ok_or("bad --sync")?;
     let cores = a.get_usize_list("cores");
     if cores.is_empty() {
         return Err("--cores must list at least one worker".into());
     }
     let k = cores.len();
-    let builder = Session::builder()
+    let builder = apply_policy_flag(Session::builder(), &a.get("policy"))?;
+    let builder = builder
         .model(&a.get("model"))
         .workers(cpu_cluster(&cores))
-        .policy(policy)
         .sync(sync)
         .steps(a.get_u64("steps"))
         .eval_every(a.get_u64("eval-every"))
@@ -339,13 +355,13 @@ fn cmd_figure(rest: &[String]) -> Result<(), String> {
     let which = a
         .positionals()
         .first()
-        .ok_or("which figure? 1 2 3 4a 4b 5 6 7a 7cloud asp buckets revocation all")?
+        .ok_or("which figure? 1 2 3 4a 4b 5 6 7a 7cloud asp buckets revocation policies all")?
         .clone();
     let out_dir = a.get("out-dir");
     let ids: Vec<&str> = if which == "all" {
         vec![
             "1", "2", "3", "4a", "4b", "5", "6", "7a", "7cloud", "asp", "buckets",
-            "revocation",
+            "revocation", "policies",
         ]
     } else {
         vec![which.as_str()]
@@ -364,6 +380,7 @@ fn cmd_figure(rest: &[String]) -> Result<(), String> {
             "asp" => ("fig_asp", figures::fig_asp(seed)),
             "buckets" => ("fig_buckets_ablation", figures::fig_buckets(seed)),
             "revocation" => ("fig_revocation_timeline", figures::fig_revocation(seed)),
+            "policies" => ("fig_policy_head2head", figures::fig_policies(seed)),
             other => return Err(format!("unknown figure {other:?}")),
         };
         println!("=== {name} ===");

@@ -50,9 +50,12 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, VecDeque};
 
 use crate::cluster::{cpu_cluster, GpuModel, WorkerSpec};
-use crate::config::Policy;
+use crate::config::{split_policy_spec, Policy};
 use crate::controller::bucket::quantize_alloc;
-use crate::controller::{Adjustment, ControllerCfg, DynamicBatcher};
+use crate::controller::{
+    Adjustment, BatchPolicy, ControllerCfg, DynamicBatcher, OptimalBatcher, RlBatcher,
+    RlTable,
+};
 use crate::fault::{
     Autoscaler, AutoscalerCfg, DetectorCfg, FaultPlan, LatePolicy, SpawnOutcome,
 };
@@ -268,6 +271,7 @@ pub struct SessionBuilder {
     model: String,
     workers: Vec<WorkerSpec>,
     policy: Policy,
+    rl_table: Option<String>,
     sync: SyncMode,
     controller: ControllerCfg,
     b0: usize,
@@ -298,6 +302,7 @@ impl Default for SessionBuilder {
             model: "resnet".into(),
             workers: cpu_cluster(&[9, 12, 18]),
             policy: Policy::Dynamic,
+            rl_table: None,
             sync: SyncMode::Bsp,
             controller: ControllerCfg::default(),
             b0: 0,
@@ -349,6 +354,13 @@ impl SessionBuilder {
 
     pub fn policy(mut self, policy: Policy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Path to a trained RL controller table (`--policy rl:table.json`).
+    /// `None` with [`Policy::Rl`] uses the committed built-in table.
+    pub fn rl_table(mut self, path: &str) -> Self {
+        self.rl_table = Some(path.to_string());
         self
     }
 
@@ -581,7 +593,14 @@ impl SessionBuilder {
             b.workers = Self::workers_from_json(j.get("workers"))?;
         }
         if let Some(p) = j.get("policy").as_str() {
-            b.policy = Policy::parse(p).ok_or(format!("bad policy {p:?}"))?;
+            let (name, table) = split_policy_spec(p);
+            b.policy = Policy::parse(name).ok_or(format!("bad policy {p:?}"))?;
+            if let Some(t) = table {
+                b.rl_table = Some(t.to_string());
+            }
+        }
+        if let Some(t) = j.get("rl_table").as_str() {
+            b.rl_table = Some(t.to_string());
         }
         if let Some(s) = j.get("sync").as_str() {
             b.sync = SyncMode::parse(s).ok_or(format!("bad sync {s:?}"))?;
@@ -769,6 +788,15 @@ impl SessionBuilder {
                 );
             }
         }
+        if let Some(path) = &self.rl_table {
+            if self.policy != Policy::Rl {
+                return Err(format!(
+                    "rl_table {path:?} given but policy is {}",
+                    self.policy.label()
+                ));
+            }
+            RlTable::from_file(path)?;
+        }
         if let Some(d) = &self.detector {
             d.validate()?;
         }
@@ -915,6 +943,7 @@ impl SessionBuilder {
         Ok(Session {
             backend,
             policy: self.policy,
+            rl_table: self.rl_table.clone(),
             sync: self.sync,
             controller: self.controller.clone(),
             b0,
@@ -942,6 +971,7 @@ impl SessionBuilder {
 pub struct Session<B: Backend> {
     backend: B,
     policy: Policy,
+    rl_table: Option<String>,
     sync: SyncMode,
     controller: ControllerCfg,
     b0: f64,
@@ -997,8 +1027,9 @@ impl<B: Backend> Session<B> {
                 }
             }
             // Open-loop: proportional to the FLOPs *estimate* (not the
-            // true throughput — that gap is what Dynamic corrects).
-            Policy::Static | Policy::Dynamic => {
+            // true throughput — that gap is what the closed-loop
+            // policies correct).
+            Policy::Static | Policy::Dynamic | Policy::Optimal | Policy::Rl => {
                 let est = self.backend.flops_estimates();
                 let total: f64 = est
                     .iter()
@@ -1013,6 +1044,32 @@ impl<B: Backend> Session<B> {
                 for ((b, &l), &e) in out.iter_mut().zip(live).zip(&est) {
                     if l {
                         *b = mass * e / total;
+                    }
+                }
+                // Skewed estimates can push a live share outside the
+                // controller's [b_min, b_max], which the controller
+                // constructors reject.  Water-fill the live cohort back
+                // into bounds — but only on violation, so in-bounds
+                // allocations stay bitwise identical.
+                let (b_min, b_max) = (self.controller.b_min, self.controller.b_max);
+                if out
+                    .iter()
+                    .zip(live)
+                    .any(|(&b, &l)| l && (b < b_min || b > b_max))
+                {
+                    let mut lv: Vec<f64> = out
+                        .iter()
+                        .zip(live)
+                        .filter(|(_, &l)| l)
+                        .map(|(&b, _)| b)
+                        .collect();
+                    let caps = vec![b_max; lv.len()];
+                    crate::controller::water_fill(&mut lv, mass, b_min, &caps);
+                    let mut it = lv.into_iter();
+                    for (b, &l) in out.iter_mut().zip(live) {
+                        if l {
+                            *b = it.next().unwrap();
+                        }
                     }
                 }
             }
@@ -1076,6 +1133,19 @@ impl<B: Backend> Session<B> {
         // Initial allocation over the live cohort, quantized on
         // bucketed backends.
         let n_live = live.iter().filter(|&&l| l).count();
+        if matches!(self.policy, Policy::Dynamic | Policy::Optimal | Policy::Rl) {
+            // Controller policies must start inside the bounds; catch an
+            // infeasible total mass here with a configuration error
+            // instead of a constructor panic downstream.
+            let (b_min, b_max) = (self.controller.b_min, self.controller.b_max);
+            let mass = self.b0 * n_live as f64;
+            if mass < n_live as f64 * b_min - 1e-9 || mass > n_live as f64 * b_max + 1e-9 {
+                bail!(
+                    "global batch {mass} infeasible for {n_live} live workers \
+                     with controller bounds [{b_min}, {b_max}]"
+                );
+            }
+        }
         let proposal = self.policy_alloc(&live, self.b0 * n_live as f64);
         let mut cur_buckets: Option<Vec<usize>> = None;
         let batches: Vec<f64> = match &buckets {
@@ -1088,8 +1158,32 @@ impl<B: Backend> Session<B> {
             }
             None => proposal,
         };
-        let controller = (self.policy == Policy::Dynamic)
-            .then(|| DynamicBatcher::with_membership(self.controller.clone(), &batches, &live));
+        let controller: Option<Box<dyn BatchPolicy>> = match self.policy {
+            Policy::Uniform | Policy::Static => None,
+            Policy::Dynamic => Some(Box::new(
+                DynamicBatcher::try_with_membership(self.controller.clone(), &batches, &live)
+                    .map_err(|e| anyhow!(e))?,
+            )),
+            Policy::Optimal => Some(Box::new(
+                OptimalBatcher::try_with_membership(self.controller.clone(), &batches, &live)
+                    .map_err(|e| anyhow!(e))?,
+            )),
+            Policy::Rl => {
+                let table = match &self.rl_table {
+                    Some(path) => RlTable::from_file(path).map_err(|e| anyhow!(e))?,
+                    None => RlTable::builtin(),
+                };
+                Some(Box::new(
+                    RlBatcher::try_with_membership(
+                        self.controller.clone(),
+                        &batches,
+                        &live,
+                        table,
+                    )
+                    .map_err(|e| anyhow!(e))?,
+                ))
+            }
+        };
         // Async progress is denominated in the *initial* global batch
         // (post-quantization), not k·b0: bucket snapping can leave the
         // batch sum off k·b0, and the budget must count global-batch
@@ -1480,7 +1574,7 @@ impl<B: Backend> Session<B> {
                                 &mut st.cur_buckets,
                                 &mut st.batches,
                                 &st.live,
-                                ctl,
+                                ctl.as_mut(),
                                 report,
                                 &mut st.t,
                                 st.updates,
@@ -1611,7 +1705,7 @@ impl<B: Backend> Session<B> {
                         &mut st.cur_buckets,
                         &mut st.batches,
                         &st.live,
-                        ctl,
+                        ctl.as_mut(),
                         report,
                         &mut st.t,
                         st.global_steps,
@@ -2045,7 +2139,7 @@ struct LoopState {
     exec_batch: Vec<f64>,
     cur_buckets: Option<Vec<usize>>,
     buckets: Option<Vec<usize>>,
-    controller: Option<DynamicBatcher>,
+    controller: Option<Box<dyn BatchPolicy>>,
     sync: SyncState,
     live: Vec<bool>,
     epoch: u64,
@@ -2389,7 +2483,7 @@ fn apply_adjustment(
     cur_buckets: &mut Option<Vec<usize>>,
     batches: &mut Vec<f64>,
     live: &[bool],
-    ctl: &mut DynamicBatcher,
+    ctl: &mut dyn BatchPolicy,
     report: &mut RunReport,
     t: &mut f64,
     iter: u64,
@@ -2493,6 +2587,48 @@ mod tests {
             r#"{"controller": {"deadband": 2.0}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn builder_parses_policy_specs() {
+        let b = SessionBuilder::from_json_str(r#"{"policy": "pid"}"#).unwrap();
+        assert_eq!(b.policy, Policy::Dynamic);
+        let b = SessionBuilder::from_json_str(r#"{"policy": "optimal"}"#).unwrap();
+        assert_eq!(b.policy, Policy::Optimal);
+        let b = SessionBuilder::from_json_str(r#"{"policy": "rl"}"#).unwrap();
+        assert_eq!(b.policy, Policy::Rl);
+        assert_eq!(b.rl_table, None);
+        // `rl:path` splits into policy + table; a missing table file is
+        // a validation error, not a downstream panic.
+        assert!(SessionBuilder::from_json_str(
+            r#"{"policy": "rl:/no/such/table.json"}"#
+        )
+        .is_err());
+        // A table path without the rl policy is a config error.
+        assert!(SessionBuilder::from_json_str(
+            r#"{"policy": "dynamic", "rl_table": "t.json"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn infeasible_controller_mass_errors_instead_of_panicking() {
+        // b0 above b_max: every controller policy must surface a config
+        // error from start() instead of tripping a constructor assert.
+        for policy in [Policy::Dynamic, Policy::Optimal, Policy::Rl] {
+            let mut cfg = ControllerCfg::default();
+            cfg.b_max = 32.0;
+            cfg.adaptive_bmax = false;
+            let mut s = SessionBuilder::default()
+                .cores(&[4, 8])
+                .policy(policy)
+                .b0(64)
+                .controller(cfg)
+                .steps(5)
+                .build_sim()
+                .unwrap();
+            assert!(s.run().is_err(), "{policy:?} should reject b0 > b_max");
+        }
     }
 
     #[test]

@@ -310,7 +310,13 @@ mod tests {
     #[test]
     fn membership_conserves_global_batch_at_every_epoch() {
         let (traces, plan) = outage_scenario();
-        for policy in [Policy::Uniform, Policy::Static, Policy::Dynamic] {
+        for policy in [
+            Policy::Uniform,
+            Policy::Static,
+            Policy::Dynamic,
+            Policy::Optimal,
+            Policy::Rl,
+        ] {
             for sync in [SyncMode::Bsp, SyncMode::Asp, SyncMode::Ssp { bound: 2 }] {
                 let r = run(quick("resnet", &[4, 13, 22], policy)
                     .steps(150)

@@ -414,8 +414,7 @@ impl MembershipPlan {
 /// a running session's queue exactly like plan events would.
 pub fn cmp_events(a: &MembershipEvent, b: &MembershipEvent) -> std::cmp::Ordering {
     a.time
-        .partial_cmp(&b.time)
-        .expect("membership event times must be comparable")
+        .total_cmp(&b.time)
         .then(a.worker.cmp(&b.worker))
         // Same worker, same instant: process the revoke first so a
         // revoke+join pair is a bounce, not a no-op.

@@ -91,7 +91,7 @@ impl Bench {
             }
             sample_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
         }
-        sample_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sample_ns.sort_by(f64::total_cmp);
         let mean = sample_ns.iter().sum::<f64>() / sample_ns.len() as f64;
         let m = Measurement {
             name: format!("{}/{}", self.group, name),

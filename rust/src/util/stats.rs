@@ -174,7 +174,7 @@ impl Histogram {
 pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
     assert!(!samples.is_empty());
     assert!((0.0..=1.0).contains(&q));
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let pos = q * (samples.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;

@@ -8,7 +8,10 @@
 
 use hetero_batch::config::Policy;
 use hetero_batch::controller::bucket::{quantize, quantize_alloc};
-use hetero_batch::controller::{static_alloc, ControllerCfg, DynamicBatcher};
+use hetero_batch::controller::{
+    static_alloc, BatchPolicy, ControllerCfg, DynamicBatcher, OptimalBatcher,
+    RlBatcher, RlTable,
+};
 use hetero_batch::fault::{
     AutoscalerCfg, DetectorCfg, FaultEvent, FaultKind, FaultPlan, FaultState,
 };
@@ -1411,6 +1414,146 @@ fn prop_vecof_strategy_smoke() {
     };
     check("vecof in bounds", 200, strat, |v| {
         (1..=8).contains(&v.len()) && v.iter().all(|&x| x <= 100)
+    });
+}
+
+// =====================================================================
+// Pluggable batch policies (DESIGN.md §14): every BatchPolicy
+// implementation — PID reference, one-shot optimal, tabular RL — must
+// conserve the global batch across adjustments AND membership churn,
+// and the "pid" policy spec must be a pure alias for the dynamic
+// controller (bitwise-identical reports).
+
+/// All shipped BatchPolicy implementations over the same start state.
+fn policy_zoo(init: &[f64]) -> Vec<Box<dyn BatchPolicy>> {
+    vec![
+        Box::new(DynamicBatcher::new(default_cfg(), init)),
+        Box::new(OptimalBatcher::new(default_cfg(), init)),
+        Box::new(RlBatcher::new(default_cfg(), init, RlTable::builtin())),
+    ]
+}
+
+#[test]
+fn prop_every_batch_policy_conserves_global_batch_under_churn() {
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let s = ScenarioStrategy.generate(rng);
+        let victim = rng.range_usize(0, s.xs.len());
+        let retire_at = rng.range_usize(5, 40);
+        let admit_back = rng.range_usize(0, 2) == 1;
+        (s, victim, retire_at, admit_back)
+    });
+    check("all policies conserve Σb", 40, strat, |c| {
+        let (s, victim, retire_at, admit_back) = c;
+        let expect: f64 = s.init.iter().sum();
+        let mut ok = true;
+        for mut ctl in policy_zoo(&s.init) {
+            let mut rng = Rng::new(s.seed);
+            let mut active = vec![true; s.xs.len()];
+            let mut b = Vec::new();
+            for it in 0..60usize {
+                if it == *retire_at && active.iter().filter(|&&a| a).count() > 1 {
+                    ctl.retire(*victim);
+                    active[*victim] = false;
+                }
+                if *admit_back && it == retire_at + 10 && !active[*victim] {
+                    ctl.admit(*victim);
+                    active[*victim] = true;
+                }
+                ctl.batches_into(&mut b);
+                for (w, &x) in s.xs.iter().enumerate() {
+                    if !active[w] {
+                        continue;
+                    }
+                    let noise = if s.noise > 0.0 {
+                        rng.lognormal(1.0, s.noise)
+                    } else {
+                        1.0
+                    };
+                    ctl.observe(w, (s.overhead + b[w] / x) * noise);
+                }
+                ctl.maybe_adjust();
+                ctl.batches_into(&mut b);
+                let sum: f64 = b.iter().sum();
+                ok &= (sum - expect).abs() / expect < 1e-6;
+                ok &= (ctl.global_batch() - expect).abs() / expect < 1e-6;
+                ok &= active
+                    .iter()
+                    .zip(&b)
+                    .all(|(&a, &bk)| if a { bk > 0.0 } else { bk == 0.0 });
+            }
+        }
+        ok
+    });
+}
+
+#[test]
+fn prop_controller_policies_conserve_global_batch_in_session_runs() {
+    // Same invariant end-to-end: a churned Session run under each
+    // controller policy conserves Σb at every epoch transition.
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let s = SchedStrategy.generate(rng);
+        let policy = [Policy::Dynamic, Policy::Optimal, Policy::Rl]
+            [rng.range_usize(0, 3)];
+        (s, policy)
+    });
+    check("session Σb per policy", 40, strat, |(s, policy)| {
+        let mut b = Session::builder()
+            .policy(*policy)
+            .sync(s.sync)
+            .steps(s.steps);
+        if let Some((w, t1, t2)) = s.churn {
+            b = b.membership(MembershipPlan::new(vec![
+                MembershipEvent { time: t1, worker: w, kind: MembershipKind::Revoke },
+                MembershipEvent { time: t2, worker: w, kind: MembershipKind::Join },
+            ]));
+        }
+        let r = b
+            .build_with(FixedScheduleBackend {
+                durs: s.durs.clone(),
+                real_shaped: false,
+                faults: None,
+            })
+            .unwrap()
+            .run()
+            .unwrap();
+        let total = 32.0 * s.durs.len() as f64;
+        r.epochs.iter().all(|e| {
+            (e.batches.iter().sum::<f64>() - total).abs() < 1e-6
+        }) && r.adjustments.iter().all(|a| {
+            (a.batches.iter().sum::<f64>() - total).abs() < 1e-6
+        })
+    });
+}
+
+#[test]
+fn prop_pid_spec_is_bitwise_identical_to_dynamic() {
+    // "pid" is documentation, not behavior: a builder parsed from a
+    // `"policy": "pid"` spec must reproduce the Policy::Dynamic run
+    // bitwise — same floats, same events, same adjustments.
+    check("pid == dynamic bitwise", 60, SchedStrategy, |s| {
+        let run = |spec: &str| -> RunReport {
+            let mut b = SessionBuilder::from_json_str(spec)
+                .unwrap()
+                .sync(s.sync)
+                .steps(s.steps);
+            if let Some((w, t1, t2)) = s.churn {
+                b = b.membership(MembershipPlan::new(vec![
+                    MembershipEvent { time: t1, worker: w, kind: MembershipKind::Revoke },
+                    MembershipEvent { time: t2, worker: w, kind: MembershipKind::Join },
+                ]));
+            }
+            b.build_with(FixedScheduleBackend {
+                durs: s.durs.clone(),
+                real_shaped: false,
+                faults: None,
+            })
+            .unwrap()
+            .run()
+            .unwrap()
+        };
+        let pid = run(r#"{"policy": "pid"}"#);
+        let dynamic = run(r#"{"policy": "dynamic"}"#);
+        reports_identical(&pid, &dynamic)
     });
 }
 

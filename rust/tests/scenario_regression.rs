@@ -497,3 +497,40 @@ fn fault_scenarios_actually_fault() {
     assert_eq!(kinds, vec!["revoke", "join"], "autoscale epochs {kinds:?}");
     assert_eq!(r.epochs.last().unwrap().live, CORES.len());
 }
+
+#[test]
+fn pid_policy_spec_reproduces_dynamic_scenario_bitwise() {
+    // The BatchPolicy refactor must leave "pid" a pure alias: a builder
+    // parsed from a `"policy": "pid"` spec replays the dynamic churn
+    // scenario bit-for-bit — same label, same summary (so the committed
+    // bsp_dynamic_churn golden pins both spellings), same makespan bits.
+    let round_s = probe_round_s();
+    let configure = |b: SessionBuilder| {
+        let (traces, plan) = outage(round_s);
+        b.model("mnist")
+            .cores(&CORES)
+            .sync(SyncMode::Bsp)
+            .steps(STEPS)
+            .adjust_cost(1.0)
+            .seed(SEED)
+            .traces(traces)
+            .membership(plan)
+    };
+    let dynamic = configure(Session::builder().policy(Policy::Dynamic))
+        .build_sim()
+        .unwrap()
+        .run()
+        .unwrap();
+    let pid = configure(SessionBuilder::from_json_str(r#"{"policy": "pid"}"#).unwrap())
+        .build_sim()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(pid.label, dynamic.label, "pid must keep the dynamic label");
+    assert_eq!(pid.total_time.to_bits(), dynamic.total_time.to_bits());
+    assert_eq!(
+        summarize("bsp_dynamic_churn", &pid).to_pretty(),
+        summarize("bsp_dynamic_churn", &dynamic).to_pretty(),
+        "pid spec diverged from Policy::Dynamic"
+    );
+}

@@ -46,6 +46,14 @@ echo "== tier1: session bench smoke (k <= 64, quick) =="
 # session` only).  Also self-checks heap vs scan report identity.
 HBATCH_BENCH_QUICK=1 cargo bench --bench session -- --max-k 64
 
+# The policy head-to-head series (PR 8) must be present in the session
+# smoke artifact — a silent disappearance would mean the canonical
+# bench regenerates without the pid/optimal/rl comparison.
+if ! grep -q 'policy_head2head' ../BENCH_session_quick.json; then
+    echo "tier1: BENCH_session_quick.json is missing the policy_head2head series" >&2
+    exit 1
+fi
+
 echo "== tier1: fleet bench smoke (32 jobs, k <= 8, quick) =="
 # Truncated fleet + quick windows => writes BENCH_fleet_quick.json,
 # never the canonical BENCH_fleet.json (full `cargo bench --bench
@@ -71,6 +79,28 @@ fault_out=$(./target/release/hbatch simulate --workload mnist --cores 4,4,8 \
 for needle in '"suspect"' '"ready"' '"join"'; do
     if ! grep -q -- "$needle" <<<"$fault_out"; then
         echo "tier1: fault smoke output is missing $needle" >&2
+        exit 1
+    fi
+done
+
+echo "== tier1: batch-policy smoke (pid | optimal | rl) =="
+# Every shipped BatchPolicy must complete the same small churned run
+# from the CLI.  "pid" is the documented alias for the proportional
+# controller and must keep reporting the dynamic label; optimal and rl
+# report under their own labels.
+for pol in pid optimal rl; do
+    pol_out=$(./target/release/hbatch simulate --workload mnist --cores 4,4,8 \
+        --policy "$pol" --sync bsp --iters 40 --seed 3 --spot 30:8:1)
+    case "$pol" in
+        pid) want='/dynamic/' ;;
+        *) want="/$pol/" ;;
+    esac
+    if ! grep -q -- "$want" <<<"$pol_out"; then
+        echo "tier1: policy smoke ($pol) label is missing $want" >&2
+        exit 1
+    fi
+    if ! grep -q '"total_time_s"' <<<"$pol_out"; then
+        echo "tier1: policy smoke ($pol) produced no report" >&2
         exit 1
     fi
 done
