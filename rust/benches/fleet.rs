@@ -204,7 +204,7 @@ fn main() {
         "BENCH_fleet.json"
     };
     let path = format!("{}/../{fname}", env!("CARGO_MANIFEST_DIR"));
-    std::fs::write(&path, json.to_pretty()).expect("write bench json");
+    hetero_batch::util::fs::atomic_write_str(std::path::Path::new(&path), &json.to_pretty());
     println!("\nwrote {path}");
     println!("all fleet benches complete");
 }

@@ -27,12 +27,14 @@
 //! the bench refuses to record a speedup over a baseline that computes
 //! something else.
 
+use hetero_batch::ckpt::{Checkpointer, CkptSpec};
 use hetero_batch::config::Policy;
 use hetero_batch::metrics::RunReport;
-use hetero_batch::session::{Scheduler, Session, SessionBuilder};
+use hetero_batch::session::{CkptOutcome, Scheduler, Session, SessionBuilder};
 use hetero_batch::sync::SyncMode;
 use hetero_batch::trace::{ClusterTraces, MembershipPlan};
 use hetero_batch::util::bench::{find_mean_ns, suite_json, Bench};
+use hetero_batch::util::fs::atomic_write_str;
 use hetero_batch::util::json::Json;
 
 /// Worker counts of the grid (the last is the fleet-scale headline).
@@ -148,6 +150,42 @@ fn main() {
             run_once(&bld, Scheduler::Heap).total_time
         });
     }
+    // Checkpoint overhead (EXPERIMENTS.md §Recovery): the same run with
+    // durable whole-state snapshots at every round boundary (every_s =
+    // 0), on a sparse cadence, and with checkpointing off.  The timed
+    // unit is a whole run either way, so derived
+    // `ckpt_overhead/<cell>/time_vs_off` reads directly as the
+    // durability tax.
+    let ck_bld = builder(8, SyncMode::Bsp, "dynamic");
+    let ck_dir = std::env::temp_dir().join(format!("hbatch_bench_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ck_dir);
+    let ck_config = ck_bld.to_json().expect("bench scenario is config-expressible");
+    for (label, every) in [("off", None), ("every0", Some(0.0)), ("every60", Some(60.0))] {
+        b.run(&format!("ckpt_overhead/{label}/k8/bsp/dynamic"), || match every {
+            None => run_once(&ck_bld, Scheduler::Heap).total_time,
+            Some(every_s) => {
+                let mut ck = Checkpointer::open(CkptSpec {
+                    dir: ck_dir.clone(),
+                    every_s,
+                    keep_n: 2,
+                })
+                .expect("bench ckpt dir");
+                let mut sess = ck_bld
+                    .clone()
+                    .scheduler(Scheduler::Heap)
+                    .build_sim()
+                    .expect("bench scenario");
+                match sess
+                    .run_checkpointed(&ck_config, &mut ck, None)
+                    .expect("bench run")
+                {
+                    CkptOutcome::Completed(r) => r.total_time,
+                    CkptOutcome::Stopped { .. } => unreachable!("no crash injection"),
+                }
+            }
+        });
+    }
+    let _ = std::fs::remove_dir_all(&ck_dir);
     b.report();
 
     // Derived heap-vs-scan speedups (scan_mean / heap_mean; > 1 = the
@@ -174,6 +212,18 @@ fn main() {
                 &format!("policy_head2head/{label}/time_vs_pid"),
                 Json::Num(r.total_time / pid_time),
             );
+        }
+    }
+    let ck_off = find_mean_ns(&groups, "session/ckpt_overhead/off/k8/bsp/dynamic");
+    for label in ["every0", "every60"] {
+        let on = find_mean_ns(&groups, &format!("session/ckpt_overhead/{label}/k8/bsp/dynamic"));
+        if let (Some(off), Some(on)) = (ck_off, on) {
+            if off > 0.0 {
+                derived.set(
+                    &format!("ckpt_overhead/{label}/time_vs_off"),
+                    Json::Num(on / off),
+                );
+            }
         }
     }
     for &k in KS.iter().filter(|&&k| k <= max_k) {
@@ -203,7 +253,7 @@ fn main() {
         "BENCH_session.json"
     };
     let path = format!("{}/../{fname}", env!("CARGO_MANIFEST_DIR"));
-    std::fs::write(&path, json.to_pretty()).expect("write bench json");
+    atomic_write_str(std::path::Path::new(&path), &json.to_pretty());
     println!("\nwrote {path}");
     println!("all session benches complete");
 }

@@ -1,0 +1,701 @@
+//! Crash-consistent checkpointing (DESIGN.md §15).
+//!
+//! A checkpoint is a directory `ckpt-<seq>` holding a versioned
+//! `manifest.json` plus the payload files it names (`config.json`,
+//! `state.json`, optionally `backend.bin`), each entry carrying an
+//! FNV-1a checksum and byte count.  Commits are atomic: payloads are
+//! staged in a temp directory, fsynced, the manifest written last, and
+//! the whole directory renamed into place — so a crash at any instant
+//! leaves either the new checkpoint complete or the previous one as the
+//! newest *valid* checkpoint.  Recovery scans newest→oldest and skips
+//! anything torn, truncated, or from a different format version.
+//!
+//! The serialization story is deliberately exact: every `f64` that is
+//! finite (and not `-0.0`) round-trips bit-identically through the
+//! in-house JSON writer's shortest-representation formatting; the
+//! leftovers (NaN, ±Inf, `-0.0`) and 128-bit RNG state are carried as
+//! `"bits:<hex>"` strings.  That is what makes resume == uninterrupted
+//! a *bitwise* claim rather than an approximate one.
+
+use std::fs::{self, File};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Format version of the checkpoint manifest + state schema.  Bump on
+/// any incompatible change; recovery rejects mismatched checkpoints
+/// instead of misinterpreting them.
+pub const CKPT_VERSION: i64 = 1;
+
+/// Manifest format tag.
+pub const CKPT_FORMAT: &str = "hbatch-ckpt";
+
+/// Default snapshot spacing (virtual seconds) when `--checkpoint dir`
+/// gives no `every_s`: snapshot at every eligible boundary.
+pub const DEFAULT_EVERY_S: f64 = 0.0;
+
+/// Default number of committed checkpoints retained.
+pub const DEFAULT_KEEP_N: usize = 2;
+
+// ---------------------------------------------------------------- codec
+
+/// Exact `f64` → JSON.  Finite values (except `-0.0`) go through the
+/// numeric writer, which emits either an exact integer or the shortest
+/// decimal that re-parses to the same bits.  NaN / ±Inf / `-0.0` — all
+/// legitimate sentinel states in the run loop (`deadline`, `next_done`)
+/// — become `"bits:<16-hex>"` strings.
+pub fn enc_f64(x: f64) -> Json {
+    if x.is_finite() && !(x == 0.0 && x.is_sign_negative()) {
+        Json::Num(x)
+    } else {
+        Json::Str(format!("bits:{:016x}", x.to_bits()))
+    }
+}
+
+/// Inverse of [`enc_f64`].
+pub fn dec_f64(j: &Json) -> Result<f64, String> {
+    match j {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) => {
+            let hex = s
+                .strip_prefix("bits:")
+                .ok_or_else(|| format!("expected bits:<hex> f64, got {s:?}"))?;
+            u64::from_str_radix(hex, 16)
+                .map(f64::from_bits)
+                .map_err(|e| format!("bad f64 bits {s:?}: {e}"))
+        }
+        other => Err(format!("expected f64, got {other:?}")),
+    }
+}
+
+/// Exact `f64` slice → JSON array (element-wise [`enc_f64`]).
+pub fn enc_f64_slice(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| enc_f64(x)).collect())
+}
+
+/// Inverse of [`enc_f64_slice`].
+pub fn dec_f64_vec(j: &Json) -> Result<Vec<f64>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("expected f64 array, got {j:?}"))?
+        .iter()
+        .map(dec_f64)
+        .collect()
+}
+
+/// `u64` → JSON, exact across the whole range: values beyond the f64
+/// integer window are carried as hex strings.
+pub fn enc_u64(x: u64) -> Json {
+    if x < (1u64 << 53) {
+        Json::Num(x as f64)
+    } else {
+        Json::Str(format!("bits:{x:016x}"))
+    }
+}
+
+/// Inverse of [`enc_u64`].
+pub fn dec_u64(j: &Json) -> Result<u64, String> {
+    match j {
+        Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < 9e15 => Ok(*n as u64),
+        Json::Str(s) => {
+            let hex = s
+                .strip_prefix("bits:")
+                .ok_or_else(|| format!("expected bits:<hex> u64, got {s:?}"))?;
+            u64::from_str_radix(hex, 16).map_err(|e| format!("bad u64 bits {s:?}: {e}"))
+        }
+        other => Err(format!("expected u64, got {other:?}")),
+    }
+}
+
+/// `u128` → `"bits:<32-hex>"` (RNG state words).
+pub fn enc_u128(x: u128) -> Json {
+    Json::Str(format!("bits:{x:032x}"))
+}
+
+/// Inverse of [`enc_u128`].
+pub fn dec_u128(j: &Json) -> Result<u128, String> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| format!("expected bits:<hex> u128, got {j:?}"))?;
+    let hex = s
+        .strip_prefix("bits:")
+        .ok_or_else(|| format!("expected bits:<hex> u128, got {s:?}"))?;
+    u128::from_str_radix(hex, 16).map_err(|e| format!("bad u128 bits {s:?}: {e}"))
+}
+
+/// `usize` decode with the standard error shape.
+pub fn dec_usize(j: &Json) -> Result<usize, String> {
+    j.as_usize().ok_or_else(|| format!("expected usize, got {j:?}"))
+}
+
+/// Optional-f64 encode: `None` → `Json::Null`.
+pub fn enc_opt_f64(x: Option<f64>) -> Json {
+    match x {
+        Some(v) => enc_f64(v),
+        None => Json::Null,
+    }
+}
+
+/// Inverse of [`enc_opt_f64`].
+pub fn dec_opt_f64(j: &Json) -> Result<Option<f64>, String> {
+    if j.is_null() {
+        Ok(None)
+    } else {
+        dec_f64(j).map(Some)
+    }
+}
+
+// ------------------------------------------------------ binary sidecar
+
+/// Magic prefix of the `backend.bin` sidecar (RealBackend parameters +
+/// optimizer moments; little-endian throughout).
+pub const BIN_MAGIC: &[u8; 8] = b"HBCKPTB1";
+
+/// Start a sidecar buffer (magic already written).
+pub fn bin_new() -> Vec<u8> {
+    BIN_MAGIC.to_vec()
+}
+
+pub fn bin_put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Length-prefixed `f32` slice.
+pub fn bin_put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    bin_put_u64(buf, xs.len() as u64);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked cursor over a sidecar produced with the `bin_put_*`
+/// writers.
+pub struct BinReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Result<Self, String> {
+        if buf.len() < BIN_MAGIC.len() || &buf[..BIN_MAGIC.len()] != BIN_MAGIC {
+            return Err("backend.bin: bad magic".into());
+        }
+        Ok(BinReader {
+            buf,
+            pos: BIN_MAGIC.len(),
+        })
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                format!(
+                    "backend.bin: truncated (want {n} bytes at offset {})",
+                    self.pos
+                )
+            })?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u64()? as usize;
+        let b = self.take(n.checked_mul(4).ok_or("backend.bin: length overflow")?)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+            .collect())
+    }
+
+    /// Assert the whole buffer was consumed.
+    pub fn finish(self) -> Result<(), String> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(format!(
+                "backend.bin: {} trailing bytes",
+                self.buf.len() - self.pos
+            ))
+        }
+    }
+}
+
+// ------------------------------------------------------------- checksum
+
+/// FNV-1a 64-bit — tiny, dependency-free, and plenty for torn-write
+/// detection (this guards against truncation/corruption, not
+/// adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ----------------------------------------------------------------- spec
+
+/// Parsed `--checkpoint dir[:every_s][:keep_n]` spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptSpec {
+    pub dir: PathBuf,
+    /// Minimum virtual seconds between snapshots (0 = snapshot at every
+    /// eligible boundary).
+    pub every_s: f64,
+    /// Committed checkpoints retained (older ones are pruned).
+    pub keep_n: usize,
+}
+
+impl CkptSpec {
+    /// Parse `dir[:every_s][:keep_n]`.  The directory itself must not
+    /// contain `:` (same restriction as the `rl:table.json` policy
+    /// spec's first field).
+    pub fn parse(s: &str) -> Result<CkptSpec, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.is_empty() || parts[0].is_empty() || parts.len() > 3 {
+            return Err(format!("expected dir[:every_s][:keep_n], got {s:?}"));
+        }
+        let every_s = match parts.get(1) {
+            Some(p) => p
+                .parse::<f64>()
+                .map_err(|_| format!("bad every_s {p:?}"))?,
+            None => DEFAULT_EVERY_S,
+        };
+        let keep_n = match parts.get(2) {
+            Some(p) => p
+                .parse::<usize>()
+                .map_err(|_| format!("bad keep_n {p:?}"))?,
+            None => DEFAULT_KEEP_N,
+        };
+        if !every_s.is_finite() || every_s < 0.0 {
+            return Err(format!("every_s {every_s} must be finite and >= 0"));
+        }
+        if keep_n == 0 {
+            return Err("keep_n must be >= 1".to_string());
+        }
+        Ok(CkptSpec {
+            dir: PathBuf::from(parts[0]),
+            every_s,
+            keep_n,
+        })
+    }
+}
+
+// ---------------------------------------------------------- checkpointer
+
+/// One committed-or-loadable checkpoint's payload.
+#[derive(Debug, Clone)]
+pub struct LoadedCkpt {
+    pub seq: u64,
+    pub path: PathBuf,
+    pub config: Json,
+    pub state: Json,
+    pub backend_bin: Option<Vec<u8>>,
+}
+
+/// Writes checkpoints under `spec.dir` with the atomic
+/// stage→fsync→rename protocol and prunes beyond `keep_n`.
+#[derive(Debug)]
+pub struct Checkpointer {
+    spec: CkptSpec,
+    next_seq: u64,
+}
+
+impl Checkpointer {
+    /// Open (creating the directory if needed).  `next_seq` continues
+    /// past any checkpoints already present, so a resumed run never
+    /// overwrites the checkpoint it restored from.
+    pub fn open(spec: CkptSpec) -> Result<Checkpointer, String> {
+        fs::create_dir_all(&spec.dir)
+            .map_err(|e| format!("checkpoint dir {}: {e}", spec.dir.display()))?;
+        let next_seq = list_seqs(&spec.dir)
+            .into_iter()
+            .max()
+            .map(|s| s + 1)
+            .unwrap_or(0);
+        Ok(Checkpointer { spec, next_seq })
+    }
+
+    pub fn spec(&self) -> &CkptSpec {
+        &self.spec
+    }
+
+    /// Commit one checkpoint: `config.json` + `state.json` (+ optional
+    /// `backend.bin`).  Returns the committed directory.
+    pub fn commit(
+        &mut self,
+        config: &Json,
+        state: &Json,
+        backend_bin: Option<&[u8]>,
+    ) -> Result<PathBuf, String> {
+        let seq = self.next_seq;
+        let mut files: Vec<(&str, Vec<u8>)> = vec![
+            ("config.json", config.to_pretty().into_bytes()),
+            ("state.json", state.to_pretty().into_bytes()),
+        ];
+        if let Some(bin) = backend_bin {
+            files.push(("backend.bin", bin.to_vec()));
+        }
+
+        let staging = self
+            .spec
+            .dir
+            .join(format!(".staging-{}-{}", std::process::id(), seq));
+        let _ = fs::remove_dir_all(&staging);
+        fs::create_dir_all(&staging).map_err(|e| format!("stage {}: {e}", staging.display()))?;
+
+        let mut manifest = Json::obj();
+        manifest.set("format", Json::Str(CKPT_FORMAT.to_string()));
+        manifest.set("version", Json::Num(CKPT_VERSION as f64));
+        manifest.set("seq", enc_u64(seq));
+        let mut entries = Json::obj();
+        for (name, bytes) in &files {
+            write_synced(&staging.join(name), bytes)?;
+            let mut e = Json::obj();
+            e.set("fnv1a64", Json::Str(format!("{:016x}", fnv1a64(bytes))));
+            e.set("bytes", Json::Num(bytes.len() as f64));
+            entries.set(name, e);
+        }
+        manifest.set("files", entries);
+        // Manifest last: its presence marks the payload set complete.
+        write_synced(&staging.join("manifest.json"), manifest.to_pretty().as_bytes())?;
+
+        let dest = self.spec.dir.join(format!("ckpt-{seq:08}"));
+        fs::rename(&staging, &dest).map_err(|e| format!("commit {}: {e}", dest.display()))?;
+        let _ = File::open(&self.spec.dir).and_then(|d| d.sync_all());
+        self.next_seq += 1;
+        self.prune();
+        Ok(dest)
+    }
+
+    fn prune(&self) {
+        let mut seqs = list_seqs(&self.spec.dir);
+        seqs.sort_unstable();
+        while seqs.len() > self.spec.keep_n {
+            let seq = seqs.remove(0);
+            let _ = fs::remove_dir_all(self.spec.dir.join(format!("ckpt-{seq:08}")));
+        }
+    }
+}
+
+fn write_synced(path: &Path, bytes: &[u8]) -> Result<(), String> {
+    let mut f =
+        File::create(path).map_err(|e| format!("write {}: {e}", path.display()))?;
+    f.write_all(bytes)
+        .and_then(|_| f.sync_all())
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+fn list_seqs(dir: &Path) -> Vec<u64> {
+    let Ok(rd) = fs::read_dir(dir) else {
+        return vec![];
+    };
+    rd.filter_map(|e| e.ok())
+        .filter_map(|e| {
+            e.file_name()
+                .to_str()
+                .and_then(|n| n.strip_prefix("ckpt-").map(str::to_string))
+                .and_then(|s| s.parse::<u64>().ok())
+        })
+        .collect()
+}
+
+/// Validate one committed checkpoint directory: manifest parses, format
+/// and version match, every named file is present with matching length
+/// and checksum.
+pub fn validate_ckpt(path: &Path) -> Result<LoadedCkpt, String> {
+    let manifest_path = path.join("manifest.json");
+    let text = fs::read_to_string(&manifest_path)
+        .map_err(|e| format!("{}: {e}", manifest_path.display()))?;
+    let manifest =
+        Json::parse(&text).map_err(|e| format!("{}: {e}", manifest_path.display()))?;
+    if manifest.get("format").as_str() != Some(CKPT_FORMAT) {
+        return Err(format!("{}: not a {CKPT_FORMAT} manifest", path.display()));
+    }
+    let version = manifest.get("version").as_i64().unwrap_or(-1);
+    if version != CKPT_VERSION {
+        return Err(format!(
+            "{}: format version {version} (this build reads {CKPT_VERSION})",
+            path.display()
+        ));
+    }
+    let seq = dec_u64(manifest.get("seq")).map_err(|e| format!("{}: {e}", path.display()))?;
+    let files = manifest
+        .get("files")
+        .as_obj()
+        .ok_or_else(|| format!("{}: manifest has no files map", path.display()))?;
+
+    let mut config = None;
+    let mut state = None;
+    let mut backend_bin = None;
+    for (name, entry) in files {
+        let fpath = path.join(name);
+        let mut bytes = Vec::new();
+        File::open(&fpath)
+            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .map_err(|e| format!("{}: {e}", fpath.display()))?;
+        let want_len = entry.get("bytes").as_usize().unwrap_or(usize::MAX);
+        if bytes.len() != want_len {
+            return Err(format!(
+                "{}: {} bytes on disk, manifest says {want_len} (torn write?)",
+                fpath.display(),
+                bytes.len()
+            ));
+        }
+        let want_sum = entry.get("fnv1a64").as_str().unwrap_or("");
+        let got_sum = format!("{:016x}", fnv1a64(&bytes));
+        if got_sum != want_sum {
+            return Err(format!(
+                "{}: checksum {got_sum} != manifest {want_sum}",
+                fpath.display()
+            ));
+        }
+        match name.as_str() {
+            "config.json" => {
+                config = Some(
+                    Json::parse(std::str::from_utf8(&bytes).map_err(|e| e.to_string())?)
+                        .map_err(|e| format!("{}: {e}", fpath.display()))?,
+                )
+            }
+            "state.json" => {
+                state = Some(
+                    Json::parse(std::str::from_utf8(&bytes).map_err(|e| e.to_string())?)
+                        .map_err(|e| format!("{}: {e}", fpath.display()))?,
+                )
+            }
+            "backend.bin" => backend_bin = Some(bytes),
+            other => return Err(format!("{}: unknown payload {other}", path.display())),
+        }
+    }
+    Ok(LoadedCkpt {
+        seq,
+        path: path.to_path_buf(),
+        config: config.ok_or_else(|| format!("{}: missing config.json", path.display()))?,
+        state: state.ok_or_else(|| format!("{}: missing state.json", path.display()))?,
+        backend_bin,
+    })
+}
+
+/// Whether `dir` holds any committed checkpoint at all (valid or not).
+/// Restart-style callers ([`crate::fleet`]) use this to distinguish
+/// "fresh start" (no checkpoints — just begin) from "resume" (some
+/// exist — [`recover_latest`] must succeed or the run refuses to start,
+/// rather than silently restarting from zero over a corrupt history).
+pub fn has_ckpts(dir: &Path) -> bool {
+    !list_seqs(dir).is_empty()
+}
+
+/// Load the newest *valid* checkpoint under `dir`, scanning past torn,
+/// corrupt, or version-mismatched ones (each skip is reported on
+/// stderr so operators see why a rollback happened).  Errors only when
+/// no checkpoint validates.
+pub fn recover_latest(dir: &Path) -> Result<LoadedCkpt, String> {
+    let mut seqs = list_seqs(dir);
+    if seqs.is_empty() {
+        return Err(format!("no checkpoints under {}", dir.display()));
+    }
+    seqs.sort_unstable_by(|a, b| b.cmp(a));
+    let mut failures = Vec::new();
+    for seq in seqs {
+        let path = dir.join(format!("ckpt-{seq:08}"));
+        match validate_ckpt(&path) {
+            Ok(c) => {
+                for f in &failures {
+                    eprintln!("ckpt: skipped invalid checkpoint: {f}");
+                }
+                return Ok(c);
+            }
+            Err(e) => failures.push(e),
+        }
+    }
+    Err(format!(
+        "no valid checkpoint under {}:\n  {}",
+        dir.display(),
+        failures.join("\n  ")
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_codec_is_bit_exact() {
+        for x in [
+            0.0,
+            -0.0,
+            1.5,
+            -3.25e-300,
+            1.0 / 3.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::MIN_POSITIVE,
+            9.007199254740993e15,
+        ] {
+            let j = enc_f64(x);
+            let round = Json::parse(&j.to_string()).unwrap();
+            let back = dec_f64(&round).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn int_codecs_are_exact_at_the_edges() {
+        for x in [0u64, 1, (1 << 53) - 1, 1 << 53, u64::MAX] {
+            let j = enc_u64(x);
+            let round = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(dec_u64(&round).unwrap(), x);
+        }
+        for x in [0u128, 7, u128::MAX] {
+            let j = enc_u128(x);
+            let round = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(dec_u128(&round).unwrap(), x);
+        }
+    }
+
+    #[test]
+    fn binary_sidecar_round_trips_and_checks_bounds() {
+        let mut buf = bin_new();
+        bin_put_u64(&mut buf, 42);
+        bin_put_f32s(&mut buf, &[1.5, -0.0, f32::MIN_POSITIVE]);
+        bin_put_f32s(&mut buf, &[]);
+        let mut r = BinReader::new(&buf).unwrap();
+        assert_eq!(r.u64().unwrap(), 42);
+        let xs = r.f32s().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[0].to_bits(), 1.5f32.to_bits());
+        assert_eq!(xs[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(xs[2].to_bits(), f32::MIN_POSITIVE.to_bits());
+        assert!(r.f32s().unwrap().is_empty());
+        r.finish().unwrap();
+        // Bad magic, truncation, trailing garbage all error.
+        assert!(BinReader::new(b"NOTMAGIC").is_err());
+        let mut r = BinReader::new(&buf[..buf.len() - 2]).unwrap();
+        assert_eq!(r.u64().unwrap(), 42);
+        let _ = r.f32s().unwrap();
+        assert!(r.f32s().is_err());
+        let mut r = BinReader::new(&buf).unwrap();
+        let _ = r.u64().unwrap();
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        let s = CkptSpec::parse("/tmp/ck:30:5").unwrap();
+        assert_eq!(s.every_s, 30.0);
+        assert_eq!(s.keep_n, 5);
+        let d = CkptSpec::parse("ckdir").unwrap();
+        assert_eq!(d.every_s, DEFAULT_EVERY_S);
+        assert_eq!(d.keep_n, DEFAULT_KEEP_N);
+        for bad in ["", ":30", "d:x", "d:30:0", "d:30:x", "d:-1", "d:nan", "d:1:2:3"] {
+            assert!(CkptSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    fn tmp_ckpt_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hbatch_ckpt_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn commit_load_round_trip_and_prune() {
+        let dir = tmp_ckpt_dir("rt");
+        let spec = CkptSpec {
+            dir: dir.clone(),
+            every_s: 0.0,
+            keep_n: 2,
+        };
+        let mut ck = Checkpointer::open(spec).unwrap();
+        let mut cfg = Json::obj();
+        cfg.set("workload", Json::Str("mnist".into()));
+        for i in 0..4u64 {
+            let mut st = Json::obj();
+            st.set("t", enc_f64(1.0 / 3.0 * i as f64));
+            ck.commit(&cfg, &st, (i == 3).then_some(&[1u8, 2, 3][..])).unwrap();
+        }
+        // keep_n=2: only seqs 2 and 3 survive.
+        let mut seqs = list_seqs(&dir);
+        seqs.sort_unstable();
+        assert_eq!(seqs, vec![2, 3]);
+        let loaded = recover_latest(&dir).unwrap();
+        assert_eq!(loaded.seq, 3);
+        assert_eq!(loaded.config.get("workload").as_str(), Some("mnist"));
+        assert_eq!(
+            dec_f64(loaded.state.get("t")).unwrap().to_bits(),
+            (1.0f64).to_bits()
+        );
+        assert_eq!(loaded.backend_bin.as_deref(), Some(&[1u8, 2, 3][..]));
+        // A fresh Checkpointer continues the sequence.
+        let ck2 = Checkpointer::open(CkptSpec {
+            dir: dir.clone(),
+            every_s: 0.0,
+            keep_n: 2,
+        })
+        .unwrap();
+        assert_eq!(ck2.next_seq, 4);
+    }
+
+    #[test]
+    fn torn_newest_falls_back_to_previous_valid() {
+        let dir = tmp_ckpt_dir("torn");
+        let mut ck = Checkpointer::open(CkptSpec {
+            dir: dir.clone(),
+            every_s: 0.0,
+            keep_n: 3,
+        })
+        .unwrap();
+        let cfg = Json::obj();
+        for i in 0..2u64 {
+            let mut st = Json::obj();
+            st.set("seq", enc_u64(i));
+            ck.commit(&cfg, &st, None).unwrap();
+        }
+        // Truncate the newest checkpoint's state file mid-byte.
+        let newest_state = dir.join("ckpt-00000001/state.json");
+        let full = fs::read(&newest_state).unwrap();
+        fs::write(&newest_state, &full[..full.len() / 2]).unwrap();
+        let loaded = recover_latest(&dir).unwrap();
+        assert_eq!(loaded.seq, 0);
+        assert_eq!(dec_u64(loaded.state.get("seq")).unwrap(), 0);
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let dir = tmp_ckpt_dir("ver");
+        let mut ck = Checkpointer::open(CkptSpec {
+            dir: dir.clone(),
+            every_s: 0.0,
+            keep_n: 3,
+        })
+        .unwrap();
+        ck.commit(&Json::obj(), &Json::obj(), None).unwrap();
+        // Rewrite the manifest claiming a future version (checksums
+        // intact otherwise).
+        let mpath = dir.join("ckpt-00000000/manifest.json");
+        let text = fs::read_to_string(&mpath).unwrap();
+        let mut m = Json::parse(&text).unwrap();
+        m.set("version", Json::Num(99.0));
+        fs::write(&mpath, m.to_pretty()).unwrap();
+        let err = recover_latest(&dir).unwrap_err();
+        assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn missing_dir_and_empty_dir_error_cleanly() {
+        let dir = tmp_ckpt_dir("empty");
+        assert!(recover_latest(&dir).is_err());
+        fs::create_dir_all(&dir).unwrap();
+        assert!(recover_latest(&dir).is_err());
+    }
+}

@@ -261,6 +261,53 @@ impl Smoother {
         self.sum = 0.0;
         self.n = 0;
     }
+
+    /// Checkpoint snapshot: everything but the config knobs (`alpha`,
+    /// `drift_reset`), which the restorer re-derives from the run
+    /// config.  The 5-sample ring is persisted in place so the
+    /// `(n - 1) % 5` write cursor lands exactly where it would have.
+    fn snapshot(&self) -> crate::util::json::Json {
+        use crate::ckpt::{enc_f64, enc_f64_slice, enc_opt_f64};
+        use crate::util::json::Json;
+        let (ev, ec) = self.ewma.state();
+        let mut j = Json::obj();
+        j.set("ewma_value", enc_opt_f64(ev));
+        j.set("ewma_count", Json::Num(ec as f64));
+        j.set("sum", enc_f64(self.sum));
+        j.set("n", Json::Num(self.n as f64));
+        j.set("recent", enc_f64_slice(&self.recent));
+        j.set("recent_n", Json::Num(self.recent_n as f64));
+        j.set("drifted", Json::Bool(self.drifted));
+        j
+    }
+
+    /// Rebuild from [`Smoother::snapshot`] under the given config knobs.
+    fn restore(
+        alpha: f64,
+        drift_reset: f64,
+        j: &crate::util::json::Json,
+    ) -> Result<Smoother, String> {
+        use crate::ckpt::{dec_f64, dec_f64_vec, dec_opt_f64, dec_usize};
+        let mut s = Smoother::new(alpha, drift_reset);
+        let (ev, ec) = (
+            dec_opt_f64(j.get("ewma_value"))?,
+            dec_usize(j.get("ewma_count"))?,
+        );
+        s.ewma.set_state(ev, ec);
+        s.sum = dec_f64(j.get("sum"))?;
+        s.n = dec_usize(j.get("n"))?;
+        let recent = dec_f64_vec(j.get("recent"))?;
+        if recent.len() != 5 {
+            return Err(format!("smoother ring has {} entries, want 5", recent.len()));
+        }
+        s.recent.copy_from_slice(&recent);
+        s.recent_n = dec_usize(j.get("recent_n"))?;
+        s.drifted = j
+            .get("drifted")
+            .as_bool()
+            .ok_or("smoother drifted flag missing")?;
+        Ok(s)
+    }
 }
 
 /// Per-worker controller state.
@@ -710,6 +757,85 @@ impl DynamicBatcher {
                 w.batch = 0.0;
             }
         }
+    }
+
+    // ----------------------------------------------------- checkpointing
+
+    /// Checkpoint snapshot (DESIGN.md §15): the full mutable state —
+    /// per-worker batches/bounds/knee memory/smoothers plus the global
+    /// counters.  The `ControllerCfg` is *not* persisted here; it is
+    /// part of the run config the restorer rebuilds from.
+    pub fn snapshot(&self) -> crate::util::json::Json {
+        use crate::ckpt::enc_f64;
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        j.set("global_batch", enc_f64(self.global_batch));
+        j.set("adjustments", Json::Num(self.adjustments as f64));
+        j.set("backoff_mult", Json::Num(self.backoff_mult as f64));
+        j.set(
+            "workers",
+            Json::Arr(
+                self.workers
+                    .iter()
+                    .map(|w| {
+                        let mut o = Json::obj();
+                        o.set("batch", enc_f64(w.batch));
+                        o.set("b_max", enc_f64(w.b_max));
+                        o.set(
+                            "last_point",
+                            match w.last_point {
+                                Some((b, x)) => Json::Arr(vec![enc_f64(b), enc_f64(x)]),
+                                None => Json::Null,
+                            },
+                        );
+                        o.set("cap_age", Json::Num(w.cap_age as f64));
+                        o.set("active", Json::Bool(w.active));
+                        o.set("ewma", w.ewma.snapshot());
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    /// Rebuild from a [`DynamicBatcher::snapshot`] under `cfg` (which
+    /// must be the same config the run started with — it comes from the
+    /// checkpoint's config echo).
+    pub fn restore(
+        cfg: ControllerCfg,
+        j: &crate::util::json::Json,
+    ) -> Result<DynamicBatcher, String> {
+        use crate::ckpt::{dec_f64, dec_usize};
+        let arr = j
+            .get("workers")
+            .as_arr()
+            .ok_or("controller snapshot has no workers array")?;
+        let mut workers = Vec::with_capacity(arr.len());
+        for w in arr {
+            let last_point = match w.get("last_point") {
+                crate::util::json::Json::Null => None,
+                lp => Some((dec_f64(lp.idx(0))?, dec_f64(lp.idx(1))?)),
+            };
+            workers.push(WorkerState {
+                batch: dec_f64(w.get("batch"))?,
+                ewma: Smoother::restore(cfg.ewma_alpha, cfg.drift_reset, w.get("ewma"))?,
+                b_max: dec_f64(w.get("b_max"))?,
+                last_point,
+                cap_age: dec_usize(w.get("cap_age"))?,
+                active: w.get("active").as_bool().ok_or("worker active flag missing")?,
+            });
+        }
+        if workers.is_empty() {
+            return Err("controller snapshot has zero workers".to_string());
+        }
+        Ok(DynamicBatcher {
+            global_batch: dec_f64(j.get("global_batch"))?,
+            adjustments: dec_usize(j.get("adjustments"))?,
+            backoff_mult: dec_usize(j.get("backoff_mult"))?,
+            workers,
+            cfg,
+        })
     }
 }
 
@@ -1319,5 +1445,43 @@ mod tests {
         let mut p = vec![10.0, 10.0];
         water_fill(&mut p, 4.0, 8.0, &[100.0, 100.0]);
         assert_eq!(p, vec![8.0, 8.0]);
+    }
+
+    #[test]
+    fn snapshot_restore_replays_bitwise() {
+        // Checkpoint mid-flight (after observations, an adjustment, and
+        // churn), restore through the JSON text round-trip, then drive
+        // both controllers identically: every subsequent decision and
+        // batch must match to the bit.
+        let cfg = ControllerCfg {
+            min_obs: 2,
+            ..ControllerCfg::default()
+        };
+        let mut a = DynamicBatcher::new(cfg.clone(), &[64.0, 64.0, 64.0]);
+        feed(&mut a, &[2.0, 1.0, 0.7], 2);
+        a.maybe_adjust();
+        a.retire(2);
+        a.observe(0, 1.9);
+        a.observe(1, 1.1);
+        let text = a.snapshot().to_string();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let mut b = DynamicBatcher::restore(cfg, &j).unwrap();
+        assert_eq!(a.batches(), b.batches());
+        for round in 0..6 {
+            if round == 2 {
+                a.admit(2);
+                b.admit(2);
+            }
+            for (k, t) in [(0usize, 2.1), (1, 0.9)] {
+                a.observe(k, t);
+                b.observe(k, t);
+            }
+            assert_eq!(a.maybe_adjust(), b.maybe_adjust(), "round {round}");
+            let (ba, bb) = (a.batches(), b.batches());
+            for (x, y) in ba.iter().zip(&bb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "round {round}");
+            }
+        }
+        assert_eq!(a.adjustments(), b.adjustments());
     }
 }

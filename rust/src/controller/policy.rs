@@ -51,6 +51,11 @@ pub trait BatchPolicy {
 
     /// Short policy name for logs/labels.
     fn label(&self) -> &'static str;
+
+    /// Checkpoint snapshot of the policy's full mutable state
+    /// (DESIGN.md §15).  Restore goes through the concrete type's
+    /// `restore` constructor, keyed on [`BatchPolicy::label`].
+    fn snapshot(&self) -> crate::util::json::Json;
 }
 
 impl BatchPolicy for DynamicBatcher {
@@ -86,6 +91,9 @@ impl BatchPolicy for DynamicBatcher {
     }
     fn label(&self) -> &'static str {
         "dynamic"
+    }
+    fn snapshot(&self) -> crate::util::json::Json {
+        DynamicBatcher::snapshot(self)
     }
 }
 
@@ -140,6 +148,31 @@ impl LinFit {
         }
         Some((self.sum_t / self.sum_b, 0.0))
     }
+
+    fn snapshot(&self) -> crate::util::json::Json {
+        use crate::ckpt::enc_f64;
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        j.set("n", enc_f64(self.n));
+        j.set("sum_b", enc_f64(self.sum_b));
+        j.set("sum_t", enc_f64(self.sum_t));
+        j.set("sum_bb", enc_f64(self.sum_bb));
+        j.set("sum_bt", enc_f64(self.sum_bt));
+        j.set("interval", Json::Num(self.interval as f64));
+        j
+    }
+
+    fn restore(j: &crate::util::json::Json) -> Result<LinFit, String> {
+        use crate::ckpt::{dec_f64, dec_usize};
+        Ok(LinFit {
+            n: dec_f64(j.get("n"))?,
+            sum_b: dec_f64(j.get("sum_b"))?,
+            sum_t: dec_f64(j.get("sum_t"))?,
+            sum_bb: dec_f64(j.get("sum_bb"))?,
+            sum_bt: dec_f64(j.get("sum_bt"))?,
+            interval: dec_usize(j.get("interval"))?,
+        })
+    }
 }
 
 /// One-shot optimal allocator (Nie et al., PAPERS.md; DESIGN.md §14).
@@ -192,6 +225,34 @@ impl OptimalBatcher {
         for f in &mut self.fits {
             f.interval = 0;
         }
+    }
+
+    /// Rebuild from a [`BatchPolicy::snapshot`] taken on this type.
+    pub fn restore(
+        cfg: ControllerCfg,
+        j: &crate::util::json::Json,
+    ) -> Result<OptimalBatcher, String> {
+        use crate::ckpt::dec_usize;
+        let inner = DynamicBatcher::restore(cfg, j.get("inner"))?;
+        let fits = j
+            .get("fits")
+            .as_arr()
+            .ok_or("optimal snapshot has no fits array")?
+            .iter()
+            .map(LinFit::restore)
+            .collect::<Result<Vec<_>, _>>()?;
+        if fits.len() != inner.k() {
+            return Err(format!(
+                "optimal snapshot: {} fits for {} workers",
+                fits.len(),
+                inner.k()
+            ));
+        }
+        Ok(OptimalBatcher {
+            inner,
+            fits,
+            adjustments: dec_usize(j.get("adjustments"))?,
+        })
     }
 }
 
@@ -309,6 +370,18 @@ impl BatchPolicy for OptimalBatcher {
 
     fn label(&self) -> &'static str {
         "optimal"
+    }
+
+    fn snapshot(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        j.set("inner", self.inner.snapshot());
+        j.set(
+            "fits",
+            Json::Arr(self.fits.iter().map(|f| f.snapshot()).collect()),
+        );
+        j.set("adjustments", Json::Num(self.adjustments as f64));
+        j
     }
 }
 

@@ -217,6 +217,36 @@ impl RlBatcher {
             *n = 0;
         }
     }
+
+    /// Rebuild from a [`BatchPolicy::snapshot`] under `cfg` (from the
+    /// checkpoint's config echo).  The Q-table travels *inside* the
+    /// snapshot, so restore never re-reads the table file.
+    pub fn restore(cfg: ControllerCfg, j: &Json) -> Result<RlBatcher, String> {
+        use crate::ckpt::dec_usize;
+        let inner = DynamicBatcher::restore(cfg, j.get("inner"))?;
+        let table = RlTable::from_json(j.get("table"))?;
+        let ivals = j
+            .get("interval")
+            .as_arr()
+            .ok_or("rl snapshot has no interval array")?;
+        if ivals.len() != inner.k() {
+            return Err(format!(
+                "rl snapshot: {} interval counters for {} workers",
+                ivals.len(),
+                inner.k()
+            ));
+        }
+        let interval = ivals
+            .iter()
+            .map(dec_usize)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(RlBatcher {
+            inner,
+            table,
+            interval,
+            adjustments: dec_usize(j.get("adjustments"))?,
+        })
+    }
 }
 
 impl BatchPolicy for RlBatcher {
@@ -319,6 +349,18 @@ impl BatchPolicy for RlBatcher {
 
     fn label(&self) -> &'static str {
         "rl"
+    }
+
+    fn snapshot(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("inner", self.inner.snapshot());
+        j.set("table", self.table.to_json());
+        j.set(
+            "interval",
+            Json::Arr(self.interval.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        j.set("adjustments", Json::Num(self.adjustments as f64));
+        j
     }
 }
 
@@ -528,6 +570,37 @@ mod tests {
             ctl.observe(1, 5.0);
         }
         assert_eq!(ctl.maybe_adjust(), Adjustment::Hold);
+    }
+
+    #[test]
+    fn snapshot_restore_replays_bitwise() {
+        let cfg = ControllerCfg {
+            min_obs: 2,
+            ..ControllerCfg::default()
+        };
+        let mut a = RlBatcher::new(cfg.clone(), &[64.0, 64.0], RlTable::builtin());
+        // Mid-interval state: one observation each, counters at 1.
+        a.observe(0, 9.0);
+        a.observe(1, 3.0);
+        let text = a.snapshot().to_pretty();
+        let j = Json::parse(&text).unwrap();
+        let mut b = RlBatcher::restore(cfg, &j).unwrap();
+        for round in 0..4 {
+            let (ts, tf) = if round < 2 { (9.0, 3.0) } else { (5.0, 5.0) };
+            a.observe(0, ts);
+            a.observe(1, tf);
+            b.observe(0, ts);
+            b.observe(1, tf);
+            assert_eq!(a.maybe_adjust(), b.maybe_adjust(), "round {round}");
+            for k in 0..2 {
+                assert_eq!(
+                    a.inner.batch(k).to_bits(),
+                    b.inner.batch(k).to_bits(),
+                    "worker {k} batch diverged at round {round}"
+                );
+            }
+        }
+        assert_eq!(a.adjustments, b.adjustments);
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! backend's iteration-noise stream.
 
 use crate::session::WorkerOutcome;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Seed perturbation for the autoscaler's spawn-failure/backoff-jitter
@@ -148,6 +149,25 @@ impl FaultPlan {
             plan: self.clone(),
         }
     }
+
+    /// Re-serialize as the `--faults` spec shape ([`Self::parse`]'s
+    /// inverse — `f64` Display is shortest-roundtrip, so
+    /// `parse(spec()) == self`).  Used by the checkpoint config echo.
+    pub fn spec(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::Crash => format!("crash:{}@{}", e.worker, e.time),
+                FaultKind::Stall { stall_s } => {
+                    format!("stall:{}@{}:{}", e.worker, e.time, stall_s)
+                }
+                FaultKind::Slow { factor, dur_s } => {
+                    format!("slow:{}@{}:{}:{}", e.worker, e.time, factor, dur_s)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
 }
 
 fn validate_event(ev: &FaultEvent) -> Result<(), String> {
@@ -243,6 +263,74 @@ impl FaultState {
             }
         }
     }
+
+    /// Checkpoint snapshot (DESIGN.md §15): only the one-shot stall
+    /// consumption overlay — the plan itself is run config and is
+    /// re-applied via [`crate::session::Backend::set_fault_plan`].
+    pub fn snapshot(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "stall_done",
+            Json::Arr(self.stall_done.iter().map(|&b| Json::Bool(b)).collect()),
+        );
+        j
+    }
+
+    /// Overlay a [`FaultState::snapshot`] onto a freshly-built state
+    /// (the plan must already match — lengths are checked).
+    pub fn restore(&mut self, j: &Json) -> Result<(), String> {
+        let arr = j
+            .get("stall_done")
+            .as_arr()
+            .ok_or("fault snapshot has no stall_done array")?;
+        if arr.len() != self.stall_done.len() {
+            return Err(format!(
+                "fault snapshot: {} stall flags for a {}-event plan",
+                arr.len(),
+                self.stall_done.len()
+            ));
+        }
+        for (i, v) in arr.iter().enumerate() {
+            self.stall_done[i] = v
+                .as_bool()
+                .ok_or(format!("fault snapshot: stall_done[{i}] is not a bool"))?;
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------- coordinator crash
+
+/// Coordinator-crash scenario (DESIGN.md §15): the *coordinator* — not
+/// a worker — dies at virtual time `at_s`, taking every in-memory
+/// structure with it; recovery restarts the binary and resumes from the
+/// latest durable checkpoint.  Worker faults above perturb outcomes
+/// inside a live run; this one truncates the run itself, so it is
+/// enforced by the checkpointed session loop
+/// ([`crate::session::Session::run_checkpointed`]) stopping once the
+/// virtual clock passes `at_s`, and exercised end-to-end by the
+/// crash→resume tests and the `hbatch resume` CLI path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoordinatorCrash {
+    /// Virtual time at which the coordinator dies.
+    pub at_s: f64,
+}
+
+impl CoordinatorCrash {
+    /// Parse the `--crash-at <t>` spec: a single finite, non-negative
+    /// virtual time in seconds.
+    pub fn parse(s: &str) -> Result<CoordinatorCrash, String> {
+        let at_s: f64 = s
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad crash time {s:?}: want a number of seconds"))?;
+        if !at_s.is_finite() || at_s < 0.0 {
+            return Err(format!(
+                "crash time {at_s} must be finite and non-negative"
+            ));
+        }
+        Ok(CoordinatorCrash { at_s })
+    }
 }
 
 // ----------------------------------------------------------- detector
@@ -334,6 +422,17 @@ impl DetectorCfg {
             ));
         }
         Ok(())
+    }
+
+    /// Re-serialize as the `--detect` spec shape ([`Self::parse`]'s
+    /// inverse).  Used by the checkpoint config echo.
+    pub fn spec(&self) -> String {
+        format!(
+            "grace={},floor={},late={}",
+            self.grace,
+            self.floor_s,
+            self.late.label()
+        )
     }
 }
 
@@ -441,6 +540,24 @@ impl AutoscalerCfg {
             return Err(format!("throughput trigger {} out of [0, 1)", self.tput));
         }
         Ok(())
+    }
+
+    /// Re-serialize as the `--autoscale` spec shape ([`Self::parse`]'s
+    /// inverse).  Used by the checkpoint config echo.
+    pub fn spec(&self) -> String {
+        format!(
+            "pool={},cold={},floor={},backoff={},cap={},jitter={},fail={},retries={},ride={},tput={}",
+            self.pool,
+            self.cold_s,
+            self.floor,
+            self.backoff_s,
+            self.cap_s,
+            self.jitter,
+            self.fail_p,
+            self.retries,
+            if self.ride_out { 1 } else { 0 },
+            self.tput
+        )
     }
 }
 
@@ -600,6 +717,65 @@ impl Autoscaler {
         best.map(|i| self.pending.swap_remove(i))
     }
 
+    /// Checkpoint snapshot (DESIGN.md §15): the full mutable state,
+    /// including the rng stream position so post-resume jitter draws
+    /// continue the original sequence.  `pending` keeps its insertion
+    /// order — [`Autoscaler::take_ready`] uses `swap_remove`, so the
+    /// order is bitwise-significant.  The `AutoscalerCfg` is run config
+    /// and travels in the checkpoint's config echo instead.
+    pub fn snapshot(&self) -> Json {
+        use crate::ckpt::{enc_f64, enc_opt_f64, enc_u128};
+        let (state, inc, spare) = self.rng.state_parts();
+        let mut j = Json::obj();
+        j.set("floor", Json::Num(self.floor as f64));
+        j.set("pool_left", Json::Num(self.pool_left as f64));
+        j.set(
+            "pending",
+            Json::Arr(self.pending.iter().map(|&t| enc_f64(t)).collect()),
+        );
+        j.set("attempts", Json::Num(self.attempts as f64));
+        j.set("retry_at", enc_f64(self.retry_at));
+        j.set("gave_up", Json::Bool(self.gave_up));
+        j.set("best_tput", enc_f64(self.best_tput));
+        j.set("rng_state", enc_u128(state));
+        j.set("rng_inc", enc_u128(inc));
+        j.set("rng_spare", enc_opt_f64(spare));
+        j
+    }
+
+    /// Rebuild from an [`Autoscaler::snapshot`] under `cfg` (from the
+    /// checkpoint's config echo).
+    pub fn restore(cfg: AutoscalerCfg, j: &Json) -> Result<Autoscaler, String> {
+        use crate::ckpt::{dec_f64, dec_opt_f64, dec_u128, dec_usize};
+        let pending = j
+            .get("pending")
+            .as_arr()
+            .ok_or("autoscaler snapshot has no pending array")?
+            .iter()
+            .map(dec_f64)
+            .collect::<Result<Vec<_>, _>>()?;
+        let attempts = dec_usize(j.get("attempts"))? as u32;
+        let rng = Rng::from_parts(
+            dec_u128(j.get("rng_state"))?,
+            dec_u128(j.get("rng_inc"))?,
+            dec_opt_f64(j.get("rng_spare"))?,
+        );
+        Ok(Autoscaler {
+            cfg,
+            floor: dec_usize(j.get("floor"))?,
+            pool_left: dec_usize(j.get("pool_left"))?,
+            pending,
+            attempts,
+            retry_at: dec_f64(j.get("retry_at"))?,
+            gave_up: j
+                .get("gave_up")
+                .as_bool()
+                .ok_or("autoscaler snapshot: gave_up is not a bool")?,
+            best_tput: dec_f64(j.get("best_tput"))?,
+            rng,
+        })
+    }
+
     /// Next time the autoscaler needs the event loop's attention: a
     /// pending replacement finishing cold start, or a backed-off retry
     /// while the fleet is below target.  None = nothing scheduled.
@@ -668,6 +844,24 @@ mod tests {
         assert_eq!(p.crash_time(1), Some(40.0));
         assert_eq!(p.crash_time(0), None);
         assert_eq!(p.max_worker(), Some(2));
+    }
+
+    #[test]
+    fn spec_strings_roundtrip_through_parse() {
+        let p = FaultPlan::parse("stall:2@10:6,crash:1@40,slow:0@5:2.5:30").unwrap();
+        assert_eq!(FaultPlan::parse(&p.spec()).unwrap(), p);
+
+        let d = DetectorCfg::parse("grace=3.5,floor=0.25,late=drop").unwrap();
+        assert_eq!(DetectorCfg::parse(&d.spec()).unwrap(), d);
+
+        let a = AutoscalerCfg::parse(
+            "pool=2,cold=30,floor=3,backoff=5,cap=300,jitter=0.2,fail=0.1,retries=4,ride,tput=0.5",
+        )
+        .unwrap();
+        assert_eq!(AutoscalerCfg::parse(&a.spec()).unwrap(), a);
+        // Defaults roundtrip too.
+        let a0 = AutoscalerCfg::default();
+        assert_eq!(AutoscalerCfg::parse(&a0.spec()).unwrap(), a0);
     }
 
     #[test]
@@ -872,6 +1066,73 @@ mod tests {
         let a = Autoscaler::new(cfg, 3, 0);
         assert!(!a.wants_spawn(0, 100.0, None));
         assert_eq!(a.next_event(0, None), None);
+    }
+
+    #[test]
+    fn autoscaler_snapshot_restore_resumes_jitter_stream_bitwise() {
+        let cfg = AutoscalerCfg::parse(
+            "pool=4,cold=1,backoff=10,cap=100,fail=0.5,retries=20,jitter=0.5",
+        )
+        .unwrap();
+        let mut a = Autoscaler::new(cfg.clone(), 2, 99);
+        // Burn some of the rng stream and mutate every field.
+        a.observe_throughput(50.0);
+        for _ in 0..3 {
+            let _ = a.try_spawn(1.0);
+        }
+        let text = a.snapshot().to_pretty();
+        let j = Json::parse(&text).unwrap();
+        let mut b = Autoscaler::restore(cfg, &j).unwrap();
+        assert_eq!(a.floor(), b.floor());
+        assert_eq!(a.pool_left(), b.pool_left());
+        assert_eq!(a.pending_count(), b.pending_count());
+        assert_eq!(a.attempts(), b.attempts());
+        // The continued runs must agree bitwise, including jitter draws.
+        let mut now = 20.0;
+        for _ in 0..6 {
+            assert_eq!(
+                a.wants_spawn(0, now, Some(10.0)),
+                b.wants_spawn(0, now, Some(10.0))
+            );
+            let (ra, rb) = (a.try_spawn(now), b.try_spawn(now));
+            assert_eq!(ra, rb);
+            if let SpawnOutcome::Failed { retry_at } = ra {
+                now = retry_at;
+            }
+            if a.pool_left() == 0 || a.attempts() > 18 {
+                break;
+            }
+        }
+        assert_eq!(a.take_ready(now + 100.0), b.take_ready(now + 100.0));
+    }
+
+    #[test]
+    fn fault_state_snapshot_restores_stall_overlay() {
+        let p = FaultPlan::parse("stall:0@10:5,stall:1@20:5").unwrap();
+        let mut st = p.state();
+        let mut out = WorkerOutcome { work: 1.0, fixed: 0.0 };
+        st.perturb(0, 12.0, &mut out); // consume the first stall
+        let snap = st.snapshot();
+        let mut st2 = p.state();
+        st2.restore(&snap).unwrap();
+        // Consumed stall stays consumed; the other still fires.
+        let mut o = WorkerOutcome { work: 1.0, fixed: 0.0 };
+        st2.perturb(0, 13.0, &mut o);
+        assert_eq!(o.fixed, 0.0);
+        st2.perturb(1, 25.0, &mut o);
+        assert_eq!(o.fixed, 5.0);
+        // Length mismatch is rejected.
+        let other = FaultPlan::parse("stall:0@10:5").unwrap();
+        assert!(other.state().restore(&snap).is_err());
+    }
+
+    #[test]
+    fn coordinator_crash_parses_and_validates() {
+        assert_eq!(CoordinatorCrash::parse("42.5").unwrap().at_s, 42.5);
+        assert_eq!(CoordinatorCrash::parse(" 0 ").unwrap().at_s, 0.0);
+        for bad in ["", "x", "-1", "nan", "inf"] {
+            assert!(CoordinatorCrash::parse(bad).is_err(), "{bad:?}");
+        }
     }
 
     #[test]

@@ -41,8 +41,12 @@ pub use arbiter::{ArbiterPolicy, CapacityArbiter, JobDemand};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Error, Result};
 
+use crate::ckpt::{
+    self, dec_f64, dec_u64, enc_f64, enc_u64, recover_latest, Checkpointer, CkptSpec,
+    LoadedCkpt,
+};
 use crate::metrics::RunReport;
 use crate::session::{RunState, Session, SessionBuilder, SimBackend};
 use crate::trace::{MembershipEvent, MembershipKind};
@@ -107,6 +111,8 @@ pub struct FleetBuilder {
     policy: ArbiterPolicy,
     seed: u64,
     interleave: Option<bool>,
+    ckpt: Option<CkptSpec>,
+    crash_at: Option<f64>,
     jobs: Vec<JobSpec>,
 }
 
@@ -143,6 +149,25 @@ impl FleetBuilder {
         self
     }
 
+    /// Durable whole-fleet checkpointing (DESIGN.md §15).  Every commit
+    /// is one atomic fleet-level checkpoint whose state embeds each
+    /// job's full session snapshot keyed by job id — a crash can never
+    /// observe job A's state from a different instant than job B's.
+    /// Re-running the same fleet command with the same `--checkpoint`
+    /// dir resumes from the newest valid checkpoint (whole-fleet
+    /// restart).
+    pub fn checkpoint(mut self, spec: CkptSpec) -> Self {
+        self.ckpt = Some(spec);
+        self
+    }
+
+    /// Coordinator-crash injection: stop (without a final snapshot)
+    /// once the fleet clock passes `t`.  Requires [`Self::checkpoint`].
+    pub fn crash_at(mut self, t: f64) -> Self {
+        self.crash_at = Some(t);
+        self
+    }
+
     pub fn job(mut self, spec: JobSpec) -> Self {
         self.jobs.push(spec);
         self
@@ -166,6 +191,10 @@ impl FleetBuilder {
         }
         if let Some(s) = j.get("seed").as_usize() {
             f.seed = s as u64;
+        }
+        if let Some(c) = j.get("checkpoint").as_str() {
+            f.ckpt =
+                Some(CkptSpec::parse(c).map_err(|e| format!("bad checkpoint: {e}"))?);
         }
         let jobs = j
             .get("jobs")
@@ -235,10 +264,37 @@ impl FleetBuilder {
                  interleaved scheduler"
             ));
         }
+        if self.ckpt.is_some() && self.interleave == Some(false) {
+            return Err(
+                "checkpointed fleet requires the interleaved scheduler (snapshots are \
+                 taken on the merged clock)"
+                    .into(),
+            );
+        }
+        if self.crash_at.is_some() && self.ckpt.is_none() {
+            return Err(
+                "crash injection needs a checkpoint spec (there is nothing to recover \
+                 from otherwise)"
+                    .into(),
+            );
+        }
+        // The config echo rides in every checkpoint (and is what
+        // `resume == same command` verifies against); computing it here
+        // surfaces non-echoable jobs (e.g. in-memory traces) before any
+        // work starts.
+        let config = match self.ckpt {
+            Some(_) => Some(fleet_config_echo(
+                capacity, self.policy, self.seed, &self.jobs,
+            )?),
+            None => None,
+        };
         Ok(FleetScheduler {
             arbiter: CapacityArbiter::new(capacity, self.policy),
             seed: self.seed,
             interleave: self.interleave,
+            ckpt: self.ckpt,
+            crash_at: self.crash_at,
+            config,
             demand,
             jobs: self.jobs,
         })
@@ -253,9 +309,44 @@ pub struct FleetScheduler {
     arbiter: CapacityArbiter,
     seed: u64,
     interleave: Option<bool>,
+    ckpt: Option<CkptSpec>,
+    crash_at: Option<f64>,
+    /// Fleet config echo committed with every checkpoint (`Some` iff
+    /// `ckpt` is).
+    config: Option<Json>,
     /// Total demand (ranks + spawn pools) across jobs.
     demand: usize,
     jobs: Vec<JobSpec>,
+}
+
+/// The fleet-level config echo: enough to rebuild the exact same
+/// `FleetBuilder` (job session configs included), plus a `backend`
+/// discriminator matching the session-level convention.
+fn fleet_config_echo(
+    capacity: usize,
+    policy: ArbiterPolicy,
+    seed: u64,
+    jobs: &[JobSpec],
+) -> Result<Json, String> {
+    let mut j = Json::obj();
+    j.set("backend", Json::Str("fleet".into()));
+    j.set("capacity", Json::Num(capacity as f64));
+    j.set("policy", Json::Str(policy.label().into()));
+    j.set("seed", enc_u64(seed));
+    let mut arr = Vec::with_capacity(jobs.len());
+    for (i, spec) in jobs.iter().enumerate() {
+        let mut jj = spec
+            .builder
+            .to_json()
+            .map_err(|e| format!("jobs[{i}] ({}): {e}", spec.name))?;
+        jj.set("name", Json::Str(spec.name.clone()));
+        jj.set("weight", enc_f64(spec.weight));
+        jj.set("priority", Json::Num(spec.priority as f64));
+        jj.set("arrival", enc_f64(spec.arrival));
+        arr.push(jj);
+    }
+    j.set("jobs", Json::Arr(arr));
+    Ok(j)
 }
 
 /// Min-first heap key: (fleet time of the job's next activity, job id).
@@ -287,6 +378,12 @@ struct Active {
     rs: Option<RunState>,
     /// Fleet time of admission (job-local t = 0).
     offset: f64,
+    /// Fleet time of the job's one in-heap key.  Tracked so a restored
+    /// fleet rebuilds the heap with the *same* merge order the
+    /// snapshot had (an admission key sits at the admission time, not
+    /// at the job's first event — reconstructing from the event clock
+    /// alone would reorder shared-capacity decisions).
+    next_key: f64,
     /// Capacity slots currently charged to the job.
     granted: usize,
     /// Ranks the fleet revoked and may later re-grant (ascending).
@@ -319,15 +416,33 @@ impl FleetScheduler {
     /// virtual clock.  The two paths agree bitwise per job whenever
     /// both are legal.
     pub fn run(&mut self) -> Result<FleetReport> {
+        match self.run_resumable()? {
+            Some(report) => Ok(report),
+            None => bail!(
+                "fleet stopped by crash injection; rerun the same command (same \
+                 checkpoint dir) to resume"
+            ),
+        }
+    }
+
+    /// Like [`Self::run`], but a configured coordinator crash
+    /// ([`FleetBuilder::crash_at`]) returns `Ok(None)` instead of an
+    /// error: the fleet died mid-run and the checkpoint dir holds the
+    /// newest committed whole-fleet snapshot.  Running the same fleet
+    /// again resumes from it.
+    pub fn run_resumable(&mut self) -> Result<Option<FleetReport>> {
         let uncontended = self.arbiter.capacity() >= self.demand;
-        let interleaved = self.interleave.unwrap_or(!uncontended);
+        // Checkpointing forces the interleave: snapshots are taken at
+        // well-defined points on the merged clock.
+        let interleaved =
+            self.ckpt.is_some() || self.interleave.unwrap_or(!uncontended);
         if !uncontended && !interleaved {
             bail!("contended fleet requires the interleaved scheduler");
         }
         if interleaved {
             self.run_interleaved()
         } else {
-            self.run_parallel()
+            self.run_parallel().map(Some)
         }
     }
 
@@ -369,24 +484,67 @@ impl FleetScheduler {
 
     // --------------------------------------------- interleaved scheduler
 
-    fn run_interleaved(&self) -> Result<FleetReport> {
+    fn run_interleaved(&self) -> Result<Option<FleetReport>> {
         let n = self.jobs.len();
         let ranks: Vec<usize> =
             self.jobs.iter().map(|s| s.builder.planned_workers()).collect();
         let mut phase: Vec<JobPhase> = (0..n).map(|_| JobPhase::Waiting).collect();
-        let mut heap: BinaryHeap<Key> = (0..n)
-            .map(|j| Key {
-                t: self.jobs[j].arrival,
-                job: j,
-            })
-            .collect();
+        let mut heap: BinaryHeap<Key> = BinaryHeap::new();
         let mut parked: Vec<usize> = Vec::new();
         let mut committed = 0usize;
         let mut fleet_now = 0.0_f64;
         let mut timeline: Vec<(f64, i64)> = Vec::new();
 
+        // Checkpointed fleets resume from the newest valid snapshot if
+        // the dir holds any; otherwise start fresh (and a corrupt
+        // history is an error, never a silent restart from zero).
+        let mut ck = match &self.ckpt {
+            Some(spec) => Some(Checkpointer::open(spec.clone()).map_err(Error::msg)?),
+            None => None,
+        };
+        let mut resumed = false;
+        if let Some(spec) = &self.ckpt {
+            if ckpt::has_ckpts(&spec.dir) {
+                let lc = recover_latest(&spec.dir).map_err(Error::msg)?;
+                eprintln!("fleet: resuming from {} (seq {})", lc.path.display(), lc.seq);
+                self.restore_fleet(
+                    &lc,
+                    &mut phase,
+                    &mut heap,
+                    &mut parked,
+                    &mut committed,
+                    &mut fleet_now,
+                    &mut timeline,
+                )?;
+                resumed = true;
+            }
+        }
+        if !resumed {
+            for j in 0..n {
+                heap.push(Key {
+                    t: self.jobs[j].arrival,
+                    job: j,
+                });
+            }
+            if let Some(ck) = ck.as_mut() {
+                // Seq-0 snapshot: even a crash before the first event
+                // leaves something to resume from.
+                self.commit_fleet(ck, fleet_now, &phase, &timeline)?;
+            }
+        }
+        let mut last_snap_t = fleet_now;
+
         while let Some(key) = heap.pop() {
             fleet_now = fleet_now.max(key.t);
+            if let Some(at) = self.crash_at {
+                if fleet_now >= at {
+                    // Coordinator crash: die before processing the
+                    // event, leaving only previously committed
+                    // snapshots — exactly what a real kill would.
+                    return Ok(None);
+                }
+            }
+            let tl_mark = timeline.len();
             let j = key.job;
             if matches!(phase[j], JobPhase::Waiting) {
                 // Arrival: one reconcile over the running set, the
@@ -430,9 +588,11 @@ impl FleetScheduler {
                             job: a,
                         });
                     }
-                } else if let JobPhase::Running(active) = &phase[j] {
+                } else if let JobPhase::Running(active) = &mut phase[j] {
+                    active.next_key =
+                        active.offset + active.rs.as_ref().expect("running").now();
                     heap.push(Key {
-                        t: active.offset + active.rs.as_ref().expect("running").now(),
+                        t: active.next_key,
                         job: j,
                     });
                 }
@@ -440,6 +600,18 @@ impl FleetScheduler {
                 // Parked jobs have no heap key (reconcile re-queues
                 // them); Done jobs are never re-pushed.
                 unreachable!("stale fleet key for job {j}");
+            }
+            if let Some(ck) = ck.as_mut() {
+                // Membership changes (admission, completion, and —
+                // preempt-to-disk — every arbiter grant change) always
+                // commit, so preempted progress is durable before the
+                // slots are reused; quiet events commit on the
+                // `every_s` cadence.
+                let membership_changed = timeline.len() > tl_mark;
+                if membership_changed || fleet_now - last_snap_t >= ck.spec().every_s {
+                    self.commit_fleet(ck, fleet_now, &phase, &timeline)?;
+                    last_snap_t = fleet_now;
+                }
             }
         }
 
@@ -454,7 +626,151 @@ impl FleetScheduler {
                 ),
             }
         }
-        Ok(self.aggregate(true, outcomes, timeline))
+        Ok(Some(self.aggregate(true, outcomes, timeline)))
+    }
+
+    // ---------------------------------------------- fleet checkpointing
+
+    /// Commit one whole-fleet checkpoint: the config echo plus every
+    /// job's state keyed by job id, in a single atomic commit.
+    fn commit_fleet(
+        &self,
+        ck: &mut Checkpointer,
+        fleet_now: f64,
+        phase: &[JobPhase],
+        timeline: &[(f64, i64)],
+    ) -> Result<()> {
+        let config = self.config.as_ref().expect("checkpointed fleet has a config echo");
+        let state = snapshot_fleet(fleet_now, phase, timeline);
+        ck.commit(config, &state, None).map_err(Error::msg)?;
+        Ok(())
+    }
+
+    /// Inverse of [`snapshot_fleet`]: rebuild phases, heap keys (fully
+    /// derivable — waiting jobs key on arrival, running jobs on their
+    /// next event), the parked set, and `committed`.
+    #[allow(clippy::too_many_arguments)]
+    fn restore_fleet(
+        &self,
+        lc: &LoadedCkpt,
+        phase: &mut [JobPhase],
+        heap: &mut BinaryHeap<Key>,
+        parked: &mut Vec<usize>,
+        committed: &mut usize,
+        fleet_now: &mut f64,
+        timeline: &mut Vec<(f64, i64)>,
+    ) -> Result<()> {
+        let config = self.config.as_ref().expect("checkpointed fleet has a config echo");
+        if lc.config.to_pretty() != config.to_pretty() {
+            bail!(
+                "{} was written by a different fleet config; resume with the exact \
+                 config that produced it",
+                lc.path.display()
+            );
+        }
+        let st = &lc.state;
+        let v = st.get("version").as_i64().unwrap_or(-1);
+        if v != ckpt::CKPT_VERSION {
+            bail!("fleet state version {v}; this build reads {}", ckpt::CKPT_VERSION);
+        }
+        *fleet_now = dec_f64(st.get("t")).map_err(Error::msg)?;
+        for e in st
+            .get("timeline")
+            .as_arr()
+            .ok_or_else(|| anyhow!("fleet state: missing timeline"))?
+        {
+            let pair = e
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| anyhow!("fleet state: bad timeline entry"))?;
+            timeline.push((
+                dec_f64(&pair[0]).map_err(Error::msg)?,
+                pair[1]
+                    .as_i64()
+                    .ok_or_else(|| anyhow!("fleet state: bad timeline delta"))?,
+            ));
+        }
+        let jobs = st
+            .get("jobs")
+            .as_arr()
+            .ok_or_else(|| anyhow!("fleet state: missing jobs"))?;
+        if jobs.len() != self.jobs.len() {
+            bail!(
+                "fleet state has {} jobs, this config has {}",
+                jobs.len(),
+                self.jobs.len()
+            );
+        }
+        for (id, jj) in jobs.iter().enumerate() {
+            let usz = |key: &str| -> Result<usize> {
+                jj.get(key)
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("fleet state: job {id} missing {key}"))
+            };
+            match jj.get("phase").as_str() {
+                Some("waiting") => {
+                    heap.push(Key {
+                        t: self.jobs[id].arrival,
+                        job: id,
+                    });
+                }
+                Some("parked") => parked.push(id),
+                Some("running") => {
+                    let spec = &self.jobs[id];
+                    let mut session = spec
+                        .builder
+                        .build_sim()
+                        .with_context(|| format!("fleet job {id} ({})", spec.name))?;
+                    let rs = session
+                        .restore_run(jj.get("session"), None)
+                        .with_context(|| format!("fleet job {id} ({})", spec.name))?;
+                    let granted = usz("granted")?;
+                    let pool_drawn = usz("pool_drawn")?;
+                    let held = jj
+                        .get("held")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("fleet state: job {id} missing held"))?
+                        .iter()
+                        .map(|w| {
+                            w.as_usize()
+                                .ok_or_else(|| anyhow!("fleet state: job {id} bad held rank"))
+                        })
+                        .collect::<Result<Vec<usize>>>()?;
+                    let active = Active {
+                        offset: dec_f64(jj.get("offset")).map_err(Error::msg)?,
+                        next_key: dec_f64(jj.get("next_key")).map_err(Error::msg)?,
+                        granted,
+                        held,
+                        pool_drawn,
+                        preemptions: dec_u64(jj.get("preemptions")).map_err(Error::msg)?,
+                        regrants: dec_u64(jj.get("regrants")).map_err(Error::msg)?,
+                        rs: Some(rs),
+                        session,
+                    };
+                    *committed += granted + pool_drawn;
+                    heap.push(Key {
+                        t: active.next_key,
+                        job: id,
+                    });
+                    phase[id] = JobPhase::Running(Box::new(active));
+                }
+                Some("done") => {
+                    phase[id] = JobPhase::Done(Box::new(JobOutcome {
+                        name: self.jobs[id].name.clone(),
+                        arrival: dec_f64(jj.get("arrival")).map_err(Error::msg)?,
+                        admission: dec_f64(jj.get("admission")).map_err(Error::msg)?,
+                        completion: dec_f64(jj.get("completion")).map_err(Error::msg)?,
+                        granted_final: usz("granted_final")?,
+                        fleet_preemptions: dec_u64(jj.get("preemptions"))
+                            .map_err(Error::msg)?,
+                        fleet_regrants: dec_u64(jj.get("regrants")).map_err(Error::msg)?,
+                        report: RunReport::restore(jj.get("report")).map_err(Error::msg)?,
+                    }));
+                }
+                other => bail!("fleet state: job {id} has unknown phase {other:?}"),
+            }
+        }
+        Ok(())
     }
 
     /// One arbiter pass at fleet time `now`: recompute grants over the
@@ -556,6 +872,7 @@ impl FleetScheduler {
             session,
             rs: Some(rs),
             offset: now,
+            next_key: now,
             granted: self.jobs[j].builder.planned_workers(),
             held: Vec::new(),
             pool_drawn: 0,
@@ -743,6 +1060,72 @@ fn shrink_to(active: &mut Active, ranks: usize, new: usize, local_t: f64) {
     }
     active.granted = new;
     active.held.sort_unstable();
+}
+
+/// One whole-fleet snapshot: fleet clock, the utilization timeline so
+/// far, and every job's phase — running jobs embed their full session
+/// snapshot ([`Session::snapshot_run`]), done jobs their final report —
+/// keyed by job id.  Everything else (heap keys, the parked set,
+/// `committed`) is derivable and deliberately not stored.
+fn snapshot_fleet(fleet_now: f64, phase: &[JobPhase], timeline: &[(f64, i64)]) -> Json {
+    let mut st = Json::obj();
+    st.set("version", Json::Num(ckpt::CKPT_VERSION as f64));
+    st.set("t", enc_f64(fleet_now));
+    st.set(
+        "timeline",
+        Json::Arr(
+            timeline
+                .iter()
+                .map(|&(t, d)| Json::Arr(vec![enc_f64(t), Json::Num(d as f64)]))
+                .collect(),
+        ),
+    );
+    let jobs = phase
+        .iter()
+        .enumerate()
+        .map(|(id, ph)| {
+            let mut j = Json::obj();
+            j.set("job_id", Json::Num(id as f64));
+            match ph {
+                JobPhase::Waiting => {
+                    j.set("phase", Json::Str("waiting".into()));
+                }
+                JobPhase::Parked => {
+                    j.set("phase", Json::Str("parked".into()));
+                }
+                JobPhase::Running(a) => {
+                    j.set("phase", Json::Str("running".into()));
+                    j.set("offset", enc_f64(a.offset));
+                    j.set("next_key", enc_f64(a.next_key));
+                    j.set("granted", Json::Num(a.granted as f64));
+                    j.set(
+                        "held",
+                        Json::Arr(a.held.iter().map(|&w| Json::Num(w as f64)).collect()),
+                    );
+                    j.set("pool_drawn", Json::Num(a.pool_drawn as f64));
+                    j.set("preemptions", enc_u64(a.preemptions));
+                    j.set("regrants", enc_u64(a.regrants));
+                    j.set(
+                        "session",
+                        a.session.snapshot_run(a.rs.as_ref().expect("running")),
+                    );
+                }
+                JobPhase::Done(out) => {
+                    j.set("phase", Json::Str("done".into()));
+                    j.set("arrival", enc_f64(out.arrival));
+                    j.set("admission", enc_f64(out.admission));
+                    j.set("completion", enc_f64(out.completion));
+                    j.set("granted_final", Json::Num(out.granted_final as f64));
+                    j.set("preemptions", enc_u64(out.fleet_preemptions));
+                    j.set("regrants", enc_u64(out.fleet_regrants));
+                    j.set("report", out.report.snapshot());
+                }
+            }
+            j
+        })
+        .collect();
+    st.set("jobs", Json::Arr(jobs));
+    st
 }
 
 /// Re-grant up to `new − granted` previously revoked ranks (lowest

@@ -37,6 +37,10 @@
 //!   virtual clock, with a [`fleet::CapacityArbiter`] granting and
 //!   reclaiming slots under fair-share or strict-priority policy
 //!   (DESIGN.md §13).
+//! - [`ckpt`]: crash-consistent checkpoint/restore — versioned JSON
+//!   snapshots of the full run closure with an atomic
+//!   write→fsync→rename commit protocol, giving bit-identical resume
+//!   after a coordinator crash (DESIGN.md §15).
 //! - [`data`], [`metrics`], [`config`], [`figures`], [`util`]:
 //!   synthetic datasets, measurement, policy selection, figure
 //!   harnesses, and std-only substrates (JSON, RNG, CLI, stats, bench,
@@ -47,6 +51,7 @@
 //! experiment index, and `EXPERIMENTS.md` for the recorded
 //! reproductions and the §Perf iteration log.
 
+pub mod ckpt;
 pub mod cluster;
 pub mod config;
 pub mod controller;
@@ -62,6 +67,7 @@ pub mod sync;
 pub mod trace;
 pub mod util;
 
+pub use ckpt::{recover_latest, validate_ckpt, Checkpointer, CkptSpec, LoadedCkpt};
 pub use config::Policy;
 pub use controller::{BatchPolicy, DynamicBatcher, OptimalBatcher, RlBatcher, RlTable};
 pub use fault::{Autoscaler, AutoscalerCfg, DetectorCfg, FaultPlan, LatePolicy};
@@ -70,6 +76,6 @@ pub use fleet::{
     FleetScheduler, JobSpec,
 };
 pub use session::{
-    Backend, BspAgg, RealBackend, RunState, Scheduler, Session, SessionBuilder,
-    SimBackend, Slowdowns, WorkerOutcome,
+    Backend, BspAgg, CkptOutcome, RealBackend, RunState, Scheduler, Session,
+    SessionBuilder, SimBackend, Slowdowns, WorkerOutcome,
 };

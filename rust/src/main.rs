@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   simulate          virtual-time experiment (policy × cluster × workload)
 //!   train             real-execution training over the PJRT runtime
+//!   resume            continue a crashed run from its latest durable checkpoint
 //!   fleet             N concurrent jobs on one shared elastic worker pool
 //!   figure <id>       regenerate a paper figure (1|2|3|4a|4b|5|6|7a|7cloud|asp|buckets|revocation|policies)
 //!   throughput-scan   print the Fig. 5 curve for a device
@@ -13,16 +14,23 @@
 //! `build_real`), so every flag — including `--sync bsp|asp|ssp:<bound>`
 //! — means the same thing in both worlds.
 
+use std::path::Path;
+
+use hetero_batch::ckpt::{recover_latest, Checkpointer, CkptSpec};
 use hetero_batch::cluster::{cpu_cluster, hlevel_split};
 use hetero_batch::config::{split_policy_spec, Policy};
-use hetero_batch::fault::{AutoscalerCfg, DetectorCfg, FaultPlan};
+use hetero_batch::fault::{AutoscalerCfg, CoordinatorCrash, DetectorCfg, FaultPlan};
 use hetero_batch::figures;
 use hetero_batch::fleet::{job_seed, ArbiterPolicy, FleetBuilder, JobSpec};
 use hetero_batch::runtime::Runtime;
-use hetero_batch::session::{Scheduler, Session, SessionBuilder, Slowdowns};
+use hetero_batch::session::{
+    CkptOutcome, Scheduler, Session, SessionBuilder, Slowdowns,
+};
 use hetero_batch::sync::SyncMode;
 use hetero_batch::trace::{JoinSpec, SpotSpec};
 use hetero_batch::util::cli::Args;
+use hetero_batch::util::fs::atomic_write;
+use hetero_batch::util::json::Json;
 
 /// Parse the shared elastic-membership flags (`--spot mttf:down[:grace]`
 /// and `--join k@t[,k@t...]`) and fold them into the builder.  Both
@@ -71,6 +79,35 @@ fn apply_fault_flags(builder: SessionBuilder, a: &Args) -> Result<SessionBuilder
     Ok(builder)
 }
 
+/// Parse the shared checkpoint flags (`--checkpoint dir[:every_s][:keep_n]`
+/// and the `--crash-at <t>` coordinator-crash injection; DESIGN.md §15).
+/// Validated before any artifact is opened, matching the other shared
+/// flags' error-text convention.
+fn parse_ckpt_flags(a: &Args) -> Result<(Option<CkptSpec>, Option<f64>), String> {
+    let ckpt = a.get("checkpoint");
+    let spec = if ckpt.is_empty() {
+        None
+    } else {
+        Some(CkptSpec::parse(&ckpt).map_err(|e| format!("bad --checkpoint: {e}"))?)
+    };
+    let crash = a.get("crash-at");
+    let crash_at = if crash.is_empty() {
+        None
+    } else {
+        let c =
+            CoordinatorCrash::parse(&crash).map_err(|e| format!("bad --crash-at: {e}"))?;
+        Some(c.at_s)
+    };
+    if crash_at.is_some() && spec.is_none() {
+        return Err(
+            "bad --crash-at: the coordinator-crash scenario needs --checkpoint \
+             (there is nothing to recover from otherwise)"
+                .into(),
+        );
+    }
+    Ok((spec, crash_at))
+}
+
 /// Parse the shared `--policy` flag, including the `rl:<table.json>`
 /// form, and fold policy + table path into the builder.  Both
 /// subcommands validate the spec (and, via `validate()`, the table
@@ -100,6 +137,7 @@ fn main() {
     let result = match cmd {
         "simulate" => cmd_simulate(&rest),
         "train" => cmd_train(&rest),
+        "resume" => cmd_resume(&rest),
         "fleet" => cmd_fleet(&rest),
         "figure" => cmd_figure(&rest),
         "throughput-scan" => cmd_scan(&rest),
@@ -121,6 +159,7 @@ fn usage() -> String {
      commands:\n\
      \x20 simulate          virtual-time experiment (fast, reproduces paper figures)\n\
      \x20 train             real training over AOT-compiled XLA artifacts\n\
+     \x20 resume            continue a crashed run from its latest durable checkpoint\n\
      \x20 fleet             N concurrent jobs on one shared elastic worker pool\n\
      \x20 figure <id>       regenerate a paper figure: 1 2 3 4a 4b 5 6 7a 7cloud asp buckets revocation policies all\n\
      \x20 throughput-scan   throughput-vs-batch curve for a device\n\
@@ -148,6 +187,8 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         .opt("autoscale", "", "autoscaler pool=N,cold=S[,floor=K,backoff=S,cap=S,jitter=J,fail=P,retries=N,ride,tput=F]")
         .opt("scheduler", "heap", "event scheduling: heap (O(log k)) | scan (O(k) baseline)")
         .opt("report-sample", "1", "keep every n-th round/update record (bounds report memory at large k)")
+        .opt("checkpoint", "", "durable checkpoints dir[:every_s][:keep_n]; resume with `hbatch resume`")
+        .opt("crash-at", "", "coordinator-crash injection: die (no final snapshot) once virtual time passes t")
         .opt("config", "", "JSON config file (explicit CLI flags override)")
         .parse(rest)?;
 
@@ -188,14 +229,93 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     }
     let builder = apply_membership_flags(builder, &a)?;
     let builder = apply_fault_flags(builder, &a)?;
+    let (ckpt, crash_at) = parse_ckpt_flags(&a)?;
     builder.validate()?;
 
-    let r = builder
-        .build_sim()
+    let Some(spec) = ckpt else {
+        let r = builder
+            .build_sim()
+            .map_err(|e| e.to_string())?
+            .run()
+            .map_err(|e| e.to_string())?;
+        println!("{}", r.to_json(k).to_pretty());
+        return Ok(());
+    };
+    // Checkpointed run: the config echo (plus a backend discriminator
+    // for `resume`) rides inside every committed checkpoint.
+    let mut config = builder.to_json()?;
+    config.set("backend", Json::Str("sim".into()));
+    let mut ck = Checkpointer::open(spec)?;
+    let mut sess = builder.build_sim().map_err(|e| e.to_string())?;
+    match sess
+        .run_checkpointed(&config, &mut ck, crash_at)
         .map_err(|e| e.to_string())?
-        .run()
+    {
+        CkptOutcome::Completed(r) => println!("{}", r.to_json(k).to_pretty()),
+        CkptOutcome::Stopped { t } => println!(
+            "coordinator crashed at t={t:.3}s; resume with `hbatch resume --from {}`",
+            ck.spec().dir.display()
+        ),
+    }
+    Ok(())
+}
+
+fn cmd_resume(rest: &[String]) -> Result<(), String> {
+    let a = Args::new(
+        "hbatch resume",
+        "continue a crashed run from its latest durable checkpoint",
+    )
+    .opt("from", "", "checkpoint directory (as given to --checkpoint)")
+    .opt(
+        "checkpoint",
+        "",
+        "keep checkpointing: dir[:every_s][:keep_n] (default: --from with default cadence)",
+    )
+    .parse(rest)?;
+
+    let from = a.get("from");
+    if from.is_empty() {
+        return Err("bad --from: which checkpoint directory?".into());
+    }
+    let spec = if a.get("checkpoint").is_empty() {
+        CkptSpec::parse(&from).map_err(|e| format!("bad --from: {e}"))?
+    } else {
+        CkptSpec::parse(&a.get("checkpoint")).map_err(|e| format!("bad --checkpoint: {e}"))?
+    };
+
+    let lc = recover_latest(Path::new(&from))?;
+    match lc.config.get("backend").as_str() {
+        // Pre-discriminator checkpoints can only have come from simulate.
+        Some("sim") | None => {}
+        Some("real") => {
+            return Err(
+                "this checkpoint came from `hbatch train` (real backend); resume is \
+                 sim-only for now — the real sidecar restores model/optimizer state \
+                 consistently, but not the runtime's execution streams, so a resumed \
+                 run would not be bit-identical. Restart with `hbatch train`."
+                    .into(),
+            )
+        }
+        Some(other) => {
+            return Err(format!("checkpoint config names unknown backend {other:?}"))
+        }
+    }
+
+    let builder = SessionBuilder::from_json(&lc.config)?;
+    let mut sess = builder.build_sim().map_err(|e| e.to_string())?;
+    let k = sess.backend().k();
+    let rs = sess
+        .restore_run(&lc.state, lc.backend_bin.as_deref())
         .map_err(|e| e.to_string())?;
-    println!("{}", r.to_json(k).to_pretty());
+    eprintln!("resuming from {} (seq {})", lc.path.display(), lc.seq);
+    let mut ck = Checkpointer::open(spec)?;
+    match sess
+        .resume_checkpointed(rs, &lc.config, &mut ck, None)
+        .map_err(|e| e.to_string())?
+    {
+        CkptOutcome::Completed(r) => println!("{}", r.to_json(k).to_pretty()),
+        CkptOutcome::Stopped { .. } => unreachable!("resume runs without crash injection"),
+    }
     Ok(())
 }
 
@@ -213,6 +333,8 @@ fn cmd_fleet(rest: &[String]) -> Result<(), String> {
     .opt("capacity", "0", "shared worker capacity (0 = uncontended: total demand)")
     .opt("policy", "fair", "capacity arbitration: fair|priority")
     .opt("seed", "0", "fleet seed: jobs without their own get job_seed(seed, id)")
+    .opt("checkpoint", "", "durable whole-fleet checkpoints dir[:every_s][:keep_n]; rerun the same command to resume")
+    .opt("crash-at", "", "coordinator-crash injection: die (no final snapshot) once the fleet clock passes t")
     .flag("interleave", "force the deterministic interleaved scheduler even when uncontended")
     .parse(rest)?;
 
@@ -248,8 +370,20 @@ fn cmd_fleet(rest: &[String]) -> Result<(), String> {
     if a.get_flag("interleave") {
         f = f.interleave(true);
     }
-    let report = f.build()?.run().map_err(|e| e.to_string())?;
-    println!("{}", report.to_json().to_pretty());
+    let (ckpt, crash_at) = parse_ckpt_flags(&a)?;
+    if let Some(spec) = ckpt {
+        f = f.checkpoint(spec);
+    }
+    if let Some(t) = crash_at {
+        f = f.crash_at(t);
+    }
+    match f.build()?.run_resumable().map_err(|e| e.to_string())? {
+        Some(report) => println!("{}", report.to_json().to_pretty()),
+        None => println!(
+            "fleet coordinator crashed at t={:.3}s; rerun the same command to resume",
+            crash_at.expect("crash injection requires --crash-at")
+        ),
+    }
     Ok(())
 }
 
@@ -274,6 +408,8 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .flag("collect-agg", "BSP: collect gradients and aggregate at the barrier (baseline; default is the eager reduction tree)")
         .opt("scheduler", "heap", "event scheduling: heap (O(log k)) | scan (O(k) baseline)")
         .opt("report-sample", "1", "keep every n-th round/update record (bounds report memory at large k)")
+        .opt("checkpoint", "", "durable checkpoints dir[:every_s][:keep_n] (model+optimizer in a binary sidecar)")
+        .opt("crash-at", "", "coordinator-crash injection: die (no final snapshot) once virtual time passes t")
         .opt("report", "", "write full JSON report to this path")
         .parse(rest)?;
 
@@ -303,14 +439,37 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .slowdowns(Slowdowns::from_cores(&cores));
     let builder = apply_membership_flags(builder, &a)?;
     let builder = apply_fault_flags(builder, &a)?;
+    let (ckpt, crash_at) = parse_ckpt_flags(&a)?;
     builder.validate()?;
 
     let mut runtime = Runtime::open(a.get("artifacts")).map_err(|e| e.to_string())?;
-    let report = builder
-        .build_real(&mut runtime)
-        .map_err(|e| e.to_string())?
-        .run()
-        .map_err(|e| e.to_string())?;
+    let report = match ckpt {
+        None => builder
+            .build_real(&mut runtime)
+            .map_err(|e| e.to_string())?
+            .run()
+            .map_err(|e| e.to_string())?,
+        Some(spec) => {
+            let mut config = builder.to_json()?;
+            config.set("backend", Json::Str("real".into()));
+            let mut ck = Checkpointer::open(spec)?;
+            let mut sess = builder.build_real(&mut runtime).map_err(|e| e.to_string())?;
+            match sess
+                .run_checkpointed(&config, &mut ck, crash_at)
+                .map_err(|e| e.to_string())?
+            {
+                CkptOutcome::Completed(r) => r,
+                CkptOutcome::Stopped { t } => {
+                    println!(
+                        "coordinator crashed at t={t:.3}s; checkpoints (model + \
+                         optimizer sidecar) are in {}",
+                        ck.spec().dir.display()
+                    );
+                    return Ok(());
+                }
+            }
+        }
+    };
 
     // Compact progress print.
     println!("run: {}", report.label);
@@ -318,9 +477,11 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         "steps: {}  wall: {:.1}s",
         report.total_iters, report.total_time
     );
-    if let Some((_, _, first)) = report.losses.first() {
-        let (_, _, last) = report.losses.last().unwrap();
-        println!("loss: {first:.4} -> {last:.4}");
+    match (report.losses.first(), report.losses.last()) {
+        (Some((_, _, first)), Some((_, _, last))) => {
+            println!("loss: {first:.4} -> {last:.4}");
+        }
+        _ => println!("loss: no losses recorded"),
     }
     println!("adjustments: {}", report.adjustments.len());
     if !report.epochs.is_empty() {
@@ -339,9 +500,10 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         println!("final batches: {b:?}");
     }
     if !a.get("report").is_empty() {
-        std::fs::write(a.get("report"), report.to_json(k).to_pretty())
+        let path = a.get("report");
+        atomic_write(Path::new(&path), report.to_json(k).to_pretty().as_bytes())
             .map_err(|e| e.to_string())?;
-        println!("report written to {}", a.get("report"));
+        println!("report written to {path}");
     }
     Ok(())
 }

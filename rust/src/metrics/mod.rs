@@ -349,6 +349,244 @@ impl RunReport {
         }
         o
     }
+
+    /// Exact checkpoint serializer (DESIGN.md §15).  Unlike
+    /// [`RunReport::to_json`] — a lossy human-facing summary — this
+    /// round-trips *every* field through the `ckpt` codec so a resumed
+    /// run's report-so-far is bitwise-identical.  Records use compact
+    /// positional arrays: iteration logs dominate checkpoint size.
+    pub fn snapshot(&self) -> Json {
+        use crate::ckpt::{enc_f64, enc_u64};
+        let mut o = Json::obj();
+        o.set("label", Json::Str(self.label.clone()));
+        o.set(
+            "iters",
+            Json::Arr(
+                self.iters
+                    .iter()
+                    .map(|r| {
+                        Json::Arr(vec![
+                            Json::Num(r.worker as f64),
+                            enc_u64(r.iter),
+                            enc_f64(r.start),
+                            enc_f64(r.duration),
+                            enc_f64(r.batch),
+                            enc_f64(r.wait),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        o.set(
+            "adjustments",
+            Json::Arr(
+                self.adjustments
+                    .iter()
+                    .map(|a| {
+                        Json::Arr(vec![
+                            enc_f64(a.time),
+                            enc_u64(a.iter),
+                            Json::Arr(a.batches.iter().map(|&b| enc_f64(b)).collect()),
+                            enc_f64(a.cost),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        o.set(
+            "epochs",
+            Json::Arr(
+                self.epochs
+                    .iter()
+                    .map(|e| {
+                        Json::Arr(vec![
+                            enc_f64(e.time),
+                            enc_u64(e.epoch),
+                            Json::Num(e.worker as f64),
+                            Json::Str(e.kind.label().into()),
+                            Json::Num(e.live as f64),
+                            Json::Arr(e.batches.iter().map(|&b| enc_f64(b)).collect()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        o.set(
+            "suspicions",
+            Json::Arr(
+                self.suspicions
+                    .iter()
+                    .map(|e| {
+                        Json::Arr(vec![
+                            enc_f64(e.time),
+                            Json::Num(e.worker as f64),
+                            Json::Str(e.action.label().into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        o.set(
+            "spawns",
+            Json::Arr(
+                self.spawns
+                    .iter()
+                    .map(|e| {
+                        Json::Arr(vec![
+                            enc_f64(e.time),
+                            match e.worker {
+                                Some(w) => Json::Num(w as f64),
+                                None => Json::Null,
+                            },
+                            Json::Str(e.action.label().into()),
+                            Json::Num(e.attempt as f64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        o.set(
+            "losses",
+            Json::Arr(
+                self.losses
+                    .iter()
+                    .map(|&(t, i, l)| Json::Arr(vec![enc_f64(t), enc_u64(i), enc_f64(l)]))
+                    .collect(),
+            ),
+        );
+        o.set(
+            "evals",
+            Json::Arr(
+                self.evals
+                    .iter()
+                    .map(|e| {
+                        Json::Arr(vec![
+                            enc_f64(e.time),
+                            enc_u64(e.iter),
+                            enc_f64(e.loss),
+                            enc_f64(e.metric),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        o.set("total_time", enc_f64(self.total_time));
+        o.set("total_iters", enc_u64(self.total_iters));
+        o.set("reached_target", Json::Bool(self.reached_target));
+        o
+    }
+
+    /// Rebuild from a [`RunReport::snapshot`].
+    pub fn restore(j: &Json) -> Result<RunReport, String> {
+        use crate::ckpt::{dec_f64, dec_u64, dec_usize};
+        fn arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json], String> {
+            j.get(key)
+                .as_arr()
+                .ok_or(format!("report snapshot: missing {key:?} array"))
+        }
+        fn f64s(j: &Json, what: &str) -> Result<Vec<f64>, String> {
+            j.as_arr()
+                .ok_or(format!("report snapshot: {what} is not an array"))?
+                .iter()
+                .map(dec_f64)
+                .collect()
+        }
+        let mut r = RunReport::new(
+            j.get("label")
+                .as_str()
+                .ok_or("report snapshot: missing label")?,
+        );
+        for it in arr(j, "iters")? {
+            r.iters.push(IterRecord {
+                worker: dec_usize(it.idx(0))?,
+                iter: dec_u64(it.idx(1))?,
+                start: dec_f64(it.idx(2))?,
+                duration: dec_f64(it.idx(3))?,
+                batch: dec_f64(it.idx(4))?,
+                wait: dec_f64(it.idx(5))?,
+            });
+        }
+        for a in arr(j, "adjustments")? {
+            r.adjustments.push(AdjustEvent {
+                time: dec_f64(a.idx(0))?,
+                iter: dec_u64(a.idx(1))?,
+                batches: f64s(a.idx(2), "adjustment batches")?,
+                cost: dec_f64(a.idx(3))?,
+            });
+        }
+        for e in arr(j, "epochs")? {
+            let kind = match e.idx(3).as_str() {
+                Some("revoke") => MembershipKind::Revoke,
+                Some("join") => MembershipKind::Join,
+                other => {
+                    return Err(format!("report snapshot: bad epoch kind {other:?}"))
+                }
+            };
+            r.epochs.push(EpochEvent {
+                time: dec_f64(e.idx(0))?,
+                epoch: dec_u64(e.idx(1))?,
+                worker: dec_usize(e.idx(2))?,
+                kind,
+                live: dec_usize(e.idx(4))?,
+                batches: f64s(e.idx(5), "epoch batches")?,
+            });
+        }
+        for s in arr(j, "suspicions")? {
+            let action = match s.idx(2).as_str() {
+                Some("suspect") => DetectorAction::Suspect,
+                Some("readmit") => DetectorAction::Readmit,
+                other => {
+                    return Err(format!("report snapshot: bad detector action {other:?}"))
+                }
+            };
+            r.suspicions.push(DetectorEvent {
+                time: dec_f64(s.idx(0))?,
+                worker: dec_usize(s.idx(1))?,
+                action,
+            });
+        }
+        for s in arr(j, "spawns")? {
+            let worker = match s.idx(1) {
+                Json::Null => None,
+                w => Some(dec_usize(w)?),
+            };
+            let action = match s.idx(2).as_str() {
+                Some("request") => SpawnAction::Request,
+                Some("fail") => SpawnAction::Fail,
+                Some("ready") => SpawnAction::Ready,
+                Some("gave_up") => SpawnAction::GaveUp,
+                Some("wasted") => SpawnAction::Wasted,
+                other => {
+                    return Err(format!("report snapshot: bad spawn action {other:?}"))
+                }
+            };
+            r.spawns.push(SpawnEvent {
+                time: dec_f64(s.idx(0))?,
+                worker,
+                action,
+                attempt: dec_usize(s.idx(3))? as u32,
+            });
+        }
+        for l in arr(j, "losses")? {
+            r.losses
+                .push((dec_f64(l.idx(0))?, dec_u64(l.idx(1))?, dec_f64(l.idx(2))?));
+        }
+        for e in arr(j, "evals")? {
+            r.evals.push(EvalRecord {
+                time: dec_f64(e.idx(0))?,
+                iter: dec_u64(e.idx(1))?,
+                loss: dec_f64(e.idx(2))?,
+                metric: dec_f64(e.idx(3))?,
+            });
+        }
+        r.total_time = dec_f64(j.get("total_time"))?;
+        r.total_iters = dec_u64(j.get("total_iters"))?;
+        r.reached_target = j
+            .get("reached_target")
+            .as_bool()
+            .ok_or("report snapshot: reached_target is not a bool")?;
+        Ok(r)
+    }
 }
 
 #[cfg(test)]
@@ -488,6 +726,89 @@ mod tests {
         assert!(f.get("worker").is_null());
         assert_eq!(f.get("attempt").as_i64(), Some(2));
         assert_eq!(j.get("spawns").idx(1).get("action").as_str(), Some("ready"));
+    }
+
+    #[test]
+    fn ckpt_snapshot_round_trips_every_field_bitwise() {
+        let mut r = RunReport::new("ckpt");
+        // Awkward values on purpose: non-terminating binary fractions,
+        // a u64 above 2^53, and every optional/enum variant.
+        r.iters.push(IterRecord {
+            worker: 3,
+            iter: (1u64 << 53) + 7,
+            start: 0.1 + 0.2,
+            duration: 1.0 / 3.0,
+            batch: 42.7,
+            wait: f64::MIN_POSITIVE,
+        });
+        r.adjustments.push(AdjustEvent {
+            time: 9.999999999999998,
+            iter: 4,
+            batches: vec![21.350000000000001, 42.65],
+            cost: 0.0,
+        });
+        r.epochs.push(EpochEvent {
+            time: 2.5,
+            epoch: 1,
+            worker: 0,
+            kind: MembershipKind::Revoke,
+            live: 2,
+            batches: vec![0.0, 64.0],
+        });
+        r.epochs.push(EpochEvent {
+            time: 3.5,
+            epoch: 2,
+            worker: 0,
+            kind: MembershipKind::Join,
+            live: 3,
+            batches: vec![21.0, 43.0],
+        });
+        r.suspicions.push(DetectorEvent {
+            time: 1.0,
+            worker: 1,
+            action: DetectorAction::Suspect,
+        });
+        r.suspicions.push(DetectorEvent {
+            time: 2.0,
+            worker: 1,
+            action: DetectorAction::Readmit,
+        });
+        for (i, action) in [
+            SpawnAction::Request,
+            SpawnAction::Fail,
+            SpawnAction::Ready,
+            SpawnAction::GaveUp,
+            SpawnAction::Wasted,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            r.spawns.push(SpawnEvent {
+                time: i as f64 + 0.25,
+                worker: if i % 2 == 0 { Some(i) } else { None },
+                action,
+                attempt: i as u32,
+            });
+        }
+        r.losses.push((1.5, 10, 0.123456789012345678));
+        r.evals.push(EvalRecord {
+            time: 2.0,
+            iter: 5,
+            loss: 0.4,
+            metric: 0.9,
+        });
+        r.total_time = 123.45600000000002;
+        r.total_iters = 9_007_199_254_740_993; // 2^53 + 1
+        r.reached_target = true;
+        // Through actual serialized text, not just the Json tree.
+        let text = r.snapshot().to_pretty();
+        let back = RunReport::restore(&Json::parse(&text).unwrap()).unwrap();
+        assert!(r.bitwise_eq(&back), "report changed across the codec");
+        // An empty report round-trips too (the satellite's no-loss case).
+        let empty = RunReport::new("empty");
+        let back =
+            RunReport::restore(&Json::parse(&empty.snapshot().to_pretty()).unwrap()).unwrap();
+        assert!(empty.bitwise_eq(&back));
     }
 
     #[test]

@@ -333,6 +333,59 @@ impl FusedOptimizer {
             FusedOptimizer::Adam(_) => "adam",
         }
     }
+
+    /// Checkpoint state: the iteration counter and moment vectors —
+    /// none for SGD, `[v]` for momentum, `[m, v]` for Adam.  Schedules
+    /// and hyperparameters are run config, not state.
+    pub fn ckpt_moments(&self) -> (u64, Vec<&[f32]>) {
+        match self {
+            FusedOptimizer::Sgd(o) => (o.iterations(), vec![]),
+            FusedOptimizer::Momentum(o) => (o.iterations(), vec![o.velocity()]),
+            FusedOptimizer::Adam(o) => (o.iterations(), vec![o.m(), o.v()]),
+        }
+    }
+
+    /// Restore a [`FusedOptimizer::ckpt_moments`] snapshot into an
+    /// optimizer freshly built with the run's config.
+    pub fn ckpt_restore(&mut self, t: u64, moments: &[Vec<f32>]) -> Result<(), String> {
+        let want = match self {
+            FusedOptimizer::Sgd(_) => 0,
+            FusedOptimizer::Momentum(_) => 1,
+            FusedOptimizer::Adam(_) => 2,
+        };
+        if moments.len() != want {
+            return Err(format!(
+                "{} optimizer restore: {} moment vectors, expected {want}",
+                self.name(),
+                moments.len()
+            ));
+        }
+        let copy = |dst: &mut [f32], src: &[f32], what: &str| -> Result<(), String> {
+            if dst.len() != src.len() {
+                return Err(format!(
+                    "optimizer restore: {what} has {} elements, model has {}",
+                    src.len(),
+                    dst.len()
+                ));
+            }
+            dst.copy_from_slice(src);
+            Ok(())
+        };
+        match self {
+            FusedOptimizer::Sgd(o) => o.set_iterations(t),
+            FusedOptimizer::Momentum(o) => {
+                copy(o.velocity_mut(), &moments[0], "velocity")?;
+                o.set_iterations(t);
+            }
+            FusedOptimizer::Adam(o) => {
+                let (m, v) = o.state_mut();
+                copy(m, &moments[0], "adam m")?;
+                copy(v, &moments[1], "adam v")?;
+                o.bump_to(t);
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Argument validation, shared with every other aggregation entry point

@@ -71,6 +71,11 @@ impl Sgd {
     pub(crate) fn bump(&mut self) {
         self.t += 1;
     }
+
+    /// Set the iteration counter (checkpoint restore).
+    pub(crate) fn set_iterations(&mut self, t: u64) {
+        self.t = t;
+    }
 }
 
 impl Optimizer for Sgd {
@@ -122,6 +127,11 @@ impl Momentum {
 
     pub(crate) fn bump(&mut self) {
         self.t += 1;
+    }
+
+    /// Set the iteration counter (checkpoint restore).
+    pub(crate) fn set_iterations(&mut self, t: u64) {
+        self.t = t;
     }
 }
 

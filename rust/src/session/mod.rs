@@ -49,7 +49,8 @@ use anyhow::{anyhow, bail, Result};
 
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, VecDeque};
 
-use crate::cluster::{cpu_cluster, GpuModel, WorkerSpec};
+use crate::ckpt::Checkpointer;
+use crate::cluster::{cpu_cluster, DeviceKind, GpuModel, WorkerSpec};
 use crate::config::{split_policy_spec, Policy};
 use crate::controller::bucket::quantize_alloc;
 use crate::controller::{
@@ -182,6 +183,35 @@ pub trait Backend {
     /// (faults silently don't fire — the builder rejects fault plans the
     /// session can't enforce, so this only matters for custom backends).
     fn set_fault_plan(&mut self, _plan: &FaultPlan) {}
+
+    /// Checkpoint hook (DESIGN.md §15): the backend's own irreducible
+    /// state as JSON — rng stream positions, fault-overlay progress —
+    /// or `None` for stateless backends.  Restored by
+    /// [`Backend::restore_state`] after the session has replayed
+    /// membership (`retire_worker`) and re-handed the fault plan.
+    fn snapshot_state(&self) -> Option<Json> {
+        None
+    }
+
+    /// Inverse of [`Backend::snapshot_state`].  Default: accept nothing
+    /// was captured.
+    fn restore_state(&mut self, _j: &Json) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// Checkpoint hook for bulk binary state (the real backend's
+    /// parameter vector + optimizer moments), written as a sidecar file
+    /// next to the JSON state.  `None` = no sidecar.
+    fn snapshot_binary(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Inverse of [`Backend::snapshot_binary`].  The default rejects:
+    /// a sidecar in the checkpoint that the backend cannot consume
+    /// means the checkpoint was taken on a different backend kind.
+    fn restore_binary(&mut self, _bytes: &[u8]) -> Result<(), String> {
+        Err("this backend holds no binary checkpoint state".to_string())
+    }
 }
 
 /// Event-scheduling implementation of the [`Session::run`] loop
@@ -632,6 +662,54 @@ impl SessionBuilder {
         if let Some(v) = j.get("eager_agg").as_bool() {
             b.eager_agg = v;
         }
+        if let Some(v) = j.get("loss_target").as_f64() {
+            b.loss_target = v;
+        }
+        if let Some(n) = j.get("eval_every").as_usize() {
+            b.eval_every = n as u64;
+        }
+        if let Some(n) = j.get("pool_threads").as_usize() {
+            b.pool_threads = n;
+        }
+        if let Some(v) = j.get("prefetch").as_bool() {
+            b.prefetch = v;
+        }
+        if !j.get("slowdowns").is_null() {
+            let caps = j
+                .get("slowdowns")
+                .as_arr()
+                .ok_or("slowdowns must be an array")?
+                .iter()
+                .map(|v| v.as_f64().ok_or("slowdowns must hold numbers".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            b.slowdowns = Some(Slowdowns(caps));
+        }
+        // Explicit membership schedule (the checkpoint config echo's
+        // shape; CLI users normally reach this through `join`/`spot`).
+        if !j.get("membership_events").is_null() {
+            let evs = j
+                .get("membership_events")
+                .as_arr()
+                .ok_or("membership_events must be an array")?
+                .iter()
+                .map(|e| {
+                    let kind = match e.get("kind").as_str() {
+                        Some("revoke") => MembershipKind::Revoke,
+                        Some("join") => MembershipKind::Join,
+                        other => return Err(format!("bad membership kind {other:?}")),
+                    };
+                    Ok(MembershipEvent {
+                        time: e.get("time").as_f64().ok_or("membership event needs a time")?,
+                        worker: e
+                            .get("worker")
+                            .as_usize()
+                            .ok_or("membership event needs a worker")?,
+                        kind,
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            b = b.membership(MembershipPlan::new(evs));
+        }
         let c = j.get("controller");
         if !c.is_null() {
             if let Some(d) = c.get("deadband").as_f64() {
@@ -654,6 +732,15 @@ impl SessionBuilder {
             }
             if let Some(v) = c.get("conserve_global").as_bool() {
                 b.controller.conserve_global = v;
+            }
+            if let Some(v) = c.get("backoff").as_bool() {
+                b.controller.backoff = v;
+            }
+            if let Some(v) = c.get("backoff_cap").as_usize() {
+                b.controller.backoff_cap = v;
+            }
+            if let Some(v) = c.get("drift_reset").as_f64() {
+                b.controller.drift_reset = v;
             }
         }
         // Elastic-membership scenario keys (same shapes as the CLI
@@ -697,6 +784,124 @@ impl SessionBuilder {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("reading {path}: {e}"))?;
         Self::from_json_str(&text)
+    }
+
+    /// Serialize this builder as the JSON shape [`Self::from_json`]
+    /// parses — the checkpoint's `config.json` echo (DESIGN.md §15), so
+    /// `hbatch resume` can rebuild the exact session.  Errors on
+    /// programmatic-only state no config key can express (explicit
+    /// availability traces, a sim convergence-target override): a
+    /// checkpoint whose config echo silently dropped part of the setup
+    /// would resume a *different* run, which is worse than refusing.
+    pub fn to_json(&self) -> Result<Json, String> {
+        if self.traces.is_some() {
+            return Err(
+                "checkpointing needs a config-expressible session: explicit \
+                 availability traces are programmatic (use a spot spec instead)"
+                    .into(),
+            );
+        }
+        if self.target_iters > 0 {
+            return Err(
+                "checkpointing needs a config-expressible session: the sim \
+                 convergence-target override has no config key"
+                    .into(),
+            );
+        }
+        let mut j = Json::obj();
+        j.set("workload", Json::Str(self.model.clone()));
+        j.set(
+            "workers",
+            Json::Arr(
+                self.workers
+                    .iter()
+                    .map(|w| {
+                        let mut o = Json::obj();
+                        match w.device {
+                            DeviceKind::Cpu { cores } => {
+                                o.set("cpu", Json::Num(cores as f64));
+                            }
+                            DeviceKind::Gpu { model } => {
+                                o.set("gpu", Json::Str(model.name().to_string()));
+                            }
+                        }
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set("policy", Json::Str(self.policy.label().to_string()));
+        if let Some(t) = &self.rl_table {
+            j.set("rl_table", Json::Str(t.clone()));
+        }
+        j.set("sync", Json::Str(self.sync.label()));
+        j.set("b0", Json::Num(self.b0 as f64));
+        if let Some(c) = self.adjust_cost_s {
+            j.set("adjust_cost_s", Json::Num(c));
+        }
+        j.set("noise_sigma", Json::Num(self.noise_sigma));
+        j.set("steps", Json::Num(self.steps as f64));
+        j.set("seed", Json::Num(self.seed as f64));
+        j.set("scheduler", Json::Str(self.scheduler.label().to_string()));
+        j.set("report_sample", Json::Num(self.report_sample as f64));
+        j.set("eager_agg", Json::Bool(self.eager_agg));
+        j.set("loss_target", Json::Num(self.loss_target));
+        j.set("eval_every", Json::Num(self.eval_every as f64));
+        j.set("pool_threads", Json::Num(self.pool_threads as f64));
+        j.set("prefetch", Json::Bool(self.prefetch));
+        let mut c = Json::obj();
+        c.set("deadband", Json::Num(self.controller.deadband));
+        c.set("ewma_alpha", Json::Num(self.controller.ewma_alpha));
+        c.set("min_obs", Json::Num(self.controller.min_obs as f64));
+        c.set("b_min", Json::Num(self.controller.b_min));
+        c.set("b_max", Json::Num(self.controller.b_max));
+        c.set("adaptive_bmax", Json::Bool(self.controller.adaptive_bmax));
+        c.set("conserve_global", Json::Bool(self.controller.conserve_global));
+        c.set("backoff", Json::Bool(self.controller.backoff));
+        c.set("backoff_cap", Json::Num(self.controller.backoff_cap as f64));
+        c.set("drift_reset", Json::Num(self.controller.drift_reset));
+        j.set("controller", c);
+        if let Some(s) = &self.slowdowns {
+            j.set(
+                "slowdowns",
+                Json::Arr(s.0.iter().map(|&c| Json::Num(c)).collect()),
+            );
+        }
+        if let Some(spec) = &self.spot {
+            j.set(
+                "spot",
+                Json::Str(format!("{}:{}:{}", spec.mttf_s, spec.down_s, spec.grace_s)),
+            );
+        }
+        if let Some(plan) = &self.membership {
+            if !plan.events().is_empty() {
+                j.set(
+                    "membership_events",
+                    Json::Arr(
+                        plan.events()
+                            .iter()
+                            .map(|e| {
+                                let mut o = Json::obj();
+                                o.set("time", Json::Num(e.time));
+                                o.set("worker", Json::Num(e.worker as f64));
+                                o.set("kind", Json::Str(e.kind.label().to_string()));
+                                o
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+        }
+        if let Some(plan) = &self.faults {
+            j.set("faults", Json::Str(plan.spec()));
+        }
+        if let Some(d) = &self.detector {
+            j.set("detect", Json::Str(d.spec()));
+        }
+        if let Some(a) = &self.autoscale {
+            j.set("autoscale", Json::Str(a.spec()));
+        }
+        Ok(j)
     }
 
     /// Ranks this config will run with — the fleet arbiter's demand.
@@ -1613,6 +1818,515 @@ impl<B: Backend> Session<B> {
         rs.report
     }
 
+    // ------------------------------------------ checkpoint/restore (§15)
+
+    /// Serialize the run's full mutable closure — virtual clock, sync
+    /// state, controller, rng-bearing subsystems (autoscaler, backend),
+    /// event queues, heaps' flat source-of-truth, and the report so far
+    /// — as one versioned JSON object (DESIGN.md §15).  Everything
+    /// derivable from the configuration (buckets, scheduler mode,
+    /// sampling period) is deliberately *not* persisted: restore
+    /// recomputes it, so a checkpoint can only resume under the same
+    /// config (which [`Checkpointer`] stores alongside as the echo).
+    ///
+    /// Floats ride through [`crate::ckpt::enc_f64`], so the
+    /// snapshot→restore round trip is bitwise even for non-finite
+    /// values, and a resumed run replays identically to an
+    /// uninterrupted one.
+    pub fn snapshot_run(&self, rs: &RunState) -> Json {
+        use crate::ckpt::{enc_f64, enc_f64_slice, enc_u64, CKPT_VERSION};
+
+        fn bools(v: &[bool]) -> Json {
+            Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect())
+        }
+        fn u64s(v: &[u64]) -> Json {
+            Json::Arr(v.iter().map(|&x| enc_u64(x)).collect())
+        }
+
+        let st = &rs.st;
+        let mut j = Json::obj();
+        j.set("version", Json::Num(CKPT_VERSION as f64));
+        j.set("t", enc_f64(st.t));
+        j.set("progress", enc_f64(st.progress));
+        j.set("global_batch", enc_f64(st.global_batch));
+        j.set("epoch", enc_u64(st.epoch));
+        j.set("updates", enc_u64(st.updates));
+        j.set("global_steps", enc_u64(st.global_steps));
+        j.set("iter_seen", enc_u64(st.iter_seen));
+        j.set("loss_seen", enc_u64(st.loss_seen));
+        j.set("n_plan_revoked", enc_u64(st.n_plan_revoked));
+        j.set("n_suspected", enc_u64(st.n_suspected));
+        j.set("target", enc_u64(rs.target));
+        j.set("hard_updates", enc_u64(rs.hard_updates));
+        j.set("stopped_early", Json::Bool(st.stopped_early));
+        j.set("done", Json::Bool(rs.done));
+        j.set("batches", enc_f64_slice(&st.batches));
+        j.set("exec_batch", enc_f64_slice(&st.exec_batch));
+        j.set("next_done", enc_f64_slice(&st.next_done));
+        j.set("started_at", enc_f64_slice(&st.started_at));
+        j.set("deadline", enc_f64_slice(&st.deadline));
+        j.set("pending_arrival", enc_f64_slice(&st.pending_arrival));
+        j.set("obs_sum", enc_f64_slice(&st.obs_sum));
+        j.set("live", bools(&st.live));
+        j.set("busy", bools(&st.busy));
+        j.set("suspected", bools(&st.suspected));
+        j.set("gen", u64s(&st.gen));
+        j.set("obs_n", u64s(&st.obs_n));
+        j.set(
+            "arrivals",
+            Json::Arr(st.arrivals.iter().map(|&w| Json::Num(w as f64)).collect()),
+        );
+        j.set(
+            "cur_buckets",
+            match &st.cur_buckets {
+                Some(v) => Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect()),
+                None => Json::Null,
+            },
+        );
+        j.set(
+            "round",
+            Json::Arr(
+                st.round
+                    .iter()
+                    .map(|&(w, s, d)| {
+                        Json::Arr(vec![Json::Num(w as f64), enc_f64(s), enc_f64(d)])
+                    })
+                    .collect(),
+            ),
+        );
+        j.set("sync", st.sync.snapshot());
+        j.set(
+            "controller",
+            match &st.controller {
+                Some(c) => {
+                    let mut cj = Json::obj();
+                    cj.set("label", Json::Str(c.label().to_string()));
+                    cj.set("state", c.snapshot());
+                    cj
+                }
+                None => Json::Null,
+            },
+        );
+        j.set(
+            "ascaler",
+            match &st.ascaler {
+                Some(a) => a.snapshot(),
+                None => Json::Null,
+            },
+        );
+        j.set(
+            "events",
+            Json::Arr(
+                rs.events
+                    .iter()
+                    .map(|e| {
+                        let mut ej = Json::obj();
+                        ej.set("time", enc_f64(e.time));
+                        ej.set("worker", Json::Num(e.worker as f64));
+                        ej.set("kind", Json::Str(e.kind.label().to_string()));
+                        ej
+                    })
+                    .collect(),
+            ),
+        );
+        j.set("report", rs.report.snapshot());
+        j.set("backend", self.backend.snapshot_state().unwrap_or(Json::Null));
+        j
+    }
+
+    /// Rebuild a [`RunState`] from a [`Self::snapshot_run`] object (and
+    /// the optional binary sidecar), on a session freshly built from
+    /// the checkpoint's own config echo.  Validates the snapshot
+    /// against this session at every seam — version, worker count,
+    /// sync mode and live mask, controller flavor, autoscaler and
+    /// bucket presence — so a checkpoint pointed at the wrong config
+    /// fails loudly instead of replaying garbage.  The event heaps and
+    /// the ready/blocked index are derived caches and are rebuilt from
+    /// the flat per-worker state; lazily-deleted stale entries of the
+    /// original heaps are simply absent, which the lazy-deletion
+    /// discipline makes equivalent.
+    pub fn restore_run(&mut self, state: &Json, bin: Option<&[u8]>) -> Result<RunState> {
+        use crate::ckpt::{dec_f64, dec_f64_vec, dec_u64, dec_usize, CKPT_VERSION};
+
+        fn jarr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+            j.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow!("checkpoint state: {key} is not an array"))
+        }
+        fn dec_bools(j: &Json, key: &str, k: usize) -> Result<Vec<bool>> {
+            let a = jarr(j, key)?;
+            if a.len() != k {
+                bail!("checkpoint state: {key} has {} entries, want {k}", a.len());
+            }
+            a.iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    v.as_bool()
+                        .ok_or_else(|| anyhow!("checkpoint state: {key}[{i}] is not a bool"))
+                })
+                .collect()
+        }
+        fn dec_f64s(j: &Json, key: &str, k: usize) -> Result<Vec<f64>> {
+            let v = dec_f64_vec(j.get(key)).map_err(|e| anyhow!("checkpoint state {key}: {e}"))?;
+            if v.len() != k {
+                bail!("checkpoint state: {key} has {} entries, want {k}", v.len());
+            }
+            Ok(v)
+        }
+        fn dec_u64s(j: &Json, key: &str, k: usize) -> Result<Vec<u64>> {
+            let a = jarr(j, key)?;
+            if a.len() != k {
+                bail!("checkpoint state: {key} has {} entries, want {k}", a.len());
+            }
+            a.iter()
+                .map(|v| dec_u64(v).map_err(|e| anyhow!("checkpoint state {key}: {e}")))
+                .collect()
+        }
+        fn num(j: &Json, key: &str) -> Result<f64> {
+            dec_f64(j.get(key)).map_err(|e| anyhow!("checkpoint state {key}: {e}"))
+        }
+        fn int(j: &Json, key: &str) -> Result<u64> {
+            dec_u64(j.get(key)).map_err(|e| anyhow!("checkpoint state {key}: {e}"))
+        }
+        fn flag(j: &Json, key: &str) -> Result<bool> {
+            j.get(key)
+                .as_bool()
+                .ok_or_else(|| anyhow!("checkpoint state: {key} is not a bool"))
+        }
+
+        match state.get("version").as_i64() {
+            Some(v) if v == CKPT_VERSION => {}
+            Some(v) => bail!("checkpoint state version {v}; this build reads {CKPT_VERSION}"),
+            None => bail!("checkpoint state carries no version"),
+        }
+
+        let k = self.backend.k();
+        let live = dec_bools(state, "live", k)?;
+        let busy = dec_bools(state, "busy", k)?;
+        let suspected = dec_bools(state, "suspected", k)?;
+        let batches = dec_f64s(state, "batches", k)?;
+        let exec_batch = dec_f64s(state, "exec_batch", k)?;
+        let next_done = dec_f64s(state, "next_done", k)?;
+        let started_at = dec_f64s(state, "started_at", k)?;
+        let deadline = dec_f64s(state, "deadline", k)?;
+        let pending_arrival = dec_f64s(state, "pending_arrival", k)?;
+        let obs_sum = dec_f64s(state, "obs_sum", k)?;
+        let gen = dec_u64s(state, "gen", k)?;
+        let obs_n = dec_u64s(state, "obs_n", k)?;
+
+        let arrivals: Vec<usize> = jarr(state, "arrivals")?
+            .iter()
+            .map(|v| dec_usize(v).map_err(|e| anyhow!("checkpoint state arrivals: {e}")))
+            .collect::<Result<_>>()?;
+        if let Some(&w) = arrivals.iter().find(|&&w| w >= k) {
+            bail!("checkpoint state: late arrival for worker {w} outside 0..{k}");
+        }
+
+        let mut round = Vec::new();
+        for (i, item) in jarr(state, "round")?.iter().enumerate() {
+            let t = item
+                .as_arr()
+                .ok_or_else(|| anyhow!("checkpoint state: round[{i}] is not an array"))?;
+            if t.len() != 3 {
+                bail!("checkpoint state: round[{i}] has {} fields, want 3", t.len());
+            }
+            let w = dec_usize(&t[0]).map_err(|e| anyhow!("checkpoint state round[{i}]: {e}"))?;
+            if w >= k {
+                bail!("checkpoint state: round member {w} outside 0..{k}");
+            }
+            round.push((
+                w,
+                dec_f64(&t[1]).map_err(|e| anyhow!("checkpoint state round[{i}]: {e}"))?,
+                dec_f64(&t[2]).map_err(|e| anyhow!("checkpoint state round[{i}]: {e}"))?,
+            ));
+        }
+
+        // Sync state must agree with the configured mode and live mask.
+        let sync_j = state.get("sync");
+        if jarr(sync_j, "clocks")?.len() != k {
+            bail!("checkpoint state: sync clocks disagree with {k} workers");
+        }
+        let sync =
+            SyncState::restore(sync_j).map_err(|e| anyhow!("checkpoint state sync: {e}"))?;
+        if sync.mode() != self.sync {
+            bail!(
+                "checkpoint was taken under {}; config says {}",
+                sync.mode().label(),
+                self.sync.label()
+            );
+        }
+        for w in 0..k {
+            if sync.is_live(w) != live[w] {
+                bail!("checkpoint state: sync and live mask disagree on worker {w}");
+            }
+        }
+
+        // Controller presence and flavor must match the configured policy.
+        let ctl_j = state.get("controller");
+        let controller: Option<Box<dyn BatchPolicy>> = match self.policy {
+            Policy::Uniform | Policy::Static => {
+                if !ctl_j.is_null() {
+                    bail!(
+                        "checkpoint carries controller state but the {} policy has none",
+                        self.policy.label()
+                    );
+                }
+                None
+            }
+            Policy::Dynamic | Policy::Optimal | Policy::Rl => {
+                let want = match self.policy {
+                    Policy::Dynamic => "dynamic",
+                    Policy::Optimal => "optimal",
+                    _ => "rl",
+                };
+                let got = ctl_j.get("label").as_str().ok_or_else(|| {
+                    anyhow!("checkpoint carries no controller state for the {want} policy")
+                })?;
+                if got != want {
+                    bail!("checkpoint controller is {got:?}; config wants {want:?}");
+                }
+                let cfg = self.controller.clone();
+                let cj = ctl_j.get("state");
+                Some(match self.policy {
+                    Policy::Dynamic => Box::new(
+                        DynamicBatcher::restore(cfg, cj).map_err(|e| anyhow!(e))?,
+                    ) as Box<dyn BatchPolicy>,
+                    Policy::Optimal => {
+                        Box::new(OptimalBatcher::restore(cfg, cj).map_err(|e| anyhow!(e))?)
+                    }
+                    _ => Box::new(RlBatcher::restore(cfg, cj).map_err(|e| anyhow!(e))?),
+                })
+            }
+        };
+
+        // Autoscaler: same presence agreement.
+        let asc_j = state.get("ascaler");
+        let ascaler = match (&self.autoscale, asc_j.is_null()) {
+            (Some(cfg), false) => Some(
+                Autoscaler::restore(cfg.clone(), asc_j)
+                    .map_err(|e| anyhow!("checkpoint state autoscaler: {e}"))?,
+            ),
+            (None, true) => None,
+            (Some(_), true) => {
+                bail!("config enables the autoscaler but the checkpoint has no autoscaler state")
+            }
+            (None, false) => {
+                bail!("checkpoint carries autoscaler state but the config has no autoscaler")
+            }
+        };
+
+        // Buckets are a backend property; the snapshot's view must agree.
+        let buckets = self.backend.buckets();
+        let cur_buckets = match (&buckets, state.get("cur_buckets").is_null()) {
+            (Some(_), false) => {
+                let a = jarr(state, "cur_buckets")?;
+                if a.len() != k {
+                    bail!(
+                        "checkpoint state: cur_buckets has {} entries, want {k}",
+                        a.len()
+                    );
+                }
+                Some(
+                    a.iter()
+                        .map(|v| {
+                            dec_usize(v).map_err(|e| anyhow!("checkpoint state cur_buckets: {e}"))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                )
+            }
+            (None, true) => None,
+            _ => bail!("checkpoint and backend disagree on bucketed execution"),
+        };
+
+        let mut events = VecDeque::new();
+        for (i, item) in jarr(state, "events")?.iter().enumerate() {
+            let time = dec_f64(item.get("time"))
+                .map_err(|e| anyhow!("checkpoint state events[{i}]: {e}"))?;
+            let worker = dec_usize(item.get("worker"))
+                .map_err(|e| anyhow!("checkpoint state events[{i}]: {e}"))?;
+            if worker >= k {
+                bail!("checkpoint state: membership event for worker {worker} outside 0..{k}");
+            }
+            let kind = match item.get("kind").as_str() {
+                Some("revoke") => MembershipKind::Revoke,
+                Some("join") => MembershipKind::Join,
+                other => bail!("checkpoint state: events[{i}] kind {other:?}"),
+            };
+            events.push_back(MembershipEvent { time, worker, kind });
+        }
+
+        let report = RunReport::restore(state.get("report"))
+            .map_err(|e| anyhow!("checkpoint state report: {e}"))?;
+
+        // Re-establish the backend in the same order a fresh start()
+        // would: membership presence, fault schedule, then the
+        // snapshotted stream/model state layered on top.
+        for w in 0..k {
+            if !live[w] {
+                self.backend.retire_worker(w)?;
+            }
+        }
+        if let Some(plan) = &self.faults {
+            self.backend.set_fault_plan(plan);
+        }
+        let backend_j = state.get("backend");
+        if !backend_j.is_null() {
+            self.backend
+                .restore_state(backend_j)
+                .map_err(|e| anyhow!("backend restore: {e}"))?;
+        }
+        if let Some(bytes) = bin {
+            self.backend
+                .restore_binary(bytes)
+                .map_err(|e| anyhow!("backend restore: {e}"))?;
+        }
+
+        let mut st = LoopState {
+            batches,
+            exec_batch,
+            cur_buckets,
+            buckets,
+            controller,
+            sync,
+            live,
+            epoch: int(state, "epoch")?,
+            t: num(state, "t")?,
+            progress: num(state, "progress")?,
+            updates: int(state, "updates")?,
+            global_steps: int(state, "global_steps")?,
+            busy,
+            next_done,
+            started_at,
+            round,
+            stopped_early: flag(state, "stopped_early")?,
+            global_batch: num(state, "global_batch")?,
+            is_bsp: matches!(self.sync, SyncMode::Bsp),
+            heap_mode: self.scheduler == Scheduler::Heap,
+            ready: BTreeSet::new(),
+            blocked: BTreeMap::new(),
+            done_heap: BinaryHeap::new(),
+            gen,
+            wave_buf: Vec::with_capacity(k),
+            members_buf: Vec::with_capacity(k),
+            alloc_buf: Vec::with_capacity(k),
+            report_sample: self.report_sample.max(1),
+            iter_seen: int(state, "iter_seen")?,
+            loss_seen: int(state, "loss_seen")?,
+            discount_cache: vec![f64::NAN; DISCOUNT_MEMO],
+            deadline,
+            deadline_heap: BinaryHeap::new(),
+            suspected,
+            pending_arrival,
+            arrivals,
+            obs_sum,
+            obs_n,
+            track_obs: self.detector.is_some()
+                || self.autoscale.as_ref().map_or(false, |a| a.tput > 0.0),
+            n_plan_revoked: int(state, "n_plan_revoked")?,
+            n_suspected: int(state, "n_suspected")?,
+            ascaler,
+        };
+        if st.heap_mode {
+            for w in 0..k {
+                if st.busy[w] {
+                    st.done_heap.push(DoneEntry {
+                        time: st.next_done[w],
+                        worker: w,
+                        gen: st.gen[w],
+                    });
+                    if st.deadline[w].is_finite() {
+                        st.deadline_heap.push(DoneEntry {
+                            time: st.deadline[w],
+                            worker: w,
+                            gen: st.gen[w],
+                        });
+                    }
+                } else if st.live[w] {
+                    st.note_idle(w);
+                }
+            }
+        }
+
+        Ok(RunState {
+            st,
+            events,
+            report,
+            target: int(state, "target")?,
+            hard_updates: int(state, "hard_updates")?,
+            done: flag(state, "done")?,
+        })
+    }
+
+    /// [`Self::run`] with durable checkpoints: start, commit a seq-0
+    /// snapshot (so even an immediate crash has a resume point), then
+    /// drive with periodic commits at update boundaries.  `stop_at`
+    /// simulates a coordinator crash at that virtual time (test/fault
+    /// injection): the loop stops *without* a final snapshot, exactly
+    /// like a process kill.
+    pub fn run_checkpointed(
+        &mut self,
+        config: &Json,
+        ck: &mut Checkpointer,
+        stop_at: Option<f64>,
+    ) -> Result<CkptOutcome> {
+        let rs = self.start()?;
+        let state = self.snapshot_run(&rs);
+        let bin = self.backend.snapshot_binary();
+        ck.commit(config, &state, bin.as_deref())
+            .map_err(|e| anyhow!(e))?;
+        self.drive_checkpointed(rs, config, ck, stop_at)
+    }
+
+    /// Continue a [`Self::restore_run`] state under the same
+    /// checkpoint discipline (the [`Checkpointer`] numbers new commits
+    /// past the recovered ones).
+    pub fn resume_checkpointed(
+        &mut self,
+        rs: RunState,
+        config: &Json,
+        ck: &mut Checkpointer,
+        stop_at: Option<f64>,
+    ) -> Result<CkptOutcome> {
+        self.drive_checkpointed(rs, config, ck, stop_at)
+    }
+
+    fn drive_checkpointed(
+        &mut self,
+        mut rs: RunState,
+        config: &Json,
+        ck: &mut Checkpointer,
+        stop_at: Option<f64>,
+    ) -> Result<CkptOutcome> {
+        let every = ck.spec().every_s;
+        // Snapshot only at consistent cuts: an update or membership
+        // epoch boundary (DESIGN.md §15), throttled to one per
+        // `every_s` of virtual time.
+        let mut last_mark = (rs.st.global_steps, rs.st.updates, rs.st.epoch);
+        let mut last_snap_t = rs.st.t;
+        loop {
+            if let Some(at) = stop_at {
+                if rs.st.t >= at && !rs.done {
+                    return Ok(CkptOutcome::Stopped { t: rs.st.t });
+                }
+            }
+            if !self.step(&mut rs)? {
+                break;
+            }
+            let mark = (rs.st.global_steps, rs.st.updates, rs.st.epoch);
+            if mark != last_mark {
+                last_mark = mark;
+                if rs.st.t - last_snap_t >= every {
+                    let state = self.snapshot_run(&rs);
+                    let bin = self.backend.snapshot_binary();
+                    ck.commit(config, &state, bin.as_deref())
+                        .map_err(|e| anyhow!(e))?;
+                    last_snap_t = rs.st.t;
+                }
+            }
+        }
+        Ok(CkptOutcome::Completed(self.finish(rs)))
+    }
+
     /// Close the open BSP round: barrier accounting, one λ-weighted
     /// aggregate update over the round's members (the contributions
     /// themselves were staged at each completion event — eager backends
@@ -2127,6 +2841,17 @@ impl RunState {
     pub fn spawn_pool_left(&self) -> Option<usize> {
         self.st.ascaler.as_ref().map(|a| a.pool_left())
     }
+}
+
+/// How a checkpointed drive ([`Session::run_checkpointed`] /
+/// [`Session::resume_checkpointed`]) ended.
+pub enum CkptOutcome {
+    /// Ran to its budget/target; the finished report.
+    Completed(RunReport),
+    /// The injected coordinator crash (`stop_at`) fired at virtual
+    /// time `t` — state above the last durable checkpoint is lost,
+    /// exactly like a process kill.
+    Stopped { t: f64 },
 }
 
 /// Mutable per-run state of the [`Session::run`] event loop, factored
@@ -3043,5 +3768,150 @@ mod tests {
                 (b.worker, b.iter, b.start, b.duration, b.batch, b.wait)
             );
         }
+    }
+
+    fn tmp_ckpt_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("hbatch_sess_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn builder_config_echo_is_a_fixed_point() {
+        // to_json → from_json → to_json must reproduce the same text:
+        // the echo is what a checkpoint stores, and a drifting echo
+        // would silently resume a different run.
+        let mk = || {
+            SessionBuilder::default()
+                .model("mnist")
+                .cores(&[4, 8, 27])
+                .policy(Policy::Dynamic)
+                .sync(SyncMode::Ssp { bound: 3 })
+                .steps(50)
+                .adjust_cost(2.0)
+                .seed(7)
+                .spot(SpotSpec { mttf_s: 8.0, down_s: 2.0, grace_s: 0.3 })
+                .faults(FaultPlan::parse("stall:2@10:6,slow:0@5:2.5:30").unwrap())
+                .detector(DetectorCfg::parse("grace=4,floor=5,late=drop").unwrap())
+                .autoscale(AutoscalerCfg::parse("pool=1,cold=1,jitter=0.2").unwrap())
+        };
+        let j = mk().to_json().unwrap();
+        let j2 = SessionBuilder::from_json(&j).unwrap().to_json().unwrap();
+        assert_eq!(j.to_pretty(), j2.to_pretty());
+        // Programmatic-only configurations refuse to echo.
+        assert!(mk().traces(ClusterTraces::constant(3)).to_json().is_err());
+    }
+
+    /// The tentpole lock: kill the coordinator mid-run, recover from
+    /// the latest durable checkpoint through the stored config echo,
+    /// resume — the stitched report is *bitwise* identical to an
+    /// uninterrupted run, across sync modes and policies under spot
+    /// churn (tests/ckpt_roundtrip.rs fans the same property over
+    /// random scenarios and crash points on the mock backend).
+    #[test]
+    fn crash_resume_replays_bitwise_on_sim() {
+        use crate::ckpt::{recover_latest, CkptSpec};
+        for (i, (sync, policy)) in [
+            (SyncMode::Bsp, Policy::Dynamic),
+            (SyncMode::Asp, Policy::Optimal),
+            (SyncMode::Ssp { bound: 2 }, Policy::Rl),
+            (SyncMode::Bsp, Policy::Uniform),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mk = || {
+                SessionBuilder::default()
+                    .model("mnist")
+                    .cores(&[4, 8, 27])
+                    .policy(policy)
+                    .sync(sync)
+                    .steps(120)
+                    .adjust_cost(1.0)
+                    .seed(5)
+                    .spot(SpotSpec { mttf_s: 8.0, down_s: 2.0, grace_s: 0.3 })
+            };
+            let base = mk().build_sim().unwrap().run().unwrap();
+
+            let dir = tmp_ckpt_dir(&format!("rt{i}"));
+            let spec = CkptSpec { dir: dir.clone(), every_s: 0.0, keep_n: 3 };
+            let config = mk().to_json().unwrap();
+            let mut sess = mk().build_sim().unwrap();
+            let mut ck = Checkpointer::open(spec.clone()).unwrap();
+            let crash_at = base.total_time / 2.0;
+            match sess
+                .run_checkpointed(&config, &mut ck, Some(crash_at))
+                .unwrap()
+            {
+                CkptOutcome::Stopped { t } => assert!(t >= crash_at),
+                CkptOutcome::Completed(_) => {
+                    panic!("{sync:?}/{policy:?}: run outlived its crash")
+                }
+            }
+
+            let lc = recover_latest(&dir).unwrap();
+            assert!(lc.seq >= 1, "no boundary snapshot before the crash");
+            let mut rsess = SessionBuilder::from_json(&lc.config)
+                .unwrap()
+                .build_sim()
+                .unwrap();
+            let rs = rsess
+                .restore_run(&lc.state, lc.backend_bin.as_deref())
+                .unwrap();
+            let mut ck2 = Checkpointer::open(spec).unwrap();
+            let resumed = match rsess
+                .resume_checkpointed(rs, &lc.config, &mut ck2, None)
+                .unwrap()
+            {
+                CkptOutcome::Completed(r) => r,
+                CkptOutcome::Stopped { .. } => unreachable!(),
+            };
+            assert_eq!(
+                base.snapshot().to_pretty(),
+                resumed.snapshot().to_pretty(),
+                "{sync:?}/{policy:?}: resumed report diverged"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn restore_rejects_version_and_config_mismatches() {
+        let mk = |sync| {
+            SessionBuilder::default()
+                .model("mnist")
+                .cores(&[4, 8])
+                .policy(Policy::Dynamic)
+                .sync(sync)
+                .steps(20)
+                .seed(2)
+        };
+        let mut sess = mk(SyncMode::Bsp).build_sim().unwrap();
+        let rs = sess.start().unwrap();
+        let state = sess.snapshot_run(&rs);
+
+        let mut wrong_ver = state.clone();
+        wrong_ver.set("version", Json::Num(99.0));
+        assert!(mk(SyncMode::Bsp)
+            .build_sim()
+            .unwrap()
+            .restore_run(&wrong_ver, None)
+            .is_err());
+
+        // Sync mode drifted between checkpoint and resume config.
+        assert!(mk(SyncMode::Asp)
+            .build_sim()
+            .unwrap()
+            .restore_run(&state, None)
+            .is_err());
+
+        // Policy drifted: uniform has no controller state to accept.
+        assert!(mk(SyncMode::Bsp)
+            .policy(Policy::Uniform)
+            .build_sim()
+            .unwrap()
+            .restore_run(&state, None)
+            .is_err());
     }
 }

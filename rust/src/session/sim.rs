@@ -23,6 +23,7 @@ use crate::cluster::{CapacityModel, WorkerSpec, WorkloadProfile};
 use crate::fault::{FaultPlan, FaultState};
 use crate::session::{Backend, WorkerOutcome};
 use crate::sync::staleness_discount;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Staleness discount sharpness for ASP statistical efficiency.
@@ -132,6 +133,40 @@ impl Backend for SimBackend {
 
     fn eval(&mut self, _step: u64, _now: f64) -> Result<Option<(f64, f64)>> {
         Ok(None)
+    }
+
+    fn snapshot_state(&self) -> Option<Json> {
+        use crate::ckpt::{enc_opt_f64, enc_u128};
+        let (state, inc, spare) = self.rng.state_parts();
+        let mut j = Json::obj();
+        j.set("rng_state", enc_u128(state));
+        j.set("rng_inc", enc_u128(inc));
+        j.set("rng_spare", enc_opt_f64(spare));
+        if let Some(f) = &self.faults {
+            j.set("faults", f.snapshot());
+        }
+        Some(j)
+    }
+
+    fn restore_state(&mut self, j: &Json) -> Result<(), String> {
+        use crate::ckpt::{dec_opt_f64, dec_u128};
+        self.rng = Rng::from_parts(
+            dec_u128(j.get("rng_state"))?,
+            dec_u128(j.get("rng_inc"))?,
+            dec_opt_f64(j.get("rng_spare"))?,
+        );
+        match (self.faults.as_mut(), j.get("faults")) {
+            (_, Json::Null) => {}
+            (Some(f), snap) => f.restore(snap)?,
+            (None, _) => {
+                return Err(
+                    "backend snapshot carries fault state but no plan is set \
+                     (restore order: set_fault_plan before restore_state)"
+                        .into(),
+                )
+            }
+        }
+        Ok(())
     }
 }
 

@@ -272,6 +272,82 @@ impl SyncState {
         staleness
     }
 
+    /// Checkpoint snapshot (DESIGN.md §15): mode + the irreducible
+    /// state (`clocks`, `version`, `pulled`, `live`, `epoch`).  The
+    /// incremental aggregates (`n_live`, `clock_counts`) are derived
+    /// mirrors and are rebuilt on restore rather than persisted.
+    pub fn snapshot(&self) -> crate::util::json::Json {
+        use crate::ckpt::enc_u64;
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        j.set("mode", Json::Str(self.mode.label()));
+        j.set(
+            "clocks",
+            Json::Arr(self.clocks.iter().map(|&c| enc_u64(c)).collect()),
+        );
+        j.set("version", enc_u64(self.version));
+        j.set(
+            "pulled",
+            Json::Arr(self.pulled.iter().map(|&p| enc_u64(p)).collect()),
+        );
+        j.set("live", Json::Arr(self.live.iter().map(|&l| Json::Bool(l)).collect()));
+        j.set("epoch", enc_u64(self.epoch));
+        j
+    }
+
+    /// Rebuild from a [`SyncState::snapshot`], reconstructing the
+    /// incremental aggregates from the persisted clocks + membership.
+    pub fn restore(j: &crate::util::json::Json) -> Result<SyncState, String> {
+        use crate::ckpt::dec_u64;
+        let mode = j
+            .get("mode")
+            .as_str()
+            .and_then(SyncMode::parse)
+            .ok_or_else(|| format!("bad sync mode {:?}", j.get("mode")))?;
+        let clocks: Vec<u64> = j
+            .get("clocks")
+            .as_arr()
+            .ok_or("sync clocks missing")?
+            .iter()
+            .map(dec_u64)
+            .collect::<Result<_, _>>()?;
+        let pulled: Vec<u64> = j
+            .get("pulled")
+            .as_arr()
+            .ok_or("sync pulled missing")?
+            .iter()
+            .map(dec_u64)
+            .collect::<Result<_, _>>()?;
+        let live: Vec<bool> = j
+            .get("live")
+            .as_arr()
+            .ok_or("sync live missing")?
+            .iter()
+            .map(|b| b.as_bool().ok_or_else(|| format!("bad live flag {b:?}")))
+            .collect::<Result<_, _>>()?;
+        if clocks.len() != live.len() || pulled.len() != live.len() {
+            return Err("sync vectors disagree on k".to_string());
+        }
+        let mut n_live = 0;
+        let mut clock_counts = std::collections::BTreeMap::new();
+        for (&c, &l) in clocks.iter().zip(&live) {
+            if l {
+                n_live += 1;
+                *clock_counts.entry(c).or_insert(0) += 1;
+            }
+        }
+        Ok(SyncState {
+            mode,
+            clocks,
+            version: dec_u64(j.get("version"))?,
+            pulled,
+            live,
+            epoch: dec_u64(j.get("epoch"))?,
+            n_live,
+            clock_counts,
+        })
+    }
+
     /// BSP full-barrier check: all *live* workers at the same clock.
     /// O(1): the clock multiset has at most one distinct key.
     pub fn at_barrier(&self) -> bool {
@@ -494,6 +570,31 @@ mod tests {
         // Sole survivor re-admitted: its frozen clock is the new band.
         s.admit(0);
         assert_eq!((s.min_clock(), s.max_clock()), (1, 1));
+    }
+
+    #[test]
+    fn snapshot_round_trip_preserves_gating() {
+        let mut s = SyncState::new(SyncMode::Ssp { bound: 2 }, 4);
+        for _ in 0..3 {
+            s.pull(0);
+            s.push_update(0);
+        }
+        s.pull(1);
+        s.push_update(1);
+        s.retire(3);
+        let j = crate::util::json::Json::parse(&s.snapshot().to_string()).unwrap();
+        let r = SyncState::restore(&j).unwrap();
+        assert_eq!(r.mode(), s.mode());
+        assert_eq!(r.version(), s.version());
+        assert_eq!(r.epoch(), s.epoch());
+        assert_eq!(r.live_count(), s.live_count());
+        assert_eq!((r.min_clock(), r.max_clock()), (s.min_clock(), s.max_clock()));
+        for w in 0..4 {
+            assert_eq!(r.clock(w), s.clock(w));
+            assert_eq!(r.is_live(w), s.is_live(w));
+            assert_eq!(r.may_proceed(w), s.may_proceed(w));
+        }
+        assert_eq!(r.at_barrier(), s.at_barrier());
     }
 
     #[test]

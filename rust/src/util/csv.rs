@@ -56,7 +56,8 @@ impl Table {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
         }
-        std::fs::write(path, self.to_string())
+        // Atomic so a kill mid-save never leaves a torn figure CSV.
+        crate::util::fs::atomic_write(path.as_ref(), self.to_string().as_bytes())
     }
 }
 

@@ -1,0 +1,88 @@
+//! Crash-safe file writes.
+//!
+//! Every durable artifact this project emits — bench JSON, golden
+//! scenarios, figure CSVs, run reports, checkpoints — goes through
+//! [`atomic_write`]: write to a temp file in the destination directory,
+//! fsync it, then rename over the target.  A kill at any point leaves
+//! either the old bytes or the new bytes, never a torn file.
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::Path;
+
+/// Atomically replace `path` with `bytes`.
+///
+/// The temp file lives in `path`'s parent directory so the final
+/// `rename` stays within one filesystem (cross-device renames are not
+/// atomic).  The temp name is keyed on the process id, so concurrent
+/// writers in different processes never collide on the staging file;
+/// concurrent writers of the *same* target race benignly (last rename
+/// wins, both outcomes are complete files).
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let name = path
+        .file_name()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "path has no file name"))?;
+    let tmp = dir.join(format!(
+        ".{}.tmp.{}",
+        name.to_string_lossy(),
+        std::process::id()
+    ));
+    let mut f = File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    if let Err(e) = fs::rename(&tmp, path) {
+        let _ = fs::remove_file(&tmp);
+        return Err(e);
+    }
+    // Persist the rename itself: fsync the containing directory.  Some
+    // platforms (and some filesystems) refuse to open a directory for
+    // writing — a failure here downgrades durability, not atomicity, so
+    // it is deliberately ignored.
+    let _ = File::open(&dir).and_then(|d| d.sync_all());
+    Ok(())
+}
+
+/// [`atomic_write`] for string content with a panic on failure — the
+/// drop-in shape for the bench/figure/golden emitters that previously
+/// used `std::fs::write(..).expect(..)`.
+pub fn atomic_write_str(path: &Path, content: &str) {
+    atomic_write(path, content.as_bytes())
+        .unwrap_or_else(|e| panic!("atomic write {}: {e}", path.display()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_replaces() {
+        let dir = std::env::temp_dir().join("hbatch_fs_test");
+        let _ = fs::create_dir_all(&dir);
+        let p = dir.join("out.json");
+        atomic_write(&p, b"first").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"first");
+        atomic_write(&p, b"second, longer payload").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"second, longer payload");
+        // No staging litter left behind.
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+    }
+
+    #[test]
+    fn bare_filename_targets_cwd() {
+        // A relative path with no parent component must not panic.
+        let name = format!("hbatch_fs_bare_{}.tmp_target", std::process::id());
+        atomic_write(Path::new(&name), b"x").unwrap();
+        assert_eq!(fs::read(&name).unwrap(), b"x");
+        let _ = fs::remove_file(&name);
+    }
+}

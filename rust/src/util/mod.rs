@@ -10,6 +10,7 @@
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod fs;
 pub mod json;
 pub mod pool;
 pub mod proptest;

@@ -46,6 +46,18 @@ impl Ewma {
         self.value = None;
         self.count = 0;
     }
+
+    /// Snapshot `(value, count)` for checkpointing (alpha is config, not
+    /// state — the restorer already knows it).
+    pub fn state(&self) -> (Option<f64>, usize) {
+        (self.value, self.count)
+    }
+
+    /// Restore a snapshot taken with [`Ewma::state`].
+    pub fn set_state(&mut self, value: Option<f64>, count: usize) {
+        self.value = value;
+        self.count = count;
+    }
 }
 
 /// Welford online mean/variance.

@@ -2,6 +2,7 @@
 //! actuated through the membership revocation path, seed derivation
 //! from the fleet config, and interleaved/parallel path agreement.
 
+use hetero_batch::ckpt::{has_ckpts, CkptSpec};
 use hetero_batch::config::Policy;
 use hetero_batch::fleet::{job_seed, ArbiterPolicy, FleetBuilder, JobSpec};
 use hetero_batch::metrics::RunReport;
@@ -200,4 +201,88 @@ fn fleet_report_json_schema() {
             assert!(!jj.get(key).is_null(), "missing job key {key}");
         }
     }
+}
+
+/// Tentpole (DESIGN.md §15): a contended priority fleet is killed
+/// mid-run by coordinator crash injection — twice — and each rerun of
+/// the same command (same checkpoint dir) resumes from the latest
+/// durable snapshot.  The final report must be bitwise identical to an
+/// uninterrupted run: preempt-to-disk means no granted rank, pending
+/// regrant, or half-finished tenant session is lost across the kills,
+/// and commits after a restore continue the same sequence numbers.
+#[test]
+fn fleet_crash_resume_is_bitwise_identical() {
+    let dir = std::env::temp_dir().join(format!("hbatch_fleet_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let build = || {
+        let mut f = FleetBuilder::new()
+            .capacity(8)
+            .policy(ArbiterPolicy::Priority)
+            .interleave(true)
+            .seed(11);
+        for i in 0..2 {
+            let mut spec = JobSpec::new(&format!("low{i}"), job(10 + i, &[4, 8, 4, 8], 400));
+            spec.priority = 0;
+            f = f.job(spec);
+        }
+        let mut hi = JobSpec::new("high", job(99, &[8, 8, 8, 8, 8, 8], 20));
+        hi.priority = 5;
+        hi.arrival = 5.0;
+        f.job(hi)
+    };
+
+    // Uninterrupted reference (same builder, no checkpointing).
+    let base = build().build().unwrap().run().unwrap();
+    assert!(base.makespan > 0.0);
+    // Sparse cadence on top of the forced membership-change commits, so
+    // both commit triggers are on the exercised path.
+    let spec = CkptSpec {
+        dir: dir.clone(),
+        every_s: base.makespan / 20.0,
+        keep_n: 3,
+    };
+
+    // First kill: mid-run, while the preempted low jobs are at their
+    // floors or the regrants are still pending.
+    let crashed = build()
+        .checkpoint(spec.clone())
+        .crash_at(base.makespan * 0.35)
+        .build()
+        .unwrap()
+        .run_resumable()
+        .unwrap();
+    assert!(crashed.is_none(), "crash injection must stop the fleet");
+    assert!(has_ckpts(&dir), "preempt-to-disk left no checkpoint behind");
+
+    // Second kill: the resumed coordinator crashes again later on.
+    let crashed = build()
+        .checkpoint(spec.clone())
+        .crash_at(base.makespan * 0.7)
+        .build()
+        .unwrap()
+        .run_resumable()
+        .unwrap();
+    assert!(crashed.is_none(), "second crash injection must stop the fleet");
+
+    // Final rerun with no injection drains the fleet.
+    let resumed = build()
+        .checkpoint(spec)
+        .build()
+        .unwrap()
+        .run_resumable()
+        .unwrap()
+        .expect("no crash injected on the final rerun");
+    assert_eq!(base.jobs.len(), resumed.jobs.len());
+    for (a, b) in base.jobs.iter().zip(&resumed.jobs) {
+        assert!(a.report.bitwise_eq(&b.report), "{} diverged across crashes", a.name);
+        assert_eq!(a.completion, b.completion, "{}", a.name);
+        assert_eq!(a.fleet_preemptions, b.fleet_preemptions, "{}", a.name);
+        assert_eq!(a.fleet_regrants, b.fleet_regrants, "{}", a.name);
+    }
+    assert_eq!(
+        base.to_json().to_pretty(),
+        resumed.to_json().to_pretty(),
+        "fleet aggregates diverged across crash/resume"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1669,3 +1669,79 @@ fn prop_fleet_isolation_uncontended_bitwise() {
             && reports.iter().zip(&solo).all(|(a, b)| a.bitwise_eq(b))
     });
 }
+
+// =====================================================================
+// Checkpoint round-trip (DESIGN.md §15)
+
+/// Snapshot at a *random* `step()` boundary — not just a round boundary
+/// — under BSP/ASP/SSP schedules with and without churn, across every
+/// controller family, then restore into a freshly built session and run
+/// both to completion: the resumed report must be bitwise identical to
+/// the uninterrupted one.
+#[test]
+fn prop_ckpt_snapshot_restore_replays_bitwise() {
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(3, 6);
+        let durs: Vec<f64> = (0..k).map(|_| rng.range_f64(0.5, 3.5)).collect();
+        (
+            durs,
+            rng.range_usize(0, 3),      // sync selector
+            rng.range_usize(0, 4),      // policy selector
+            rng.range_usize(1, 60),     // steps before the snapshot
+            rng.range_usize(0, 2) == 1, // churn on/off
+        )
+    });
+    check("ckpt roundtrip bitwise", 50, strat, |s| {
+        let (durs, si, pi, boundary, churn) = s;
+        let sync = [SyncMode::Bsp, SyncMode::Asp, SyncMode::Ssp { bound: 2 }][*si];
+        let policy = [Policy::Dynamic, Policy::Optimal, Policy::Rl, Policy::Uniform][*pi];
+        let mut builder = Session::builder()
+            .policy(policy)
+            .sync(sync)
+            .steps(25)
+            .adjust_cost(0.5);
+        if *churn {
+            builder = builder.membership(MembershipPlan::new(vec![
+                MembershipEvent {
+                    time: 6.5,
+                    worker: 0,
+                    kind: MembershipKind::Revoke,
+                },
+                MembershipEvent {
+                    time: 14.5,
+                    worker: 0,
+                    kind: MembershipKind::Join,
+                },
+            ]));
+        }
+        let mock = || FixedScheduleBackend {
+            durs: durs.clone(),
+            real_shaped: false,
+            faults: None,
+        };
+        // Uninterrupted reference.
+        let mut b_sess = builder.clone().build_with(mock()).unwrap();
+        let mut b_rs = b_sess.start().unwrap();
+        while b_sess.step(&mut b_rs).unwrap() {}
+        let base = b_sess.finish(b_rs);
+        // Interrupted at `boundary` steps (or wherever the run ends).
+        let mut s1 = builder.clone().build_with(mock()).unwrap();
+        let mut rs1 = s1.start().unwrap();
+        let mut alive = true;
+        for _ in 0..*boundary {
+            if !alive {
+                break;
+            }
+            alive = s1.step(&mut rs1).unwrap();
+        }
+        let snap = s1.snapshot_run(&rs1);
+        // A fresh session restores the snapshot and finishes the run.
+        let mut s2 = builder.clone().build_with(mock()).unwrap();
+        let mut rs2 = s2.restore_run(&snap, None).unwrap();
+        if alive {
+            while s2.step(&mut rs2).unwrap() {}
+        }
+        let resumed = s2.finish(rs2);
+        base.bitwise_eq(&resumed)
+    });
+}

@@ -375,7 +375,7 @@ fn scenario_matrix_matches_goldens() {
                 ));
                 continue;
             }
-            std::fs::write(&path, actual.to_pretty()).unwrap();
+            hetero_batch::util::fs::atomic_write_str(&path, &actual.to_pretty());
             eprintln!(
                 "scenario_regression: {} golden {}",
                 if update { "updated" } else { "bootstrapped" },
@@ -398,7 +398,7 @@ fn scenario_matrix_matches_goldens() {
                 Json::Arr(diff.iter().map(|d| Json::Str(d.clone())).collect()),
             );
             let dp = dd.join(format!("{name}.json"));
-            std::fs::write(&dp, pair.to_pretty()).unwrap();
+            hetero_batch::util::fs::atomic_write_str(&dp, &pair.to_pretty());
             failures.push(format!("{name}: {} (full diff: {})", diff[0], dp.display()));
         }
     }

@@ -2,6 +2,8 @@
 # Tier-1 gate (see ROADMAP.md) + hot-path bench smoke.
 #
 #   build --release  →  test -q  →  quick aggregation-only hotpath bench
+#   →  session/fleet bench smokes  →  CLI smokes (fault recovery, batch
+#   policies, crash → resume bit-identity)
 #
 # The bench smoke runs with --agg-only (no PJRT artifacts needed) and
 # HBATCH_BENCH_QUICK=1 (short measurement windows); partial/quick runs
@@ -104,5 +106,33 @@ for pol in pid optimal rl; do
         exit 1
     fi
 done
+
+echo "== tier1: crash -> resume smoke (bit-identical checkpoint restore) =="
+# DESIGN.md §15 end-to-end from the CLI: the same churned run is (a) run
+# to completion, (b) killed mid-run by coordinator-crash injection, then
+# (c) resumed from the latest durable checkpoint.  The resumed report
+# must be byte-identical to the uninterrupted one — the whole point of
+# the checkpoint subsystem is that a crash is invisible in the results.
+ckpt_dir=$(mktemp -d)
+sim_args=(--workload mnist --cores 4,4,8 --policy dynamic --sync bsp
+    --iters 50 --seed 4 --spot 30:8:1)
+full_out=$(./target/release/hbatch simulate "${sim_args[@]}")
+# Crash halfway through the uninterrupted run's virtual makespan, so the
+# kill always lands mid-run whatever the workload's time scale.
+total=$(grep -o '"total_time_s": [0-9.e+-]*' <<<"$full_out" | head -1 | awk '{print $2}')
+crash_t=$(awk -v t="$total" 'BEGIN{printf "%.3f", t/2}')
+crash_out=$(./target/release/hbatch simulate "${sim_args[@]}" \
+    --checkpoint "$ckpt_dir:0:2" --crash-at "$crash_t")
+if ! grep -q 'coordinator crashed' <<<"$crash_out"; then
+    echo "tier1: crash injection at t=$crash_t did not stop the coordinator" >&2
+    exit 1
+fi
+resume_out=$(./target/release/hbatch resume --from "$ckpt_dir")
+if [[ "$full_out" != "$resume_out" ]]; then
+    echo "tier1: resumed report differs from the uninterrupted run" >&2
+    diff <(echo "$full_out") <(echo "$resume_out") >&2 || true
+    exit 1
+fi
+rm -rf "$ckpt_dir"
 
 echo "tier1: OK"
