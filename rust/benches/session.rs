@@ -29,6 +29,7 @@
 
 use hetero_batch::ckpt::{Checkpointer, CkptSpec};
 use hetero_batch::config::Policy;
+use hetero_batch::fault::GuardCfg;
 use hetero_batch::metrics::RunReport;
 use hetero_batch::session::{CkptOutcome, Scheduler, Session, SessionBuilder};
 use hetero_batch::sync::SyncMode;
@@ -186,6 +187,35 @@ fn main() {
         });
     }
     let _ = std::fs::remove_dir_all(&ck_dir);
+    // Update-guard overhead (DESIGN.md §16): the same runs with the
+    // finite/norm gate armed but nothing corrupted — the guard checks
+    // every completion and accepts all of them — against guard-off.
+    // The idle guard is *bitwise* invisible (locked by
+    // tests/property.rs), so derived `guard_overhead/<cell>/time_vs_off`
+    // reads directly as the pure gate cost, on a quiet cluster and
+    // under membership churn.
+    for variant in ["dynamic", "churn"] {
+        let off_bld = builder(8, SyncMode::Bsp, variant);
+        let on_bld = off_bld.clone().guard(GuardCfg::default());
+        // Self-check: an enabled-but-never-firing guard must not change
+        // the run it is pricing.
+        let off_r = run_once(&off_bld, Scheduler::Heap);
+        let on_r = run_once(&on_bld, Scheduler::Heap);
+        assert_eq!(
+            (off_r.total_time, off_r.total_iters, off_r.epochs.len()),
+            (on_r.total_time, on_r.total_iters, on_r.epochs.len()),
+            "idle guard changed the {variant} run"
+        );
+        assert!(
+            on_r.rejections.is_empty() && on_r.quarantines.is_empty(),
+            "guard fired without corruption at {variant}"
+        );
+        for (label, bld) in [("off", &off_bld), ("on", &on_bld)] {
+            b.run(&format!("guard_overhead/{label}/k8/bsp/{variant}"), || {
+                run_once(bld, Scheduler::Heap).total_time
+            });
+        }
+    }
     b.report();
 
     // Derived heap-vs-scan speedups (scan_mean / heap_mean; > 1 = the
@@ -221,6 +251,18 @@ fn main() {
             if off > 0.0 {
                 derived.set(
                     &format!("ckpt_overhead/{label}/time_vs_off"),
+                    Json::Num(on / off),
+                );
+            }
+        }
+    }
+    for variant in ["dynamic", "churn"] {
+        let off = find_mean_ns(&groups, &format!("session/guard_overhead/off/k8/bsp/{variant}"));
+        let on = find_mean_ns(&groups, &format!("session/guard_overhead/on/k8/bsp/{variant}"));
+        if let (Some(off), Some(on)) = (off, on) {
+            if off > 0.0 {
+                derived.set(
+                    &format!("guard_overhead/{variant}/time_vs_off"),
                     Json::Num(on / off),
                 );
             }

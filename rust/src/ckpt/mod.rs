@@ -25,8 +25,10 @@ use crate::util::json::Json;
 
 /// Format version of the checkpoint manifest + state schema.  Bump on
 /// any incompatible change; recovery rejects mismatched checkpoints
-/// instead of misinterpreting them.
-pub const CKPT_VERSION: i64 = 1;
+/// instead of misinterpreting them.  v2: update-guard state
+/// (quarantine/probation vectors, guard window, corrupt rng stream)
+/// joined the run snapshot (DESIGN.md §16).
+pub const CKPT_VERSION: i64 = 2;
 
 /// Manifest format tag.
 pub const CKPT_FORMAT: &str = "hbatch-ckpt";

@@ -9,11 +9,21 @@
 //!
 //! - [`FaultPlan`] — scripted failures injected into a run *without*
 //!   telling the membership machinery: unannounced crashes, mid-run
-//!   stalls, transient slowdown spikes.  Timing faults (stall, slow)
-//!   are applied by the backend via [`crate::session::Backend::set_fault_plan`];
+//!   stalls, transient slowdown spikes, and (DESIGN.md §16) data-plane
+//!   corruption of the update payload itself.  Timing faults (stall,
+//!   slow) and corruptions are applied by the backend via
+//!   [`crate::session::Backend::set_fault_plan`];
 //!   a crash is the *absence* of an outcome, so the session enforces it
 //!   by suppressing the completion event — only the detector below can
 //!   reclaim the rank.
+//! - [`GuardCfg`] / [`UpdateGuard`] — the data-plane guard (DESIGN.md
+//!   §16): validates every staged worker contribution *before* the leaf
+//!   enters the eager combine — a finite check plus a robust norm gate
+//!   (median + MAD over a window of recently accepted update norms).  A
+//!   rejection drops that worker's round contribution through the
+//!   drop-contribution/λ-renormalization path; repeated strikes
+//!   escalate to quarantine through the detector-retire path, with a
+//!   probation timer readmitting through the join path.
 //! - [`DetectorCfg`] — the progress-deadline failure detector the
 //!   session event loop arms at every dispatch: a worker that misses
 //!   `max(floor, grace × smoothed-iteration-time)` is *suspected* and
@@ -41,6 +51,13 @@ use crate::util::rng::Rng;
 /// `SPOT_SEED_TAG`).
 pub const AUTOSCALE_SEED_TAG: u64 = 0xA5CA_1E75;
 
+/// Seed perturbation for the bit-flip corruption stream (decorrelated
+/// from backend iteration noise and the autoscaler stream).  The stream
+/// is consumed only when a bitflip fault actually fires, so plans
+/// without bitflips leave it untouched — part of the "guard-on with no
+/// corruption is bitwise invisible" invariant (DESIGN.md §16).
+pub const CORRUPT_SEED_TAG: u64 = 0xC022_0BAD;
+
 // ------------------------------------------------------------- faults
 
 /// One failure mode (the injection taxonomy, DESIGN.md §12).
@@ -59,6 +76,23 @@ pub enum FaultKind {
     /// Transient slowdown spike: iterations dispatched inside
     /// `[time, time + dur_s)` cost `factor ×` their normal work.
     Slow { factor: f64, dur_s: f64 },
+    /// Data-plane corruption (DESIGN.md §16): the update payload of the
+    /// first iteration dispatched at or after the fault time is filled
+    /// with NaNs (one-shot).  Timing is untouched — only the gradient
+    /// contribution is poisoned, so nothing but an [`UpdateGuard`] can
+    /// notice it.
+    CorruptNan,
+    /// Like [`FaultKind::CorruptNan`] with a ∞ fill (one-shot).
+    CorruptInf,
+    /// Flip `flips` bits of the update payload (one-shot); positions
+    /// come from the dedicated [`CORRUPT_SEED_TAG`] rng stream, so they
+    /// are deterministic under the session seed.
+    CorruptBitflip { flips: u32 },
+    /// Mis-scaled update: payloads of iterations dispatched inside
+    /// `[time, time + dur_s)` are multiplied by `factor`; `dur_s = 0`
+    /// degenerates to one-shot (first dispatch at/after onset, like the
+    /// stall).
+    CorruptScale { factor: f64, dur_s: f64 },
 }
 
 impl FaultKind {
@@ -67,8 +101,48 @@ impl FaultKind {
             FaultKind::Crash => "crash",
             FaultKind::Stall { .. } => "stall",
             FaultKind::Slow { .. } => "slow",
+            FaultKind::CorruptNan => "corrupt:nan",
+            FaultKind::CorruptInf => "corrupt:inf",
+            FaultKind::CorruptBitflip { .. } => "corrupt:bitflip",
+            FaultKind::CorruptScale { .. } => "corrupt:scale",
         }
     }
+
+    /// Deterministic same-worker/same-timestamp tie-break rank (see
+    /// [`FaultPlan::new`]): crash < stall < slow < corrupt:nan <
+    /// corrupt:inf < corrupt:bitflip < corrupt:scale.
+    fn rank(&self) -> u8 {
+        match self {
+            FaultKind::Crash => 0,
+            FaultKind::Stall { .. } => 1,
+            FaultKind::Slow { .. } => 2,
+            FaultKind::CorruptNan => 3,
+            FaultKind::CorruptInf => 4,
+            FaultKind::CorruptBitflip { .. } => 5,
+            FaultKind::CorruptScale { .. } => 6,
+        }
+    }
+
+    fn is_corrupt(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::CorruptNan
+                | FaultKind::CorruptInf
+                | FaultKind::CorruptBitflip { .. }
+                | FaultKind::CorruptScale { .. }
+        )
+    }
+}
+
+/// One payload perturbation a backend must apply to the update a worker
+/// is about to contribute (the resolved, dispatch-time view of the
+/// `corrupt:*` [`FaultKind`]s — see [`FaultState::corruptions`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Corruption {
+    Nan,
+    Inf,
+    Bitflip { flips: u32 },
+    Scale { factor: f64 },
 }
 
 /// One scripted fault: `kind` hits `worker` at virtual time `time`.
@@ -83,8 +157,9 @@ pub struct FaultEvent {
 /// `"faults"` config key).
 ///
 /// Spec shape, mirroring `--spot`/`--join`: a comma-separated list of
-/// `crash:W@T` | `stall:W@T:D` | `slow:W@T:F:D` items, e.g.
-/// `crash:1@40,stall:2@10:6,slow:0@5:2.5:30`.
+/// `crash:W@T` | `stall:W@T:D` | `slow:W@T:F:D` | `corrupt:W@T:nan` |
+/// `corrupt:W@T:inf` | `corrupt:W@T:bitflip:N` | `corrupt:W@T:scale:F[:D]`
+/// items, e.g. `crash:1@40,stall:2@10:6,corrupt:0@5:nan`.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct FaultPlan {
     events: Vec<FaultEvent>,
@@ -93,11 +168,23 @@ pub struct FaultPlan {
 impl FaultPlan {
     /// Build from explicit events (tests, scenario harnesses),
     /// validated like the parsed shape.
+    ///
+    /// Ordering is fully deterministic: events sort by time, then
+    /// worker, then [`FaultKind`] rank (crash < stall < slow <
+    /// corrupt:nan < corrupt:inf < corrupt:bitflip < corrupt:scale);
+    /// the sort is stable, so two events that still tie keep their spec
+    /// order.  Any spec permutation of the same events therefore
+    /// replays identically.
     pub fn new(mut events: Vec<FaultEvent>) -> Result<FaultPlan, String> {
         for ev in &events {
             validate_event(ev)?;
         }
-        events.sort_by(|a, b| a.time.total_cmp(&b.time).then(a.worker.cmp(&b.worker)));
+        events.sort_by(|a, b| {
+            a.time
+                .total_cmp(&b.time)
+                .then(a.worker.cmp(&b.worker))
+                .then(a.kind.rank().cmp(&b.kind.rank()))
+        });
         Ok(FaultPlan { events })
     }
 
@@ -117,6 +204,30 @@ impl FaultPlan {
         FaultPlan::new(events)
     }
 
+    /// Parse the `--corrupt` shorthand: the same item grammar as
+    /// [`Self::parse`] with the `corrupt:` prefix implied, e.g.
+    /// `0@5:nan,1@10:scale:50:20`.
+    pub fn parse_corrupt(s: &str) -> Result<FaultPlan, String> {
+        let prefixed: Vec<String> = s
+            .split(',')
+            .map(str::trim)
+            .filter(|item| !item.is_empty())
+            .map(|item| format!("corrupt:{item}"))
+            .collect();
+        if prefixed.is_empty() {
+            return Err("empty corruption list".into());
+        }
+        FaultPlan::parse(&prefixed.join(","))
+    }
+
+    /// Combine two plans into one schedule (`--faults` + `--corrupt`),
+    /// re-sorted under the deterministic tie-break of [`Self::new`].
+    pub fn merged(self, other: FaultPlan) -> FaultPlan {
+        let mut events = self.events;
+        events.extend(other.events);
+        FaultPlan::new(events).expect("merging two validated plans cannot fail")
+    }
+
     pub fn events(&self) -> &[FaultEvent] {
         &self.events
     }
@@ -127,6 +238,14 @@ impl FaultPlan {
 
     pub fn has_crash(&self) -> bool {
         self.events.iter().any(|e| matches!(e.kind, FaultKind::Crash))
+    }
+
+    /// Does the plan script any data-plane corruption?  (Corruption
+    /// with no [`UpdateGuard`] would silently poison the model, so the
+    /// session builder refuses the combination — mirroring the
+    /// crash-requires-detector rule.)
+    pub fn has_corrupt(&self) -> bool {
+        self.events.iter().any(|e| e.kind.is_corrupt())
     }
 
     pub fn max_worker(&self) -> Option<usize> {
@@ -142,10 +261,12 @@ impl FaultPlan {
             .min_by(f64::total_cmp)
     }
 
-    /// Per-run mutable applicator (tracks one-shot stall consumption).
+    /// Per-run mutable applicator (tracks one-shot stall and corruption
+    /// consumption).
     pub fn state(&self) -> FaultState {
         FaultState {
             stall_done: vec![false; self.events.len()],
+            corrupt_done: vec![false; self.events.len()],
             plan: self.clone(),
         }
     }
@@ -163,6 +284,17 @@ impl FaultPlan {
                 }
                 FaultKind::Slow { factor, dur_s } => {
                     format!("slow:{}@{}:{}:{}", e.worker, e.time, factor, dur_s)
+                }
+                FaultKind::CorruptNan => format!("corrupt:{}@{}:nan", e.worker, e.time),
+                FaultKind::CorruptInf => format!("corrupt:{}@{}:inf", e.worker, e.time),
+                FaultKind::CorruptBitflip { flips } => {
+                    format!("corrupt:{}@{}:bitflip:{}", e.worker, e.time, flips)
+                }
+                FaultKind::CorruptScale { factor, dur_s } if dur_s == 0.0 => {
+                    format!("corrupt:{}@{}:scale:{}", e.worker, e.time, factor)
+                }
+                FaultKind::CorruptScale { factor, dur_s } => {
+                    format!("corrupt:{}@{}:scale:{}:{}", e.worker, e.time, factor, dur_s)
                 }
             })
             .collect::<Vec<_>>()
@@ -187,6 +319,22 @@ fn validate_event(ev: &FaultEvent) -> Result<(), String> {
             }
             if !dur_s.is_finite() || dur_s <= 0.0 {
                 return Err(format!("slowdown duration {dur_s} must be finite and positive"));
+            }
+        }
+        FaultKind::CorruptNan | FaultKind::CorruptInf => {}
+        FaultKind::CorruptBitflip { flips } => {
+            if flips == 0 {
+                return Err("bit-flip count must be at least 1".into());
+            }
+        }
+        FaultKind::CorruptScale { factor, dur_s } => {
+            if !factor.is_finite() {
+                return Err(format!("corruption scale factor {factor} must be finite"));
+            }
+            if !dur_s.is_finite() || dur_s < 0.0 {
+                return Err(format!(
+                    "corruption duration {dur_s} must be finite and non-negative"
+                ));
             }
         }
     }
@@ -216,9 +364,29 @@ fn parse_item(item: &str) -> Result<FaultEvent, String> {
             factor: num(parts[1])?,
             dur_s: num(parts[2])?,
         },
+        ("corrupt", 2) if parts[1] == "nan" => FaultKind::CorruptNan,
+        ("corrupt", 2) if parts[1] == "inf" => FaultKind::CorruptInf,
+        ("corrupt", 3) if parts[1] == "bitflip" => FaultKind::CorruptBitflip {
+            flips: parts[2]
+                .parse()
+                .map_err(|_| format!("bad fault {item:?}: bad flip count {:?}", parts[2]))?,
+        },
+        ("corrupt", 3) if parts[1] == "scale" => FaultKind::CorruptScale {
+            factor: num(parts[2])?,
+            dur_s: 0.0,
+        },
+        ("corrupt", 4) if parts[1] == "scale" => FaultKind::CorruptScale {
+            factor: num(parts[2])?,
+            dur_s: num(parts[3])?,
+        },
         ("crash", _) => return Err(format!("bad fault {item:?}: crash takes no parameters")),
         ("stall", _) => return Err(format!("bad fault {item:?}: want stall:W@T:D")),
         ("slow", _) => return Err(format!("bad fault {item:?}: want slow:W@T:F:D")),
+        ("corrupt", _) => {
+            return Err(format!(
+                "bad fault {item:?}: want corrupt:W@T:nan|inf|bitflip:N|scale:F[:D]"
+            ))
+        }
         (other, _) => return Err(format!("bad fault {item:?}: unknown kind {other:?}")),
     };
     let ev = FaultEvent { time, worker, kind };
@@ -238,10 +406,15 @@ pub struct FaultState {
     plan: FaultPlan,
     /// One-shot stalls already consumed (parallel to `plan.events`).
     stall_done: Vec<bool>,
+    /// One-shot corruptions already consumed (parallel to `plan.events`;
+    /// windowed `corrupt:scale` with `dur_s > 0` never sets its flag).
+    corrupt_done: Vec<bool>,
 }
 
 impl FaultState {
     /// Perturb the outcome of an iteration worker `w` starts at `now`.
+    /// Corruption kinds never touch timing — they only show up through
+    /// [`FaultState::corruptions`].
     pub fn perturb(&mut self, w: usize, now: f64, out: &mut WorkerOutcome) {
         for (i, ev) in self.plan.events.iter().enumerate() {
             if ev.worker != w {
@@ -260,12 +433,59 @@ impl FaultState {
                         out.work *= factor;
                     }
                 }
+                FaultKind::CorruptNan
+                | FaultKind::CorruptInf
+                | FaultKind::CorruptBitflip { .. }
+                | FaultKind::CorruptScale { .. } => {}
             }
         }
     }
 
-    /// Checkpoint snapshot (DESIGN.md §15): only the one-shot stall
-    /// consumption overlay — the plan itself is run config and is
+    /// Does the plan script any payload corruption at all?  Backends
+    /// use this to skip the [`FaultState::corruptions`] scan (and its
+    /// allocation) on the dispatch hot path of corruption-free plans.
+    pub fn has_corrupt(&self) -> bool {
+        self.plan.has_corrupt()
+    }
+
+    /// Payload corruptions to apply to the update of the iteration
+    /// worker `w` starts at `now`, in deterministic plan order.
+    /// One-shot kinds (nan/inf/bitflip, and scale with `dur_s = 0`) are
+    /// consumed at the first dispatch at/after their onset; windowed
+    /// scale applies to every dispatch inside `[time, time + dur_s)`.
+    pub fn corruptions(&mut self, w: usize, now: f64) -> Vec<Corruption> {
+        let mut out = Vec::new();
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if ev.worker != w {
+                continue;
+            }
+            let mut one_shot = |done: &mut Vec<bool>, c: Corruption, out: &mut Vec<Corruption>| {
+                if now >= ev.time && !done[i] {
+                    done[i] = true;
+                    out.push(c);
+                }
+            };
+            match ev.kind {
+                FaultKind::CorruptNan => one_shot(&mut self.corrupt_done, Corruption::Nan, &mut out),
+                FaultKind::CorruptInf => one_shot(&mut self.corrupt_done, Corruption::Inf, &mut out),
+                FaultKind::CorruptBitflip { flips } => {
+                    one_shot(&mut self.corrupt_done, Corruption::Bitflip { flips }, &mut out)
+                }
+                FaultKind::CorruptScale { factor, dur_s } => {
+                    if dur_s == 0.0 {
+                        one_shot(&mut self.corrupt_done, Corruption::Scale { factor }, &mut out);
+                    } else if now >= ev.time && now < ev.time + dur_s {
+                        out.push(Corruption::Scale { factor });
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Checkpoint snapshot (DESIGN.md §15): only the one-shot
+    /// consumption overlays — the plan itself is run config and is
     /// re-applied via [`crate::session::Backend::set_fault_plan`].
     pub fn snapshot(&self) -> Json {
         let mut j = Json::obj();
@@ -273,28 +493,37 @@ impl FaultState {
             "stall_done",
             Json::Arr(self.stall_done.iter().map(|&b| Json::Bool(b)).collect()),
         );
+        j.set(
+            "corrupt_done",
+            Json::Arr(self.corrupt_done.iter().map(|&b| Json::Bool(b)).collect()),
+        );
         j
     }
 
     /// Overlay a [`FaultState::snapshot`] onto a freshly-built state
     /// (the plan must already match — lengths are checked).
     pub fn restore(&mut self, j: &Json) -> Result<(), String> {
-        let arr = j
-            .get("stall_done")
-            .as_arr()
-            .ok_or("fault snapshot has no stall_done array")?;
-        if arr.len() != self.stall_done.len() {
-            return Err(format!(
-                "fault snapshot: {} stall flags for a {}-event plan",
-                arr.len(),
-                self.stall_done.len()
-            ));
-        }
-        for (i, v) in arr.iter().enumerate() {
-            self.stall_done[i] = v
-                .as_bool()
-                .ok_or(format!("fault snapshot: stall_done[{i}] is not a bool"))?;
-        }
+        let dec = |key: &str, into: &mut Vec<bool>| -> Result<(), String> {
+            let arr = j
+                .get(key)
+                .as_arr()
+                .ok_or(format!("fault snapshot has no {key} array"))?;
+            if arr.len() != into.len() {
+                return Err(format!(
+                    "fault snapshot: {} {key} flags for a {}-event plan",
+                    arr.len(),
+                    into.len()
+                ));
+            }
+            for (i, v) in arr.iter().enumerate() {
+                into[i] = v
+                    .as_bool()
+                    .ok_or(format!("fault snapshot: {key}[{i}] is not a bool"))?;
+            }
+            Ok(())
+        };
+        dec("stall_done", &mut self.stall_done)?;
+        dec("corrupt_done", &mut self.corrupt_done)?;
         Ok(())
     }
 }
@@ -433,6 +662,265 @@ impl DetectorCfg {
             self.floor_s,
             self.late.label()
         )
+    }
+}
+
+// -------------------------------------------------------------- guard
+
+/// Minimum accepted-norm samples before the robust gate arms (below
+/// this only the finite check applies — a cold-start window has no
+/// meaningful median yet).
+const GUARD_MIN_SAMPLES: usize = 5;
+
+/// Data-plane update guard config (`--guard` / `"guard"` key,
+/// DESIGN.md §16).
+///
+/// Spec shape: comma-separated `key=value` pairs, e.g.
+/// `norm=8,strikes=3,probation=60,late=readmit,window=32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GuardCfg {
+    /// Robust-gate width: reject when the update norm deviates from the
+    /// window median by more than `norm_k ×` the MAD-derived scale.
+    pub norm_k: f64,
+    /// Consecutive rejections of one worker before it is quarantined.
+    pub strikes: u32,
+    /// Probation length: a quarantined worker is readmitted through the
+    /// join path this many seconds after its quarantine.
+    pub probation_s: f64,
+    /// What to do with an in-flight completion that lands *after* its
+    /// worker was quarantined (mirrors the detector's late policy:
+    /// readmit-on-probation-expiry vs stay retired).
+    pub late: LatePolicy,
+    /// Size of the recently-accepted-norms window the gate reasons over.
+    pub window: usize,
+}
+
+impl Default for GuardCfg {
+    fn default() -> Self {
+        GuardCfg {
+            norm_k: 8.0,
+            strikes: 3,
+            probation_s: 60.0,
+            late: LatePolicy::Readmit,
+            window: 32,
+        }
+    }
+}
+
+impl GuardCfg {
+    pub fn parse(s: &str) -> Result<GuardCfg, String> {
+        let mut cfg = GuardCfg::default();
+        for (key, val) in parse_kv(s)? {
+            match key {
+                "norm" => cfg.norm_k = parse_num(key, val)?,
+                "strikes" => cfg.strikes = parse_int(key, val)? as u32,
+                "probation" => cfg.probation_s = parse_num(key, val)?,
+                "window" => cfg.window = parse_int(key, val)?,
+                "late" => {
+                    cfg.late = match val {
+                        "readmit" => LatePolicy::Readmit,
+                        "drop" => LatePolicy::Drop,
+                        other => return Err(format!("late={other:?} (want readmit|drop)")),
+                    }
+                }
+                other => return Err(format!("unknown guard key {other:?}")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.norm_k.is_finite() || self.norm_k <= 0.0 {
+            return Err(format!("guard norm {} must be finite and positive", self.norm_k));
+        }
+        if self.strikes == 0 {
+            return Err("guard strikes must be at least 1".into());
+        }
+        if !self.probation_s.is_finite() || self.probation_s <= 0.0 {
+            return Err(format!(
+                "guard probation {} must be finite and positive",
+                self.probation_s
+            ));
+        }
+        if self.window < GUARD_MIN_SAMPLES {
+            return Err(format!(
+                "guard window {} must be at least {GUARD_MIN_SAMPLES}",
+                self.window
+            ));
+        }
+        Ok(())
+    }
+
+    /// Re-serialize as the `--guard` spec shape ([`Self::parse`]'s
+    /// inverse).  Used by the checkpoint config echo.
+    pub fn spec(&self) -> String {
+        format!(
+            "norm={},strikes={},probation={},late={},window={}",
+            self.norm_k,
+            self.strikes,
+            self.probation_s,
+            self.late.label(),
+            self.window
+        )
+    }
+}
+
+/// What [`UpdateGuard::check`] decided about one staged contribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GuardVerdict {
+    /// Contribution is healthy; it may enter the combine.
+    Accept,
+    /// Contribution rejected (dropped from the round); the worker keeps
+    /// running.
+    Reject,
+    /// Contribution rejected *and* the worker's strike budget is spent:
+    /// retire it through the revocation path and arm probation.
+    Quarantine,
+}
+
+/// Runtime update guard (DESIGN.md §16): validates every staged worker
+/// contribution before the leaf enters the eager combine.  A finite
+/// check always applies; once [`GUARD_MIN_SAMPLES`] norms have been
+/// accepted, a robust band of `norm_k ×` the MAD-derived scale around
+/// the window median applies too.  Accepted norms enter a bounded
+/// cross-worker window and reset that worker's strike counter;
+/// rejections increment it, and `strikes` consecutive rejections
+/// escalate to [`GuardVerdict::Quarantine`].
+///
+/// The guard only *observes* accepted runs: with no corruption it never
+/// rejects, consumes no rng, and leaves the run bitwise identical to a
+/// guard-off run (property-locked).
+#[derive(Debug, Clone)]
+pub struct UpdateGuard {
+    cfg: GuardCfg,
+    /// Recently accepted update norms (cross-worker, insertion order,
+    /// bounded at `cfg.window`).
+    accepted: std::collections::VecDeque<f64>,
+    /// Consecutive rejections per worker rank.
+    strikes: Vec<u32>,
+}
+
+impl UpdateGuard {
+    pub fn new(cfg: GuardCfg, k: usize) -> UpdateGuard {
+        UpdateGuard {
+            accepted: std::collections::VecDeque::with_capacity(cfg.window),
+            strikes: vec![0; k],
+            cfg,
+        }
+    }
+
+    pub fn cfg(&self) -> &GuardCfg {
+        &self.cfg
+    }
+
+    /// Current strike count of `w` (for tests/accounting).
+    pub fn strikes(&self, w: usize) -> u32 {
+        self.strikes[w]
+    }
+
+    /// Judge the staged contribution of worker `w` with update norm
+    /// `norm`.
+    pub fn check(&mut self, w: usize, norm: f64) -> GuardVerdict {
+        if norm.is_finite() && !self.out_of_band(norm) {
+            self.accepted.push_back(norm);
+            if self.accepted.len() > self.cfg.window {
+                self.accepted.pop_front();
+            }
+            self.strikes[w] = 0;
+            return GuardVerdict::Accept;
+        }
+        self.strikes[w] += 1;
+        if self.strikes[w] >= self.cfg.strikes {
+            // Counter resets here so a probation readmit starts fresh.
+            self.strikes[w] = 0;
+            GuardVerdict::Quarantine
+        } else {
+            GuardVerdict::Reject
+        }
+    }
+
+    /// Robust norm gate: |norm − median| > norm_k × scale, where scale
+    /// is the MAD (consistency-scaled for a normal population) floored
+    /// at 5% of the median magnitude so a degenerate zero-spread window
+    /// (e.g. the sim's modeled constant norms) keeps a usable band.
+    fn out_of_band(&self, norm: f64) -> bool {
+        if self.accepted.len() < GUARD_MIN_SAMPLES {
+            return false;
+        }
+        let mut v: Vec<f64> = self.accepted.iter().copied().collect();
+        let med = median(&mut v);
+        for x in v.iter_mut() {
+            *x = (*x - med).abs();
+        }
+        let mad = median(&mut v);
+        let scale = (1.4826 * mad).max(0.05 * med.abs()).max(1e-12);
+        (norm - med).abs() > self.cfg.norm_k * scale
+    }
+
+    /// Checkpoint snapshot (DESIGN.md §15): the accepted-norm window (in
+    /// order) and the per-worker strike counters.  The `GuardCfg` is run
+    /// config and travels in the checkpoint's config echo.
+    pub fn snapshot(&self) -> Json {
+        use crate::ckpt::enc_f64;
+        let mut j = Json::obj();
+        j.set(
+            "accepted",
+            Json::Arr(self.accepted.iter().map(|&x| enc_f64(x)).collect()),
+        );
+        j.set(
+            "strikes",
+            Json::Arr(self.strikes.iter().map(|&s| Json::Num(s as f64)).collect()),
+        );
+        j
+    }
+
+    /// Rebuild from an [`UpdateGuard::snapshot`] under `cfg` (from the
+    /// checkpoint's config echo) for a `k`-rank cluster.
+    pub fn restore(cfg: GuardCfg, k: usize, j: &Json) -> Result<UpdateGuard, String> {
+        use crate::ckpt::{dec_f64, dec_usize};
+        let accepted = j
+            .get("accepted")
+            .as_arr()
+            .ok_or("guard snapshot has no accepted array")?
+            .iter()
+            .map(dec_f64)
+            .collect::<Result<std::collections::VecDeque<_>, _>>()?;
+        let strikes = j
+            .get("strikes")
+            .as_arr()
+            .ok_or("guard snapshot has no strikes array")?
+            .iter()
+            .map(|v| dec_usize(v).map(|s| s as u32))
+            .collect::<Result<Vec<_>, _>>()?;
+        if strikes.len() != k {
+            return Err(format!(
+                "guard snapshot: {} strike counters for a {k}-rank cluster",
+                strikes.len()
+            ));
+        }
+        if accepted.len() > cfg.window {
+            return Err(format!(
+                "guard snapshot: {} accepted norms overflow window {}",
+                accepted.len(),
+                cfg.window
+            ));
+        }
+        Ok(UpdateGuard { cfg, accepted, strikes })
+    }
+}
+
+/// Median of `v` (sorted in place; empty ⇒ 0).
+fn median(v: &mut [f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(f64::total_cmp);
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
     }
 }
 
@@ -1133,6 +1621,208 @@ mod tests {
         for bad in ["", "x", "-1", "nan", "inf"] {
             assert!(CoordinatorCrash::parse(bad).is_err(), "{bad:?}");
         }
+    }
+
+    #[test]
+    fn corrupt_faults_parse_sort_and_roundtrip() {
+        let p = FaultPlan::parse(
+            "corrupt:1@40:nan,corrupt:0@5:bitflip:3,corrupt:2@10:scale:100,corrupt:2@20:scale:0.5:15,corrupt:1@30:inf",
+        )
+        .unwrap();
+        assert_eq!(p.events().len(), 5);
+        assert!(p.has_corrupt());
+        assert!(!p.has_crash());
+        // Time-sorted.
+        assert_eq!(p.events()[0].kind, FaultKind::CorruptBitflip { flips: 3 });
+        assert_eq!(p.events()[1].kind, FaultKind::CorruptScale { factor: 100.0, dur_s: 0.0 });
+        assert_eq!(p.events()[2].kind, FaultKind::CorruptScale { factor: 0.5, dur_s: 15.0 });
+        assert_eq!(p.events()[3].kind, FaultKind::CorruptInf);
+        assert_eq!(p.events()[4].kind, FaultKind::CorruptNan);
+        // Spec roundtrip (including the one-shot vs windowed scale shapes).
+        assert_eq!(FaultPlan::parse(&p.spec()).unwrap(), p);
+        // Timing plans report no corruption.
+        assert!(!FaultPlan::parse("crash:1@40,stall:2@10:6").unwrap().has_corrupt());
+    }
+
+    #[test]
+    fn corrupt_faults_reject_bad_shapes() {
+        for bad in [
+            "corrupt:1@5",
+            "corrupt:1@5:melt",
+            "corrupt:1@5:nan:3",
+            "corrupt:1@5:bitflip",
+            "corrupt:1@5:bitflip:0",
+            "corrupt:1@5:bitflip:x",
+            "corrupt:1@5:scale",
+            "corrupt:1@5:scale:inf",
+            "corrupt:1@5:scale:2:-1",
+            "corrupt:1@5:scale:2:3:4",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn same_time_same_worker_events_tie_break_deterministically() {
+        // Same worker, same timestamp: kind rank orders them (crash <
+        // stall < slow < corrupt:*), regardless of spec order — so any
+        // permutation of the same spec replays identically.
+        let a = FaultPlan::parse("corrupt:1@5:nan,slow:1@5:2:10,stall:1@5:2,crash:1@5").unwrap();
+        let b = FaultPlan::parse("crash:1@5,stall:1@5:2,slow:1@5:2:10,corrupt:1@5:nan").unwrap();
+        assert_eq!(a, b);
+        let kinds: Vec<&str> = a.events().iter().map(|e| e.kind.label()).collect();
+        assert_eq!(kinds, vec!["crash", "stall", "slow", "corrupt:nan"]);
+        // Identical rank at the same instant keeps spec order (stable
+        // sort), and both orders replay the same perturbation sequence.
+        let s1 = FaultPlan::parse("slow:0@5:2:10,slow:0@5:3:10").unwrap();
+        let s2 = FaultPlan::parse("slow:0@5:3:10,slow:0@5:2:10").unwrap();
+        let apply = |p: &FaultPlan| {
+            let mut st = p.state();
+            let mut out = WorkerOutcome { work: 1.0, fixed: 0.0 };
+            st.perturb(0, 6.0, &mut out);
+            out.work
+        };
+        assert_eq!(apply(&s1), 6.0);
+        assert_eq!(apply(&s1), apply(&s1));
+        // Both factors apply either way (multiplication commutes here,
+        // but the *event order* inside the plan is what's pinned).
+        assert_eq!(s1.events()[0].kind, FaultKind::Slow { factor: 2.0, dur_s: 10.0 });
+        assert_eq!(s2.events()[0].kind, FaultKind::Slow { factor: 3.0, dur_s: 10.0 });
+    }
+
+    #[test]
+    fn corruptions_are_one_shot_or_windowed() {
+        let p = FaultPlan::parse(
+            "corrupt:0@10:nan,corrupt:1@10:scale:4:10,corrupt:2@10:scale:9",
+        )
+        .unwrap();
+        let mut st = p.state();
+        assert!(st.has_corrupt());
+        // Before onset: nothing.
+        assert!(st.corruptions(0, 9.0).is_empty());
+        // One-shot nan fires once at the first dispatch at/after onset.
+        assert_eq!(st.corruptions(0, 12.0), vec![Corruption::Nan]);
+        assert!(st.corruptions(0, 13.0).is_empty());
+        // Windowed scale fires for every dispatch inside the window.
+        assert_eq!(st.corruptions(1, 12.0), vec![Corruption::Scale { factor: 4.0 }]);
+        assert_eq!(st.corruptions(1, 19.9), vec![Corruption::Scale { factor: 4.0 }]);
+        assert!(st.corruptions(1, 20.0).is_empty());
+        // dur = 0 scale degenerates to one-shot.
+        assert_eq!(st.corruptions(2, 15.0), vec![Corruption::Scale { factor: 9.0 }]);
+        assert!(st.corruptions(2, 16.0).is_empty());
+        // Other workers untouched; timing unperturbed by corruption.
+        let mut out = WorkerOutcome { work: 1.0, fixed: 0.0 };
+        st.perturb(0, 12.0, &mut out);
+        assert_eq!((out.work, out.fixed), (1.0, 0.0));
+    }
+
+    #[test]
+    fn fault_state_snapshot_restores_corrupt_overlay() {
+        let p = FaultPlan::parse("corrupt:0@10:nan,corrupt:1@20:inf").unwrap();
+        let mut st = p.state();
+        assert_eq!(st.corruptions(0, 12.0), vec![Corruption::Nan]);
+        let snap = st.snapshot();
+        let mut st2 = p.state();
+        st2.restore(&snap).unwrap();
+        // Consumed corruption stays consumed; the other still fires.
+        assert!(st2.corruptions(0, 13.0).is_empty());
+        assert_eq!(st2.corruptions(1, 25.0), vec![Corruption::Inf]);
+    }
+
+    #[test]
+    fn guard_cfg_parses_validates_and_roundtrips() {
+        let g = GuardCfg::parse("norm=4.5,strikes=2,probation=15,late=drop,window=8").unwrap();
+        assert_eq!(g.norm_k, 4.5);
+        assert_eq!(g.strikes, 2);
+        assert_eq!(g.probation_s, 15.0);
+        assert_eq!(g.late, LatePolicy::Drop);
+        assert_eq!(g.window, 8);
+        assert_eq!(GuardCfg::parse(&g.spec()).unwrap(), g);
+        // Defaults fill missing keys and roundtrip.
+        let d = GuardCfg::parse("norm=6").unwrap();
+        assert_eq!(d.strikes, GuardCfg::default().strikes);
+        assert_eq!(d.late, LatePolicy::Readmit);
+        let d0 = GuardCfg::default();
+        assert_eq!(GuardCfg::parse(&d0.spec()).unwrap(), d0);
+        for bad in [
+            "",
+            "norm=0",
+            "norm=-2",
+            "strikes=0",
+            "probation=0",
+            "probation=-5",
+            "window=2",
+            "late=maybe",
+            "bogus=1",
+        ] {
+            assert!(GuardCfg::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn guard_rejects_nonfinite_and_out_of_band_norms() {
+        let cfg = GuardCfg::parse("norm=8,strikes=3,probation=10").unwrap();
+        let mut g = UpdateGuard::new(cfg, 3);
+        // Non-finite is rejected even on a cold window.
+        assert_eq!(g.check(0, f64::NAN), GuardVerdict::Reject);
+        assert_eq!(g.strikes(0), 1);
+        assert_eq!(g.check(0, f64::INFINITY), GuardVerdict::Reject);
+        // Below GUARD_MIN_SAMPLES the norm gate is disarmed: anything
+        // finite is accepted and resets the strike counter.
+        assert_eq!(g.check(0, 1e9), GuardVerdict::Accept);
+        assert_eq!(g.strikes(0), 0);
+        // Build a healthy window around norm ≈ 1.
+        let mut g = UpdateGuard::new(GuardCfg::default(), 3);
+        for i in 0..10 {
+            let n = 1.0 + 0.01 * (i % 3) as f64;
+            assert_eq!(g.check(i % 3, n), GuardVerdict::Accept);
+        }
+        // In-band drift accepted; a 100× mis-scale is out of band.
+        assert_eq!(g.check(1, 1.02), GuardVerdict::Accept);
+        assert_eq!(g.check(1, 100.0), GuardVerdict::Reject);
+        assert_eq!(g.check(1, 100.0), GuardVerdict::Reject);
+        // Third consecutive strike escalates and resets the counter.
+        assert_eq!(g.check(1, 100.0), GuardVerdict::Quarantine);
+        assert_eq!(g.strikes(1), 0);
+        // Rejected norms never entered the window: healthy values from
+        // other workers still pass.
+        assert_eq!(g.check(2, 1.01), GuardVerdict::Accept);
+    }
+
+    #[test]
+    fn guard_zero_spread_window_keeps_a_usable_band() {
+        // The sim backend models constant unit norms: MAD = 0.  The 5%
+        // median floor keeps the band open so identical norms pass and
+        // gross corruption still fails.
+        let mut g = UpdateGuard::new(GuardCfg::default(), 2);
+        for _ in 0..8 {
+            assert_eq!(g.check(0, 1.0), GuardVerdict::Accept);
+        }
+        assert_eq!(g.check(1, 1.0), GuardVerdict::Accept);
+        // norm_k=8 × 5% band: 1.3 is in (|1.3-1| ≤ 0.4), 2.0 is out.
+        assert_eq!(g.check(1, 1.3), GuardVerdict::Accept);
+        assert_eq!(g.check(1, 2.0), GuardVerdict::Reject);
+    }
+
+    #[test]
+    fn guard_snapshot_restore_is_exact() {
+        let cfg = GuardCfg::parse("norm=8,strikes=3,probation=10,window=6").unwrap();
+        let mut g = UpdateGuard::new(cfg.clone(), 3);
+        for i in 0..9 {
+            let _ = g.check(i % 3, 1.0 + 0.01 * i as f64);
+        }
+        let _ = g.check(2, f64::NAN); // leave a strike in place
+        assert_eq!(g.strikes(2), 1);
+        let snap = g.snapshot();
+        let j = Json::parse(&snap.to_pretty()).unwrap();
+        let mut r = UpdateGuard::restore(cfg.clone(), 3, &j).unwrap();
+        assert_eq!(r.strikes(2), 1);
+        // The continued verdict streams agree.
+        for (w, n) in [(0, 1.05), (2, f64::NAN), (1, 50.0), (2, 1.0)] {
+            assert_eq!(g.check(w, n), r.check(w, n), "divergence at {w}/{n}");
+        }
+        // Mismatched rank count is rejected.
+        assert!(UpdateGuard::restore(cfg, 2, &j).is_err());
     }
 
     #[test]

@@ -1015,6 +1015,10 @@ impl FleetScheduler {
         };
         let total_wasted_spawns =
             outcomes.iter().map(|o| o.report.wasted_spawns()).sum();
+        let total_rejections =
+            outcomes.iter().map(|o| o.report.guard_rejections()).sum();
+        let total_quarantines =
+            outcomes.iter().map(|o| o.report.guard_quarantines()).sum();
         FleetReport {
             policy: self.arbiter.policy(),
             capacity: self.arbiter.capacity(),
@@ -1025,6 +1029,8 @@ impl FleetScheduler {
             completion_p99,
             utilization,
             total_wasted_spawns,
+            total_rejections,
+            total_quarantines,
             jobs: outcomes,
         }
     }
@@ -1186,6 +1192,10 @@ pub struct FleetReport {
     pub utilization: f64,
     /// Σ per-job wasted autoscaler spawns (`RunReport::spawns`).
     pub total_wasted_spawns: u64,
+    /// Σ per-job update-guard rejections (DESIGN.md §16).
+    pub total_rejections: u64,
+    /// Σ per-job guard quarantines (readmissions not counted).
+    pub total_quarantines: u64,
 }
 
 impl FleetReport {
@@ -1211,6 +1221,14 @@ impl FleetReport {
             "total_wasted_spawns",
             Json::Num(self.total_wasted_spawns as f64),
         );
+        j.set(
+            "total_rejections",
+            Json::Num(self.total_rejections as f64),
+        );
+        j.set(
+            "total_quarantines",
+            Json::Num(self.total_quarantines as f64),
+        );
         let jobs = self
             .jobs
             .iter()
@@ -1231,6 +1249,14 @@ impl FleetReport {
                     Json::Num(o.report.spawn_requests() as f64),
                 );
                 jj.set("wasted_spawns", Json::Num(o.report.wasted_spawns() as f64));
+                jj.set(
+                    "rejections",
+                    Json::Num(o.report.guard_rejections() as f64),
+                );
+                jj.set(
+                    "quarantines",
+                    Json::Num(o.report.guard_quarantines() as f64),
+                );
                 jj
             })
             .collect();

@@ -19,7 +19,9 @@ use std::path::Path;
 use hetero_batch::ckpt::{recover_latest, Checkpointer, CkptSpec};
 use hetero_batch::cluster::{cpu_cluster, hlevel_split};
 use hetero_batch::config::{split_policy_spec, Policy};
-use hetero_batch::fault::{AutoscalerCfg, CoordinatorCrash, DetectorCfg, FaultPlan};
+use hetero_batch::fault::{
+    AutoscalerCfg, CoordinatorCrash, DetectorCfg, FaultPlan, GuardCfg,
+};
 use hetero_batch::figures;
 use hetero_batch::fleet::{job_seed, ArbiterPolicy, FleetBuilder, JobSpec};
 use hetero_batch::runtime::Runtime;
@@ -75,6 +77,27 @@ fn apply_fault_flags(builder: SessionBuilder, a: &Args) -> Result<SessionBuilder
         let cfg =
             AutoscalerCfg::parse(&autoscale).map_err(|e| format!("bad --autoscale: {e}"))?;
         builder = builder.autoscale(cfg);
+    }
+    Ok(builder)
+}
+
+/// Parse the data-plane fault-tolerance flags (`--corrupt` and
+/// `--guard`; DESIGN.md §16) and fold them into the builder.  Shared by
+/// simulate, train, and the fleet's synthetic jobs, with matching
+/// error text; fleet config-file jobs use the `corrupt`/`guard`
+/// session keys instead.
+fn apply_guard_flags(builder: SessionBuilder, a: &Args) -> Result<SessionBuilder, String> {
+    let mut builder = builder;
+    let corrupt = a.get("corrupt");
+    if !corrupt.is_empty() {
+        let plan =
+            FaultPlan::parse_corrupt(&corrupt).map_err(|e| format!("bad --corrupt: {e}"))?;
+        builder = builder.corrupt(plan);
+    }
+    let guard = a.get("guard");
+    if !guard.is_empty() {
+        let cfg = GuardCfg::parse(&guard).map_err(|e| format!("bad --guard: {e}"))?;
+        builder = builder.guard(cfg);
     }
     Ok(builder)
 }
@@ -183,6 +206,8 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         .opt("spot", "", "spot churn mttf:down[:grace] (s): revoke/rejoin workers")
         .opt("join", "", "scheduled joins k@t[,k@t..]: worker k first appears at t")
         .opt("faults", "", "fault schedule crash:W@T | stall:W@T:D | slow:W@T:F:D, comma-joined")
+        .opt("corrupt", "", "gradient corruption W@T:nan|inf|bitflip:N|scale:F[:dur], comma-joined (needs --guard)")
+        .opt("guard", "", "update guard norm=K,strikes=S,probation=D,late=readmit|drop[,window=N]")
         .opt("detect", "", "failure detector grace=G,floor=S,late=readmit|drop")
         .opt("autoscale", "", "autoscaler pool=N,cold=S[,floor=K,backoff=S,cap=S,jitter=J,fail=P,retries=N,ride,tput=F]")
         .opt("scheduler", "heap", "event scheduling: heap (O(log k)) | scan (O(k) baseline)")
@@ -229,6 +254,7 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     }
     let builder = apply_membership_flags(builder, &a)?;
     let builder = apply_fault_flags(builder, &a)?;
+    let builder = apply_guard_flags(builder, &a)?;
     let (ckpt, crash_at) = parse_ckpt_flags(&a)?;
     builder.validate()?;
 
@@ -288,13 +314,14 @@ fn cmd_resume(rest: &[String]) -> Result<(), String> {
         // Pre-discriminator checkpoints can only have come from simulate.
         Some("sim") | None => {}
         Some("real") => {
-            return Err(
-                "this checkpoint came from `hbatch train` (real backend); resume is \
-                 sim-only for now — the real sidecar restores model/optimizer state \
-                 consistently, but not the runtime's execution streams, so a resumed \
-                 run would not be bit-identical. Restart with `hbatch train`."
-                    .into(),
-            )
+            return Err(format!(
+                "checkpoint {from:?} came from `hbatch train` (real backend); resume \
+                 is sim-only for now — the real sidecar restores model/optimizer \
+                 state consistently, but the runtime's execution streams cannot yet \
+                 be replayed deterministically (the ROADMAP's \"Real-backend \
+                 bit-identical resume\" gap), so a resumed run would not be \
+                 bit-identical. Restart with `hbatch train`."
+            ))
         }
         Some(other) => {
             return Err(format!("checkpoint config names unknown backend {other:?}"))
@@ -330,6 +357,8 @@ fn cmd_fleet(rest: &[String]) -> Result<(), String> {
     .opt("cores", "4,8", "synthetic fleet: per-worker cores per job")
     .opt("iters", "60", "synthetic fleet: iterations per job")
     .opt("arrival-gap", "0", "synthetic fleet: seconds between consecutive arrivals")
+    .opt("corrupt", "", "synthetic fleet: per-job gradient corruption W@T:nan|inf|bitflip:N|scale:F[:dur] (needs --guard)")
+    .opt("guard", "", "synthetic fleet: per-job update guard norm=K,strikes=S,probation=D,late=readmit|drop[,window=N]")
     .opt("capacity", "0", "shared worker capacity (0 = uncontended: total demand)")
     .opt("policy", "fair", "capacity arbitration: fair|priority")
     .opt("seed", "0", "fleet seed: jobs without their own get job_seed(seed, id)")
@@ -353,6 +382,7 @@ fn cmd_fleet(rest: &[String]) -> Result<(), String> {
                 .workers(cpu_cluster(&cores))
                 .steps(a.get_u64("iters"))
                 .seed(job_seed(seed, i as u64));
+            let b = apply_guard_flags(b, &a)?;
             let mut spec = JobSpec::new(&format!("job{i}"), b);
             spec.arrival = gap * i as f64;
             f = f.job(spec);
@@ -398,6 +428,8 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .opt("spot", "", "spot churn mttf:down[:grace] (s): revoke/rejoin workers")
         .opt("join", "", "scheduled joins k@t[,k@t..]: worker k first appears at t")
         .opt("faults", "", "fault schedule crash:W@T | stall:W@T:D | slow:W@T:F:D, comma-joined")
+        .opt("corrupt", "", "gradient corruption W@T:nan|inf|bitflip:N|scale:F[:dur], comma-joined (needs --guard)")
+        .opt("guard", "", "update guard norm=K,strikes=S,probation=D,late=readmit|drop[,window=N]")
         .opt("detect", "", "failure detector grace=G,floor=S,late=readmit|drop")
         .opt("autoscale", "", "autoscaler pool=N,cold=S[,floor=K,backoff=S,cap=S,jitter=J,fail=P,retries=N,ride,tput=F]")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -439,6 +471,7 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         .slowdowns(Slowdowns::from_cores(&cores));
     let builder = apply_membership_flags(builder, &a)?;
     let builder = apply_fault_flags(builder, &a)?;
+    let builder = apply_guard_flags(builder, &a)?;
     let (ckpt, crash_at) = parse_ckpt_flags(&a)?;
     builder.validate()?;
 

@@ -123,6 +123,37 @@ pub struct SpawnEvent {
     pub attempt: u32,
 }
 
+/// What the data-plane update guard decided (DESIGN.md §16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GuardAction {
+    /// A staged contribution failed the finite/norm gate and was
+    /// dropped from its round.
+    Reject,
+    /// Strike budget spent: the worker was retired through the
+    /// revocation path and its probation timer armed.
+    Quarantine,
+    /// Probation expired: the worker rejoined through the join path.
+    Readmit,
+}
+
+impl GuardAction {
+    pub fn label(&self) -> &'static str {
+        match self {
+            GuardAction::Reject => "reject",
+            GuardAction::Quarantine => "quarantine",
+            GuardAction::Readmit => "readmit",
+        }
+    }
+}
+
+/// One update-guard decision (rejection or quarantine-lifecycle step).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GuardEvent {
+    pub time: f64,
+    pub worker: usize,
+    pub action: GuardAction,
+}
+
 /// Complete record of one training run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunReport {
@@ -135,6 +166,11 @@ pub struct RunReport {
     pub suspicions: Vec<DetectorEvent>,
     /// Autoscaler provisioning events.
     pub spawns: Vec<SpawnEvent>,
+    /// Update-guard rejections (contributions dropped from a round).
+    pub rejections: Vec<GuardEvent>,
+    /// Update-guard quarantine lifecycle (quarantines and probation
+    /// readmissions).
+    pub quarantines: Vec<GuardEvent>,
     /// (time, global_iter, loss) samples — real-execution runs only.
     pub losses: Vec<(f64, u64, f64)>,
     /// Periodic eval results (`SessionBuilder::eval_every`) — real runs only.
@@ -179,6 +215,21 @@ impl RunReport {
         self.spawns
             .iter()
             .filter(|s| s.action == SpawnAction::Wasted)
+            .count() as u64
+    }
+
+    /// Contributions the update guard dropped from their rounds.
+    /// Summed fleet-wide in the `FleetReport`.
+    pub fn guard_rejections(&self) -> u64 {
+        self.rejections.len() as u64
+    }
+
+    /// Workers the guard quarantined (readmissions not counted).
+    /// Summed fleet-wide in the `FleetReport`.
+    pub fn guard_quarantines(&self) -> u64 {
+        self.quarantines
+            .iter()
+            .filter(|q| q.action == GuardAction::Quarantine)
             .count() as u64
     }
 
@@ -310,6 +361,25 @@ impl RunReport {
                 })
                 .collect();
             o.set("spawns", Json::Arr(evs));
+        }
+        let guard_evs = |evs: &[GuardEvent]| -> Json {
+            Json::Arr(
+                evs.iter()
+                    .map(|e| {
+                        let mut eo = Json::obj();
+                        eo.set("time_s", Json::Num(e.time));
+                        eo.set("worker", Json::Num(e.worker as f64));
+                        eo.set("action", Json::Str(e.action.label().into()));
+                        eo
+                    })
+                    .collect(),
+            )
+        };
+        if !self.rejections.is_empty() {
+            o.set("rejections", guard_evs(&self.rejections));
+        }
+        if !self.quarantines.is_empty() {
+            o.set("quarantines", guard_evs(&self.quarantines));
         }
         let stats = self.worker_time_stats(k);
         let mut workers = Vec::new();
@@ -445,6 +515,21 @@ impl RunReport {
                     .collect(),
             ),
         );
+        let guard_evs = |evs: &[GuardEvent]| -> Json {
+            Json::Arr(
+                evs.iter()
+                    .map(|e| {
+                        Json::Arr(vec![
+                            enc_f64(e.time),
+                            Json::Num(e.worker as f64),
+                            Json::Str(e.action.label().into()),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        o.set("rejections", guard_evs(&self.rejections));
+        o.set("quarantines", guard_evs(&self.quarantines));
         o.set(
             "losses",
             Json::Arr(
@@ -567,6 +652,27 @@ impl RunReport {
                 attempt: dec_usize(s.idx(3))? as u32,
             });
         }
+        let guard_evs = |key: &str| -> Result<Vec<GuardEvent>, String> {
+            let mut out = Vec::new();
+            for g in arr(j, key)? {
+                let action = match g.idx(2).as_str() {
+                    Some("reject") => GuardAction::Reject,
+                    Some("quarantine") => GuardAction::Quarantine,
+                    Some("readmit") => GuardAction::Readmit,
+                    other => {
+                        return Err(format!("report snapshot: bad guard action {other:?}"))
+                    }
+                };
+                out.push(GuardEvent {
+                    time: dec_f64(g.idx(0))?,
+                    worker: dec_usize(g.idx(1))?,
+                    action,
+                });
+            }
+            Ok(out)
+        };
+        r.rejections = guard_evs("rejections")?;
+        r.quarantines = guard_evs("quarantines")?;
         for l in arr(j, "losses")? {
             r.losses
                 .push((dec_f64(l.idx(0))?, dec_u64(l.idx(1))?, dec_f64(l.idx(2))?));
@@ -729,6 +835,37 @@ mod tests {
     }
 
     #[test]
+    fn guard_events_serialize_to_json_and_count() {
+        let mut r = RunReport::new("t");
+        let j = r.to_json(1);
+        assert!(j.get("rejections").is_null());
+        assert!(j.get("quarantines").is_null());
+        r.rejections.push(GuardEvent {
+            time: 3.0,
+            worker: 1,
+            action: GuardAction::Reject,
+        });
+        r.quarantines.push(GuardEvent {
+            time: 4.0,
+            worker: 1,
+            action: GuardAction::Quarantine,
+        });
+        r.quarantines.push(GuardEvent {
+            time: 9.0,
+            worker: 1,
+            action: GuardAction::Readmit,
+        });
+        assert_eq!(r.guard_rejections(), 1);
+        assert_eq!(r.guard_quarantines(), 1); // readmit not counted
+        let j = Json::parse(&r.to_json(2).to_string()).unwrap();
+        let rej = j.get("rejections").idx(0);
+        assert_eq!(rej.get("action").as_str(), Some("reject"));
+        assert_eq!(rej.get("worker").as_i64(), Some(1));
+        assert_eq!(j.get("quarantines").idx(0).get("action").as_str(), Some("quarantine"));
+        assert_eq!(j.get("quarantines").idx(1).get("action").as_str(), Some("readmit"));
+    }
+
+    #[test]
     fn ckpt_snapshot_round_trips_every_field_bitwise() {
         let mut r = RunReport::new("ckpt");
         // Awkward values on purpose: non-terminating binary fractions,
@@ -788,6 +925,21 @@ mod tests {
                 worker: if i % 2 == 0 { Some(i) } else { None },
                 action,
                 attempt: i as u32,
+            });
+        }
+        r.rejections.push(GuardEvent {
+            time: 0.75,
+            worker: 2,
+            action: GuardAction::Reject,
+        });
+        for (i, action) in [GuardAction::Quarantine, GuardAction::Readmit]
+            .into_iter()
+            .enumerate()
+        {
+            r.quarantines.push(GuardEvent {
+                time: 1.25 + i as f64,
+                worker: 2,
+                action,
             });
         }
         r.losses.push((1.5, 10, 0.123456789012345678));

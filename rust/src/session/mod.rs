@@ -58,11 +58,12 @@ use crate::controller::{
     RlTable,
 };
 use crate::fault::{
-    Autoscaler, AutoscalerCfg, DetectorCfg, FaultPlan, LatePolicy, SpawnOutcome,
+    Autoscaler, AutoscalerCfg, DetectorCfg, FaultPlan, GuardCfg, GuardVerdict,
+    LatePolicy, SpawnOutcome, UpdateGuard,
 };
 use crate::metrics::{
-    AdjustEvent, DetectorAction, DetectorEvent, EpochEvent, EvalRecord, IterRecord,
-    RunReport, SpawnAction, SpawnEvent,
+    AdjustEvent, DetectorAction, DetectorEvent, EpochEvent, EvalRecord, GuardAction,
+    GuardEvent, IterRecord, RunReport, SpawnAction, SpawnEvent,
 };
 use crate::runtime::Runtime;
 use crate::sync::{SyncMode, SyncState};
@@ -148,6 +149,27 @@ pub trait Backend {
     /// `apply_update`, only `batches[w]` is meaningful.  Default: no-op
     /// (the simulator models updates, it does not hold gradients).
     fn stage_update(&mut self, _w: usize, _batches: &[f64]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Data-plane guard hook (DESIGN.md §16): the L2 norm of worker
+    /// `w`'s most recently completed update payload, inspected by the
+    /// session's [`UpdateGuard`] at the completion event *before* the
+    /// contribution is staged into the eager combine.  `None` means the
+    /// backend cannot observe payload norms, and the guard accepts the
+    /// contribution unchecked.  Default: `None`.
+    fn update_norm(&mut self, _w: usize) -> Option<f64> {
+        None
+    }
+
+    /// Data-plane guard hook: drop worker `w`'s most recently completed
+    /// update payload *without* staging it — the guard rejected it.
+    /// Backends that pushed the payload into an eager structure at
+    /// execution time (the real backend's reduction tree) must revoke
+    /// the leaf here, exactly as [`Backend::retire_worker`] would, so a
+    /// rejection is bitwise-equal to a same-round revocation.  Default:
+    /// no-op (the simulator models updates, it holds no payloads).
+    fn discard_update(&mut self, _w: usize) -> Result<()> {
         Ok(())
     }
 
@@ -316,6 +338,7 @@ pub struct SessionBuilder {
     spot: Option<SpotSpec>,
     faults: Option<FaultPlan>,
     detector: Option<DetectorCfg>,
+    guard: Option<GuardCfg>,
     autoscale: Option<AutoscalerCfg>,
     eval_every: u64,
     pool_threads: usize,
@@ -347,6 +370,7 @@ impl Default for SessionBuilder {
             spot: None,
             faults: None,
             detector: None,
+            guard: None,
             autoscale: None,
             eval_every: 0,
             pool_threads: 4,
@@ -502,12 +526,36 @@ impl SessionBuilder {
         self
     }
 
+    /// Fold a corruption plan (`--corrupt`, DESIGN.md §16) into the
+    /// fault schedule, merging with any timing faults already set via
+    /// [`Self::faults`] — the two flags compose, and the config echo
+    /// round-trips through the `faults` key alone.
+    pub fn corrupt(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(match self.faults.take() {
+            Some(existing) => existing.merged(plan),
+            None => plan,
+        });
+        self
+    }
+
     /// Progress-deadline failure detector (`--detect
     /// grace=4,floor=30,late=readmit`): suspect any worker in flight
     /// past `max(floor, grace × smoothed-iteration-time)` and
     /// provisionally retire it through the revocation path.
     pub fn detector(mut self, cfg: DetectorCfg) -> Self {
         self.detector = Some(cfg);
+        self
+    }
+
+    /// Data-plane update guard (`--guard
+    /// norm=8,strikes=3,probation=60,late=readmit`): validate every
+    /// completed contribution (finite check + a median/MAD norm gate
+    /// over recently accepted updates) before it enters the aggregate;
+    /// rejected updates drop through the revocation path, and repeated
+    /// strikes quarantine the worker with a probation readmit
+    /// (DESIGN.md §16).  Corruption faults require a guard.
+    pub fn guard(mut self, cfg: GuardCfg) -> Self {
+        self.guard = Some(cfg);
         self
     }
 
@@ -766,6 +814,22 @@ impl SessionBuilder {
                 DetectorCfg::parse(s).map_err(|e| format!("bad detect {s:?}: {e}"))?;
             b = b.detector(cfg);
         }
+        // Corruption shorthand: same item grammar as `--corrupt` (the
+        // `corrupt:` prefix implied), merged into the fault plan so the
+        // echo round-trips through the `faults` key alone.
+        if let Some(s) = j.get("corrupt").as_str() {
+            let plan = FaultPlan::parse_corrupt(s)
+                .map_err(|e| format!("bad corrupt {s:?}: {e}"))?;
+            b.faults = Some(match b.faults.take() {
+                Some(existing) => existing.merged(plan),
+                None => plan,
+            });
+        }
+        if let Some(s) = j.get("guard").as_str() {
+            let cfg =
+                GuardCfg::parse(s).map_err(|e| format!("bad guard {s:?}: {e}"))?;
+            b = b.guard(cfg);
+        }
         if let Some(s) = j.get("autoscale").as_str() {
             let cfg = AutoscalerCfg::parse(s)
                 .map_err(|e| format!("bad autoscale {s:?}: {e}"))?;
@@ -898,6 +962,9 @@ impl SessionBuilder {
         if let Some(d) = &self.detector {
             j.set("detect", Json::Str(d.spec()));
         }
+        if let Some(g) = &self.guard {
+            j.set("guard", Json::Str(g.spec()));
+        }
         if let Some(a) = &self.autoscale {
             j.set("autoscale", Json::Str(a.spec()));
         }
@@ -992,6 +1059,16 @@ impl SessionBuilder {
                         .into(),
                 );
             }
+            // A corrupt update with nothing inspecting it flows straight
+            // into the aggregate and silently poisons the model — the
+            // data-plane mirror of the crash-requires-detector rule.
+            if plan.has_corrupt() && self.guard.is_none() {
+                return Err(
+                    "corruption faults need an update guard (--guard); \
+                     an unguarded corrupt update would silently poison the model"
+                        .into(),
+                );
+            }
         }
         if let Some(path) = &self.rl_table {
             if self.policy != Policy::Rl {
@@ -1004,6 +1081,9 @@ impl SessionBuilder {
         }
         if let Some(d) = &self.detector {
             d.validate()?;
+        }
+        if let Some(g) = &self.guard {
+            g.validate()?;
         }
         if let Some(a) = &self.autoscale {
             a.validate()?;
@@ -1063,6 +1143,9 @@ impl SessionBuilder {
                         .map_or(false, |p| !p.events().is_empty())
                     || self.faults.is_some()
                     || self.detector.is_some()
+                    // Guard rejections revoke a leaf mid-round exactly
+                    // like a spot revocation does.
+                    || self.guard.is_some()
                     || self.autoscale.is_some();
                 Some(real::BspAgg::Eager(if elastic {
                     crate::ps::RetainPolicy::Retain
@@ -1167,6 +1250,7 @@ impl SessionBuilder {
             seed: self.seed,
             faults: self.faults.clone(),
             detector: self.detector.clone(),
+            guard: self.guard.clone(),
             autoscale: self.autoscale.clone(),
         })
     }
@@ -1192,6 +1276,7 @@ pub struct Session<B: Backend> {
     seed: u64,
     faults: Option<FaultPlan>,
     detector: Option<DetectorCfg>,
+    guard: Option<GuardCfg>,
     autoscale: Option<AutoscalerCfg>,
 }
 
@@ -1459,6 +1544,13 @@ impl<B: Backend> Session<B> {
                 || self.autoscale.as_ref().map_or(false, |a| a.tput > 0.0),
             n_plan_revoked: 0,
             n_suspected: 0,
+            guard: self
+                .guard
+                .as_ref()
+                .map(|cfg| UpdateGuard::new(cfg.clone(), k)),
+            quarantined: vec![false; k],
+            probation_until: vec![f64::INFINITY; k],
+            probations: Vec::new(),
             ascaler: self
                 .autoscale
                 .as_ref()
@@ -1527,6 +1619,10 @@ impl<B: Backend> Session<B> {
                     .arrivals
                     .iter()
                     .any(|&w| st.pending_arrival[w].is_finite())
+                    || st
+                        .probations
+                        .iter()
+                        .any(|&w| st.probation_until[w].is_finite())
                     || st
                         .ascaler
                         .as_ref()
@@ -1665,6 +1761,12 @@ impl<B: Backend> Session<B> {
                         AuxEvent::Arrival(w) => {
                             self.late_arrival(w, st, report)?;
                         }
+                        // Probation expiry: the quarantined worker has
+                        // served its sentence — readmit it through the
+                        // join path with a warm-start batch.
+                        AuxEvent::Probation(w) => {
+                            self.probation_readmit(w, st, report)?;
+                        }
                         // Provisioning timer: the loop-top autoscale
                         // step acts at the new time.
                         AuxEvent::Spawn => {}
@@ -1713,20 +1815,80 @@ impl<B: Backend> Session<B> {
             }
 
             if st.is_bsp {
-                st.round.push((w, st.started_at[w], dur));
-                // Hand the member's contribution to the backend now —
-                // eager backends combine it into the round's reduction
-                // tree inside the straggler window; the barrier below
-                // only closes the round.
-                self.backend.stage_update(w, &st.exec_batch)?;
+                let mut quarantine = false;
+                match self.guard_verdict(w, st) {
+                    GuardVerdict::Accept => {
+                        st.round.push((w, st.started_at[w], dur));
+                        // Hand the member's contribution to the backend
+                        // now — eager backends combine it into the
+                        // round's reduction tree inside the straggler
+                        // window; the barrier below only closes the
+                        // round.
+                        self.backend.stage_update(w, &st.exec_batch)?;
+                    }
+                    GuardVerdict::Reject => {
+                        // Drop the contribution through the revocation
+                        // path: the leaf never enters (or leaves) the
+                        // eager combine, and the barrier λ-renormalizes
+                        // over the surviving members (DESIGN.md §16).
+                        self.backend.discard_update(w)?;
+                        report.rejections.push(GuardEvent {
+                            time: st.t,
+                            worker: w,
+                            action: GuardAction::Reject,
+                        });
+                    }
+                    GuardVerdict::Quarantine => {
+                        self.backend.discard_update(w)?;
+                        // Escalate after the barrier check: if this
+                        // completion closed the barrier, the round must
+                        // settle over the survivors before the revoke.
+                        quarantine = true;
+                    }
+                }
                 if st.sync.at_barrier() {
+                    // `push_update` above already bumped the model
+                    // version for this round; a guard rejection only
+                    // shrinks the member list the round closes over.
                     self.close_bsp_round(st, report, false)?;
                     if st.stopped_early {
                         *done = true;
                         return Ok(false);
                     }
                 }
+                if quarantine {
+                    self.quarantine_worker(w, st, report)?;
+                    if st.stopped_early {
+                        *done = true;
+                        return Ok(false);
+                    }
+                }
             } else {
+                match self.guard_verdict(w, st) {
+                    GuardVerdict::Accept => {}
+                    GuardVerdict::Reject => {
+                        // The iteration happened but its update is
+                        // dropped whole: no apply, no progress, no
+                        // controller observation — a [`GuardEvent`]
+                        // stands in for the iteration record.
+                        self.backend.discard_update(w)?;
+                        report.rejections.push(GuardEvent {
+                            time: st.t,
+                            worker: w,
+                            action: GuardAction::Reject,
+                        });
+                        return Ok(true);
+                    }
+                    GuardVerdict::Quarantine => {
+                        self.backend.discard_update(w)?;
+                        self.quarantine_worker(w, st, report)?;
+                        if st.stopped_early {
+                            *done = true;
+                            return Ok(false);
+                        }
+                        return Ok(true);
+                    }
+                }
                 if st.sample_iter() {
                     report.iters.push(IterRecord {
                         worker: w,
@@ -1866,15 +2028,21 @@ impl<B: Backend> Session<B> {
         j.set("started_at", enc_f64_slice(&st.started_at));
         j.set("deadline", enc_f64_slice(&st.deadline));
         j.set("pending_arrival", enc_f64_slice(&st.pending_arrival));
+        j.set("probation_until", enc_f64_slice(&st.probation_until));
         j.set("obs_sum", enc_f64_slice(&st.obs_sum));
         j.set("live", bools(&st.live));
         j.set("busy", bools(&st.busy));
         j.set("suspected", bools(&st.suspected));
+        j.set("quarantined", bools(&st.quarantined));
         j.set("gen", u64s(&st.gen));
         j.set("obs_n", u64s(&st.obs_n));
         j.set(
             "arrivals",
             Json::Arr(st.arrivals.iter().map(|&w| Json::Num(w as f64)).collect()),
+        );
+        j.set(
+            "probations",
+            Json::Arr(st.probations.iter().map(|&w| Json::Num(w as f64)).collect()),
         );
         j.set(
             "cur_buckets",
@@ -1911,6 +2079,13 @@ impl<B: Backend> Session<B> {
             "ascaler",
             match &st.ascaler {
                 Some(a) => a.snapshot(),
+                None => Json::Null,
+            },
+        );
+        j.set(
+            "guard",
+            match &st.guard {
+                Some(g) => g.snapshot(),
                 None => Json::Null,
             },
         );
@@ -2004,12 +2179,14 @@ impl<B: Backend> Session<B> {
         let live = dec_bools(state, "live", k)?;
         let busy = dec_bools(state, "busy", k)?;
         let suspected = dec_bools(state, "suspected", k)?;
+        let quarantined = dec_bools(state, "quarantined", k)?;
         let batches = dec_f64s(state, "batches", k)?;
         let exec_batch = dec_f64s(state, "exec_batch", k)?;
         let next_done = dec_f64s(state, "next_done", k)?;
         let started_at = dec_f64s(state, "started_at", k)?;
         let deadline = dec_f64s(state, "deadline", k)?;
         let pending_arrival = dec_f64s(state, "pending_arrival", k)?;
+        let probation_until = dec_f64s(state, "probation_until", k)?;
         let obs_sum = dec_f64s(state, "obs_sum", k)?;
         let gen = dec_u64s(state, "gen", k)?;
         let obs_n = dec_u64s(state, "obs_n", k)?;
@@ -2020,6 +2197,14 @@ impl<B: Backend> Session<B> {
             .collect::<Result<_>>()?;
         if let Some(&w) = arrivals.iter().find(|&&w| w >= k) {
             bail!("checkpoint state: late arrival for worker {w} outside 0..{k}");
+        }
+
+        let probations: Vec<usize> = jarr(state, "probations")?
+            .iter()
+            .map(|v| dec_usize(v).map_err(|e| anyhow!("checkpoint state probations: {e}")))
+            .collect::<Result<_>>()?;
+        if let Some(&w) = probations.iter().find(|&&w| w >= k) {
+            bail!("checkpoint state: probation for worker {w} outside 0..{k}");
         }
 
         let mut round = Vec::new();
@@ -2112,6 +2297,22 @@ impl<B: Backend> Session<B> {
             }
             (None, false) => {
                 bail!("checkpoint carries autoscaler state but the config has no autoscaler")
+            }
+        };
+
+        // Update guard: same presence agreement (DESIGN.md §16).
+        let guard_j = state.get("guard");
+        let guard = match (&self.guard, guard_j.is_null()) {
+            (Some(cfg), false) => Some(
+                UpdateGuard::restore(cfg.clone(), k, guard_j)
+                    .map_err(|e| anyhow!("checkpoint state guard: {e}"))?,
+            ),
+            (None, true) => None,
+            (Some(_), true) => {
+                bail!("config enables the update guard but the checkpoint has no guard state")
+            }
+            (None, false) => {
+                bail!("checkpoint carries guard state but the config has no guard")
             }
         };
 
@@ -2224,6 +2425,10 @@ impl<B: Backend> Session<B> {
                 || self.autoscale.as_ref().map_or(false, |a| a.tput > 0.0),
             n_plan_revoked: int(state, "n_plan_revoked")?,
             n_suspected: int(state, "n_suspected")?,
+            guard,
+            quarantined,
+            probation_until,
+            probations,
             ascaler,
         };
         if st.heap_mode {
@@ -2341,6 +2546,13 @@ impl<B: Backend> Session<B> {
         report: &mut RunReport,
         membership_forced: bool,
     ) -> Result<()> {
+        if st.round.is_empty() {
+            // Every member's contribution was guard-rejected: nothing
+            // to apply — the round is a wash (no progress, no global
+            // step), and the workers simply redispatch at the advanced
+            // clock.  (`push_update` already bumped the version.)
+            return Ok(());
+        }
         st.round.sort_by_key(|r| r.0);
         // Barrier release time: the last member completion on a normal
         // close; on a membership-forced close the survivors stall until
@@ -2488,6 +2700,16 @@ impl<B: Backend> Session<B> {
                     st.arrivals.retain(|&x| x != w);
                     st.n_suspected = st.n_suspected.saturating_sub(1);
                 }
+                // Likewise for quarantine (DESIGN.md §16): any
+                // readmission — probation expiry, a plan-scheduled
+                // rejoin, or an autoscaled replacement taking the rank —
+                // wipes the slate, so a stale probation timer can never
+                // fire for a rank that is already live again.
+                if st.quarantined[w] {
+                    st.quarantined[w] = false;
+                    st.probation_until[w] = f64::INFINITY;
+                    st.probations.retain(|&x| x != w);
+                }
                 if st.live[w] {
                     return Ok(());
                 }
@@ -2628,6 +2850,91 @@ impl<B: Backend> Session<B> {
         )
     }
 
+    /// Inspect worker `w`'s just-completed update (DESIGN.md §16).
+    /// With no guard configured, or a backend that cannot observe
+    /// payload norms, every contribution is accepted unchecked — and
+    /// the guard state is untouched, which is what keeps an enabled but
+    /// never-firing guard bitwise invisible.
+    fn guard_verdict(&mut self, w: usize, st: &mut LoopState) -> GuardVerdict {
+        let Some(g) = st.guard.as_mut() else {
+            return GuardVerdict::Accept;
+        };
+        match self.backend.update_norm(w) {
+            Some(norm) => g.check(w, norm),
+            None => GuardVerdict::Accept,
+        }
+    }
+
+    /// Guard escalation (DESIGN.md §16): worker `w` hit its strike
+    /// budget — retire it through the same path a plan revocation takes
+    /// (same epoch accounting, same forced-barrier handling, same
+    /// rebalance), exactly as the detector's `suspect` does.  Under
+    /// `late=readmit` a probation timer is armed; when it expires the
+    /// worker rejoins through the plan-join path with a warm-start
+    /// batch.  Under `late=drop` the rank stays vacant (an autoscaled
+    /// replacement or plan join may still reclaim it).
+    fn quarantine_worker(
+        &mut self,
+        w: usize,
+        st: &mut LoopState,
+        report: &mut RunReport,
+    ) -> Result<()> {
+        debug_assert!(st.live[w], "quarantine of an absent worker");
+        st.quarantined[w] = true;
+        let readmit = self
+            .guard
+            .as_ref()
+            .map_or(false, |g| g.late == LatePolicy::Readmit);
+        if readmit {
+            let probation_s = self.guard.as_ref().unwrap().probation_s;
+            st.probation_until[w] = st.t + probation_s;
+            st.probations.push(w);
+        }
+        report.quarantines.push(GuardEvent {
+            time: st.t,
+            worker: w,
+            action: GuardAction::Quarantine,
+        });
+        self.apply_membership(
+            MembershipEvent {
+                time: st.t,
+                worker: w,
+                kind: MembershipKind::Revoke,
+            },
+            st,
+            report,
+        )
+    }
+
+    /// A quarantined worker's probation expired: readmit it through the
+    /// plan-join path.  The quarantine bookkeeping (flag, timer,
+    /// probation list) is cleared inside `apply_membership`'s join arm.
+    fn probation_readmit(
+        &mut self,
+        w: usize,
+        st: &mut LoopState,
+        report: &mut RunReport,
+    ) -> Result<()> {
+        debug_assert!(
+            st.quarantined[w] && !st.live[w],
+            "probation readmit for a non-quarantined worker"
+        );
+        report.quarantines.push(GuardEvent {
+            time: st.t,
+            worker: w,
+            action: GuardAction::Readmit,
+        });
+        self.apply_membership(
+            MembershipEvent {
+                time: st.t,
+                worker: w,
+                kind: MembershipKind::Join,
+            },
+            st,
+            report,
+        )
+    }
+
     /// Autoscaler actuation, run at the top of every loop iteration:
     /// (1) admit replacements whose cold start has finished — each takes
     /// the lowest vacant rank (never one still owed a late arrival) and
@@ -2642,7 +2949,10 @@ impl<B: Backend> Session<B> {
         // 1. Materialize finished cold starts as joins.
         while let Some(_ready_at) = st.ascaler.as_mut().unwrap().take_ready(st.t) {
             let rank = (0..k).find(|&w| {
-                !st.live[w] && !(st.suspected[w] && st.pending_arrival[w].is_finite())
+                !st.live[w]
+                    && !(st.suspected[w] && st.pending_arrival[w].is_finite())
+                    // A rank serving probation is owed its own readmit.
+                    && !(st.quarantined[w] && st.probation_until[w].is_finite())
             });
             match rank {
                 Some(w) => {
@@ -2931,17 +3241,31 @@ struct LoopState {
     n_plan_revoked: u64,
     /// Workers currently suspected (readmits decrement).
     n_suspected: u64,
+
+    // ----- data-plane guard & quarantine (DESIGN.md §16)
+    /// Update validator (finite check + median/MAD norm gate), present
+    /// iff the session was built with a [`GuardCfg`].
+    guard: Option<UpdateGuard>,
+    /// Workers currently quarantined (retired on strikes, not yet
+    /// readmitted or replaced).
+    quarantined: Vec<bool>,
+    /// Probation expiry per quarantined worker (INF = none armed).
+    probation_until: Vec<f64>,
+    /// Workers with an armed probation timer (small; scanned linearly,
+    /// like `arrivals` — `next_aux` stays O(1) when the guard is idle).
+    probations: Vec<usize>,
     ascaler: Option<Autoscaler>,
 }
 
 /// The third event source of the run loop (besides completions and
-/// plan-membership events): detector deadlines, late arrivals, and
-/// autoscaler timers.  Selection order at equal timestamps is
-/// Arrival < Deadline < Spawn, then lowest worker — fixed so both
-/// scheduler modes agree bitwise.
+/// plan-membership events): detector deadlines, late arrivals,
+/// probation expiries, and autoscaler timers.  Selection order at equal
+/// timestamps is Arrival < Deadline < Probation < Spawn, then lowest
+/// worker — fixed so both scheduler modes agree bitwise.
 enum AuxEvent {
     Arrival(usize),
     Deadline(usize),
+    Probation(usize),
     Spawn,
 }
 
@@ -3124,10 +3448,16 @@ impl LoopState {
                 best = Some((t, 1, w, AuxEvent::Deadline(w)));
             }
         }
+        for &w in &self.probations {
+            let t = self.probation_until[w];
+            if t.is_finite() && aux_better(t, 2, w, &best) {
+                best = Some((t, 2, w, AuxEvent::Probation(w)));
+            }
+        }
         if let Some(a) = &self.ascaler {
             if let Some(t) = a.next_event(self.sync.live_count(), None) {
-                if aux_better(t, 2, 0, &best) {
-                    best = Some((t, 2, 0, AuxEvent::Spawn));
+                if aux_better(t, 3, 0, &best) {
+                    best = Some((t, 3, 0, AuxEvent::Spawn));
                 }
             }
         }
@@ -3618,13 +3948,23 @@ mod tests {
             r#"{
                 "workload": "mnist",
                 "faults": "stall:1@40:30,slow:2@10:1.5:20",
+                "corrupt": "0@25:nan,1@30:scale:50:10",
+                "guard": "norm=6,strikes=2,probation=45,late=drop,window=16",
                 "detect": "grace=3,floor=10,late=drop",
                 "autoscale": "pool=2,cold=15,ride"
             }"#,
         )
         .unwrap();
+        // The corrupt shorthand merges into the fault plan.
         let plan = b.faults.as_ref().unwrap();
-        assert_eq!(plan.events().len(), 2);
+        assert_eq!(plan.events().len(), 4);
+        assert!(plan.has_corrupt());
+        let g = b.guard.as_ref().unwrap();
+        assert_eq!(g.norm_k, 6.0);
+        assert_eq!(g.strikes, 2);
+        assert_eq!(g.probation_s, 45.0);
+        assert_eq!(g.late, LatePolicy::Drop);
+        assert_eq!(g.window, 16);
         let d = b.detector.as_ref().unwrap();
         assert_eq!(d.grace, 3.0);
         assert_eq!(d.floor_s, 10.0);
@@ -3638,6 +3978,8 @@ mod tests {
         assert!(SessionBuilder::from_json_str(r#"{"faults": "crash:x@3"}"#).is_err());
         assert!(SessionBuilder::from_json_str(r#"{"detect": "grace=abc"}"#).is_err());
         assert!(SessionBuilder::from_json_str(r#"{"autoscale": "pool=x"}"#).is_err());
+        assert!(SessionBuilder::from_json_str(r#"{"corrupt": "1@5:bogus"}"#).is_err());
+        assert!(SessionBuilder::from_json_str(r#"{"guard": "norm=abc"}"#).is_err());
     }
 
     #[test]
@@ -3668,6 +4010,146 @@ mod tests {
             .cores(&[4, 8])
             .autoscale(AutoscalerCfg::parse("pool=1,floor=9").unwrap());
         assert!(b.validate().unwrap_err().contains("floor"));
+        // An unguarded corruption would silently poison the model.
+        let b = SessionBuilder::default()
+            .cores(&[4, 8])
+            .corrupt(FaultPlan::parse_corrupt("1@10:nan").unwrap());
+        assert!(b.validate().unwrap_err().contains("guard"));
+        // With a guard it is legal.
+        let b = SessionBuilder::default()
+            .cores(&[4, 8])
+            .corrupt(FaultPlan::parse_corrupt("1@10:nan").unwrap())
+            .guard(GuardCfg::default());
+        assert!(b.validate().is_ok());
+        // Corrupt worker outside the cluster.
+        let b = SessionBuilder::default()
+            .cores(&[4, 8])
+            .corrupt(FaultPlan::parse_corrupt("5@10:nan").unwrap())
+            .guard(GuardCfg::default());
+        assert!(b.validate().is_err());
+        // Guard parameter validation runs at build time (parse()
+        // already rejects strikes=0, so construct directly).
+        let b = SessionBuilder::default().cores(&[4, 8]).guard(GuardCfg {
+            strikes: 0,
+            ..GuardCfg::default()
+        });
+        assert!(b.validate().is_err());
+    }
+
+    /// The tentpole recovery trail: a scripted NaN gradient arrives,
+    /// the guard rejects it at completion (strikes=1 ⇒ immediate
+    /// quarantine), the rank drops through the revocation path, and the
+    /// probation timer readmits it through the join path — the run
+    /// completes at full strength.
+    #[test]
+    fn corrupt_worker_is_quarantined_then_readmitted() {
+        let base = || {
+            SessionBuilder::default()
+                .model("mnist")
+                .cores(&[4, 4, 8])
+                .policy(Policy::Dynamic)
+                .steps(60)
+                .adjust_cost(1.0)
+                .seed(2)
+        };
+        // Calibrate the onset/probation against the clean run's measured
+        // makespan: a guarded run replays the clean timeline bitwise
+        // until the corruption onset, so mid-run fractions of it stay
+        // mid-run whatever the workload's absolute time scale.
+        let t = base().build_sim().unwrap().run().unwrap().total_time;
+        let r = base()
+            .corrupt(FaultPlan::parse_corrupt(&format!("1@{:.4}:nan", 0.35 * t)).unwrap())
+            .guard(
+                GuardCfg::parse(&format!(
+                    "norm=8,strikes=1,probation={:.4},late=readmit",
+                    0.3 * t
+                ))
+                .unwrap(),
+            )
+            .build_sim()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(r.total_iters >= 60, "run did not complete: {}", r.total_iters);
+        // strikes=1: the single bad update escalates straight to
+        // quarantine — no standalone rejection events.
+        assert!(r.rejections.is_empty(), "{:?}", r.rejections);
+        let acts: Vec<(usize, GuardAction)> =
+            r.quarantines.iter().map(|q| (q.worker, q.action)).collect();
+        assert!(acts.contains(&(1, GuardAction::Quarantine)), "{acts:?}");
+        assert!(acts.contains(&(1, GuardAction::Readmit)), "{acts:?}");
+        assert_eq!(r.guard_quarantines(), 1);
+        // Quarantine + readmit flowed through the epoch machinery, and
+        // the cluster ends at full strength (liveness).
+        assert!(r.epochs.iter().any(|e| e.worker == 1
+            && e.kind == MembershipKind::Revoke));
+        assert!(r.epochs.iter().any(|e| e.worker == 1
+            && e.kind == MembershipKind::Join));
+        assert_eq!(r.epochs.last().unwrap().live, 3);
+    }
+
+    /// Quarantine with `late=drop` is permanent: no probation timer is
+    /// armed and the rank never returns.
+    #[test]
+    fn quarantine_with_late_drop_never_readmits() {
+        let base = || {
+            SessionBuilder::default()
+                .model("mnist")
+                .cores(&[4, 4, 8])
+                .policy(Policy::Dynamic)
+                .steps(40)
+                .adjust_cost(1.0)
+                .seed(2)
+        };
+        let t = base().build_sim().unwrap().run().unwrap().total_time;
+        let r = base()
+            .corrupt(FaultPlan::parse_corrupt(&format!("1@{:.4}:inf", 0.35 * t)).unwrap())
+            .guard(GuardCfg::parse("norm=8,strikes=1,probation=10,late=drop").unwrap())
+            .build_sim()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(r.total_iters >= 40);
+        assert_eq!(r.guard_quarantines(), 1);
+        assert!(r
+            .quarantines
+            .iter()
+            .all(|q| q.action != GuardAction::Readmit));
+        assert_eq!(r.epochs.last().unwrap().live, 2);
+    }
+
+    /// The §16 invariant at unit scope: a guard that never fires must
+    /// not perturb the run — the norm probe runs either way, so
+    /// guard-on and guard-off do identical work (the property suite
+    /// fans this over sync modes × policies under churn).
+    #[test]
+    fn idle_guard_is_bitwise_invisible() {
+        let mk = |guard: bool| {
+            let mut b = SessionBuilder::default()
+                .model("mnist")
+                .cores(&[4, 8, 27])
+                .policy(Policy::Dynamic)
+                .steps(150)
+                .adjust_cost(1.0)
+                .seed(5)
+                .spot(SpotSpec { mttf_s: 8.0, down_s: 2.0, grace_s: 0.3 });
+            if guard {
+                b = b.guard(GuardCfg::parse("norm=8,strikes=3,probation=60").unwrap());
+            }
+            b.build_sim().unwrap().run().unwrap()
+        };
+        let (on, off) = (mk(true), mk(false));
+        assert!(on.rejections.is_empty());
+        assert!(on.quarantines.is_empty());
+        assert_eq!(on.total_time, off.total_time);
+        assert_eq!(on.total_iters, off.total_iters);
+        assert_eq!(on.iters.len(), off.iters.len());
+        for (a, b) in on.iters.iter().zip(&off.iters) {
+            assert_eq!(
+                (a.worker, a.iter, a.start, a.duration, a.batch, a.wait),
+                (b.worker, b.iter, b.start, b.duration, b.batch, b.wait)
+            );
+        }
     }
 
     /// The ISSUE's acceptance scenario: a worker crashes unannounced
@@ -3793,6 +4275,10 @@ mod tests {
                 .seed(7)
                 .spot(SpotSpec { mttf_s: 8.0, down_s: 2.0, grace_s: 0.3 })
                 .faults(FaultPlan::parse("stall:2@10:6,slow:0@5:2.5:30").unwrap())
+                // Corruption events merge into the fault plan, so the
+                // echo must round-trip them through the `faults` key.
+                .corrupt(FaultPlan::parse_corrupt("1@20:nan,0@30:scale:50:10").unwrap())
+                .guard(GuardCfg::parse("norm=6,strikes=2,probation=40,late=drop").unwrap())
                 .detector(DetectorCfg::parse("grace=4,floor=5,late=drop").unwrap())
                 .autoscale(AutoscalerCfg::parse("pool=1,cold=1,jitter=0.2").unwrap())
         };
@@ -3913,5 +4399,34 @@ mod tests {
             .unwrap()
             .restore_run(&state, None)
             .is_err());
+
+        // Guard presence must agree between config and checkpoint: a
+        // guard-off snapshot cannot restore into a guard-on config
+        // (the window/strike state would be fabricated) …
+        assert!(mk(SyncMode::Bsp)
+            .guard(GuardCfg::default())
+            .build_sim()
+            .unwrap()
+            .restore_run(&state, None)
+            .is_err());
+        // … and a guard-on snapshot cannot restore guard-off.
+        let mut gsess = mk(SyncMode::Bsp)
+            .guard(GuardCfg::default())
+            .build_sim()
+            .unwrap();
+        let grs = gsess.start().unwrap();
+        let gstate = gsess.snapshot_run(&grs);
+        assert!(mk(SyncMode::Bsp)
+            .build_sim()
+            .unwrap()
+            .restore_run(&gstate, None)
+            .is_err());
+        // Agreement restores cleanly.
+        assert!(mk(SyncMode::Bsp)
+            .guard(GuardCfg::default())
+            .build_sim()
+            .unwrap()
+            .restore_run(&gstate, None)
+            .is_ok());
     }
 }

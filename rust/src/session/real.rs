@@ -42,11 +42,12 @@ use anyhow::{bail, Result};
 
 use crate::controller::bucket::quantize;
 use crate::data::{self, Batch, Dataset, ShardRouter};
-use crate::fault::{FaultPlan, FaultState};
+use crate::fault::{Corruption, FaultPlan, FaultState, CORRUPT_SEED_TAG};
 use crate::ps::{lambdas_into, FusedOptimizer, ReduceTree, RetainPolicy};
 use crate::runtime::{ModelManifest, Runtime, StepKind};
 use crate::session::{Backend, WorkerOutcome};
 use crate::util::pool;
+use crate::util::rng::Rng;
 
 /// How a BSP session computes the barrier aggregate (async sessions
 /// always use the per-worker arena — their updates are single-gradient).
@@ -140,6 +141,53 @@ pub struct RealBackend<'rt> {
     /// — the measured PJRT compute stays real, the virtual duration
     /// carries the fault.
     faults: Option<FaultState>,
+    /// L2 norm of each worker's in-flight gradient, measured after any
+    /// scripted corruption lands (DESIGN.md §16).  Computed
+    /// unconditionally — the O(d) pass is noise against the O(d·b)
+    /// train step — so guard-on and guard-off runs do identical work.
+    pending_norm: Vec<f64>,
+    /// Dedicated rng stream for bitflip corruption, forked off the run
+    /// seed under [`CORRUPT_SEED_TAG`].  Advanced only when a bitflip
+    /// actually fires, so a corruption-free plan leaves it untouched.
+    corrupt_rng: Rng,
+}
+
+/// Apply one scripted corruption to a real gradient buffer, in the
+/// order the plan's tie-break sorted them.  NaN/Inf poison a single
+/// element — enough to blow the norm probe, and the closest model of a
+/// transient hardware flip; scale rescales the whole update; bitflip
+/// flips N random (element, bit) positions from the dedicated stream.
+fn corrupt_grad(buf: &mut [f32], c: &Corruption, rng: &mut Rng) {
+    match *c {
+        Corruption::Nan => buf[0] = f32::NAN,
+        Corruption::Inf => buf[0] = f32::INFINITY,
+        Corruption::Scale { factor } => {
+            let f = factor as f32;
+            for x in buf.iter_mut() {
+                *x *= f;
+            }
+        }
+        Corruption::Bitflip { flips } => {
+            for _ in 0..flips {
+                let i = rng.below(buf.len() as u64) as usize;
+                let bit = rng.below(32) as u32;
+                buf[i] = f32::from_bits(buf[i].to_bits() ^ (1u32 << bit));
+            }
+        }
+    }
+}
+
+/// L2 norm of a gradient buffer, accumulated in f64.  NaN/Inf elements
+/// propagate into the result, which is exactly what the guard's finite
+/// check wants to see.
+fn l2_norm(buf: &[f32]) -> f64 {
+    buf.iter()
+        .map(|&x| {
+            let v = x as f64;
+            v * v
+        })
+        .sum::<f64>()
+        .sqrt()
 }
 
 impl<'rt> RealBackend<'rt> {
@@ -228,6 +276,8 @@ impl<'rt> RealBackend<'rt> {
             prefetch,
             steps,
             faults: None,
+            pending_norm: vec![0.0; k],
+            corrupt_rng: Rng::new(seed ^ CORRUPT_SEED_TAG),
         })
     }
 
@@ -355,6 +405,25 @@ impl Backend for RealBackend<'_> {
                 }
             };
             let compute = t0.elapsed().as_secs_f64();
+            // Data-plane corruption (DESIGN.md §16) lands on the raw
+            // gradient buffer *before* it enters the reduction tree or
+            // arena, so the norm probe below sees exactly what the
+            // optimizer would consume.
+            {
+                let gbuf: &mut [f32] = match (&mut leased, &mut self.grads) {
+                    (Some(buf), _) => buf,
+                    (None, GradStore::Arena { bufs, .. }) => &mut bufs[w],
+                    _ => unreachable!("leased buffer without a tree store"),
+                };
+                if let Some(f) = self.faults.as_mut() {
+                    if f.has_corrupt() {
+                        for c in f.corruptions(w, now) {
+                            corrupt_grad(gbuf, &c, &mut self.corrupt_rng);
+                        }
+                    }
+                }
+                self.pending_norm[w] = l2_norm(gbuf);
+            }
             if let Some(buf) = leased.take() {
                 // Combine at completion: the gradient enters the round's
                 // reduction tree — pre-weighted by its λ numerator b_w —
@@ -470,6 +539,24 @@ impl Backend for RealBackend<'_> {
         Ok(())
     }
 
+    fn update_norm(&mut self, w: usize) -> Option<f64> {
+        Some(self.pending_norm[w])
+    }
+
+    fn discard_update(&mut self, w: usize) -> Result<()> {
+        // A guard rejection drops the contribution exactly the way a
+        // same-round revocation does (DESIGN.md §16): the eager tree
+        // invalidates the rank's ancestor path and the sibling partials
+        // rebuild it; an arena buffer is simply never read because the
+        // worker leaves the update's member set.  Unlike retire_worker
+        // this keeps the worker's shards — it stays live.
+        if let GradStore::Tree(tree) = &mut self.grads {
+            tree.revoke(w);
+        }
+        self.staged[w] = false;
+        Ok(())
+    }
+
     fn staleness_discount(&self, _staleness: u64) -> f64 {
         1.0 // convergence is real here, not modeled
     }
@@ -512,16 +599,46 @@ impl Backend for RealBackend<'_> {
     // complete).
 
     fn snapshot_state(&self) -> Option<crate::util::json::Json> {
+        use crate::ckpt::{enc_f64_slice, enc_opt_f64, enc_u128};
         use crate::util::json::Json;
         let mut j = Json::obj();
         if let Some(f) = &self.faults {
             j.set("faults", f.snapshot());
         }
+        // The corrupt stream and in-flight norms ride along for state
+        // completeness (a checkpoint can land between a corrupted
+        // dispatch and its completion's guard check), even though real
+        // resume is stream-consistent rather than bitwise — see the
+        // sidecar note above.
+        let (cstate, cinc, cspare) = self.corrupt_rng.state_parts();
+        j.set("corrupt_rng_state", enc_u128(cstate));
+        j.set("corrupt_rng_inc", enc_u128(cinc));
+        j.set("corrupt_rng_spare", enc_opt_f64(cspare));
+        j.set("pending_norm", enc_f64_slice(&self.pending_norm));
         Some(j)
     }
 
     fn restore_state(&mut self, j: &crate::util::json::Json) -> Result<(), String> {
+        use crate::ckpt::{dec_f64_vec, dec_opt_f64, dec_u128};
         use crate::util::json::Json;
+        if !j.get("corrupt_rng_state").is_null() {
+            self.corrupt_rng = Rng::from_parts(
+                dec_u128(j.get("corrupt_rng_state"))?,
+                dec_u128(j.get("corrupt_rng_inc"))?,
+                dec_opt_f64(j.get("corrupt_rng_spare"))?,
+            );
+        }
+        if !j.get("pending_norm").is_null() {
+            let pending = dec_f64_vec(j.get("pending_norm"))?;
+            if pending.len() != self.pending_norm.len() {
+                return Err(format!(
+                    "backend snapshot: pending_norm has {} entries, want {}",
+                    pending.len(),
+                    self.pending_norm.len()
+                ));
+            }
+            self.pending_norm = pending;
+        }
         match (self.faults.as_mut(), j.get("faults")) {
             (_, Json::Null) => Ok(()),
             (Some(f), snap) => f.restore(snap),

@@ -20,7 +20,7 @@
 use anyhow::Result;
 
 use crate::cluster::{CapacityModel, WorkerSpec, WorkloadProfile};
-use crate::fault::{FaultPlan, FaultState};
+use crate::fault::{Corruption, FaultPlan, FaultState, CORRUPT_SEED_TAG};
 use crate::session::{Backend, WorkerOutcome};
 use crate::sync::staleness_discount;
 use crate::util::json::Json;
@@ -38,6 +38,18 @@ pub struct SimBackend {
     workers: Vec<WorkerSpec>,
     rng: Rng,
     faults: Option<FaultState>,
+    /// Modeled L2 norm of each worker's in-flight update (DESIGN.md
+    /// §16).  The simulator models updates rather than holding
+    /// gradients, so a healthy contribution has unit norm by
+    /// construction — deliberately batch-independent, so heterogeneous
+    /// batch splits can never trip the guard — and scripted corruptions
+    /// perturb it at dispatch, exactly where timing faults land.
+    pending_norm: Vec<f64>,
+    /// Dedicated rng stream for bitflip corruption, forked off the run
+    /// seed under [`CORRUPT_SEED_TAG`].  Advanced only when a bitflip
+    /// actually fires, so a corruption-free plan leaves it untouched
+    /// (part of the guard-invisibility invariant).
+    corrupt_rng: Rng,
 }
 
 impl SimBackend {
@@ -54,13 +66,35 @@ impl SimBackend {
         if target_iters > 0 {
             model.workload.iters_to_target = target_iters;
         }
+        let k = workers.len();
         Ok(SimBackend {
             model,
             workload: workload.to_string(),
             workers,
             rng: Rng::new(seed),
             faults: None,
+            pending_norm: vec![1.0; k],
+            corrupt_rng: Rng::new(seed ^ CORRUPT_SEED_TAG),
         })
+    }
+}
+
+/// Apply one scripted corruption to a modeled update norm.  Bitflips
+/// flip random bits of the norm's own f64 pattern (the closest modeled
+/// analogue of flipping payload bits), drawing from the dedicated
+/// corrupt stream only when they fire.
+fn corrupt_norm(norm: f64, c: &Corruption, rng: &mut Rng) -> f64 {
+    match *c {
+        Corruption::Nan => f64::NAN,
+        Corruption::Inf => f64::INFINITY,
+        Corruption::Scale { factor } => norm * factor.abs(),
+        Corruption::Bitflip { flips } => {
+            let mut bits = norm.to_bits();
+            for _ in 0..flips {
+                bits ^= 1u64 << rng.below(64);
+            }
+            f64::from_bits(bits)
+        }
     }
 }
 
@@ -114,9 +148,26 @@ impl Backend for SimBackend {
                 if let Some(f) = self.faults.as_mut() {
                     f.perturb(w, now, &mut out);
                 }
+                // Data-plane corruption perturbs the modeled update
+                // norm the guard will inspect at completion.  The
+                // has_corrupt gate keeps corruption-free dispatches off
+                // the event scan (and off the corrupt rng stream).
+                self.pending_norm[w] = 1.0;
+                if let Some(f) = self.faults.as_mut() {
+                    if f.has_corrupt() {
+                        for c in f.corruptions(w, now) {
+                            self.pending_norm[w] =
+                                corrupt_norm(self.pending_norm[w], &c, &mut self.corrupt_rng);
+                        }
+                    }
+                }
                 out
             })
             .collect())
+    }
+
+    fn update_norm(&mut self, w: usize) -> Option<f64> {
+        Some(self.pending_norm[w])
     }
 
     fn set_fault_plan(&mut self, plan: &FaultPlan) {
@@ -136,12 +187,20 @@ impl Backend for SimBackend {
     }
 
     fn snapshot_state(&self) -> Option<Json> {
-        use crate::ckpt::{enc_opt_f64, enc_u128};
+        use crate::ckpt::{enc_f64_slice, enc_opt_f64, enc_u128};
         let (state, inc, spare) = self.rng.state_parts();
         let mut j = Json::obj();
         j.set("rng_state", enc_u128(state));
         j.set("rng_inc", enc_u128(inc));
         j.set("rng_spare", enc_opt_f64(spare));
+        // The corrupt stream and the in-flight modeled norms must ride
+        // along: a checkpoint can land between a corrupted dispatch and
+        // its completion's guard check (DESIGN.md §16).
+        let (cstate, cinc, cspare) = self.corrupt_rng.state_parts();
+        j.set("corrupt_rng_state", enc_u128(cstate));
+        j.set("corrupt_rng_inc", enc_u128(cinc));
+        j.set("corrupt_rng_spare", enc_opt_f64(cspare));
+        j.set("pending_norm", enc_f64_slice(&self.pending_norm));
         if let Some(f) = &self.faults {
             j.set("faults", f.snapshot());
         }
@@ -149,12 +208,26 @@ impl Backend for SimBackend {
     }
 
     fn restore_state(&mut self, j: &Json) -> Result<(), String> {
-        use crate::ckpt::{dec_opt_f64, dec_u128};
+        use crate::ckpt::{dec_f64_vec, dec_opt_f64, dec_u128};
         self.rng = Rng::from_parts(
             dec_u128(j.get("rng_state"))?,
             dec_u128(j.get("rng_inc"))?,
             dec_opt_f64(j.get("rng_spare"))?,
         );
+        self.corrupt_rng = Rng::from_parts(
+            dec_u128(j.get("corrupt_rng_state"))?,
+            dec_u128(j.get("corrupt_rng_inc"))?,
+            dec_opt_f64(j.get("corrupt_rng_spare"))?,
+        );
+        let pending = dec_f64_vec(j.get("pending_norm"))?;
+        if pending.len() != self.pending_norm.len() {
+            return Err(format!(
+                "backend snapshot: pending_norm has {} entries, want {}",
+                pending.len(),
+                self.pending_norm.len()
+            ));
+        }
+        self.pending_norm = pending;
         match (self.faults.as_mut(), j.get("faults")) {
             (_, Json::Null) => {}
             (Some(f), snap) => f.restore(snap)?,

@@ -246,6 +246,12 @@ fn train_and_simulate_reject_bad_spot_and_join_identically() {
         ("--detect", "late=sometimes"),
         ("--autoscale", "jitter=2"),
         ("--autoscale", "pool=x"),
+        ("--corrupt", "bogus"),
+        ("--corrupt", "1@5:zap"),
+        ("--corrupt", "1@5:scale"),
+        ("--guard", "strikes=0"),
+        ("--guard", "late=sometimes"),
+        ("--guard", "norm=x"),
     ] {
         let from_train = stderr_of(&["train", flag, bad]);
         let from_sim = stderr_of(&["simulate", flag, bad]);
@@ -299,6 +305,96 @@ fn simulate_rejects_crash_without_detector() {
         "stderr: {}",
         String::from_utf8_lossy(&out.stderr)
     );
+}
+
+#[test]
+fn simulate_corruption_with_guard_recovers_end_to_end() {
+    // The DESIGN.md §16 acceptance scenario from the CLI: a one-shot
+    // NaN poisoning of worker 1's update, caught by a single-strike
+    // guard.  The run must complete and the JSON report must carry the
+    // quarantine/readmit trail and the revoke/join epochs.  Onset and
+    // probation are fractions of the clean run's measured makespan so
+    // the readmit always lands inside the run, whatever the workload's
+    // absolute time scale.
+    // --adjust-cost 1: the simulate default charges 30 s per applied
+    // readjustment, and a single such pause straddling the onset could
+    // push the probation expiry past the end of the run.
+    let base = [
+        "simulate", "--workload", "mnist", "--cores", "4,4,8", "--policy", "dynamic",
+        "--iters", "60", "--seed", "2", "--adjust-cost", "1",
+    ];
+    let clean = run_ok(&base);
+    let t = hetero_batch::util::json::Json::parse(&clean)
+        .expect("valid json")
+        .get("total_time_s")
+        .as_f64()
+        .expect("clean run reports total_time_s");
+    let corrupt = format!("1@{:.4}:nan", 0.35 * t);
+    let guard = format!("norm=8,strikes=1,probation={:.4}", 0.3 * t);
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend_from_slice(&["--corrupt", &corrupt, "--guard", &guard]);
+    let out = run_ok(&args);
+    let j = hetero_batch::util::json::Json::parse(&out).expect("valid json");
+    assert_eq!(j.get("total_iters").as_i64(), Some(60));
+    // strikes=1 escalates straight to quarantine: no standalone rejects.
+    assert!(j.get("rejections").is_null(), "unexpected rejections in: {out}");
+    let q = j.get("quarantines");
+    assert_eq!(q.idx(0).get("worker").as_i64(), Some(1));
+    assert_eq!(q.idx(0).get("action").as_str(), Some("quarantine"));
+    assert_eq!(q.idx(1).get("worker").as_i64(), Some(1));
+    assert_eq!(q.idx(1).get("action").as_str(), Some("readmit"));
+    assert_eq!(j.get("n_epochs").as_i64(), Some(2));
+}
+
+#[test]
+fn simulate_rejects_corruption_without_guard() {
+    // A corruption plan with no update guard would silently poison the
+    // model — the builder must refuse it up front (same convention as
+    // crash-without-detector).
+    let out = hbatch()
+        .args([
+            "simulate", "--workload", "mnist", "--cores", "4,8", "--corrupt",
+            "1@10:nan",
+        ])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("guard"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn resume_refuses_real_backend_checkpoints_with_roadmap_pointer() {
+    // Needs built artifacts. `hbatch train --checkpoint` commits a
+    // seq-0 snapshot whose config names the real backend; `resume`
+    // must refuse it by name and point at the open deterministic-replay
+    // gap rather than resume into a silently non-bit-identical run.
+    let dir = std::env::temp_dir().join("hbatch_cli_real_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    run_ok(&[
+        "train", "--model", "mlp", "--steps", "4", "--cores", "4,8",
+        "--checkpoint", dir.to_str().unwrap(),
+    ]);
+    let out = hbatch()
+        .args(["resume", "--from", dir.to_str().unwrap()])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "resume should refuse a real-backend checkpoint");
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(
+        err.contains(dir.to_str().unwrap()),
+        "refusal must name the checkpoint dir: {err}"
+    );
+    assert!(
+        err.contains("Real-backend bit-identical resume"),
+        "refusal must cite the ROADMAP gap: {err}"
+    );
+    assert!(err.contains("hbatch train"), "refusal must suggest a restart: {err}");
 }
 
 #[test]

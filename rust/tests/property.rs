@@ -13,7 +13,8 @@ use hetero_batch::controller::{
     RlBatcher, RlTable,
 };
 use hetero_batch::fault::{
-    AutoscalerCfg, DetectorCfg, FaultEvent, FaultKind, FaultPlan, FaultState,
+    AutoscalerCfg, Corruption, DetectorCfg, FaultEvent, FaultKind, FaultPlan,
+    FaultState, GuardCfg, CORRUPT_SEED_TAG,
 };
 use hetero_batch::metrics::RunReport;
 use hetero_batch::fleet::{FleetBuilder, JobSpec};
@@ -835,6 +836,23 @@ struct FixedScheduleBackend {
     /// Injected fault schedule (stall/slow perturb the fixed durations;
     /// crash is handled session-side, like every backend).
     faults: Option<FaultState>,
+    /// Modeled update norms for the §16 guard, mirroring the sim
+    /// backend: unit norm when healthy, perturbed by scripted
+    /// corruptions at dispatch.
+    pending_norm: Vec<f64>,
+    corrupt_rng: Rng,
+}
+
+impl FixedScheduleBackend {
+    fn new(durs: Vec<f64>, real_shaped: bool) -> Self {
+        FixedScheduleBackend {
+            pending_norm: vec![1.0; durs.len()],
+            corrupt_rng: Rng::new(CORRUPT_SEED_TAG),
+            durs,
+            real_shaped,
+            faults: None,
+        }
+    }
 }
 
 impl Backend for FixedScheduleBackend {
@@ -879,12 +897,35 @@ impl Backend for FixedScheduleBackend {
                     work: self.durs[w],
                     fixed: 0.0,
                 };
+                self.pending_norm[w] = 1.0;
                 if let Some(f) = self.faults.as_mut() {
                     f.perturb(w, now, &mut out);
+                    if f.has_corrupt() {
+                        for c in f.corruptions(w, now) {
+                            self.pending_norm[w] = match c {
+                                Corruption::Nan => f64::NAN,
+                                Corruption::Inf => f64::INFINITY,
+                                Corruption::Scale { factor } => {
+                                    self.pending_norm[w] * factor.abs()
+                                }
+                                Corruption::Bitflip { flips } => {
+                                    let mut bits = self.pending_norm[w].to_bits();
+                                    for _ in 0..flips {
+                                        bits ^= 1u64 << self.corrupt_rng.below(64);
+                                    }
+                                    f64::from_bits(bits)
+                                }
+                            };
+                        }
+                    }
                 }
                 out
             })
             .collect())
+    }
+
+    fn update_norm(&mut self, w: usize) -> Option<f64> {
+        Some(self.pending_norm[w])
     }
 
     fn apply_update(
@@ -913,11 +954,7 @@ fn sim_and_real_shaped_backends_gate_identically() {
                 .policy(Policy::Uniform)
                 .sync(sync)
                 .steps(15)
-                .build_with(FixedScheduleBackend {
-                    durs: durs.clone(),
-                    real_shaped,
-                    faults: None,
-                })
+                .build_with(FixedScheduleBackend::new(durs.clone(), real_shaped))
                 .unwrap()
                 .run()
                 .unwrap()
@@ -960,11 +997,7 @@ fn membership_epochs_identical_across_backend_shapes() {
                 .sync(sync)
                 .steps(12)
                 .membership(plan.clone())
-                .build_with(FixedScheduleBackend {
-                    durs: durs.clone(),
-                    real_shaped,
-                    faults: None,
-                })
+                .build_with(FixedScheduleBackend::new(durs.clone(), real_shaped))
                 .unwrap()
                 .run()
                 .unwrap()
@@ -1084,11 +1117,7 @@ fn run_sched(s: &SchedScenario, scheduler: Scheduler) -> RunReport {
             MembershipEvent { time: t2, worker: w, kind: MembershipKind::Join },
         ]));
     }
-    b.build_with(FixedScheduleBackend {
-        durs: s.durs.clone(),
-        real_shaped: false,
-        faults: None,
-    })
+    b.build_with(FixedScheduleBackend::new(s.durs.clone(), false))
     .unwrap()
     .run()
     .unwrap()
@@ -1134,6 +1163,14 @@ fn reports_identical(a: &RunReport, b: &RunReport) -> bool {
                 && x.worker == y.worker
                 && x.action == y.action
                 && x.attempt == y.attempt
+        })
+        && a.rejections.len() == b.rejections.len()
+        && a.rejections.iter().zip(&b.rejections).all(|(x, y)| {
+            x.time == y.time && x.worker == y.worker && x.action == y.action
+        })
+        && a.quarantines.len() == b.quarantines.len()
+        && a.quarantines.iter().zip(&b.quarantines).all(|(x, y)| {
+            x.time == y.time && x.worker == y.worker && x.action == y.action
         })
 }
 
@@ -1185,11 +1222,7 @@ fn prop_crashes_preserve_batch_conservation() {
             b = b.autoscale(AutoscalerCfg::parse("pool=1,cold=2").unwrap());
         }
         let r = b
-            .build_with(FixedScheduleBackend {
-                durs: durs.clone(),
-                real_shaped: false,
-                faults: None,
-            })
+            .build_with(FixedScheduleBackend::new(durs.clone(), false))
             .unwrap()
             .run()
             .unwrap();
@@ -1238,11 +1271,7 @@ fn prop_generous_detector_is_bitwise_invisible_under_stalls() {
             if detect {
                 b = b.detector(DetectorCfg::parse("grace=1e5,floor=1e6").unwrap());
             }
-            b.build_with(FixedScheduleBackend {
-                durs: durs.clone(),
-                real_shaped: false,
-                faults: None,
-            })
+            b.build_with(FixedScheduleBackend::new(durs.clone(), false))
             .unwrap()
             .run()
             .unwrap()
@@ -1277,11 +1306,7 @@ fn prop_detector_retire_matches_plan_revoke_bitwise() {
             }])
             .unwrap()
         };
-        let mock = || FixedScheduleBackend {
-            durs: durs.clone(),
-            real_shaped: false,
-            faults: None,
-        };
+        let mock = || FixedScheduleBackend::new(durs.clone(), false);
         let detected = Session::builder()
             .policy(policy)
             .sync(SyncMode::Bsp)
@@ -1315,6 +1340,121 @@ fn prop_detector_retire_matches_plan_revoke_bitwise() {
         let mut scrubbed = detected.clone();
         scrubbed.suspicions.clear();
         reports_identical(&scrubbed, &planned)
+    });
+}
+
+// ---------------------------------------------------------------------
+// Data-plane fault tolerance (DESIGN.md §16): an enabled-but-idle
+// update guard must be bitwise invisible, and a guard rejection must be
+// indistinguishable from a plan-scheduled revocation at the same time —
+// the rejection path IS the drop-contribution/λ-renormalization path,
+// not a parallel mechanism.
+
+#[test]
+fn prop_idle_guard_is_bitwise_invisible_under_churn() {
+    // Full sim backend across sync modes × batch policies under spot
+    // churn: with no corruption in the plan every modeled norm is 1.0,
+    // the guard accepts everything, and the report must be bitwise
+    // identical to the guard-off run (the norm probe runs either way).
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(2, 5);
+        let cores: Vec<usize> = (0..k).map(|_| rng.range_usize(2, 33)).collect();
+        let sync = match rng.range_usize(0, 3) {
+            0 => SyncMode::Bsp,
+            1 => SyncMode::Asp,
+            _ => SyncMode::Ssp { bound: rng.range_usize(0, 3) as u64 },
+        };
+        let policy = match rng.range_usize(0, 3) {
+            0 => Policy::Dynamic, // the pid alias
+            1 => Policy::Optimal,
+            _ => Policy::Rl,
+        };
+        (cores, sync, policy, rng.next_u64())
+    });
+    check("idle guard == none", 40, strat, |s| {
+        let (cores, sync, policy, seed) = s;
+        let run = |guard: bool| {
+            let mut b = SessionBuilder::default()
+                .model("mnist")
+                .cores(cores)
+                .policy(*policy)
+                .sync(*sync)
+                .steps(40)
+                .adjust_cost(1.0)
+                .seed(*seed)
+                .spot(SpotSpec { mttf_s: 10.0, down_s: 2.0, grace_s: 0.3 });
+            if guard {
+                b = b.guard(GuardCfg::parse("norm=8,strikes=2,probation=30").unwrap());
+            }
+            b.build_sim().unwrap().run().unwrap()
+        };
+        let (on, off) = (run(true), run(false));
+        on.rejections.is_empty()
+            && on.quarantines.is_empty()
+            && reports_identical(&on, &off)
+    });
+}
+
+#[test]
+fn prop_guard_quarantine_matches_plan_revoke_bitwise() {
+    // A one-shot NaN with strikes=1/late=drop quarantines the corrupted
+    // worker at its completion time t_q.  Replaying the same scenario
+    // with no corruption and a *plan-scheduled* revocation at exactly
+    // t_q must yield a bitwise-identical report: the plan revoke lands
+    // right after the completion (completions win timestamp ties) and
+    // drops the just-staged contribution through the same
+    // drop-contribution/λ-renormalization path the guard used.  The
+    // corrupted worker is pinned strictly fastest so it can never be
+    // its round's last finisher — were it last, run B's round would
+    // close *with* the contribution before the revoke fires.
+    let strat = FnStrategy(|rng: &mut Rng| {
+        let k = rng.range_usize(2, 6);
+        let mut durs: Vec<f64> = (0..k).map(|_| rng.range_f64(1.0, 3.5)).collect();
+        let w = rng.range_usize(0, k);
+        durs[w] = rng.range_f64(0.3, 0.9); // strictly first finisher
+        let t = rng.range_f64(0.5, 15.0);
+        let dynamic = rng.range_usize(0, 2) == 1;
+        (durs, w, t, dynamic)
+    });
+    check("guard quarantine == plan revoke", 60, strat, |s| {
+        let (durs, w, t, dynamic) = s;
+        let policy = if *dynamic { Policy::Dynamic } else { Policy::Uniform };
+        let guard = || GuardCfg::parse("norm=8,strikes=1,probation=5,late=drop").unwrap();
+        let corrupted = Session::builder()
+            .policy(policy)
+            .sync(SyncMode::Bsp)
+            .steps(20)
+            .corrupt(FaultPlan::parse_corrupt(&format!("{w}@{t}:nan")).unwrap())
+            .guard(guard())
+            .build_with(FixedScheduleBackend::new(durs.clone(), false))
+            .unwrap()
+            .run()
+            .unwrap();
+        if corrupted.quarantines.is_empty() {
+            // Corruption landed after the run finished — nothing to compare.
+            return true;
+        }
+        let t_q = corrupted.quarantines[0].time;
+        // Same guard, no corruption: the guard idles and the plan
+        // revoke drops the contribution instead.
+        let planned = Session::builder()
+            .policy(policy)
+            .sync(SyncMode::Bsp)
+            .steps(20)
+            .guard(guard())
+            .membership(MembershipPlan::new(vec![MembershipEvent {
+                time: t_q,
+                worker: *w,
+                kind: MembershipKind::Revoke,
+            }]))
+            .build_with(FixedScheduleBackend::new(durs.clone(), false))
+            .unwrap()
+            .run()
+            .unwrap();
+        // The guard run's only extra surface is the quarantine record.
+        let mut scrubbed = corrupted.clone();
+        scrubbed.quarantines.clear();
+        planned.quarantines.is_empty() && reports_identical(&scrubbed, &planned)
     });
 }
 
@@ -1508,11 +1648,7 @@ fn prop_controller_policies_conserve_global_batch_in_session_runs() {
             ]));
         }
         let r = b
-            .build_with(FixedScheduleBackend {
-                durs: s.durs.clone(),
-                real_shaped: false,
-                faults: None,
-            })
+            .build_with(FixedScheduleBackend::new(s.durs.clone(), false))
             .unwrap()
             .run()
             .unwrap();
@@ -1542,11 +1678,7 @@ fn prop_pid_spec_is_bitwise_identical_to_dynamic() {
                     MembershipEvent { time: t2, worker: w, kind: MembershipKind::Join },
                 ]));
             }
-            b.build_with(FixedScheduleBackend {
-                durs: s.durs.clone(),
-                real_shaped: false,
-                faults: None,
-            })
+            b.build_with(FixedScheduleBackend::new(s.durs.clone(), false))
             .unwrap()
             .run()
             .unwrap()
@@ -1714,11 +1846,7 @@ fn prop_ckpt_snapshot_restore_replays_bitwise() {
                 },
             ]));
         }
-        let mock = || FixedScheduleBackend {
-            durs: durs.clone(),
-            real_shaped: false,
-            faults: None,
-        };
+        let mock = || FixedScheduleBackend::new(durs.clone(), false);
         // Uninterrupted reference.
         let mut b_sess = builder.clone().build_with(mock()).unwrap();
         let mut b_rs = b_sess.start().unwrap();

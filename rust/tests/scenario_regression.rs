@@ -28,9 +28,9 @@
 
 use hetero_batch::config::Policy;
 use hetero_batch::fault::{
-    AutoscalerCfg, DetectorCfg, FaultEvent, FaultKind, FaultPlan, LatePolicy,
+    AutoscalerCfg, DetectorCfg, FaultEvent, FaultKind, FaultPlan, GuardCfg, LatePolicy,
 };
-use hetero_batch::metrics::{DetectorAction, RunReport, SpawnAction};
+use hetero_batch::metrics::{DetectorAction, GuardAction, RunReport, SpawnAction};
 use hetero_batch::session::{Session, SessionBuilder};
 use hetero_batch::sync::SyncMode;
 use hetero_batch::trace::{
@@ -123,6 +123,72 @@ fn fault_stall(round_s: f64) -> (FaultPlan, DetectorCfg) {
     (plan, det)
 }
 
+/// Measured makespan of the clean dynamic-BSP scenario run.  The
+/// corruption fixtures are denominated in fractions of *this* (not in
+/// uniform-probe round multiples like the outage/fault fixtures): the
+/// dynamic policy pays `adjust_cost` seconds per applied readjustment,
+/// so early pauses shift the absolute clock by whole seconds and a
+/// round-multiple window could land entirely inside a pause.  A guarded
+/// run replays the clean run's timeline bitwise until the corruption
+/// onset (the §16 invisibility invariant), so fractions of the clean
+/// makespan stay aligned with the timeline they cut into.
+fn probe_dynamic_t() -> f64 {
+    let r = base(Policy::Dynamic, SyncMode::Bsp)
+        .build_sim()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(r.total_time > 0.0);
+    r.total_time
+}
+
+/// The deterministic corruption fixtures (DESIGN.md §16), denominated
+/// in fractions of the clean dynamic makespan `t` (see
+/// [`probe_dynamic_t`]): a one-shot NaN poisoning of worker 1's update
+/// with a single-strike guard (immediate quarantine, probation
+/// readmit), and a windowed 100× scale inflation that burns a
+/// three-strike budget (two rejections, then quarantine, then probation
+/// readmit after the corruption window has expired).
+fn corrupt_nan(t: f64) -> (FaultPlan, GuardCfg) {
+    let plan = FaultPlan::new(vec![FaultEvent {
+        time: 0.35 * t,
+        worker: 1,
+        kind: FaultKind::CorruptNan,
+    }])
+    .unwrap();
+    let guard = GuardCfg {
+        strikes: 1,
+        probation_s: 0.3 * t,
+        ..GuardCfg::default()
+    };
+    (plan, guard)
+}
+
+fn corrupt_scale(t: f64) -> (FaultPlan, GuardCfg) {
+    let plan = FaultPlan::new(vec![FaultEvent {
+        time: 0.35 * t,
+        worker: 1,
+        kind: FaultKind::CorruptScale {
+            factor: 100.0,
+            dur_s: 0.45 * t,
+        },
+    }])
+    .unwrap();
+    // Probation outlives the corruption window by construction
+    // (quarantine >= onset, so readmit >= 0.85t > the 0.80t window
+    // end), so the readmitted worker's first post-probation update is
+    // clean and stays accepted.  The window is generous — three
+    // consecutive worker-1 dispatches plus any readjustment pauses fit
+    // with room to spare — so the third strike cannot slip past its
+    // end and reset the budget.
+    let guard = GuardCfg {
+        strikes: 3,
+        probation_s: 0.5 * t,
+        ..GuardCfg::default()
+    };
+    (plan, guard)
+}
+
 fn base(policy: Policy, sync: SyncMode) -> SessionBuilder {
     Session::builder()
         .model("mnist")
@@ -137,6 +203,7 @@ fn base(policy: Policy, sync: SyncMode) -> SessionBuilder {
 /// The scenario matrix: name → configured builder.
 fn scenarios() -> Vec<(&'static str, SessionBuilder)> {
     let round_s = probe_round_s();
+    let dynamic_t = probe_dynamic_t();
     let churn = |policy, sync| {
         let (traces, plan) = outage(round_s);
         base(policy, sync).traces(traces).membership(plan)
@@ -194,6 +261,17 @@ fn scenarios() -> Vec<(&'static str, SessionBuilder)> {
                     cold_s: 5.0 * round_s,
                     ..AutoscalerCfg::default()
                 })
+        }),
+        // Corruption family (DESIGN.md §16): the update guard catches a
+        // poisoned gradient, quarantines the worker through the revoke
+        // path, and readmits it after probation.
+        ("fault_corrupt_nan_quarantine", {
+            let (plan, guard) = corrupt_nan(dynamic_t);
+            base(Policy::Dynamic, SyncMode::Bsp).corrupt(plan).guard(guard)
+        }),
+        ("fault_corrupt_scale_probation", {
+            let (plan, guard) = corrupt_scale(dynamic_t);
+            base(Policy::Dynamic, SyncMode::Bsp).corrupt(plan).guard(guard)
         }),
     ]
 }
@@ -263,6 +341,21 @@ fn summarize(name: &str, r: &RunReport) -> Json {
         })
         .collect();
     o.set("spawns", Json::Arr(spawns));
+    // Update-guard trail (empty for guard-free scenarios, so the
+    // corruption goldens pin rejection and quarantine times too).
+    let guard_events = |evts: &[hetero_batch::metrics::GuardEvent]| -> Vec<Json> {
+        evts.iter()
+            .map(|g| {
+                let mut go = Json::obj();
+                go.set("time_s", Json::Num(g.time));
+                go.set("worker", Json::Num(g.worker as f64));
+                go.set("action", Json::Str(g.action.label().into()));
+                go
+            })
+            .collect()
+    };
+    o.set("rejections", Json::Arr(guard_events(&r.rejections)));
+    o.set("quarantines", Json::Arr(guard_events(&r.quarantines)));
     o
 }
 
@@ -495,6 +588,75 @@ fn fault_scenarios_actually_fault() {
     assert!(ready[0].time > r.suspicions[0].time);
     let kinds: Vec<&str> = r.epochs.iter().map(|e| e.kind.label()).collect();
     assert_eq!(kinds, vec!["revoke", "join"], "autoscale epochs {kinds:?}");
+    assert_eq!(r.epochs.last().unwrap().live, CORES.len());
+}
+
+#[test]
+fn corruption_scenarios_actually_corrupt() {
+    // Mirror of `fault_scenarios_actually_fault` for the corruption
+    // family: each fixture must walk the full reject → quarantine →
+    // probation-readmit lifecycle, otherwise the goldens would silently
+    // pin a corruption-free (guard-invisible) run.
+    let dynamic_t = probe_dynamic_t();
+    let run = |b: SessionBuilder| b.build_sim().unwrap().run().unwrap();
+
+    // NaN + single-strike guard: no standalone rejection (the first
+    // strike spends the whole budget), one quarantine of worker 1, one
+    // probation readmission, and the run still completes at full
+    // strength.
+    let (plan, guard) = corrupt_nan(dynamic_t);
+    let corrupt_t = plan.events()[0].time;
+    let probation_s = guard.probation_s;
+    let r = run(base(Policy::Dynamic, SyncMode::Bsp).corrupt(plan).guard(guard));
+    assert!(r.total_iters >= STEPS, "nan run stalled: {}", r.total_iters);
+    assert!(r.rejections.is_empty(), "strikes=1 must skip Reject: {:?}", r.rejections);
+    let acts: Vec<(usize, GuardAction)> =
+        r.quarantines.iter().map(|g| (g.worker, g.action)).collect();
+    assert_eq!(
+        acts,
+        vec![(1, GuardAction::Quarantine), (1, GuardAction::Readmit)],
+        "nan guard trail {acts:?}"
+    );
+    assert!(r.quarantines[0].time > corrupt_t);
+    assert!(r.quarantines[1].time >= r.quarantines[0].time + probation_s);
+    let kinds: Vec<&str> = r.epochs.iter().map(|e| e.kind.label()).collect();
+    assert_eq!(kinds, vec!["revoke", "join"], "nan epochs {kinds:?}");
+    assert!(r.epochs.iter().all(|e| e.worker == 1));
+    assert_eq!(r.epochs.last().unwrap().live, CORES.len());
+
+    // Windowed scale + three-strike guard: exactly two rejections of
+    // worker 1 inside the corruption window, then quarantine on the
+    // third strike; probation outlives the window, so the readmitted
+    // worker is clean and is never rejected again.
+    let (plan, guard) = corrupt_scale(dynamic_t);
+    let corrupt_t = plan.events()[0].time;
+    let window_end = corrupt_t + 0.45 * dynamic_t;
+    let r = run(base(Policy::Dynamic, SyncMode::Bsp).corrupt(plan).guard(guard));
+    assert!(r.total_iters >= STEPS, "scale run stalled: {}", r.total_iters);
+    assert_eq!(r.rejections.len(), 2, "scale rejections {:?}", r.rejections);
+    for g in &r.rejections {
+        assert_eq!(g.worker, 1);
+        assert_eq!(g.action, GuardAction::Reject);
+        // Rejections are stamped at *completion* time, so they trail
+        // the in-window dispatch by up to one iteration; only the
+        // lower bound and the ordering vs the quarantine are exact.
+        assert!(g.time > corrupt_t, "reject before onset: {g:?}");
+    }
+    let acts: Vec<(usize, GuardAction)> =
+        r.quarantines.iter().map(|g| (g.worker, g.action)).collect();
+    assert_eq!(
+        acts,
+        vec![(1, GuardAction::Quarantine), (1, GuardAction::Readmit)],
+        "scale guard trail {acts:?}"
+    );
+    assert!(r.quarantines[0].time > r.rejections.last().unwrap().time);
+    assert!(
+        r.quarantines[1].time > window_end,
+        "probation must outlive the corruption window: readmit at {} <= {window_end}",
+        r.quarantines[1].time
+    );
+    let kinds: Vec<&str> = r.epochs.iter().map(|e| e.kind.label()).collect();
+    assert_eq!(kinds, vec!["revoke", "join"], "scale epochs {kinds:?}");
     assert_eq!(r.epochs.last().unwrap().live, CORES.len());
 }
 

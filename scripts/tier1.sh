@@ -85,6 +85,43 @@ for needle in '"suspect"' '"ready"' '"join"'; do
     fi
 done
 
+echo "== tier1: corruption-guard smoke (corrupt -> reject -> quarantine -> readmit) =="
+# End-to-end DESIGN.md §16 loop from the CLI: worker 1's update stream
+# turns poisonous mid-run (windowed 100x scale inflation), the update
+# guard rejects two strikes, quarantines on the third, and readmits
+# after probation — the full lifecycle must appear in the report, so
+# the grep below doubles as a liveness check on the data-plane
+# recovery path.  Onset, window, and probation are fractions of the
+# clean run's measured makespan (same calibration trick as the
+# crash->resume smoke below), so the whole lifecycle always fits
+# inside the run whatever the workload's absolute time scale.
+# --adjust-cost 1 keeps readjustment pauses small relative to the
+# makespan, so the fraction-denominated corruption window can't be
+# swallowed by a single pause (the simulate default charges 30 s per
+# applied readjustment).
+guard_args=(--workload mnist --cores 4,4,8 --policy dynamic --sync bsp
+    --iters 60 --seed 2 --adjust-cost 1)
+clean_out=$(./target/release/hbatch simulate "${guard_args[@]}")
+clean_total=$(grep -o '"total_time_s": [0-9.e+-]*' <<<"$clean_out" | head -1 | awk '{print $2}')
+corrupt_on=$(awk -v t="$clean_total" 'BEGIN{printf "%.3f", 0.35*t}')
+corrupt_dur=$(awk -v t="$clean_total" 'BEGIN{printf "%.3f", 0.45*t}')
+probation=$(awk -v t="$clean_total" 'BEGIN{printf "%.3f", 0.5*t}')
+guard_out=$(./target/release/hbatch simulate "${guard_args[@]}" \
+    --corrupt "1@${corrupt_on}:scale:100:${corrupt_dur}" \
+    --guard "norm=8,strikes=3,probation=${probation}")
+for needle in '"reject"' '"quarantine"' '"readmit"' '"revoke"' '"join"'; do
+    if ! grep -q -- "$needle" <<<"$guard_out"; then
+        echo "tier1: corruption smoke output is missing $needle" >&2
+        exit 1
+    fi
+done
+# A corruption plan without a guard must be refused up front.
+if ./target/release/hbatch simulate --workload mnist --cores 4,4,8 \
+    --corrupt '1@8:nan' >/dev/null 2>&1; then
+    echo "tier1: corruption without a guard was not refused" >&2
+    exit 1
+fi
+
 echo "== tier1: batch-policy smoke (pid | optimal | rl) =="
 # Every shipped BatchPolicy must complete the same small churned run
 # from the CLI.  "pid" is the documented alias for the proportional
